@@ -1,0 +1,49 @@
+//! Bench: circuit Monte-Carlo (Fig. 7 companion) — conversion throughput
+//! of the behavioral simulator and the per-corner statistics table.
+//!
+//!   cargo bench --bench circuit
+
+use bskmq::circuit::montecarlo::{default_4bit_steps, MonteCarlo, MonteCarloConfig};
+use bskmq::circuit::Corner;
+use bskmq::util::bench::{bench, black_box};
+
+fn main() {
+    let steps = default_4bit_steps();
+
+    println!("=== Monte-Carlo conversion throughput ===");
+    let mc = MonteCarlo::new(MonteCarloConfig {
+        instances: 8,
+        conversions: 256,
+        ..Default::default()
+    });
+    let r = bench("8 instances x 256 conversions @TT", || {
+        black_box(mc.run(Corner::TT, &steps, 1));
+    });
+    r.print_throughput(8.0 * 256.0, "conversions");
+
+    println!("\n=== Fig.7 statistics (full run, 64 x 512) ===");
+    let full = MonteCarlo::new(MonteCarloConfig::default());
+    for s in full.run_corners(&steps, 42) {
+        println!(
+            "  {:<3} N({:+.2}, {:.2})  code-err {:.3}  ({} samples)",
+            s.corner.name(),
+            s.mu,
+            s.sigma,
+            s.code_error_rate,
+            s.samples
+        );
+    }
+
+    println!("\n=== replica-bias ablation across corners ===");
+    let ab = MonteCarlo::new(MonteCarloConfig {
+        replica_bias: false,
+        ..Default::default()
+    });
+    for s in ab.run_corners(&steps, 42) {
+        println!(
+            "  {:<3} sigma {:.2} (bias off)",
+            s.corner.name(),
+            s.sigma
+        );
+    }
+}

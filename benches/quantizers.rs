@@ -1,0 +1,43 @@
+//! Bench: quantizer fitting + deployed-MSE regeneration (Fig. 1 / Fig. 4
+//! companion).  Times the calibration hot path (k-means dominates) and
+//! prints the MSE tables on controlled activation profiles.
+//!
+//!   cargo bench --bench quantizers
+
+use bskmq::data::activations::ActivationProfile;
+use bskmq::quant::Method;
+use bskmq::util::bench::{bench, black_box};
+
+fn main() {
+    println!("=== quantizer fitting throughput (50k samples) ===");
+    let xs = ActivationProfile::ReluConv.sample(50_000, 3);
+    for m in Method::ALL {
+        let r = bench(&format!("fit {} @3b", m.name()), || {
+            black_box(m.fit(&xs, 3));
+        });
+        r.print();
+    }
+    let cb = Method::BsKmq.fit_hw(&xs, 3);
+    let r = bench("quantize 50k through codebook", || {
+        black_box(cb.mse(&xs));
+    });
+    r.print_throughput(xs.len() as f64, "samples");
+
+    println!("\n=== deployed MSE, controlled profiles (paper Fig.1/Fig.4 shape) ===");
+    for profile in [
+        ActivationProfile::ReluConv,
+        ActivationProfile::ReluClamped,
+        ActivationProfile::AttentionSigned,
+    ] {
+        for bits in [3u32, 4] {
+            let xs = profile.sample(60_000, 11);
+            let bs = Method::BsKmq.fit_hw(&xs, bits).mse(&xs);
+            print!("{:<17} {bits}b  ", profile.name());
+            for m in Method::ALL {
+                let mse = m.fit_hw(&xs, bits).mse(&xs);
+                print!("{}={:.4} ({:.1}x)  ", m.name(), mse, mse / bs);
+            }
+            println!();
+        }
+    }
+}

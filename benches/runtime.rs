@@ -1,0 +1,68 @@
+//! Bench: PJRT request-path latency — the L3 hot path (qfwd execution,
+//! batch-32 and batch-1, and the standalone crossbar MAC kernel graph).
+//!
+//!   cargo bench --bench runtime
+//!
+//! Requires `make artifacts`.
+
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::data::dataset::ModelData;
+use bskmq::quant::codebook::{Codebook, MAX_LEVELS};
+use bskmq::quant::Method;
+use bskmq::runtime::engine::{literal_f32, Engine};
+use bskmq::runtime::model::ModelRuntime;
+use bskmq::tensor::Tensor;
+use bskmq::util::bench::{bench, black_box};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bskmq::artifacts_dir();
+    let engine = Engine::cpu()?;
+
+    println!("=== qfwd request path (resnet) ===");
+    let runtime = ModelRuntime::load(&engine, &artifacts, "resnet")?;
+    let data = ModelData::load(&artifacts, "resnet")?;
+    let calib = Calibrator::new(&runtime, Method::BsKmq, 3).calibrate(&data, 8)?;
+    let batch = runtime.manifest.batch;
+    let in_elems = runtime.manifest.input_elems();
+    let xb = &data.x_test.data[..batch * in_elems];
+
+    let r = bench("qfwd batch-32", || {
+        black_box(runtime.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap());
+    });
+    r.print_throughput(batch as f64, "inferences");
+    if runtime.has_b1() {
+        let x1 = &data.x_test.data[..in_elems];
+        let r = bench("qfwd batch-1", || {
+            black_box(
+                runtime
+                    .run_qfwd_b1(x1, &calib.programmed, 0.0, 7)
+                    .unwrap(),
+            );
+        });
+        r.print_throughput(1.0, "inferences");
+    }
+    let r = bench("collect batch-32 (calibration path)", || {
+        black_box(runtime.run_collect(xb).unwrap());
+    });
+    r.print_throughput(batch as f64, "samples");
+
+    println!("\n=== standalone crossbar MAC+ADC kernel graph ===");
+    let exe = engine.load(artifacts.join("mac_tile.hlo.txt"))?;
+    let (m, k, n) = (64usize, 512usize, 128usize);
+    let x = Tensor::new(vec![m, k], vec![0.5; m * k])?;
+    let w = Tensor::new(vec![k, n], vec![0.01; k * n])?;
+    let cb = Codebook::linear(-50.0, 50.0, 7);
+    let (refs, centers) = cb.padded(MAX_LEVELS);
+    let args = vec![
+        literal_f32(&x)?,
+        literal_f32(&w)?,
+        literal_f32(&Tensor::new(vec![MAX_LEVELS], refs)?)?,
+        literal_f32(&Tensor::new(vec![MAX_LEVELS], centers)?)?,
+    ];
+    let r = bench("mac_tile 64x512x128 (2 crossbar tiles)", || {
+        black_box(exe.run(&args).unwrap());
+    });
+    let macs = (m * k * n) as f64;
+    r.print_throughput(macs * 2.0, "ops");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Bench: system-level simulation (Table 1 + Fig. 8 companion) — the
+//! accelerator model across all four paper-scale networks, ADC-bit and
+//! weight-bit ablations, and simulator throughput.
+//!
+//!   cargo bench --bench system
+
+use bskmq::arch::accelerator::{Accelerator, SystemConfig};
+use bskmq::arch::baselines::baseline_designs;
+use bskmq::macro_model::{MacroConfig, MacroEnergy};
+use bskmq::nn::zoo::{distilbert, inception_v3, resnet18_cifar, vgg16_cifar};
+use bskmq::util::bench::{bench, black_box};
+
+fn main() {
+    println!("=== Table 1 regeneration ===");
+    let acc = Accelerator::new(SystemConfig::paper_system());
+    let nets = [
+        resnet18_cifar(),
+        vgg16_cifar(),
+        inception_v3(),
+        distilbert(),
+    ];
+    for net in &nets {
+        let r = acc.simulate(net);
+        println!(
+            "  {:<12} {:>7.2} TOPS  {:>7.1} TOPS/W  {:>8.2} ms  {:>8.1} uJ",
+            r.network, r.tops, r.tops_per_watt, r.latency_ms, r.total_energy_uj
+        );
+    }
+    let ours = acc.simulate(&resnet18_cifar());
+    for d in baseline_designs() {
+        if let Some(t) = d.tops {
+            println!(
+                "  vs {:<12} speedup {:>5.2}x  energy-eff {:>5.1}x",
+                d.label,
+                ours.tops / t,
+                ours.tops_per_watt / d.tops_per_watt.1
+            );
+        }
+    }
+
+    println!("\n=== ablation: ADC resolution (ResNet-18, 6/2b) ===");
+    for out_bits in 2..=6u32 {
+        let cfg = SystemConfig {
+            macro_cfg: MacroConfig {
+                out_bits,
+                ..MacroConfig::paper_system()
+            },
+            ..SystemConfig::paper_system()
+        };
+        let r = Accelerator::new(cfg).simulate(&resnet18_cifar());
+        println!(
+            "  {out_bits}b ADC: {:>6.2} TOPS  {:>7.1} TOPS/W",
+            r.tops, r.tops_per_watt
+        );
+    }
+
+    println!("\n=== ablation: weight precision ===");
+    for w_bits in 2..=4u32 {
+        let cfg = MacroConfig {
+            w_bits,
+            ..MacroConfig::paper_system()
+        };
+        println!(
+            "  {w_bits}b weights: macro {:>6.1} TOPS/W, {:>5.3} TOPS",
+            MacroEnergy::tops_per_watt(cfg),
+            MacroEnergy::tops(cfg)
+        );
+    }
+
+    println!("\n=== simulator throughput ===");
+    let net = resnet18_cifar();
+    let r = bench("simulate resnet18 end-to-end", || {
+        black_box(acc.simulate(&net));
+    });
+    r.print();
+}

@@ -1,0 +1,98 @@
+//! End-to-end driver (the repository's headline validation run): exercise
+//! every layer of the stack on the mini-ResNet workload.
+//!
+//!   1. load the AOT artifacts (L2 JAX graphs with the L1 Pallas
+//!      MAC+ADC kernel inside) on the PJRT runtime;
+//!   2. stream calibration batches through `collect`, run Algorithm 1
+//!      per layer in Rust, program the NL-ADC codebooks;
+//!   3. evaluate PTQ accuracy through `qfwd`: float-reference vs linear
+//!      vs BS-KMQ at 3 bits, then add linear 2-bit weights and the
+//!      circuit-sim-derived TT conversion noise (the deployed operating
+//!      point of Table 1: 6/2/3b);
+//!   4. run the system-level accelerator simulation for the paper-scale
+//!      ResNet-18 and print the Table-1 row.
+//!
+//!   cargo run --release --example e2e_cnn
+//!
+//! The output of this run is recorded in EXPERIMENTS.md §E2E.
+
+use std::time::Instant;
+
+use bskmq::arch::accelerator::{Accelerator, SystemConfig};
+use bskmq::circuit::montecarlo::{default_4bit_steps, MonteCarlo, MonteCarloConfig};
+use bskmq::circuit::{Corner, MAC_UNITS_PER_CELL};
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::coordinator::ptq::PtqEvaluator;
+use bskmq::data::dataset::ModelData;
+use bskmq::nn::zoo::resnet18_cifar;
+use bskmq::quant::Method;
+use bskmq::runtime::engine::Engine;
+use bskmq::runtime::model::ModelRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let artifacts = bskmq::artifacts_dir();
+    let engine = Engine::cpu()?;
+    println!("[1/4] loading artifacts on PJRT ({})", engine.platform());
+    let runtime = ModelRuntime::load(&engine, &artifacts, "resnet")?;
+    let data = ModelData::load(&artifacts, "resnet")?;
+
+    println!("[2/4] calibrating (Algorithm 1, 8 batches x 32)");
+    let bits = 3;
+    let bs = Calibrator::new(&runtime, Method::BsKmq, bits).calibrate(&data, 8)?;
+    let lin = Calibrator::new(&runtime, Method::Linear, bits).calibrate(&data, 8)?;
+    // float reference: 7-bit linear codebooks ~ no activation quantization
+    let float_ref = Calibrator::new(&runtime, Method::Linear, 7).calibrate(&data, 8)?;
+    for (i, q) in runtime.manifest.qlayers.iter().enumerate() {
+        println!(
+            "    layer {:<6} range [{:.3}, {:.3}] min-step {:.4}",
+            q.name,
+            bs.nl_books[i].centers.first().unwrap(),
+            bs.nl_books[i].centers.last().unwrap(),
+            bs.nl_books[i].min_step()
+        );
+    }
+
+    println!("[3/4] PTQ evaluation (16 batches x 32 = 512 test samples)");
+    let ev = PtqEvaluator::new(&runtime);
+    let n = 16;
+    let acc_float = ev.evaluate(&data, &float_ref.programmed, 0.0, n, 1)?.accuracy;
+    let acc_lin = ev.evaluate(&data, &lin.programmed, 0.0, n, 1)?.accuracy;
+    let acc_bs = ev.evaluate(&data, &bs.programmed, 0.0, n, 1)?.accuracy;
+    println!("    float-ref (7b)   acc {acc_float:.4}");
+    println!("    linear    ({bits}b)  acc {acc_lin:.4}");
+    println!("    BS-KMQ    ({bits}b)  acc {acc_bs:.4}   (gap vs linear {:+.1} pts)",
+             (acc_bs - acc_lin) * 100.0);
+
+    // deployed operating point: + weight quantization + TT conversion
+    // noise.  Weights use 4 bits — the mini's iso-accuracy point of the
+    // paper's 2-bit on ResNet-18 (EXPERIMENTS.md §Fig6 notes) — and the
+    // NL-ADC codebooks are recalibrated on the quantized-weight hardware
+    // (Algorithm 1 runs on the deployed macro).
+    let mc = MonteCarlo::new(MonteCarloConfig::default());
+    let tt = mc.run(Corner::TT, &default_4bit_steps(), 42);
+    let sigma_lsb = (tt.sigma / MAC_UNITS_PER_CELL) as f32;
+    let wq = ev.quantize_weights(4)?;
+    let wq_books =
+        Calibrator::new(&wq, Method::BsKmq, bits).calibrate(&data, 8)?;
+    let evw = PtqEvaluator::new(&wq);
+    let acc_deploy = evw
+        .evaluate(&data, &wq_books.programmed, sigma_lsb, n, 1)?
+        .accuracy;
+    println!(
+        "    deployed (6/4/{bits}b + TT noise sigma {:.3} LSB) acc {:.4} (loss {:.2} pts vs float)",
+        sigma_lsb,
+        acc_deploy,
+        (acc_float - acc_deploy) * 100.0
+    );
+
+    println!("[4/4] system-level simulation (paper-scale ResNet-18, 6/2/3b)");
+    let sys = Accelerator::new(SystemConfig::paper_system());
+    let r = sys.simulate(&resnet18_cifar());
+    println!(
+        "    {:.2} TOPS, {:.1} TOPS/W, {:.3} ms/inference, {:.1} uJ/inference",
+        r.tops, r.tops_per_watt, r.latency_ms, r.total_energy_uj
+    );
+    println!("done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

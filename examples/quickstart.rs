@@ -1,0 +1,59 @@
+//! Quickstart: calibrate a BS-KMQ codebook on one layer's activations and
+//! compare its deployed quantization error against the four baselines —
+//! the library's core loop in ~40 lines.
+//!
+//!   cargo run --release --example quickstart
+
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::data::dataset::ModelData;
+use bskmq::quant::Method;
+use bskmq::runtime::engine::Engine;
+use bskmq::runtime::model::ModelRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bskmq::artifacts_dir();
+    let engine = Engine::cpu()?;
+
+    // load the AOT-compiled mini-ResNet and its synthetic dataset
+    let runtime = ModelRuntime::load(&engine, &artifacts, "resnet")?;
+    let data = ModelData::load(&artifacts, "resnet")?;
+    println!(
+        "model: resnet ({} quantized layers, batch {})",
+        runtime.manifest.nq(),
+        runtime.manifest.batch
+    );
+
+    // stream calibration batches through the collect graph
+    let calib = Calibrator::new(&runtime, Method::BsKmq, 3);
+    let samples = calib.collect_samples(&data, 8)?;
+    let layer0 = &samples[0];
+    println!(
+        "collected {} activations from layer '{}'",
+        layer0.len(),
+        runtime.manifest.qlayers[0].name
+    );
+
+    // fit every quantizer at 3 bits and compare deployed MSE
+    let bits = 3;
+    println!("3-bit quantizer MSE (after §2.3 hardware projection):");
+    let bs = Method::BsKmq.fit_hw(layer0, bits).mse(layer0);
+    for m in Method::ALL {
+        let mse = m.fit_hw(layer0, bits).mse(layer0);
+        println!(
+            "  {:<10} {:>10.6}  ({:.2}x vs BS-KMQ)",
+            m.name(),
+            mse,
+            mse / bs
+        );
+    }
+
+    // the BS-KMQ codebook, as the IM NL-ADC would be programmed
+    let cb = Method::BsKmq.fit_hw(layer0, bits);
+    println!("BS-KMQ centers: {:?}", round3(&cb.centers));
+    println!("floor-ADC refs: {:?}", round3(&cb.refs));
+    Ok(())
+}
+
+fn round3(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|x| (x * 1000.0).round() / 1000.0).collect()
+}

@@ -1,0 +1,72 @@
+//! Serving example: start the batched inference server in-process, fire
+//! concurrent client threads at it, and report latency / throughput and
+//! the dynamic batcher's behaviour (full batches vs singles).
+//!
+//!   cargo run --release --example serve
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use bskmq::coordinator::server::InferenceServer;
+use bskmq::data::dataset::ModelData;
+use bskmq::quant::Method;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bskmq::artifacts_dir();
+    let model = "resnet";
+    println!("starting inference server ({model}, 3-bit BS-KMQ)...");
+    let server = InferenceServer::start(
+        artifacts.clone(),
+        model.into(),
+        Method::BsKmq,
+        3,
+        0.0,
+        8,
+    )?;
+
+    // real test inputs as the request stream
+    let data = ModelData::load(&artifacts, model)?;
+    let in_elems: usize = data.x_test.shape[1..].iter().product();
+    let n_requests = 256usize;
+    let n_clients = 8usize;
+
+    println!("firing {n_requests} requests from {n_clients} client threads");
+    let latency_us = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let tx = server.client();
+            let lat = latency_us.clone();
+            let x_test = &data.x_test;
+            s.spawn(move || {
+                for r in 0..n_requests / n_clients {
+                    let idx = (c * 97 + r * 13) % (x_test.shape[0]);
+                    let x =
+                        x_test.data[idx * in_elems..(idx + 1) * in_elems].to_vec();
+                    let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+                    let t = Instant::now();
+                    tx.send(bskmq::coordinator::server::Request {
+                        x,
+                        reply: reply_tx,
+                    })
+                    .unwrap();
+                    let logits = reply_rx.recv().unwrap();
+                    lat.fetch_add(t.elapsed().as_micros() as u64, Ordering::Relaxed);
+                    assert_eq!(logits.len(), 10);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let mean_lat_ms =
+        latency_us.load(Ordering::Relaxed) as f64 / n_requests as f64 / 1e3;
+    println!(
+        "served {n_requests} requests in {:.2}s -> {:.1} req/s, mean latency {:.1} ms",
+        wall.as_secs_f64(),
+        n_requests as f64 / wall.as_secs_f64(),
+        mean_lat_ms
+    );
+    println!("batcher: {}", server.stats.summary());
+    Ok(())
+}

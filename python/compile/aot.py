@@ -1,0 +1,243 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts for the Rust runtime.
+
+Interchange is HLO text, NOT serialized HloModuleProto — jax >= 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Per model, two graphs are lowered (batch = 32):
+
+* ``<model>_collect.hlo.txt`` — float forward that additionally emits, per
+  quantized layer, a 4096-sample activation subsample and the crossbar-tile
+  partial-sum absmax.  The Rust calibrator (Algorithm 1) streams batches
+  through this graph.  Output: one flat f32 vector
+  ``[logits | samples(nq x 4096) | tile_absmax(nq)]``.
+* ``<model>_qfwd.hlo.txt`` — the deployed quantized forward (Pallas
+  ``imc_mac_adc`` per-tile conversion + per-layer NL-ADC codebooks + LSB
+  noise).  Extra runtime args: stacked padded codebooks ``[nq,128]`` x 4,
+  ``noise_std`` (sigma in LSB units) and a PRNG ``seed``.  Output: flat
+  logits.
+
+Also lowered: ``resnet_qfwd_b1`` (batch-1 serving graph) and ``mac_tile``
+(standalone crossbar kernel for microbenches).  A JSON manifest per model
+records arg order/shapes and the collect-vector layout for the Rust side.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import weights_io
+from .kernels.imc_mac import imc_mac_adc
+from .models import MODELS
+from .models import common as cm
+from .quantlib import MAX_LEVELS
+
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# ------------------------------------------------------------ pack plumbing
+
+def weight_arg_layout(pack):
+    """Canonical flat arg order: q-layer (w, b) pairs, then sorted digital."""
+    names, shapes = [], []
+    for i, ((w, b), spec) in enumerate(zip(pack.qweights, pack.qspecs)):
+        names += [f"q{i:02d}_{spec.name}_w", f"q{i:02d}_{spec.name}_b"]
+        shapes += [list(np.shape(w)), list(np.shape(b))]
+    for name in sorted(pack.digital):
+        v = pack.digital[name]
+        if isinstance(v, dict):
+            for f in sorted(v):
+                names.append(f"d_{name}_{f}")
+                shapes.append(list(np.shape(v[f])))
+        else:
+            names.append(f"d_{name}")
+            shapes.append(list(np.shape(v)))
+    return names, shapes
+
+
+def rebuild_pack(template_pack, flat_args):
+    """Inverse of :func:`weight_arg_layout` inside the traced graph."""
+    nq = len(template_pack.qspecs)
+    qweights = [(flat_args[2 * i], flat_args[2 * i + 1]) for i in range(nq)]
+    digital = {}
+    idx = 2 * nq
+    for name in sorted(template_pack.digital):
+        v = template_pack.digital[name]
+        if isinstance(v, dict):
+            digital[name] = {}
+            for f in sorted(v):
+                digital[name][f] = flat_args[idx]
+                idx += 1
+        else:
+            digital[name] = flat_args[idx]
+            idx += 1
+    return cm.InferencePack(qweights, template_pack.qspecs, digital)
+
+
+def load_pack(mod, weights_path):
+    """Rebuild a trained InferencePack from the weights container."""
+    tensors = dict(weights_io.load_tensors(weights_path))
+    template = mod.export_pack(mod.init_params(jax.random.PRNGKey(0)),
+                               mod.init_state())
+    names, _ = weight_arg_layout(template)
+    flat = [jnp.asarray(tensors[n]) for n in names]
+    return rebuild_pack(template, flat), template, names
+
+
+# ------------------------------------------------------------ graph builders
+
+def make_collect_fn(mod, template):
+    def collect_fn(x, *wargs):
+        pack = rebuild_pack(template, list(wargs))
+        ctx = cm.QuantCtx(mode="collect")
+        logits = mod.forward_infer(pack, x, ctx)
+        parts = [logits.reshape(-1)]
+        parts += list(ctx.records)
+        parts.append(jnp.stack(ctx.tile_maxes))
+        return (jnp.concatenate(parts).astype(jnp.float32),)
+    return collect_fn
+
+
+def make_qfwd_fn(mod, template):
+    def qfwd_fn(x, nl_refs, nl_centers, tile_refs, tile_centers,
+                noise_std, seed, *wargs):
+        pack = rebuild_pack(template, list(wargs))
+        ctx = cm.QuantCtx(
+            mode="quant", nl_refs=nl_refs, nl_centers=nl_centers,
+            tile_refs=tile_refs, tile_centers=tile_centers,
+            noise_std=noise_std, key=jax.random.PRNGKey(seed))
+        logits = mod.forward_infer(pack, x, ctx)
+        return (logits.reshape(-1).astype(jnp.float32),)
+    return qfwd_fn
+
+
+def input_spec(mod, batch):
+    if mod.SEQUENCE:
+        return jax.ShapeDtypeStruct((batch,) + mod.INPUT_SHAPE, jnp.int32)
+    return jax.ShapeDtypeStruct((batch,) + mod.INPUT_SHAPE, jnp.float32)
+
+
+def lower_model(name, mod, outdir):
+    wpath = os.path.join(outdir, f"{name}_weights.bin")
+    pack, template, wnames = load_pack(mod, wpath)
+    nq = len(pack.qspecs)
+    _, wshapes = weight_arg_layout(pack)
+    warg_specs = [jax.ShapeDtypeStruct(tuple(s), jnp.float32)
+                  for s in wshapes]
+
+    # --- collect graph
+    x_spec = input_spec(mod, BATCH)
+    lowered = jax.jit(make_collect_fn(mod, template)).lower(
+        x_spec, *warg_specs)
+    with open(os.path.join(outdir, f"{name}_collect.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # --- qfwd graph(s)
+    cb = jax.ShapeDtypeStruct((nq, MAX_LEVELS), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), jnp.uint32)
+    qfwd = make_qfwd_fn(mod, template)
+    lowered = jax.jit(qfwd).lower(x_spec, cb, cb, cb, cb, scalar, seed,
+                                  *warg_specs)
+    with open(os.path.join(outdir, f"{name}_qfwd.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    if name == "resnet":
+        lowered = jax.jit(qfwd).lower(input_spec(mod, 1), cb, cb, cb, cb,
+                                      scalar, seed, *warg_specs)
+        with open(os.path.join(outdir, "resnet_qfwd_b1.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+
+    # --- manifest
+    logits_len = BATCH * mod.NUM_CLASSES
+    manifest = {
+        "model": name,
+        "batch": BATCH,
+        "input_shape": list(mod.INPUT_SHAPE),
+        "input_dtype": "i32" if mod.SEQUENCE else "f32",
+        "num_classes": mod.NUM_CLASSES,
+        "max_levels": MAX_LEVELS,
+        "qlayers": [{"name": s.name, "k": s.k, "n": s.n, "relu": s.relu}
+                    for s in pack.qspecs],
+        "weight_args": [{"name": n, "shape": s}
+                        for n, s in zip(wnames, wshapes)],
+        "collect": {
+            "out_len": logits_len + nq * cm.COLLECT_SAMPLES + nq,
+            "logits_len": logits_len,
+            "samples_per_layer": cm.COLLECT_SAMPLES,
+            "tilemax_offset": logits_len + nq * cm.COLLECT_SAMPLES,
+        },
+        "artifacts": {
+            "collect": f"{name}_collect.hlo.txt",
+            "qfwd": f"{name}_qfwd.hlo.txt",
+            **({"qfwd_b1": "resnet_qfwd_b1.hlo.txt"} if name == "resnet"
+               else {}),
+        },
+    }
+    with open(os.path.join(outdir, f"{name}_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # --- datasets (deterministic by seed; same streams train.py used)
+    x_cal, _ = D.dataset_for(name, seed=0, n=8 * BATCH)
+    x_test, y_test = D.dataset_for(name, seed=1, n=16 * BATCH)
+    weights_io.save_tensors(
+        os.path.join(outdir, f"{name}_data.bin"),
+        [("x_calib", np.asarray(x_cal, np.float32)),
+         ("x_test", np.asarray(x_test, np.float32)),
+         ("y_test", np.asarray(y_test, np.float32))])
+    print(f"  lowered {name}: nq={nq}, wargs={len(wnames)}")
+
+
+def lower_mac_tile(outdir, m=64, k=512, n=128):
+    """Standalone crossbar-tile kernel graph for microbenches/serving."""
+    def fn(x, w, refs, centers):
+        return (imc_mac_adc(x, w, refs, centers),)
+
+    specs = (jax.ShapeDtypeStruct((m, k), jnp.float32),
+             jax.ShapeDtypeStruct((k, n), jnp.float32),
+             jax.ShapeDtypeStruct((MAX_LEVELS,), jnp.float32),
+             jax.ShapeDtypeStruct((MAX_LEVELS,), jnp.float32))
+    lowered = jax.jit(fn).lower(*specs)
+    with open(os.path.join(outdir, "mac_tile.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    with open(os.path.join(outdir, "mac_tile_manifest.json"), "w") as f:
+        json.dump({"m": m, "k": k, "n": n, "levels": MAX_LEVELS}, f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts dir (a .hlo.txt path also works)")
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+    outdir = os.path.dirname(args.out) if args.out.endswith(".txt") \
+        else args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    need_train = not all(
+        os.path.exists(os.path.join(outdir, f"{m}_weights.bin"))
+        for m in MODELS)
+    if need_train and not args.skip_train:
+        from . import train
+        train.main(outdir)
+
+    for name, mod in MODELS.items():
+        lower_model(name, mod, outdir)
+    lower_mac_tile(outdir)
+    print("AOT artifacts written to", outdir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Pallas kernel: dual-9T crossbar MAC + per-tile ADC conversion (Fig. 2).
+
+The contraction dimension K is split into 256-row crossbar tiles — one
+analog accumulation each, exactly the paper's macro geometry.  Each grid
+step computes one tile's MAC (``x_tile @ w_tile``), adds the tile's ADC
+conversion noise, converts through the programmable reference ladder
+(floor-ADC bucketize -> center map), and digitally accumulates into the
+output block, mirroring the ADC-then-digital-accumulate dataflow.
+
+BlockSpec schedule (DESIGN.md §7): the codebook stays VMEM-resident across
+the whole grid; ``x``/``w``/``noise`` stream tile-by-tile along K — the
+role the PWM input sequencing plays in the silicon macro.  ``interpret=True``
+is mandatory on this CPU testbed; numerics are pinned to
+``ref.ref_imc_mac_adc`` by the pytest + hypothesis suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .nl_quant import _quantize_block
+from .ref import CROSSBAR_ROWS
+
+
+def _imc_mac_kernel(x_ref, w_ref, refs_ref, centers_ref, noise_ref, o_ref, *,
+                    use_onehot):
+    """One K-tile: analog MAC -> +noise -> ADC -> digital accumulate."""
+    t = pl.program_id(0)
+    partial = jnp.dot(x_ref[...], w_ref[...],
+                      preferred_element_type=jnp.float32)
+    partial = partial + noise_ref[0]
+    q = _quantize_block(partial, refs_ref[...], centers_ref[...], use_onehot)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += q
+
+
+@functools.partial(jax.jit, static_argnames=("tile_k", "interpret"))
+def imc_mac_adc(x, w, refs, centers, noise=None, *,
+                tile_k: int = CROSSBAR_ROWS, interpret: bool = True):
+    """Crossbar-tiled MAC with per-tile ADC quantization.
+
+    Args:
+      x: ``[M, K]`` activations (im2col'd convolutions or token matrices).
+      w: ``[K, N]`` weights, BN folded.
+      refs, centers: ``[L]`` padded codebook programmed into the NL-ADC.
+      noise: ``[Kt, M, N]`` pre-scaled conversion noise, or None.
+      tile_k: crossbar rows (256 for the paper's macro).
+
+    Returns ``[M, N]`` f32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    kt = -(-k // tile_k)
+    pad = kt * tile_k - k
+    if pad:  # zero rows add nothing to the analog MAC
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    if noise is None:
+        noise = jnp.zeros((kt, m, n), dtype=jnp.float32)
+    levels = refs.shape[0]
+    use_onehot = m * n * levels <= 1 << 21
+    kernel = functools.partial(_imc_mac_kernel, use_onehot=use_onehot)
+    return pl.pallas_call(
+        kernel,
+        grid=(kt,),
+        in_specs=[
+            pl.BlockSpec((m, tile_k), lambda t: (0, t)),
+            pl.BlockSpec((tile_k, n), lambda t: (t, 0)),
+            pl.BlockSpec((levels,), lambda t: (0,)),
+            pl.BlockSpec((levels,), lambda t: (0,)),
+            pl.BlockSpec((1, m, n), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), refs, centers, noise)

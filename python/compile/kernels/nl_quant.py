@@ -1,0 +1,55 @@
+"""Pallas kernel: the IM NL-ADC conversion (floor-ADC bucketize + center map).
+
+This is the paper's ADC as a kernel: compare the analog value against the
+programmable reference ladder (thermometer comparison, exactly what the 128
+shared sense amplifiers do against the common ramp), sum the thermometer
+code to an index (the ripple counter), and map the index to its digital
+center (the Fig. 3(b) output mapping).
+
+TPU adaptation (DESIGN.md §7): the codebook (<=128 f32 levels) lives in
+VMEM for the whole grid; the thermometer comparison is a vectorized
+broadcast against it, and the center map is expressed as a one-hot × centers
+contraction when the tile is small enough for the MXU to win, otherwise a
+gather.  Under ``interpret=True`` both paths are validated against
+``ref.ref_nl_quantize``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: one-hot matmul path only below this tile volume (elements * levels)
+_ONEHOT_LIMIT = 1 << 21
+
+
+def _quantize_block(x, refs, centers, use_onehot: bool):
+    idx = jnp.sum(x[..., None] >= refs, axis=-1) - 1
+    idx = jnp.clip(idx, 0, centers.shape[0] - 1)
+    if use_onehot:
+        # MXU-friendly: one-hot(idx) @ centers.
+        onehot = (idx[..., None] == jnp.arange(centers.shape[0])).astype(
+            centers.dtype
+        )
+        return jnp.einsum("...l,l->...", onehot, centers)
+    return jnp.take(centers, idx)
+
+
+def _nl_quant_kernel(x_ref, refs_ref, centers_ref, o_ref, *, use_onehot):
+    o_ref[...] = _quantize_block(
+        x_ref[...], refs_ref[...], centers_ref[...], use_onehot
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def nl_quantize(x, refs, centers, *, interpret: bool = True):
+    """Quantize ``x`` (any shape, f32) against a padded codebook ``[L]``."""
+    levels = refs.shape[0]
+    use_onehot = x.size * levels <= _ONEHOT_LIMIT
+    kernel = functools.partial(_nl_quant_kernel, use_onehot=use_onehot)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), refs, centers)

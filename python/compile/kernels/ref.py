@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the Pallas kernels (the correctness reference).
+
+Semantics shared with ``imc_mac.py`` / ``nl_quant.py``:
+
+* ``ref_nl_quantize`` — floor-ADC conversion: index of the largest reference
+  level not exceeding the input, mapped to the matching center (paper Eq. 2
+  discussion).  Padded codebook slots carry ``+inf`` references and are
+  never selected.
+* ``ref_imc_mac_adc`` — the dual-9T crossbar dataflow of Fig. 2: the
+  contraction dimension is split into 256-row crossbar tiles, each tile's
+  analog MAC is converted by the (per-tile) ADC — with optional conversion
+  noise in units of the codebook's minimum reference step — and the
+  resulting digital codes are accumulated.
+"""
+
+import jax.numpy as jnp
+
+#: Crossbar height of the paper's macro (rows per analog accumulation).
+CROSSBAR_ROWS = 256
+
+
+def min_ref_step(refs):
+    """Smallest positive finite reference step — the ADC LSB (noise unit)."""
+    d = refs[1:] - refs[:-1]
+    d = jnp.where(jnp.isfinite(d) & (d > 0), d, jnp.inf)
+    step = jnp.min(d)
+    return jnp.where(jnp.isfinite(step), step, 1.0)
+
+
+def ref_nl_quantize(x, refs, centers):
+    """Floor-ADC quantization of ``x`` against a (possibly padded) codebook."""
+    idx = jnp.sum(x[..., None] >= refs, axis=-1) - 1
+    idx = jnp.clip(idx, 0, centers.shape[0] - 1)
+    return jnp.take(centers, idx)
+
+
+def ref_imc_mac_adc(x, w, refs, centers, noise=None, tile_k: int = CROSSBAR_ROWS):
+    """Tiled crossbar MAC with per-tile ADC conversion, pure jnp.
+
+    Args:
+      x: ``[M, K]`` activations (im2col'd for convs).
+      w: ``[K, N]`` weights (BN folded at export time).
+      refs, centers: ``[L]`` padded codebook for the per-tile conversion.
+      noise: optional ``[Kt, M, N]`` pre-scaled additive conversion noise
+        (already multiplied by sigma and the codebook's min step).
+      tile_k: crossbar rows per analog tile (256 in the paper's macro).
+
+    Returns ``[M, N]`` digitally accumulated quantized partial sums (f32).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    kt = -(-k // tile_k)
+    acc = jnp.zeros((m, n), dtype=jnp.float32)
+    for t in range(kt):
+        lo, hi = t * tile_k, min((t + 1) * tile_k, k)
+        partial = (x[:, lo:hi] @ w[lo:hi, :]).astype(jnp.float32)
+        if noise is not None:
+            partial = partial + noise[t]
+        acc = acc + ref_nl_quantize(partial, refs, centers)
+    return acc

@@ -1,0 +1,30 @@
+"""Mini model zoo (L2): the paper's four evaluation topologies.
+
+Each model module exposes:
+
+* ``init_params(key)`` / ``init_state()`` — training-time parameters and
+  BatchNorm running statistics.
+* ``forward_train(params, state, x, train)`` — float forward used by
+  ``train.py`` (lax convolutions, batch statistics).
+* ``export_pack(params, state)`` — folds BN into per-layer ``(K, N)``
+  matmul weights and returns an :class:`~compile.models.common.InferencePack`
+  (the exact tensors the Rust runtime feeds the AOT graphs).
+* ``forward_infer(pack, x, ctx)`` — the unified inference graph lowered to
+  HLO: float / collect / fake-quant / quant modes via
+  :class:`~compile.models.common.QuantCtx`.
+
+DESIGN.md §5 documents why these minis stand in for the paper's
+ResNet-18 / VGG-16 / Inception-V3 / DistilBERT.
+"""
+
+from . import common, distilbert_mini, inception_mini, resnet_mini, vgg_mini
+
+MODELS = {
+    "resnet": resnet_mini,
+    "vgg": vgg_mini,
+    "inception": inception_mini,
+    "distilbert": distilbert_mini,
+}
+
+__all__ = ["common", "MODELS", "resnet_mini", "vgg_mini", "inception_mini",
+           "distilbert_mini"]

@@ -1,0 +1,255 @@
+"""Shared building blocks for the mini model zoo.
+
+Two forward families:
+
+* **training path** — float lax convolutions + BatchNorm with batch
+  statistics (running stats tracked functionally in a ``state`` pytree).
+* **inference path** — BN folded into per-layer matmul weights; every
+  MAC layer goes through :func:`qmatmul`, which dispatches on the
+  :class:`QuantCtx` mode:
+
+  - ``float``     : plain matmul (the FP baseline "BL" of Fig. 5).
+  - ``collect``   : plain matmul + records a deterministic activation
+                    subsample and the crossbar-tile partial-sum absmax —
+                    everything the Rust calibrator (Algorithm 1) needs.
+  - ``fakequant`` : straight-through-estimator fake quantization (QAT /
+                    fine-tuning path of Fig. 5).
+  - ``quant``     : the deployed path — Pallas ``imc_mac_adc`` per-tile
+                    conversion plus the layer's NL-ADC codebook, with
+                    Gaussian conversion noise in LSB units (Fig. 6/7).
+"""
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.imc_mac import imc_mac_adc
+from ..kernels.nl_quant import nl_quantize
+from ..kernels.ref import CROSSBAR_ROWS, min_ref_step, ref_nl_quantize
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+#: activation samples recorded per quantized layer per collect batch
+COLLECT_SAMPLES = 4096
+
+
+# --------------------------------------------------------------------------
+# Parameter initialisation
+# --------------------------------------------------------------------------
+
+def conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros(cout)}
+
+
+def dense_init(key, din, dout):
+    w = jax.random.normal(key, (din, dout)) * jnp.sqrt(2.0 / din)
+    return {"w": w, "b": jnp.zeros(dout)}
+
+
+def bn_init(c):
+    return {"gamma": jnp.ones(c), "beta": jnp.zeros(c)}
+
+
+def bn_state_init(c):
+    return {"mean": jnp.zeros(c), "var": jnp.ones(c)}
+
+
+# --------------------------------------------------------------------------
+# Training-path ops
+# --------------------------------------------------------------------------
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    """NHWC x HWIO convolution."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batchnorm(x, bn, state, train: bool):
+    """Returns (y, new_state). Batch stats in training, running stats else."""
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_state = {
+            "mean": BN_MOMENTUM * state["mean"] + (1 - BN_MOMENTUM) * mean,
+            "var": BN_MOMENTUM * state["var"] + (1 - BN_MOMENTUM) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    y = (x - mean) / jnp.sqrt(var + BN_EPS) * bn["gamma"] + bn["beta"]
+    return y, new_state
+
+
+def avg_pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, window, window, 1), (1, stride, stride, 1),
+        "VALID") / float(window * window)
+
+
+def max_pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def layer_norm(x, p):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * p["gamma"] + p["beta"]
+
+
+def fold_bn(w, b, bn, state):
+    """Fold BN(gamma,beta,mean,var) into conv/dense weights (export time)."""
+    std = jnp.sqrt(state["var"] + BN_EPS)
+    scale = bn["gamma"] / std
+    w_f = w * scale  # broadcasts over the last (cout) axis
+    b_f = (b - state["mean"]) * scale + bn["beta"]
+    return w_f, b_f
+
+
+# --------------------------------------------------------------------------
+# Inference pack: the tensors the Rust side owns at runtime
+# --------------------------------------------------------------------------
+
+@dataclass
+class QLayerSpec:
+    """Static metadata for one quantized MAC layer (goes to the manifest)."""
+
+    name: str
+    k: int           # contraction size (im2col'd for convs)
+    n: int           # output features
+    relu: bool       # ReLU'd (non-negative codebook) or signed
+
+
+@dataclass
+class InferencePack:
+    """Folded weights + digital params; qweights order == QLayerSpec order."""
+
+    qweights: list          # list of (wmat [K,N], bias [N])
+    qspecs: list            # list of QLayerSpec
+    digital: dict           # embeddings / layernorms / other digital params
+
+
+# --------------------------------------------------------------------------
+# QuantCtx: mode dispatch for the unified inference graph
+# --------------------------------------------------------------------------
+
+@dataclass
+class QuantCtx:
+    mode: str = "float"     # float | collect | fakequant | quant
+    # quant mode: stacked padded codebooks, [nq, 128] each
+    nl_refs: Any = None
+    nl_centers: Any = None
+    tile_refs: Any = None
+    tile_centers: Any = None
+    noise_std: Any = 0.0    # sigma in ADC-LSB units (Fig. 7 noise model)
+    key: Any = None         # PRNG key for conversion noise
+    # fakequant mode: python list of (refs, centers) per quantized layer
+    fq_codebooks: Any = None
+    interpret: bool = True
+    qi: int = 0             # running quantized-layer index
+    records: list = field(default_factory=list)   # collect: subsamples
+    tile_maxes: list = field(default_factory=list)  # collect: partial absmax
+
+    def next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+def _collect_subsample(y):
+    """Deterministic strided subsample of a layer's activations."""
+    flat = y.reshape(-1)
+    stride = max(1, flat.shape[0] // COLLECT_SAMPLES)
+    sub = flat[::stride][:COLLECT_SAMPLES]
+    if sub.shape[0] < COLLECT_SAMPLES:  # tiny layers: pad by wrapping
+        reps = -(-COLLECT_SAMPLES // sub.shape[0])
+        sub = jnp.tile(sub, reps)[:COLLECT_SAMPLES]
+    return sub
+
+
+def _tile_absmax(x2d, w):
+    """Max |tile partial sum| over 256-row crossbar tiles (collect mode)."""
+    k = x2d.shape[1]
+    kt = -(-k // CROSSBAR_ROWS)
+    m = jnp.float32(0.0)
+    for t in range(kt):
+        lo, hi = t * CROSSBAR_ROWS, min((t + 1) * CROSSBAR_ROWS, k)
+        m = jnp.maximum(m, jnp.max(jnp.abs(x2d[:, lo:hi] @ w[lo:hi, :])))
+    return m
+
+
+def qmatmul(ctx: QuantCtx, x2d, wmat, bias, relu: bool):
+    """One quantized MAC layer on 2-D operands; dispatches on ctx.mode."""
+    if ctx.mode == "quant":
+        qi = ctx.qi
+        t_refs, t_centers = ctx.tile_refs[qi], ctx.tile_centers[qi]
+        n_refs, n_centers = ctx.nl_refs[qi], ctx.nl_centers[qi]
+        m, k = x2d.shape
+        n = wmat.shape[1]
+        kt = -(-k // CROSSBAR_ROWS)
+        tile_noise = (
+            jax.random.normal(ctx.next_key(), (kt, m, n))
+            * ctx.noise_std * min_ref_step(t_refs)
+        )
+        mac = imc_mac_adc(x2d, wmat, t_refs, t_centers, tile_noise,
+                          interpret=ctx.interpret)
+        y = mac + bias
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        out_noise = (
+            jax.random.normal(ctx.next_key(), y.shape)
+            * ctx.noise_std * min_ref_step(n_refs)
+        )
+        y = nl_quantize(y + out_noise, n_refs, n_centers,
+                        interpret=ctx.interpret)
+    else:
+        y = x2d @ wmat + bias
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        if ctx.mode == "collect":
+            ctx.records.append(_collect_subsample(y))
+            ctx.tile_maxes.append(_tile_absmax(x2d, wmat))
+        elif ctx.mode == "fakequant":
+            refs, centers = ctx.fq_codebooks[ctx.qi]
+            q = ref_nl_quantize(y, refs, centers)
+            y = y + jax.lax.stop_gradient(q - y)  # STE
+    ctx.qi += 1
+    return y
+
+
+def im2col(x, kh, kw, stride=1, padding="SAME"):
+    """Manual im2col with (kh, kw, cin) feature ordering — matches
+    ``w.reshape(kh*kw*cin, cout)`` for HWIO conv weights."""
+    b, h, w_, c = x.shape
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w_ // stride)
+        ph = max(0, (oh - 1) * stride + kh - h)
+        pw = max(0, (ow - 1) * stride + kw - w_)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+    else:
+        oh, ow = (h - kh) // stride + 1, (w_ - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i:i + stride * oh:stride, j:j + stride * ow:stride, :]
+            cols.append(patch)
+    return jnp.concatenate(cols, axis=-1).reshape(b * oh * ow, kh * kw * c), (b, oh, ow)
+
+
+def qconv(ctx: QuantCtx, x, wmat, bias, kh, kw, stride=1, relu=True,
+          padding="SAME"):
+    """Quantized convolution = im2col + :func:`qmatmul` (the IMC mapping)."""
+    x2d, (b, oh, ow) = im2col(x, kh, kw, stride, padding)
+    y = qmatmul(ctx, x2d, wmat, bias, relu)
+    return y.reshape(b, oh, ow, -1)

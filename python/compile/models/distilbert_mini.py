@@ -1,0 +1,123 @@
+"""Mini DistilBERT (stand-in for the paper's DistilBERT on SQuAD).
+
+A two-layer post-LN transformer encoder with multi-head attention — the
+quantized MACs are exactly the projections the paper quantizes, including
+the first attention layer's query projection Q = WX whose distribution
+Fig. 4 studies (signed, roughly symmetric, heavy-tailed).  SQuAD span
+extraction is replaced by synthetic sequence classification (DESIGN.md §5);
+the quantization-relevant tensors are the same.
+
+Quantized MAC layers (13): 2 x (q, k, v, o, ff1, ff2), cls.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+NAME = "distilbert"
+VOCAB = 64
+SEQ_LEN = 32
+D_MODEL = 48
+N_HEADS = 4
+D_FF = 96
+N_LAYERS = 2
+NUM_CLASSES = 6
+INPUT_SHAPE = (SEQ_LEN,)
+SEQUENCE = True
+
+_HD = D_MODEL // N_HEADS
+
+
+def init_params(key):
+    ks = jax.random.split(key, 4 + N_LAYERS * 6)
+    p = {
+        "embed": jax.random.normal(ks[0], (VOCAB, D_MODEL)) * 0.05,
+        "pos": jax.random.normal(ks[1], (SEQ_LEN, D_MODEL)) * 0.05,
+        "cls": cm.dense_init(ks[2], D_MODEL, NUM_CLASSES),
+    }
+    kidx = 3
+    for l in range(N_LAYERS):
+        for proj, dout in (("q", D_MODEL), ("k", D_MODEL), ("v", D_MODEL),
+                           ("o", D_MODEL), ("ff1", D_FF), ("ff2", D_MODEL)):
+            din = D_FF if proj == "ff2" else D_MODEL
+            p[f"l{l}_{proj}"] = cm.dense_init(ks[kidx], din, dout)
+            kidx += 1
+        p[f"l{l}_ln1"] = {"gamma": jnp.ones(D_MODEL), "beta": jnp.zeros(D_MODEL)}
+        p[f"l{l}_ln2"] = {"gamma": jnp.ones(D_MODEL), "beta": jnp.zeros(D_MODEL)}
+    return p
+
+
+def init_state():
+    return {}  # no BatchNorm in the transformer
+
+
+def _attention(q, k, v, b, t):
+    """Digital-domain attention over quantized Q/K/V (B*T rows)."""
+    def heads(x):
+        return x.reshape(b, t, N_HEADS, _HD).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = heads(q), heads(k), heads(v)
+    scores = qh @ kh.transpose(0, 1, 3, 2) / jnp.sqrt(float(_HD))
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = (attn @ vh).transpose(0, 2, 1, 3).reshape(b * t, D_MODEL)
+    return out
+
+
+def _forward(get_w, params_digital, x_tokens, matmul):
+    """Shared forward; ``matmul(idx, x2d, relu)`` consumes qlayers in order."""
+    b, t = x_tokens.shape
+    h = params_digital["embed"][x_tokens] + params_digital["pos"][None, :, :]
+    h = h.reshape(b * t, D_MODEL)
+    wi = 0
+    for l in range(N_LAYERS):
+        q = matmul(wi, h, False)
+        k = matmul(wi + 1, h, False)
+        v = matmul(wi + 2, h, False)
+        a = _attention(q, k, v, b, t)
+        o = matmul(wi + 3, a, False)
+        h = cm.layer_norm(h + o, params_digital[f"l{l}_ln1"])
+        f = matmul(wi + 4, h, True)       # GeLU -> ReLU (IMC-digital friendly)
+        f = matmul(wi + 5, f, False)
+        h = cm.layer_norm(h + f, params_digital[f"l{l}_ln2"])
+        wi += 6
+    pooled = h.reshape(b, t, D_MODEL).mean(axis=1)
+    return matmul(wi, pooled, False)
+
+
+def forward_train(params, state, x_tokens, train: bool):
+    def matmul(i, x2d, relu):
+        name = _qlayer_names()[i]
+        y = x2d @ params[name]["w"] + params[name]["b"]
+        return jnp.maximum(y, 0.0) if relu else y
+
+    return _forward(None, params, x_tokens, matmul), {}
+
+
+def _qlayer_names():
+    names = []
+    for l in range(N_LAYERS):
+        names += [f"l{l}_{p}" for p in ("q", "k", "v", "o", "ff1", "ff2")]
+    return names + ["cls"]
+
+
+def export_pack(params, state):
+    qweights, qspecs = [], []
+    for name in _qlayer_names():
+        w, b = params[name]["w"], params[name]["b"]
+        qweights.append((w, b))
+        relu = name.endswith("ff1")
+        qspecs.append(cm.QLayerSpec(name, w.shape[0], w.shape[1], relu))
+    digital = {"embed": params["embed"], "pos": params["pos"]}
+    for l in range(N_LAYERS):
+        digital[f"l{l}_ln1"] = params[f"l{l}_ln1"]
+        digital[f"l{l}_ln2"] = params[f"l{l}_ln2"]
+    return cm.InferencePack(qweights, qspecs, digital=digital)
+
+
+def forward_infer(pack, x_tokens, ctx):
+    def matmul(i, x2d, relu):
+        return cm.qmatmul(ctx, x2d, pack.qweights[i][0], pack.qweights[i][1],
+                          relu)
+
+    return _forward(None, pack.digital, x_tokens, matmul)

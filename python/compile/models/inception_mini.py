@@ -1,0 +1,119 @@
+"""Mini Inception (stand-in for the paper's Inception-V3 on Tiny-ImageNet).
+
+The Inception signature: parallel branches of different receptive fields
+(1x1, 1x1->3x3, pool->1x1 projection) concatenated along channels, stacked
+twice over a Conv-BN-ReLU stem.  Its depth (longest path crosses more
+quantized layers than the other CNNs) is what makes Inception-V3 the most
+noise-sensitive model in Fig. 6 — the property the mini preserves.
+
+Quantized MAC layers (10): stem, 2 x (b0, b1a, b1b, pp), fc.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+NAME = "inception"
+INPUT_SHAPE = (16, 16, 3)
+NUM_CLASSES = 10
+SEQUENCE = False
+
+_B0, _B1R, _B1, _PP = 8, 8, 12, 8
+_OUT = _B0 + _B1 + _PP  # 28 channels per inception block
+
+
+def _block_names(i):
+    return [f"i{i}_b0", f"i{i}_b1a", f"i{i}_b1b", f"i{i}_pp"]
+
+
+def init_params(key):
+    ks = jax.random.split(key, 11)
+    p = {"stem": cm.conv_init(ks[0], 3, 3, 3, 16), "bn_stem": cm.bn_init(16)}
+    kidx = 1
+    for i, cin in ((1, 16), (2, _OUT)):
+        b0, b1a, b1b, pp = _block_names(i)
+        p[b0] = cm.conv_init(ks[kidx], 1, 1, cin, _B0)
+        p[b1a] = cm.conv_init(ks[kidx + 1], 1, 1, cin, _B1R)
+        p[b1b] = cm.conv_init(ks[kidx + 2], 3, 3, _B1R, _B1)
+        p[pp] = cm.conv_init(ks[kidx + 3], 1, 1, cin, _PP)
+        for name, c in ((b0, _B0), (b1a, _B1R), (b1b, _B1), (pp, _PP)):
+            p["bn_" + name] = cm.bn_init(c)
+        kidx += 4
+    p["fc"] = cm.dense_init(ks[kidx], _OUT, NUM_CLASSES)
+    return p
+
+
+def init_state():
+    st = {"bn_stem": cm.bn_state_init(16)}
+    for i in (1, 2):
+        b0, b1a, b1b, pp = _block_names(i)
+        for name, c in ((b0, _B0), (b1a, _B1R), (b1b, _B1), (pp, _PP)):
+            st["bn_" + name] = cm.bn_state_init(c)
+    return st
+
+
+def _pool3(x):
+    """3x3 stride-1 SAME average pool (the inception pool branch)."""
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 3, 3, 1), (1, 1, 1, 1), "SAME") / 9.0
+
+
+def forward_train(params, state, x, train: bool):
+    ns = {}
+
+    def cbr(name, x):
+        y = cm.conv2d(x, params[name]["w"]) + params[name]["b"]
+        y, ns["bn_" + name] = cm.batchnorm(
+            y, params["bn_" + name], state["bn_" + name], train)
+        return jnp.maximum(y, 0.0)
+
+    y = cm.max_pool(cbr("stem", x))
+    for i in (1, 2):
+        b0, b1a, b1b, pp = _block_names(i)
+        br0 = cbr(b0, y)
+        br1 = cbr(b1b, cbr(b1a, y))
+        br2 = cbr(pp, _pool3(y))
+        y = jnp.concatenate([br0, br1, br2], axis=-1)
+    y = cm.global_avg_pool(y)
+    logits = y @ params["fc"]["w"] + params["fc"]["b"]
+    return logits, ns
+
+
+def _conv_list():
+    lst = [("stem", 3, 16, 3)]
+    for i, cin in ((1, 16), (2, _OUT)):
+        b0, b1a, b1b, pp = _block_names(i)
+        lst += [(b0, cin, _B0, 1), (b1a, cin, _B1R, 1),
+                (b1b, _B1R, _B1, 3), (pp, cin, _PP, 1)]
+    return lst
+
+
+def export_pack(params, state):
+    qweights, qspecs = [], []
+    for name, cin, cout, ksz in _conv_list():
+        w, b = cm.fold_bn(params[name]["w"], params[name]["b"],
+                          params["bn_" + name], state["bn_" + name])
+        qweights.append((w.reshape(ksz * ksz * cin, cout), b))
+        qspecs.append(cm.QLayerSpec(name, ksz * ksz * cin, cout, True))
+    qweights.append((params["fc"]["w"], params["fc"]["b"]))
+    qspecs.append(cm.QLayerSpec("fc", _OUT, NUM_CLASSES, False))
+    return cm.InferencePack(qweights, qspecs, digital={})
+
+
+def forward_infer(pack, x, ctx):
+    qw = pack.qweights
+
+    def conv(i, x, ksz):
+        return cm.qconv(ctx, x, qw[i][0], qw[i][1], ksz, ksz, 1, True)
+
+    y = cm.max_pool(conv(0, x, 3))
+    wi = 1
+    for _ in (1, 2):
+        br0 = conv(wi, y, 1)
+        br1 = conv(wi + 2, conv(wi + 1, y, 1), 3)
+        br2 = conv(wi + 3, _pool3(y), 1)
+        y = jnp.concatenate([br0, br1, br2], axis=-1)
+        wi += 4
+    y = cm.global_avg_pool(y)
+    return cm.qmatmul(ctx, y, qw[wi][0], qw[wi][1], relu=False)

@@ -1,0 +1,100 @@
+"""Mini ResNet (stand-in for the paper's ResNet-18 on CIFAR-10).
+
+Same structural elements as ResNet-18 — a Conv-BN-ReLU stem (the layer
+Fig. 1 calibrates on), residual basic blocks with a strided 1x1 projection
+shortcut, global average pooling and a linear classifier — scaled to a
+16x16x3 synthetic 10-class dataset so it trains on this CPU testbed.
+
+Quantized MAC layers (7): conv0, b1c1, b1c2, b2c1, b2c2, b2sc, fc.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+NAME = "resnet"
+INPUT_SHAPE = (16, 16, 3)
+NUM_CLASSES = 10
+SEQUENCE = False
+
+
+def init_params(key):
+    ks = jax.random.split(key, 7)
+    return {
+        "conv0": cm.conv_init(ks[0], 3, 3, 3, 16), "bn0": cm.bn_init(16),
+        "b1c1": cm.conv_init(ks[1], 3, 3, 16, 16), "bn11": cm.bn_init(16),
+        "b1c2": cm.conv_init(ks[2], 3, 3, 16, 16), "bn12": cm.bn_init(16),
+        "b2c1": cm.conv_init(ks[3], 3, 3, 16, 32), "bn21": cm.bn_init(32),
+        "b2c2": cm.conv_init(ks[4], 3, 3, 32, 32), "bn22": cm.bn_init(32),
+        "b2sc": cm.conv_init(ks[5], 1, 1, 16, 32), "bnsc": cm.bn_init(32),
+        "fc": cm.dense_init(ks[6], 32, NUM_CLASSES),
+    }
+
+
+def init_state():
+    return {"bn0": cm.bn_state_init(16), "bn11": cm.bn_state_init(16),
+            "bn12": cm.bn_state_init(16), "bn21": cm.bn_state_init(32),
+            "bn22": cm.bn_state_init(32), "bnsc": cm.bn_state_init(32)}
+
+
+def forward_train(params, state, x, train: bool):
+    ns = {}
+
+    def cbr(name, bn, x, stride=1, relu=True):
+        y = cm.conv2d(x, params[name]["w"], stride) + params[name]["b"]
+        y, ns[bn] = cm.batchnorm(y, params[bn], state[bn], train)
+        return jnp.maximum(y, 0.0) if relu else y
+
+    y = cbr("conv0", "bn0", x)
+    h = cbr("b1c1", "bn11", y)
+    h = cbr("b1c2", "bn12", h, relu=False)
+    y = jnp.maximum(y + h, 0.0)
+    h = cbr("b2c1", "bn21", y, stride=2)
+    h = cbr("b2c2", "bn22", h, relu=False)
+    sc = cbr("b2sc", "bnsc", y, stride=2, relu=False)
+    y = jnp.maximum(h + sc, 0.0)
+    y = cm.global_avg_pool(y)
+    logits = y @ params["fc"]["w"] + params["fc"]["b"]
+    return logits, ns
+
+
+_CONVS = [  # (param, bn, kh, kw, stride, relu-in-codebook)
+    ("conv0", "bn0", 3, 3, 1, True),
+    ("b1c1", "bn11", 3, 3, 1, True),
+    ("b1c2", "bn12", 3, 3, 1, False),
+    ("b2c1", "bn21", 3, 3, 2, True),
+    ("b2c2", "bn22", 3, 3, 1, False),
+    ("b2sc", "bnsc", 1, 1, 2, False),
+]
+
+
+def export_pack(params, state):
+    qweights, qspecs = [], []
+    for name, bn, kh, kw, _s, relu in _CONVS:
+        w, b = cm.fold_bn(params[name]["w"], params[name]["b"],
+                          params[bn], state[bn])
+        cin, cout = w.shape[2], w.shape[3]
+        qweights.append((w.reshape(kh * kw * cin, cout), b))
+        qspecs.append(cm.QLayerSpec(name, kh * kw * cin, cout, relu))
+    qweights.append((params["fc"]["w"], params["fc"]["b"]))
+    qspecs.append(cm.QLayerSpec("fc", 32, NUM_CLASSES, False))
+    return cm.InferencePack(qweights, qspecs, digital={})
+
+
+def forward_infer(pack, x, ctx):
+    qw = pack.qweights
+
+    def conv(i, x, stride, relu, kh=3, kw=3):
+        return cm.qconv(ctx, x, qw[i][0], qw[i][1], kh, kw, stride, relu)
+
+    y = conv(0, x, 1, True)
+    h = conv(1, y, 1, True)
+    h = conv(2, h, 1, False)
+    y = jnp.maximum(y + h, 0.0)           # digital residual add + ReLU
+    h = conv(3, y, 2, True)
+    h = conv(4, h, 1, False)
+    sc = conv(5, y, 2, False, kh=1, kw=1)
+    y = jnp.maximum(h + sc, 0.0)
+    y = cm.global_avg_pool(y)
+    return cm.qmatmul(ctx, y, qw[6][0], qw[6][1], relu=False)

@@ -1,0 +1,85 @@
+"""Mini VGG (stand-in for the paper's VGG-16 on CIFAR-100).
+
+Plain Conv-BN-ReLU stacks with max-pool downsampling and a two-layer
+classifier head — the VGG signature.  20 synthetic classes echo the
+finer-grained CIFAR-100 task.
+
+Quantized MAC layers (7): conv1..conv5, fc1, fc2.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+NAME = "vgg"
+INPUT_SHAPE = (16, 16, 3)
+NUM_CLASSES = 20
+SEQUENCE = False
+
+_CFG = [  # (name, cin, cout, pool-after)
+    ("conv1", 3, 16, False),
+    ("conv2", 16, 16, True),
+    ("conv3", 16, 32, False),
+    ("conv4", 32, 32, True),
+    ("conv5", 32, 48, True),
+]
+_FLAT = 2 * 2 * 48  # 16 -> 8 -> 4 -> 2 spatial
+
+
+def init_params(key):
+    ks = jax.random.split(key, len(_CFG) + 2)
+    p = {}
+    for i, (name, cin, cout, _) in enumerate(_CFG):
+        p[name] = cm.conv_init(ks[i], 3, 3, cin, cout)
+        p["bn_" + name] = cm.bn_init(cout)
+    p["fc1"] = cm.dense_init(ks[-2], _FLAT, 64)
+    p["fc2"] = cm.dense_init(ks[-1], 64, NUM_CLASSES)
+    return p
+
+
+def init_state():
+    return {"bn_" + name: cm.bn_state_init(cout)
+            for name, _, cout, _ in _CFG}
+
+
+def forward_train(params, state, x, train: bool):
+    ns = {}
+    y = x
+    for name, _, _, pool in _CFG:
+        y = cm.conv2d(y, params[name]["w"]) + params[name]["b"]
+        y, ns["bn_" + name] = cm.batchnorm(
+            y, params["bn_" + name], state["bn_" + name], train)
+        y = jnp.maximum(y, 0.0)
+        if pool:
+            y = cm.max_pool(y)
+    y = y.reshape(y.shape[0], -1)
+    y = jnp.maximum(y @ params["fc1"]["w"] + params["fc1"]["b"], 0.0)
+    logits = y @ params["fc2"]["w"] + params["fc2"]["b"]
+    return logits, ns
+
+
+def export_pack(params, state):
+    qweights, qspecs = [], []
+    for name, cin, cout, _ in _CFG:
+        w, b = cm.fold_bn(params[name]["w"], params[name]["b"],
+                          params["bn_" + name], state["bn_" + name])
+        qweights.append((w.reshape(9 * cin, cout), b))
+        qspecs.append(cm.QLayerSpec(name, 9 * cin, cout, True))
+    qweights.append((params["fc1"]["w"], params["fc1"]["b"]))
+    qspecs.append(cm.QLayerSpec("fc1", _FLAT, 64, True))
+    qweights.append((params["fc2"]["w"], params["fc2"]["b"]))
+    qspecs.append(cm.QLayerSpec("fc2", 64, NUM_CLASSES, False))
+    return cm.InferencePack(qweights, qspecs, digital={})
+
+
+def forward_infer(pack, x, ctx):
+    qw = pack.qweights
+    y = x
+    for i, (_, _, _, pool) in enumerate(_CFG):
+        y = cm.qconv(ctx, y, qw[i][0], qw[i][1], 3, 3, 1, True)
+        if pool:
+            y = cm.max_pool(y)
+    y = y.reshape(y.shape[0], -1)
+    y = cm.qmatmul(ctx, y, qw[5][0], qw[5][1], relu=True)
+    return cm.qmatmul(ctx, y, qw[6][0], qw[6][1], relu=False)

@@ -1,0 +1,56 @@
+"""Quantizer suite for BS-KMQ reproduction (build-time Python side).
+
+Each quantizer exposes ``fit(samples, bits, **kw) -> centers`` returning a
+sorted 1-D numpy array of ``2**bits`` quantization centers.  Centers are
+converted to floor-ADC reference levels via :func:`codebook.refs_from_centers`
+(Eq. 2 of the paper) and applied with :func:`codebook.quantize_np` /
+:func:`codebook.quantize_jnp`.
+
+The Rust layer (``rust/src/quant``) mirrors these implementations; the pytest
+suite cross-checks the two through golden vectors.
+"""
+
+from .codebook import (
+    MAX_LEVELS,
+    Codebook,
+    cell_budget,
+    mse,
+    pad_codebook,
+    project_to_hardware,
+    quantize_jnp,
+    quantize_np,
+    refs_from_centers,
+)
+from .linear import fit_linear
+from .lloyd_max import fit_lloyd_max
+from .cdf import fit_cdf
+from .kmeans import fit_kmeans, kmeans_1d
+from .bs_kmq import BSKMQCalibrator, fit_bs_kmq
+
+FITTERS = {
+    "linear": fit_linear,
+    "lloyd_max": fit_lloyd_max,
+    "cdf": fit_cdf,
+    "kmeans": fit_kmeans,
+    "bs_kmq": fit_bs_kmq,
+}
+
+__all__ = [
+    "MAX_LEVELS",
+    "Codebook",
+    "cell_budget",
+    "project_to_hardware",
+    "mse",
+    "pad_codebook",
+    "quantize_jnp",
+    "quantize_np",
+    "refs_from_centers",
+    "fit_linear",
+    "fit_lloyd_max",
+    "fit_cdf",
+    "fit_kmeans",
+    "kmeans_1d",
+    "fit_bs_kmq",
+    "BSKMQCalibrator",
+    "FITTERS",
+]

@@ -1,0 +1,103 @@
+"""Boundary Suppressed K-Means Quantization (BS-KMQ) — paper Algorithm 1.
+
+Two stages:
+
+Stage 1 (robust statistical calibration): stream calibration batches; per
+batch drop the extreme ``alpha`` tails on both sides, track the trimmed
+batch min/max, and fold them into a global range ``[g_min, g_max]`` with an
+exponential moving average (Eq. 1, decay 0.9/0.1).
+
+Stage 2 (boundary-suppressed clustering): clamp all retained samples into
+``[g_min, g_max]``, *remove* the samples that saturate at either bound
+(the ReLU zero spike and the clamp pile-up), k-means the interior into
+``2**b - 2`` centers, and re-attach ``g_min``/``g_max`` as the outermost
+centers so the codebook still covers the full hardware range.
+"""
+
+import numpy as np
+
+from .kmeans import kmeans_1d
+
+DEFAULT_ALPHA = 0.005
+EMA_KEEP = 0.9
+EMA_NEW = 0.1
+
+
+class BSKMQCalibrator:
+    """Streaming implementation of Algorithm 1 (mirrors rust/src/quant/bs_kmq.rs)."""
+
+    def __init__(self, alpha: float = DEFAULT_ALPHA, max_buffer: int = 200_000,
+                 seed: int = 0):
+        if not 0.0 <= alpha < 0.5:
+            raise ValueError(f"alpha must be in [0, 0.5), got {alpha}")
+        self.alpha = alpha
+        self.g_min: float | None = None
+        self.g_max: float | None = None
+        self._buffer: list[np.ndarray] = []
+        self._buffered = 0
+        self._max_buffer = max_buffer
+        self._rng = np.random.default_rng(seed)
+        self.batches_seen = 0
+
+    def observe(self, batch: np.ndarray) -> None:
+        """Algorithm 1 lines 5-17: trim tails, EMA the range, buffer interior."""
+        a = np.asarray(batch, dtype=np.float64).ravel()
+        if a.size == 0:
+            return
+        p_low, p_high = np.quantile(a, [self.alpha, 1.0 - self.alpha])
+        cent = a[(a >= p_low) & (a <= p_high)]
+        if cent.size == 0:
+            cent = a
+        b_min, b_max = float(cent.min()), float(cent.max())
+        if self.g_min is None:
+            self.g_min, self.g_max = b_min, b_max
+        else:
+            self.g_min = EMA_KEEP * self.g_min + EMA_NEW * b_min
+            self.g_max = EMA_KEEP * self.g_max + EMA_NEW * b_max
+        self.batches_seen += 1
+        # Reservoir-ish buffering keeps calibration memory bounded.
+        if self._buffered + cent.size > self._max_buffer:
+            keep = max(0, self._max_buffer - self._buffered)
+            if keep == 0:
+                return
+            cent = self._rng.choice(cent, keep, replace=False)
+        self._buffer.append(cent)
+        self._buffered += cent.size
+
+    def finish(self, bits: int, iters: int = 50, seed: int = 0) -> np.ndarray:
+        """Algorithm 1 lines 18-23: boundary-suppressed clustering."""
+        if bits < 1 or bits > 7:
+            raise ValueError(f"bits must be in [1, 7], got {bits}")
+        if self.g_min is None or not self._buffer:
+            raise RuntimeError("finish() before any observe()")
+        g_min, g_max = float(self.g_min), float(self.g_max)
+        if g_max <= g_min:
+            g_max = g_min + 1e-8
+        s = np.concatenate(self._buffer)
+        s = np.clip(s, g_min, g_max)
+        interior = s[(s > g_min) & (s < g_max)]
+        k_interior = 2 ** bits - 2
+        if k_interior <= 0:  # 1-bit codebook is just the two bounds
+            return np.array([g_min, g_max])
+        if interior.size < k_interior:
+            cq = np.linspace(g_min, g_max, k_interior + 2)[1:-1]
+        else:
+            cq = kmeans_1d(interior, k_interior, iters=iters, seed=seed)
+            if cq.size < k_interior:  # degenerate interior: pad evenly
+                pad = np.linspace(g_min, g_max, k_interior - cq.size + 2)[1:-1]
+                cq = np.sort(np.concatenate([cq, pad]))
+        centers = np.concatenate([[g_min], cq, [g_max]])
+        return np.sort(centers)
+
+
+def fit_bs_kmq(samples: np.ndarray, bits: int, alpha: float = DEFAULT_ALPHA,
+               batches: int = 8, iters: int = 50, seed: int = 0) -> np.ndarray:
+    """One-shot convenience wrapper: split ``samples`` into calibration batches."""
+    samples = np.asarray(samples, dtype=np.float64).ravel()
+    if samples.size == 0:
+        raise ValueError("cannot fit on empty sample set")
+    calib = BSKMQCalibrator(alpha=alpha, seed=seed)
+    for chunk in np.array_split(samples, max(1, min(batches, samples.size))):
+        if chunk.size:
+            calib.observe(chunk)
+    return calib.finish(bits, iters=iters, seed=seed)

@@ -1,0 +1,31 @@
+"""CDF (equal-probability) quantizer baseline [11].
+
+Centers sit at the mid-probability quantiles so each quantization cell
+carries equal probability mass.  On ReLU activations the huge zero spike
+collapses many quantiles onto the same value — the degeneracy the paper
+points out ("highly sensitive to distribution outliers"); duplicated
+centers are nudged apart only enough to keep references strictly sorted,
+so the effective number of distinct levels drops, which is exactly the
+failure mode Fig. 1 exhibits.
+"""
+
+import numpy as np
+
+
+def fit_cdf(samples: np.ndarray, bits: int) -> np.ndarray:
+    """``2**bits`` equal-probability-mass centers (mid-cell quantiles)."""
+    if bits < 1 or bits > 7:
+        raise ValueError(f"bits must be in [1, 7], got {bits}")
+    samples = np.asarray(samples, dtype=np.float64).ravel()
+    if samples.size == 0:
+        raise ValueError("cannot fit on empty sample set")
+    k = 2 ** bits
+    qs = (np.arange(k) + 0.5) / k
+    centers = np.quantile(samples, qs)
+    # Keep the codebook weakly increasing but avoid zero-width cells in the
+    # reference ladder: spread exact duplicates by a tiny epsilon.
+    eps = 1e-12 + 1e-9 * max(1.0, float(np.abs(samples).max()))
+    for i in range(1, k):
+        if centers[i] <= centers[i - 1]:
+            centers[i] = centers[i - 1] + eps
+    return centers

@@ -1,0 +1,66 @@
+"""Standard 1-D k-means quantizer baseline [13] (built from scratch).
+
+k-means++ seeding plus Lloyd iterations over (a subsample of) the raw,
+untrimmed activation samples.  This is the "standard K-means" the paper
+compares against: no tail trimming and no boundary suppression, so the
+ReLU zero spike and clamping tails pull centroids toward the distribution
+edges ("boundary instability") — the behaviour BS-KMQ fixes.
+"""
+
+import numpy as np
+
+_MAX_FIT_SAMPLES = 20_000
+
+
+def _kmeanspp_init(x: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarray:
+    centers = np.empty(k, dtype=np.float64)
+    centers[0] = x[rng.integers(x.size)]
+    d2 = (x - centers[0]) ** 2
+    for i in range(1, k):
+        total = d2.sum()
+        if total <= 0:
+            centers[i:] = x[rng.integers(x.size, size=k - i)]
+            break
+        probs = d2 / total
+        centers[i] = x[rng.choice(x.size, p=probs)]
+        d2 = np.minimum(d2, (x - centers[i]) ** 2)
+    return np.sort(centers)
+
+
+def kmeans_1d(x: np.ndarray, k: int, iters: int = 50, seed: int = 0,
+              tol: float = 1e-10) -> np.ndarray:
+    """Lloyd's algorithm in 1-D; sorted centroids enable O(n log k) assign."""
+    x = np.asarray(x, dtype=np.float64).ravel()
+    if x.size == 0:
+        raise ValueError("kmeans on empty sample set")
+    rng = np.random.default_rng(seed)
+    if x.size > _MAX_FIT_SAMPLES:
+        x = rng.choice(x, _MAX_FIT_SAMPLES, replace=False)
+    k = min(k, max(1, np.unique(x).size))
+    centers = _kmeanspp_init(x, k, rng)
+    for _ in range(iters):
+        bounds = 0.5 * (centers[:-1] + centers[1:])
+        cell = np.searchsorted(bounds, x, side="right")
+        sums = np.bincount(cell, weights=x, minlength=k)
+        counts = np.bincount(cell, minlength=k)
+        new = centers.copy()
+        nz = counts > 0
+        new[nz] = sums[nz] / counts[nz]
+        new = np.sort(new)
+        if np.max(np.abs(new - centers)) < tol:
+            centers = new
+            break
+        centers = new
+    return centers
+
+
+def fit_kmeans(samples: np.ndarray, bits: int, iters: int = 50,
+               seed: int = 0) -> np.ndarray:
+    """``2**bits`` standard k-means centers over the raw sample set."""
+    if bits < 1 or bits > 7:
+        raise ValueError(f"bits must be in [1, 7], got {bits}")
+    k = 2 ** bits
+    centers = kmeans_1d(samples, k, iters=iters, seed=seed)
+    if centers.size < k:  # degenerate data: repeat the last center
+        centers = np.concatenate([centers, np.full(k - centers.size, centers[-1])])
+    return centers

@@ -1,0 +1,23 @@
+"""Linear (uniform min-max) quantizer — the paper's baseline [14].
+
+Centers are evenly spaced over the observed activation range, matching the
+linear in-memory ramp ADC of Yang et al. (DAC'25): equal reference steps,
+no adaptation to the activation distribution.
+"""
+
+import numpy as np
+
+
+def fit_linear(samples: np.ndarray, bits: int, lo: float | None = None,
+               hi: float | None = None) -> np.ndarray:
+    """Evenly spaced ``2**bits`` centers over ``[lo, hi]`` (default min/max)."""
+    if bits < 1 or bits > 7:
+        raise ValueError(f"bits must be in [1, 7], got {bits}")
+    samples = np.asarray(samples, dtype=np.float64).ravel()
+    if samples.size == 0:
+        raise ValueError("cannot fit on empty sample set")
+    lo = float(samples.min()) if lo is None else float(lo)
+    hi = float(samples.max()) if hi is None else float(hi)
+    if hi <= lo:
+        hi = lo + 1e-8
+    return np.linspace(lo, hi, 2 ** bits)

@@ -1,0 +1,212 @@
+"""Build-time training + quantization-aware fine-tuning (Fig. 5's FT rows).
+
+Runs ONCE during `make artifacts` (never on the request path):
+
+1. trains each mini model on its synthetic dataset (hand-rolled Adam —
+   no optax on this testbed);
+2. exports the BN-folded inference pack to ``artifacts/<model>_weights.bin``
+   (the tensors the Rust runtime feeds the AOT graphs);
+3. calibrates per-layer BS-KMQ / linear codebooks python-side, evaluates
+   PTQ, then low-bit fine-tunes with STE fake quantization at the paper's
+   per-model bit widths (3/3/4/4b) and records everything in
+   ``artifacts/train_results.json`` for the Fig. 5 harness.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import quantlib as Q
+from . import weights_io
+from .models import MODELS
+from .models import common as cm
+
+TRAIN_N = 2048
+TEST_N = 512
+BATCH = 64
+STEPS = {"resnet": 350, "vgg": 350, "inception": 300, "distilbert": 900}
+LR = 3e-3
+FT_STEPS = 200
+FT_LR = 1e-4
+#: the paper's chosen per-model NL-ADC resolutions (Fig. 5)
+PAPER_BITS = {"resnet": 3, "vgg": 3, "inception": 4, "distilbert": 4}
+CALIB_BATCHES = 8
+
+
+# ----------------------------------------------------------------- optimizer
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               opt["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    new = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m * mhat_scale)
+        / (jnp.sqrt(v * vhat_scale) + eps),
+        params, m, v)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+# ------------------------------------------------------------------ training
+
+def train_model(name, mod, seed=0):
+    x, y = D.dataset_for(name, seed=seed, n=TRAIN_N)
+    xt, yt = D.dataset_for(name, seed=seed + 1, n=TEST_N)
+    key = jax.random.PRNGKey(seed)
+    params = mod.init_params(key)
+    state = mod.init_state()
+    opt = adam_init(params)
+
+    def loss_fn(params, state, xb, yb):
+        logits, ns = mod.forward_train(params, state, xb, True)
+        return cross_entropy(logits, yb), ns
+
+    @jax.jit
+    def step(params, state, opt, xb, yb):
+        (loss, ns), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, state, xb, yb)
+        params, opt = adam_update(params, grads, opt, LR)
+        return params, ns, opt, loss
+
+    rng = np.random.default_rng(seed)
+    n_steps = STEPS[name]
+    for i in range(n_steps):
+        idx = rng.integers(0, TRAIN_N, BATCH)
+        params, state, opt, loss = step(params, state, opt, x[idx], y[idx])
+        if i % 100 == 0:
+            print(f"  [{name}] step {i} loss {float(loss):.4f}")
+
+    @jax.jit
+    def infer(params, state, xb):
+        return mod.forward_train(params, state, xb, False)[0]
+
+    acc = float(jnp.mean(jnp.argmax(infer(params, state, xt), -1) == yt))
+    print(f"  [{name}] float test acc {acc:.4f}")
+    return params, state, (x, y), (xt, yt), acc
+
+
+# ------------------------------------------------------- PTQ / FT evaluation
+
+def calibrate_codebooks(mod, pack, x_calib, bits, method="bs_kmq"):
+    """Collect activations per quantized layer, fit + hardware-project."""
+    nq = len(pack.qspecs)
+    calibs = [Q.BSKMQCalibrator(seed=i) for i in range(nq)]
+    samples = [[] for _ in range(nq)]
+    for b in range(CALIB_BATCHES):
+        xb = x_calib[b * 32:(b + 1) * 32]
+        ctx = cm.QuantCtx(mode="collect")
+        mod.forward_infer(pack, jnp.asarray(xb), ctx)
+        for i, rec in enumerate(ctx.records):
+            arr = np.asarray(rec)
+            samples[i].append(arr)
+            calibs[i].observe(arr)
+    books = []
+    for i in range(nq):
+        if method == "bs_kmq":
+            centers = calibs[i].finish(bits)
+        else:
+            alls = np.concatenate(samples[i])
+            centers = Q.FITTERS[method](alls, bits)
+        hw_c, hw_r = Q.project_to_hardware(np.sort(centers), bits)
+        books.append((jnp.asarray(hw_r, jnp.float32),
+                      jnp.asarray(hw_c, jnp.float32)))
+    return books
+
+
+def eval_fakequant(mod, pack, books, xt, yt):
+    ctx = cm.QuantCtx(mode="fakequant", fq_codebooks=books)
+    logits = mod.forward_infer(pack, jnp.asarray(xt), ctx)
+    return float(jnp.mean(jnp.argmax(logits, -1) == yt))
+
+
+def finetune(mod, pack, books, xy, xt, yt, seed=0):
+    """STE fake-quant fine-tuning of the folded pack (Fig. 5 FT rows)."""
+    x, y = xy
+    trainable = {"qw": [list(t) for t in pack.qweights],
+                 "dg": pack.digital}
+
+    def rebuild(tr):
+        return cm.InferencePack([tuple(t) for t in tr["qw"]], pack.qspecs,
+                                tr["dg"])
+
+    def loss_fn(tr, xb, yb):
+        ctx = cm.QuantCtx(mode="fakequant", fq_codebooks=books)
+        logits = mod.forward_infer(rebuild(tr), jnp.asarray(xb), ctx)
+        return cross_entropy(logits, yb)
+
+    opt = adam_init(trainable)
+
+    @jax.jit
+    def step(tr, opt, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(tr, xb, yb)
+        tr, opt = adam_update(tr, grads, opt, FT_LR)
+        return tr, opt, loss
+
+    rng = np.random.default_rng(seed)
+    for _ in range(FT_STEPS):
+        idx = rng.integers(0, x.shape[0], BATCH)
+        trainable, opt, _ = step(trainable, opt, x[idx], y[idx])
+    return eval_fakequant(mod, rebuild(trainable), books, xt, yt)
+
+
+# -------------------------------------------------------------------- export
+
+def export_weights(path, pack):
+    tensors = []
+    for i, ((w, b), spec) in enumerate(zip(pack.qweights, pack.qspecs)):
+        tensors.append((f"q{i:02d}_{spec.name}_w", np.asarray(w)))
+        tensors.append((f"q{i:02d}_{spec.name}_b", np.asarray(b)))
+    for name in sorted(pack.digital):
+        v = pack.digital[name]
+        if isinstance(v, dict):
+            for f in sorted(v):
+                tensors.append((f"d_{name}_{f}", np.asarray(v[f])))
+        else:
+            tensors.append((f"d_{name}", np.asarray(v)))
+    weights_io.save_tensors(path, tensors)
+
+
+def main(outdir="../artifacts"):
+    os.makedirs(outdir, exist_ok=True)
+    results = {}
+    for name, mod in MODELS.items():
+        print(f"== training {name} ==")
+        params, state, (x, y), (xt, yt), float_acc = train_model(name, mod)
+        pack = mod.export_pack(params, state)
+        export_weights(os.path.join(outdir, f"{name}_weights.bin"), pack)
+
+        bits = PAPER_BITS[name]
+        entry = {"float_acc": float_acc, "paper_bits": bits}
+        for method in ("bs_kmq", "linear"):
+            books = calibrate_codebooks(mod, pack, x, bits, method)
+            entry[f"ptq_{method}"] = eval_fakequant(mod, pack, books, xt, yt)
+            entry[f"ft_{method}"] = finetune(mod, pack, books, (x, y), xt, yt)
+            print(f"  [{name}] {method}@{bits}b "
+                  f"PTQ {entry[f'ptq_{method}']:.4f} "
+                  f"FT {entry[f'ft_{method}']:.4f}")
+        results[name] = entry
+    with open(os.path.join(outdir, "train_results.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    print("wrote train_results.json")
+
+
+if __name__ == "__main__":
+    main()

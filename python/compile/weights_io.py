@@ -1,0 +1,52 @@
+"""Flat tensor container: python writer <-> rust reader (rust/src/io).
+
+Binary layout (little-endian):
+
+    magic  u32 = 0x42534B51  ("BSKQ")
+    version u32 = 1
+    count  u32
+    per tensor:
+        name_len u32, name utf-8 bytes
+        ndim u32, dims u32 * ndim
+        f32 data (prod(dims) elements)
+
+Purpose-built so the Rust runtime owns the trained weights at request time
+without a numpy/npz dependency on either side.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x42534B51
+VERSION = 1
+
+
+def save_tensors(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", MAGIC, VERSION, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def load_tensors(path: str) -> list[tuple[str, np.ndarray]]:
+    out = []
+    with open(path, "rb") as f:
+        magic, version, count = struct.unpack("<III", f.read(12))
+        if magic != MAGIC or version != VERSION:
+            raise ValueError(f"bad container header: {magic:#x} v{version}")
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            arr = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            out.append((name, arr.copy()))
+    return out

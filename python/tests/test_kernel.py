@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py) — the
+CORE correctness signal, swept over shapes/dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quantlib as Q
+from compile.kernels.imc_mac import imc_mac_adc
+from compile.kernels.nl_quant import nl_quantize
+from compile.kernels.ref import (CROSSBAR_ROWS, min_ref_step,
+                                 ref_imc_mac_adc, ref_nl_quantize)
+
+
+def padded_codebook(bits, lo=-20.0, hi=20.0):
+    centers = np.linspace(lo, hi, 2 ** bits)
+    cb = Q.Codebook.from_centers(centers)
+    pc, pr = cb.padded()
+    return jnp.asarray(pr), jnp.asarray(pc)
+
+
+class TestNlQuant:
+    def test_matches_ref_basic(self):
+        refs, centers = padded_codebook(4)
+        x = jnp.asarray(np.random.default_rng(0).normal(0, 10, (16, 8)),
+                        jnp.float32)
+        np.testing.assert_allclose(
+            nl_quantize(x, refs, centers),
+            ref_nl_quantize(x, refs, centers))
+
+    def test_below_range_floors_to_first_center(self):
+        refs, centers = padded_codebook(3, 0.0, 7.0)
+        out = nl_quantize(jnp.asarray([-5.0], jnp.float32), refs, centers)
+        assert float(out[0]) == 0.0
+
+    def test_above_range_clamps_to_last_center(self):
+        refs, centers = padded_codebook(3, 0.0, 7.0)
+        out = nl_quantize(jnp.asarray([99.0], jnp.float32), refs, centers)
+        assert float(out[0]) == 7.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=7),
+        st.tuples(st.integers(1, 9), st.integers(1, 33)),
+        st.integers(min_value=0, max_value=10_000),
+    )
+    def test_property_matches_ref(self, bits, shape, seed):
+        rng = np.random.default_rng(seed)
+        centers = np.sort(rng.normal(0, 5, 2 ** bits))
+        centers = np.unique(centers)
+        if centers.size < 2:
+            return
+        cb = Q.Codebook.from_centers(centers)
+        pc, pr = cb.padded()
+        refs, cents = jnp.asarray(pr), jnp.asarray(pc)
+        x = jnp.asarray(rng.normal(0, 8, shape), jnp.float32)
+        got = nl_quantize(x, refs, cents)
+        want = ref_nl_quantize(x, refs, cents)
+        np.testing.assert_allclose(got, want)
+
+
+class TestImcMac:
+    def test_single_tile_matches_ref(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(8, 100)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(100, 6)), jnp.float32)
+        refs, centers = padded_codebook(5, -40, 40)
+        np.testing.assert_allclose(
+            imc_mac_adc(x, w, refs, centers),
+            ref_imc_mac_adc(x, w, refs, centers), rtol=1e-6)
+
+    def test_multi_tile_accumulates(self):
+        rng = np.random.default_rng(2)
+        k = CROSSBAR_ROWS * 2 + 37  # 3 tiles with ragged tail
+        x = jnp.asarray(rng.normal(size=(4, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, 5)), jnp.float32)
+        refs, centers = padded_codebook(6, -60, 60)
+        np.testing.assert_allclose(
+            imc_mac_adc(x, w, refs, centers),
+            ref_imc_mac_adc(x, w, refs, centers), rtol=1e-6)
+
+    def test_noise_is_applied_per_tile(self):
+        rng = np.random.default_rng(3)
+        k = CROSSBAR_ROWS + 10
+        x = jnp.asarray(rng.normal(size=(3, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, 4)), jnp.float32)
+        refs, centers = padded_codebook(6, -60, 60)
+        noise = jnp.asarray(rng.normal(size=(2, 3, 4)) * 5, jnp.float32)
+        got = imc_mac_adc(x, w, refs, centers, noise)
+        want = ref_imc_mac_adc(x, w, refs, centers, noise)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        # and differs from the noiseless result
+        clean = imc_mac_adc(x, w, refs, centers)
+        assert not np.allclose(got, clean)
+
+    def test_identity_codebook_approximates_matmul(self):
+        """A fine linear codebook over the MAC range ~ plain matmul."""
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.normal(size=(6, 64)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(64, 3)), jnp.float32)
+        refs, centers = padded_codebook(7, -30, 30)
+        got = imc_mac_adc(x, w, refs, centers)
+        want = x @ w
+        step = 60.0 / 127
+        assert float(jnp.max(jnp.abs(got - want))) <= step
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=20),
+        st.integers(min_value=1, max_value=600),
+        st.integers(min_value=1, max_value=10),
+        st.integers(min_value=0, max_value=10_000),
+    )
+    def test_property_matches_ref_all_shapes(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        refs, centers = padded_codebook(6, -80, 80)
+        np.testing.assert_allclose(
+            imc_mac_adc(x, w, refs, centers),
+            ref_imc_mac_adc(x, w, refs, centers), rtol=1e-5, atol=1e-5)
+
+
+def test_min_ref_step_ignores_padding():
+    refs = jnp.asarray([0.0, 0.5, 2.0, np.inf, np.inf], jnp.float32)
+    assert float(min_ref_step(refs)) == 0.5

@@ -1,0 +1,132 @@
+"""L2 model tests: folded-inference parity, collect-mode recording, quant
+mode consistency, and the AOT pack plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import data as D
+from compile import quantlib as Q
+from compile.models import MODELS, common as cm
+
+
+@pytest.fixture(scope="module", params=list(MODELS))
+def model_setup(request):
+    name = request.param
+    mod = MODELS[name]
+    params = mod.init_params(jax.random.PRNGKey(0))
+    state = mod.init_state()
+    pack = mod.export_pack(params, state)
+    x, y = D.dataset_for(name, 0, 8)
+    return name, mod, params, state, pack, x, y
+
+
+class TestForward:
+    def test_folded_matches_train_eval(self, model_setup):
+        name, mod, params, state, pack, x, _ = model_setup
+        lt, _ = mod.forward_train(params, state, jnp.asarray(x), False)
+        ctx = cm.QuantCtx(mode="float")
+        li = mod.forward_infer(pack, jnp.asarray(x), ctx)
+        np.testing.assert_allclose(li, lt, rtol=2e-4, atol=2e-4)
+
+    def test_collect_records_every_qlayer(self, model_setup):
+        name, mod, _, _, pack, x, _ = model_setup
+        ctx = cm.QuantCtx(mode="collect")
+        mod.forward_infer(pack, jnp.asarray(x), ctx)
+        assert len(ctx.records) == len(pack.qspecs)
+        assert len(ctx.tile_maxes) == len(pack.qspecs)
+        for rec, spec in zip(ctx.records, pack.qspecs):
+            assert rec.shape == (cm.COLLECT_SAMPLES,)
+            if spec.relu:
+                assert float(jnp.min(rec)) >= 0.0, spec.name
+
+    def test_quant_mode_with_fine_codebooks_approximates_float(
+            self, model_setup):
+        name, mod, _, _, pack, x, _ = model_setup
+        nq = len(pack.qspecs)
+        # collect ranges, build 7-bit codebooks per layer
+        ctx = cm.QuantCtx(mode="collect")
+        lf = mod.forward_infer(pack, jnp.asarray(x), ctx)
+        nl_r, nl_c, t_r, t_c = [], [], [], []
+        for i in range(nq):
+            s = np.asarray(ctx.records[i])
+            lo, hi = float(s.min()), float(s.max())
+            cb = Q.Codebook.from_centers(Q.fit_linear(
+                np.array([lo, hi + 1e-6]), 7))
+            pc, pr = cb.padded()
+            nl_r.append(pr), nl_c.append(pc)
+            tm = float(ctx.tile_maxes[i]) * 1.5
+            tcb = Q.Codebook.from_centers(np.linspace(-tm, tm, 128))
+            pc, pr = tcb.padded()
+            t_r.append(pr), t_c.append(pc)
+        qctx = cm.QuantCtx(
+            mode="quant",
+            nl_refs=jnp.asarray(np.stack(nl_r)),
+            nl_centers=jnp.asarray(np.stack(nl_c)),
+            tile_refs=jnp.asarray(np.stack(t_r)),
+            tile_centers=jnp.asarray(np.stack(t_c)),
+            noise_std=jnp.float32(0.0),
+            key=jax.random.PRNGKey(0))
+        lq = mod.forward_infer(pack, jnp.asarray(x), qctx)
+        assert lq.shape == lf.shape
+        # untrained nets have near-degenerate logits, so check relative
+        # logit error plus above-chance argmax agreement (chance ~ 1/C)
+        rel = float(jnp.linalg.norm(lq - lf) / (jnp.linalg.norm(lf) + 1e-9))
+        assert rel < 0.5, f"{name}: relative logit error {rel}"
+        agree = float(jnp.mean(jnp.argmax(lq, -1) == jnp.argmax(lf, -1)))
+        assert agree >= 0.5, f"{name}: only {agree} argmax agreement"
+
+
+class TestPackPlumbing:
+    def test_weight_arg_layout_roundtrip(self, model_setup):
+        name, mod, _, _, pack, _, _ = model_setup
+        names, shapes = aot.weight_arg_layout(pack)
+        assert len(names) == len(shapes)
+        flat = []
+        for pair in pack.qweights:
+            flat.extend(pair)
+        for dname in sorted(pack.digital):
+            v = pack.digital[dname]
+            if isinstance(v, dict):
+                flat.extend(v[f] for f in sorted(v))
+            else:
+                flat.append(v)
+        rebuilt = aot.rebuild_pack(pack, flat)
+        for (a, b), (c, d) in zip(pack.qweights, rebuilt.qweights):
+            np.testing.assert_array_equal(a, c)
+            np.testing.assert_array_equal(b, d)
+
+    def test_qspec_ks_match_weight_shapes(self, model_setup):
+        name, mod, _, _, pack, _, _ = model_setup
+        for (w, b), spec in zip(pack.qweights, pack.qspecs):
+            assert w.shape == (spec.k, spec.n), spec.name
+            assert b.shape == (spec.n,)
+
+
+class TestData:
+    def test_task_fixed_across_splits(self):
+        x0, y0 = D.make_image_dataset(0, 64)
+        x1, y1 = D.make_image_dataset(1, 64)
+        # different samples...
+        assert not np.allclose(x0, x1)
+        # ...but same class templates: per-class means correlate strongly
+        m0 = np.stack([x0[y0 == c].mean(0) for c in range(10)
+                       if (y0 == c).any() and (y1 == c).any()])
+        m1 = np.stack([x1[y1 == c].mean(0) for c in range(10)
+                       if (y0 == c).any() and (y1 == c).any()])
+        corr = np.corrcoef(m0.ravel(), m1.ravel())[0, 1]
+        assert corr > 0.5, f"templates differ across splits: corr={corr}"
+
+    def test_image_outliers_present(self):
+        x, _ = D.make_image_dataset(0, 4096)
+        scale = np.abs(x).max(axis=(1, 2, 3))
+        frac_hot = (scale > 2.0 * np.median(scale)).mean()
+        assert 0.002 < frac_hot < 0.05
+
+    def test_token_dataset_shapes(self):
+        x, y = D.make_token_dataset(0, 32)
+        assert x.shape == (32, 32) and x.dtype == np.int32
+        assert x.min() >= 0 and x.max() < 64
+        assert y.max() < 6

@@ -1,0 +1,188 @@
+"""Quantizer suite tests: Algorithm 1, Eq. 2, the hardware projection and
+the four baselines — including the paper's worked example and hypothesis
+property sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quantlib as Q
+
+
+def relu_samples(n=20000, seed=0, mean=0.3):
+    rng = np.random.default_rng(seed)
+    return np.maximum(rng.normal(mean, 1.0, n), 0.0)
+
+
+class TestCodebook:
+    def test_paper_worked_example(self):
+        """§2.1: centers {0,.125,.25,.5,1,2,4,8} -> refs {0,.0625,...,6}."""
+        centers = np.array([0, 0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0])
+        refs = Q.refs_from_centers(centers)
+        np.testing.assert_allclose(
+            refs, [0, 0.0625, 0.1875, 0.375, 0.75, 1.5, 3.0, 6.0])
+        # "0.05 falls below R1 and maps to C0=0; 0.07 maps to C1=0.125"
+        assert Q.quantize_np(np.array([0.05]), refs, centers)[0] == 0.0
+        assert Q.quantize_np(np.array([0.07]), refs, centers)[0] == 0.125
+
+    def test_refs_require_sorted_centers(self):
+        with pytest.raises(ValueError):
+            Q.refs_from_centers(np.array([1.0, 0.5]))
+
+    def test_padding_preserves_semantics(self):
+        centers = np.array([0.0, 1.0, 2.0, 3.0])
+        refs = Q.refs_from_centers(centers)
+        pc, pr = Q.pad_codebook(centers, refs, Q.MAX_LEVELS)
+        x = np.linspace(-1, 5, 100)
+        np.testing.assert_allclose(
+            Q.quantize_np(x, refs, centers), Q.quantize_np(x, pr, pc))
+
+    def test_quantize_jnp_matches_np(self):
+        import jax.numpy as jnp
+        centers = np.sort(np.random.default_rng(1).normal(0, 2, 16))
+        refs = Q.refs_from_centers(centers)
+        pc, pr = Q.pad_codebook(centers, refs)
+        x = np.random.default_rng(2).normal(0, 3, (7, 5)).astype(np.float32)
+        got = np.asarray(Q.quantize_jnp(jnp.asarray(x), jnp.asarray(pr),
+                                        jnp.asarray(pc)))
+        want = Q.quantize_np(x, pr.astype(np.float64), pc.astype(np.float64))
+        np.testing.assert_allclose(got, want.astype(np.float32), rtol=1e-6)
+
+    def test_cell_budget(self):
+        assert Q.cell_budget(4) == 32  # paper: 32 cells for 4-bit NL
+        assert Q.cell_budget(1) == 4
+        with pytest.raises(ValueError):
+            Q.cell_budget(0)
+
+    def test_hw_projection_budget(self):
+        xs = relu_samples()
+        for bits in (2, 3, 4):
+            c = np.sort(Q.fit_kmeans(xs, bits))
+            hc, hr = Q.project_to_hardware(c, bits)
+            d = np.diff(hr)
+            dv = d[d > 0].min()
+            cells = np.round(d / dv).sum()
+            assert cells <= Q.cell_budget(bits) + 0.5
+            assert np.all(np.diff(hc) >= 0)
+
+
+class TestFitters:
+    @pytest.mark.parametrize("name", list(Q.FITTERS))
+    def test_fitters_basic(self, name):
+        xs = relu_samples()
+        for bits in (1, 3, 5):
+            c = Q.FITTERS[name](xs, bits)
+            assert len(c) == 2 ** bits
+            assert np.all(np.diff(np.sort(c)) >= 0)
+
+    @pytest.mark.parametrize("name", list(Q.FITTERS))
+    def test_fitters_reject_bad_bits(self, name):
+        with pytest.raises(ValueError):
+            Q.FITTERS[name](relu_samples(100), 0)
+        with pytest.raises(ValueError):
+            Q.FITTERS[name](relu_samples(100), 8)
+
+    def test_linear_is_uniform(self):
+        c = Q.fit_linear(np.array([0.0, 8.0]), 3)
+        np.testing.assert_allclose(np.diff(c), np.diff(c)[0])
+
+    def test_cdf_equal_mass_on_uniform(self):
+        xs = np.linspace(0, 1, 10001)
+        c = Q.fit_cdf(xs, 2)
+        np.testing.assert_allclose(c, [0.125, 0.375, 0.625, 0.875], atol=5e-3)
+
+    def test_kmeans_recovers_clusters(self):
+        rng = np.random.default_rng(3)
+        xs = np.concatenate([rng.normal(m, 0.05, 500) for m in (0, 5, 10, 15)])
+        c = np.sort(Q.fit_kmeans(xs, 2))
+        np.testing.assert_allclose(c, [0, 5, 10, 15], atol=0.3)
+
+    def test_nonlinear_beats_linear_on_relu(self):
+        xs = relu_samples()
+        for name in ("lloyd_max", "kmeans", "bs_kmq"):
+            cl = Q.Codebook.from_centers(Q.FITTERS[name](xs, 3))
+            lin = Q.Codebook.from_centers(Q.fit_linear(xs, 3))
+            assert Q.mse(xs, cl.refs, cl.centers) < Q.mse(xs, lin.refs,
+                                                          lin.centers)
+
+
+class TestBsKmq:
+    def test_streaming_range_is_outlier_robust(self):
+        rng = np.random.default_rng(5)
+        xs = relu_samples(50000, 5)
+        idx = rng.choice(50000, 80, replace=False)
+        xs[idx] = 1e4  # 0.16% giant outliers, spread across batches
+        c = Q.fit_bs_kmq(xs, 4)
+        assert c[-1] < 100, f"g_max contaminated: {c[-1]}"
+
+    def test_bounds_are_centers(self):
+        xs = relu_samples()
+        c = Q.fit_bs_kmq(xs, 3)
+        assert abs(c[0]) < 1e-6  # g_min ~ 0 for ReLU data
+        assert len(c) == 8
+
+    def test_one_bit(self):
+        c = Q.fit_bs_kmq(relu_samples(1000), 1)
+        assert len(c) == 2
+
+    def test_calibrator_requires_observation(self):
+        calib = Q.BSKMQCalibrator()
+        with pytest.raises(RuntimeError):
+            calib.finish(3)
+
+    def test_ema_follows_eq1(self):
+        calib = Q.BSKMQCalibrator(alpha=0.0)
+        calib.observe(np.array([0.0, 10.0]))
+        assert calib.g_min == 0.0 and calib.g_max == 10.0
+        calib.observe(np.array([2.0, 20.0]))
+        assert calib.g_min == pytest.approx(0.9 * 0.0 + 0.1 * 2.0)
+        assert calib.g_max == pytest.approx(0.9 * 10.0 + 0.1 * 20.0)
+
+    def test_wins_under_hw_projection_on_spiky_data(self):
+        rng = np.random.default_rng(7)
+        xs = np.maximum(rng.normal(0.0, 1.0, 40000), 0.0)
+        out = rng.lognormal(1.5, 0.9, 200)
+        xs = np.concatenate([xs, out])
+        bits = 3
+        wins = 0
+        for name in ("linear", "cdf", "kmeans"):
+            c = np.sort(Q.FITTERS[name](xs, bits))
+            hc, hr = Q.project_to_hardware(c, bits)
+            base = float(np.mean((xs - Q.quantize_np(xs, hr, hc)) ** 2))
+            cb = np.sort(Q.fit_bs_kmq(xs, bits))
+            hc2, hr2 = Q.project_to_hardware(cb, bits)
+            ours = float(np.mean((xs - Q.quantize_np(xs, hr2, hc2)) ** 2))
+            wins += ours < base
+        assert wins >= 2, f"bs_kmq won only {wins}/3 baselines"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=6),
+    st.floats(min_value=-3.0, max_value=3.0),
+    st.floats(min_value=0.05, max_value=4.0),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_property_quantize_is_nearest_center(bits, mu, sigma, seed):
+    """Any fitted codebook + Eq. 2 refs implement nearest-center rounding."""
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(mu, sigma, 500)
+    centers = np.sort(Q.fit_kmeans(xs, bits, seed=seed))
+    refs = Q.refs_from_centers(centers)
+    x = rng.normal(mu, sigma * 2, 50)
+    q = Q.quantize_np(x, refs, centers)
+    # brute-force nearest
+    near = centers[np.argmin(np.abs(x[:, None] - centers[None, :]), axis=1)]
+    np.testing.assert_allclose(np.abs(x - q), np.abs(x - near), atol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=6),
+       st.integers(min_value=0, max_value=1000))
+def test_property_mse_decreases_with_bits(bits, seed):
+    xs = np.maximum(np.random.default_rng(seed).normal(0.2, 1.0, 2000), 0)
+    cb_lo = Q.Codebook.from_centers(Q.fit_bs_kmq(xs, bits - 1))
+    cb_hi = Q.Codebook.from_centers(Q.fit_bs_kmq(xs, bits))
+    assert Q.mse(xs, cb_hi.refs, cb_hi.centers) <= \
+        Q.mse(xs, cb_lo.refs, cb_lo.centers) * 1.25 + 1e-9

@@ -1,0 +1,36 @@
+"""Container round-trip + golden-vector parity with the Rust reader
+(rust/src/io/weights.rs reads what weights_io.py writes)."""
+
+import numpy as np
+import pytest
+
+from compile import weights_io
+
+
+def test_roundtrip(tmp_path):
+    tensors = [
+        ("a", np.arange(6, dtype=np.float32).reshape(2, 3)),
+        ("b", np.array(3.5, dtype=np.float32)),
+        ("nested/name_w", np.random.default_rng(0)
+         .normal(size=(4, 1, 2)).astype(np.float32)),
+    ]
+    p = tmp_path / "t.bin"
+    weights_io.save_tensors(str(p), tensors)
+    out = weights_io.load_tensors(str(p))
+    assert [n for n, _ in out] == [n for n, _ in tensors]
+    for (_, a), (_, b) in zip(tensors, out):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), b)
+
+
+def test_rejects_bad_header(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"\x00" * 16)
+    with pytest.raises(ValueError):
+        weights_io.load_tensors(str(p))
+
+
+def test_float64_downcast(tmp_path):
+    p = tmp_path / "d.bin"
+    weights_io.save_tensors(str(p), [("x", np.array([1.5], np.float64))])
+    (_, x), = weights_io.load_tensors(str(p))
+    assert x.dtype == np.float32 and x[0] == 1.5

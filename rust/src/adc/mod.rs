@@ -1,0 +1,7 @@
+//! The reconfigurable (1-7 bit) in-memory nonlinear ADC (§2.3, Fig. 3).
+
+pub mod nl_adc;
+pub mod thermometer;
+
+pub use nl_adc::{NlAdc, NlAdcConfig};
+pub use thermometer::{binary_to_thermometer, thermometer_to_binary};

@@ -1,0 +1,212 @@
+//! The reconfigurable in-memory NL-ADC (§2.3): programs a BS-KMQ codebook
+//! into integer bitcell counts per ramp step, converts held MAC voltages
+//! by sweeping the shared ramp through the 128 column sense amps, and
+//! accounts for the §2.3 bitcell budget (2^(b+1) cells NL vs 2^b linear,
+//! 4 calibration cells, 7-bit maximum).
+
+use anyhow::{ensure, Result};
+
+use crate::adc::thermometer::thermometer_to_binary;
+use crate::circuit::ramp::{ramp_cells_linear, ramp_cells_nl};
+use crate::circuit::USABLE_CELLS;
+use crate::quant::codebook::Codebook;
+
+#[derive(Clone, Debug)]
+pub struct NlAdcConfig {
+    pub bits: u32,
+    /// integer bitcells per conversion step (len = 2^bits - 1 transitions
+    /// after the base reference)
+    pub steps: Vec<usize>,
+    /// programmed base reference (V_initcalib target), MAC units
+    pub base: f64,
+    /// MAC units represented by one ramp cell after input scaling
+    pub cell_units: f64,
+}
+
+impl NlAdcConfig {
+    /// Program a hardware-projected codebook into ramp cell counts.
+    /// The codebook must already be on the integer-cell grid
+    /// (`Codebook::project_to_hardware`); cell_units is recovered from
+    /// the codebook's minimum step.
+    pub fn from_codebook(cb: &Codebook, bits: u32) -> Result<NlAdcConfig> {
+        ensure!((1..=7).contains(&bits), "bits in [1,7]");
+        ensure!(cb.levels() == 1 << bits, "codebook levels != 2^bits");
+        // Recover the ramp cell grid: the projected reference steps are
+        // exact integer multiples of the cell voltage, so their float
+        // GCD is (a multiple of) it — using min_step alone drifts when
+        // no step is exactly one cell.
+        let diffs: Vec<f64> = cb.refs.windows(2).map(|w| w[1] - w[0]).collect();
+        let cell_units = float_gcd(&diffs);
+        let steps: Vec<usize> = diffs
+            .iter()
+            .map(|&d| ((d / cell_units).round()).max(1.0) as usize)
+            .collect();
+        let total: usize = steps.iter().sum();
+        ensure!(
+            total <= USABLE_CELLS,
+            "codebook needs {total} ramp cells > {USABLE_CELLS} usable"
+        );
+        Ok(NlAdcConfig {
+            bits,
+            steps,
+            base: cb.refs[0],
+            cell_units,
+        })
+    }
+
+    /// The reference ladder this configuration realizes (ideal cells):
+    /// `base` plus one entry per step — 2^bits references in total.
+    pub fn ladder(&self) -> Vec<f64> {
+        let mut v = self.base;
+        let mut out = Vec::with_capacity(self.steps.len() + 1);
+        out.push(v);
+        for &n in &self.steps {
+            v += n as f64 * self.cell_units;
+            out.push(v);
+        }
+        out
+    }
+
+    /// Total ramp bitcells consumed (excluding the 4 calibration cells).
+    pub fn cells_used(&self) -> usize {
+        self.steps.iter().sum()
+    }
+}
+
+/// The IM NL-ADC: ideal-cell conversion path (the circuit-level
+/// non-idealities live in `circuit::montecarlo`).
+pub struct NlAdc {
+    pub cfg: NlAdcConfig,
+    ladder: Vec<f64>,
+}
+
+impl NlAdc {
+    pub fn new(cfg: NlAdcConfig) -> Self {
+        let ladder = cfg.ladder();
+        NlAdc { cfg, ladder }
+    }
+
+    /// Convert one held MAC voltage: ramp sweep -> thermometer -> RCNT.
+    pub fn convert(&self, v_mac: f64) -> usize {
+        let therm: Vec<bool> =
+            self.ladder.iter().map(|&r| v_mac >= r).collect();
+        thermometer_to_binary(&therm).saturating_sub(1)
+    }
+
+    /// Convert a whole column batch (the 128 SAs share one ramp sweep).
+    pub fn convert_column(&self, v_macs: &[f64]) -> Vec<usize> {
+        v_macs.iter().map(|&v| self.convert(v)).collect()
+    }
+
+    /// Reference ladder (for tests and the Fig. 7 harness).
+    pub fn ladder(&self) -> &[f64] {
+        &self.ladder
+    }
+}
+
+/// Float GCD (Euclid with tolerance) of positive step sizes — recovers
+/// the integer-cell grid of a hardware-projected reference ladder.
+fn float_gcd(xs: &[f64]) -> f64 {
+    let mut g = 0.0f64;
+    for &x in xs {
+        if x <= 0.0 {
+            continue;
+        }
+        let mut a = g.max(x);
+        let mut b = g.min(x);
+        if b == 0.0 {
+            g = a;
+            continue;
+        }
+        let tol = 1e-6 * a.max(1e-12);
+        while b > tol {
+            let r = a % b;
+            a = b;
+            b = r;
+        }
+        g = a;
+    }
+    if g > 0.0 {
+        g
+    } else {
+        1.0
+    }
+}
+
+/// §2.3 overhead accounting: NL vs linear ramp bitcells at a resolution.
+pub fn nl_vs_linear_cells(bits: u32) -> (usize, usize) {
+    (ramp_cells_nl(bits), ramp_cells_linear(bits))
+}
+
+/// Maximum reconfigurable resolution given the 252 usable cells: 7 bits
+/// (2^7 - 1 = 127 ramp steps of at least one cell each fit; 8 bits would
+/// need 255 > 252).
+pub fn max_resolution() -> u32 {
+    let mut b = 1u32;
+    while b < 8 && (1usize << (b + 1)) - 1 <= USABLE_CELLS {
+        b += 1;
+    }
+    b.min(7)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Method;
+    use crate::util::rng::Rng;
+
+    fn relu_samples(n: usize) -> Vec<f64> {
+        let mut rng = Rng::new(5);
+        (0..n).map(|_| rng.normal(3.0, 10.0).max(0.0)).collect()
+    }
+
+    #[test]
+    fn convert_matches_codebook_quantize() {
+        let xs = relu_samples(20_000);
+        let cb = Method::BsKmq.fit_hw(&xs, 4);
+        let adc = NlAdc::new(NlAdcConfig::from_codebook(&cb, 4).unwrap());
+        let mut rng = Rng::new(6);
+        for _ in 0..2000 {
+            let v = rng.range(-5.0, 60.0);
+            let code = adc.convert(v);
+            let q_adc = cb.centers[code];
+            let q_cb = cb.quantize(v);
+            // ladders agree to the integer-cell grid
+            assert!(
+                (q_adc - q_cb).abs() <= cb.min_step() + 1e-9,
+                "v={v} adc={q_adc} cb={q_cb}"
+            );
+        }
+    }
+
+    #[test]
+    fn reconfigurable_1_to_7_bits() {
+        assert_eq!(max_resolution(), 7);
+        let xs = relu_samples(5_000);
+        for bits in 1..=7 {
+            let cb = Method::BsKmq.fit_hw(&xs, bits);
+            let cfg = NlAdcConfig::from_codebook(&cb, bits).unwrap();
+            assert!(cfg.cells_used() <= USABLE_CELLS, "bits={bits}");
+            assert_eq!(cfg.ladder().len(), 1 << bits);
+        }
+    }
+
+    #[test]
+    fn cell_overhead_vs_linear() {
+        let (nl, lin) = nl_vs_linear_cells(4);
+        // paper: 32 + 4 calib vs 16 + 4 calib
+        assert_eq!(nl, 36);
+        assert_eq!(lin, 20);
+    }
+
+    #[test]
+    fn column_conversion_shares_ramp() {
+        let xs = relu_samples(5_000);
+        let cb = Method::Linear.fit_hw(&xs, 3);
+        let adc = NlAdc::new(NlAdcConfig::from_codebook(&cb, 3).unwrap());
+        let vs = [0.0, 5.0, 10.0, 40.0];
+        let codes = adc.convert_column(&vs);
+        assert_eq!(codes.len(), 4);
+        assert!(codes.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

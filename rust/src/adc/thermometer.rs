@@ -1,0 +1,56 @@
+//! Thermometer -> binary conversion: the ripple counters (RCNTs) that
+//! digitize the 128 sense-amp outputs as the shared ramp sweeps (§2.2).
+//!
+//! During conversion, each SA output is high while V_MAC >= V_ADC; the
+//! ripple counter simply counts the high cycles, so the output code is
+//! the number of set bits in a (valid) thermometer word.
+
+/// Count a thermometer word into its binary code.  Non-monotone words
+/// (bubble errors from SA metastability) are still counted — exactly what
+/// a ripple counter does in silicon, making single bubbles cost 1 LSB.
+pub fn thermometer_to_binary(bits: &[bool]) -> usize {
+    bits.iter().filter(|&&b| b).count()
+}
+
+/// Ideal thermometer word for a code (testing/golden vectors).
+pub fn binary_to_thermometer(code: usize, levels: usize) -> Vec<bool> {
+    (0..levels).map(|i| i < code).collect()
+}
+
+/// Whether a word is a valid (monotone) thermometer code.
+pub fn is_monotone(bits: &[bool]) -> bool {
+    let mut seen_low = false;
+    for &b in bits {
+        if b && seen_low {
+            return false;
+        }
+        if !b {
+            seen_low = true;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_codes() {
+        for levels in [4usize, 16, 128] {
+            for code in 0..=levels {
+                let t = binary_to_thermometer(code, levels);
+                assert!(is_monotone(&t));
+                assert_eq!(thermometer_to_binary(&t), code);
+            }
+        }
+    }
+
+    #[test]
+    fn bubble_costs_one_lsb() {
+        // 1 1 0 1 0 0: a bubble at position 2
+        let w = [true, true, false, true, false, false];
+        assert!(!is_monotone(&w));
+        assert_eq!(thermometer_to_binary(&w), 3);
+    }
+}

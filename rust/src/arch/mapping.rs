@@ -1,0 +1,96 @@
+//! Layer-to-crossbar mapping: every MAC layer is tiled into 256-row x
+//! (weight-column) crossbar allocations; multi-bit weights consume
+//! parallel bitcells per §3.2, so the effective columns per macro shrink
+//! with weight precision.
+
+use crate::macro_model::weights::weight_columns;
+use crate::macro_model::ROWS;
+use crate::nn::zoo::{Layer, Network};
+
+/// How one layer lands on the macro pool.
+#[derive(Clone, Debug)]
+pub struct LayerMapping {
+    pub name: String,
+    /// crossbar tiles along the contraction dimension (ceil(K/256))
+    pub k_tiles: usize,
+    /// crossbar tiles along the output dimension
+    pub n_tiles: usize,
+    /// macro passes needed per inference (tiles x output positions)
+    pub passes: f64,
+    /// digital partial-sum accumulations per inference
+    pub accumulations: f64,
+    /// activations written to / read from buffers per inference
+    pub buffer_accesses: f64,
+}
+
+/// Map a whole network at a weight precision.
+pub fn map_network(net: &Network, w_bits: u32) -> Vec<LayerMapping> {
+    let wcols = weight_columns(w_bits);
+    net.layers
+        .iter()
+        .map(|l| map_layer(l, wcols))
+        .collect()
+}
+
+fn map_layer(l: &Layer, wcols: usize) -> LayerMapping {
+    let k_tiles = l.k.div_ceil(ROWS);
+    let n_tiles = l.n.div_ceil(wcols);
+    let tiles = (k_tiles * n_tiles) as f64;
+    let passes = tiles * l.positions as f64;
+    // each k-tile beyond the first needs a digital accumulate per output
+    let accumulations =
+        ((k_tiles - 1) * l.n) as f64 * l.positions as f64;
+    // write each output activation once, read it K-fan-in times next layer
+    let buffer_accesses = 2.0 * (l.n * l.positions) as f64;
+    LayerMapping {
+        name: l.name.clone(),
+        k_tiles,
+        n_tiles,
+        passes,
+        accumulations,
+        buffer_accesses,
+    }
+}
+
+/// Total macros required to hold all weights resident (weight-stationary).
+pub fn macros_for_weights(net: &Network, w_bits: u32) -> usize {
+    let wcols = weight_columns(w_bits);
+    net.layers
+        .iter()
+        .map(|l| l.k.div_ceil(ROWS) * l.n.div_ceil(wcols))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo::resnet18_cifar;
+
+    #[test]
+    fn small_layer_fits_one_tile() {
+        let l = Layer::conv("c", 3, 64, 3, 32, 32); // K=27, N=64
+        let m = map_layer(&l, 128);
+        assert_eq!(m.k_tiles, 1);
+        assert_eq!(m.n_tiles, 1);
+        assert_eq!(m.passes, 1024.0);
+        assert_eq!(m.accumulations, 0.0);
+    }
+
+    #[test]
+    fn big_layer_tiles_both_ways() {
+        let l = Layer::conv("c", 512, 512, 3, 4, 4); // K=4608, N=512
+        let m = map_layer(&l, 128);
+        assert_eq!(m.k_tiles, 18);
+        assert_eq!(m.n_tiles, 4);
+        assert_eq!(m.passes, (18 * 4 * 16) as f64);
+        assert!(m.accumulations > 0.0);
+    }
+
+    #[test]
+    fn weight_bits_grow_the_footprint() {
+        let net = resnet18_cifar();
+        let m2 = macros_for_weights(&net, 2);
+        let m4 = macros_for_weights(&net, 4);
+        assert!(m4 > 3 * m2, "m2={m2} m4={m4}");
+    }
+}

@@ -1,0 +1,14 @@
+//! System-level accelerator simulation (NeuroSim-style, §3.2 / Table 1):
+//! maps a network's MAC layers onto a pool of 256x128 macros, adds the
+//! peripheral costs NeuroSim estimates (buffers, interconnect,
+//! accumulation), and produces TOPS / TOPS/W / accuracy-loss rows that
+//! regenerate Table 1 — including the normalized comparison against the
+//! three published IMC designs.
+
+pub mod accelerator;
+pub mod baselines;
+pub mod mapping;
+
+pub use accelerator::{Accelerator, SystemConfig, SystemReport};
+pub use baselines::{baseline_designs, BaselineDesign};
+pub use mapping::{LayerMapping, map_network};

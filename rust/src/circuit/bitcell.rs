@@ -1,0 +1,124 @@
+//! Dual-9T SRAM bitcell behavioral model (Fig. 2(b)).
+//!
+//! The 6T core stores a ternary weight; the decoupled 6-NMOS read path
+//! performs ternary multiplication: RWL+ (positive input) or RWL-
+//! (negative input) gates a discharge of RBLL/RBLR depending on the
+//! stored weight.  A zero weight creates no discharge path (the energy
+//! argument of §2.2).  The multiplication result is the differential
+//! voltage V = V_RBLR - V_RBLL, expressed here in MAC units per pulse.
+
+use crate::util::rng::Rng;
+
+/// Ternary weight state, encoded as (V_L, V_R) in the silicon cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TernaryWeight {
+    Minus, // V_L=L, V_R=H
+    Zero,  // V_L=L, V_R=L
+    Plus,  // V_L=H, V_R=L
+}
+
+impl TernaryWeight {
+    pub fn value(&self) -> i32 {
+        match self {
+            TernaryWeight::Minus => -1,
+            TernaryWeight::Zero => 0,
+            TernaryWeight::Plus => 1,
+        }
+    }
+
+    pub fn from_value(v: i32) -> Self {
+        match v.signum() {
+            -1 => TernaryWeight::Minus,
+            0 => TernaryWeight::Zero,
+            _ => TernaryWeight::Plus,
+        }
+    }
+}
+
+/// One dual-9T cell instance with its (fixed at fabrication) mismatch.
+#[derive(Clone, Debug)]
+pub struct DualNineT {
+    pub weight: TernaryWeight,
+    /// relative drive mismatch epsilon_i, drawn once per instance
+    pub mismatch: f64,
+}
+
+impl DualNineT {
+    /// Fabricate a cell: mismatch ~ N(0, sigma_cell * corner.mismatch).
+    pub fn fabricate(
+        weight: TernaryWeight,
+        sigma_cell: f64,
+        mismatch_scale: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        DualNineT {
+            weight,
+            mismatch: rng.normal(0.0, sigma_cell * mismatch_scale),
+        }
+    }
+
+    /// Differential bitline contribution of `pulses` input pulses with the
+    /// given polarity, in MAC units (1 pulse * weight 1 = 1 MAC unit at
+    /// nominal drive).  `drive` is the corner's absolute factor.
+    pub fn discharge(&self, pulses: u32, positive_input: bool, drive: f64) -> f64 {
+        let w = self.weight.value() as f64;
+        if w == 0.0 || pulses == 0 {
+            return 0.0; // no discharge path: zero weight costs nothing
+        }
+        let x = if positive_input { 1.0 } else { -1.0 };
+        w * x * pulses as f64 * drive * (1.0 + self.mismatch)
+    }
+
+    /// Whether this cell consumes bitline discharge energy for an input.
+    pub fn draws_energy(&self, pulses: u32) -> bool {
+        self.weight != TernaryWeight::Zero && pulses > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(w: i32) -> DualNineT {
+        DualNineT {
+            weight: TernaryWeight::from_value(w),
+            mismatch: 0.0,
+        }
+    }
+
+    #[test]
+    fn ternary_multiplication_table() {
+        // (weight, input polarity) -> sign of differential voltage
+        for &(w, pos, want) in &[
+            (1, true, 1.0),
+            (1, false, -1.0),
+            (-1, true, -1.0),
+            (-1, false, 1.0),
+            (0, true, 0.0),
+            (0, false, 0.0),
+        ] {
+            assert_eq!(cell(w).discharge(1, pos, 1.0), want, "w={w} pos={pos}");
+        }
+    }
+
+    #[test]
+    fn pulses_scale_linearly() {
+        assert_eq!(cell(1).discharge(5, true, 1.0), 5.0);
+        assert_eq!(cell(-1).discharge(3, true, 2.0), -6.0);
+    }
+
+    #[test]
+    fn zero_weight_draws_no_energy() {
+        assert!(!cell(0).draws_energy(7));
+        assert!(cell(1).draws_energy(7));
+        assert!(!cell(1).draws_energy(0));
+    }
+
+    #[test]
+    fn mismatch_perturbs_drive() {
+        let mut rng = Rng::new(1);
+        let c = DualNineT::fabricate(TernaryWeight::Plus, 0.02, 1.0, &mut rng);
+        let d = c.discharge(1, true, 1.0);
+        assert!((d - 1.0).abs() < 0.2 && d != 1.0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Process corners (Fig. 7: TT / FF / SS).
+//!
+//! Each corner scales two things in the behavioral model:
+//! * `drive` — absolute cell drive strength (slow devices discharge the
+//!   bitline less per pulse).  With replica biasing the ramp and MAC
+//!   columns share this factor, so it cancels in the comparison; without
+//!   it, the factor shows up as a gain error (the ablation the paper's
+//!   "due to replica biasing" sentence implies).
+//! * `mismatch` — relative device-to-device variation.  Slow-slow devices
+//!   operate at lower overdrive and suffer relatively more mismatch; the
+//!   1.2x factor reproduces the paper's sigma(SS)/sigma(TT).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Corner {
+    TT,
+    FF,
+    SS,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CornerParams {
+    /// absolute drive-strength factor vs TT
+    pub drive: f64,
+    /// mismatch scale vs TT
+    pub mismatch: f64,
+}
+
+impl Corner {
+    pub const ALL: [Corner; 3] = [Corner::SS, Corner::TT, Corner::FF];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Corner::TT => "TT",
+            Corner::FF => "FF",
+            Corner::SS => "SS",
+        }
+    }
+
+    pub fn params(&self) -> CornerParams {
+        match self {
+            Corner::TT => CornerParams {
+                drive: 1.0,
+                mismatch: 1.0,
+            },
+            Corner::FF => CornerParams {
+                drive: 1.15,
+                mismatch: 0.95,
+            },
+            Corner::SS => CornerParams {
+                drive: 0.85,
+                mismatch: 1.2,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corner_ordering() {
+        let tt = Corner::TT.params();
+        let ff = Corner::FF.params();
+        let ss = Corner::SS.params();
+        assert!(ff.drive > tt.drive && tt.drive > ss.drive);
+        assert!(ss.mismatch > tt.mismatch && tt.mismatch >= ff.mismatch);
+        // the paper's headline ratio
+        assert!((ss.mismatch / tt.mismatch - 1.2).abs() < 1e-12);
+    }
+}

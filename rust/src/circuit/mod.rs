@@ -1,0 +1,31 @@
+//! Behavioral circuit simulation of the dual-9T SRAM macro (§2.2-2.3).
+//!
+//! Stands in for the paper's 65 nm SPICE testbench (DESIGN.md §5): the
+//! mechanisms that produce Fig. 7's statistics — per-device mismatch,
+//! process corners, replica biasing, zero-crossing calibration, sense-amp
+//! offset — are modeled behaviorally and Monte-Carlo'd; voltages are
+//! expressed in MAC-value units (1 ramp cell = the paper's minimum step
+//! of 10).
+
+pub mod bitcell;
+pub mod corners;
+pub mod montecarlo;
+pub mod ramp;
+pub mod sense_amp;
+
+pub use bitcell::{DualNineT, TernaryWeight};
+pub use corners::{Corner, CornerParams};
+pub use montecarlo::{ConversionStats, MonteCarlo, MonteCarloConfig};
+pub use ramp::RampGenerator;
+pub use sense_amp::SenseAmp;
+
+/// MAC units per ramp cell: Fig. 7 states "the minimum step size of the
+/// NL-ADC is 10".
+pub const MAC_UNITS_PER_CELL: f64 = 10.0;
+
+/// Crossbar geometry of the paper's macro.
+pub const ROWS: usize = 256;
+pub const COLS: usize = 128;
+/// Zero-crossing calibration consumes 4 bitcells, leaving 252 (§2.3).
+pub const CALIB_CELLS: usize = 4;
+pub const USABLE_CELLS: usize = ROWS - CALIB_CELLS;

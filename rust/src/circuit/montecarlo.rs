@@ -1,0 +1,238 @@
+//! Monte-Carlo conversion experiment — the behavioral stand-in for the
+//! paper's SPICE study (Fig. 7): fabricate column instances (ramp + sense
+//! amp with device mismatch), convert random MAC values, and fit a
+//! Gaussian to the analog conversion error in MAC units.
+//!
+//! Calibration anchors (TT, 6-bit input / 4-bit output, min step 10):
+//! error ~ N(0.21, 1.07); sigma(SS)/sigma(TT) ~ 1.2 thanks to replica
+//! biasing — the corner drive factor rides on both the MAC array and the
+//! ramp replica cells and cancels in the comparison, so only the
+//! mismatch scaling survives.  With `replica_bias = false` (ablation) the
+//! ramp is generated from a nominal reference while the MAC voltage
+//! scales with the corner drive, producing a gain error.
+
+use crate::circuit::corners::Corner;
+use crate::circuit::ramp::RampGenerator;
+use crate::circuit::sense_amp::SenseAmp;
+use crate::circuit::MAC_UNITS_PER_CELL;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct MonteCarloConfig {
+    /// relative per-cell drive mismatch (sigma)
+    pub sigma_cell: f64,
+    /// SA input-referred offset sigma, MAC units
+    pub sa_offset_sigma: f64,
+    /// SA per-comparison thermal noise sigma, MAC units
+    pub sa_thermal_sigma: f64,
+    /// systematic residue of zero-crossing calibration, MAC units
+    pub calib_residual: f64,
+    /// replica biasing on (paper) or off (ablation)
+    pub replica_bias: bool,
+    /// fabricated column instances
+    pub instances: usize,
+    /// conversions per instance
+    pub conversions: usize,
+}
+
+impl Default for MonteCarloConfig {
+    fn default() -> Self {
+        MonteCarloConfig {
+            sigma_cell: 0.02,
+            sa_offset_sigma: 0.55,
+            sa_thermal_sigma: 0.45,
+            calib_residual: 0.21,
+            replica_bias: true,
+            instances: 64,
+            conversions: 512,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ConversionStats {
+    pub corner: Corner,
+    /// Gaussian fit of the analog conversion error, MAC units
+    pub mu: f64,
+    pub sigma: f64,
+    /// fraction of conversions whose output code differed from ideal
+    pub code_error_rate: f64,
+    /// mean |code error| in codebook steps when a code error happens
+    pub mean_code_error_steps: f64,
+    pub samples: usize,
+}
+
+pub struct MonteCarlo {
+    pub cfg: MonteCarloConfig,
+}
+
+impl MonteCarlo {
+    pub fn new(cfg: MonteCarloConfig) -> Self {
+        MonteCarlo { cfg }
+    }
+
+    /// Run the Fig. 7 experiment at one corner for a reference ladder
+    /// given as integer cell steps (e.g. a 4-bit NL codebook's 16 steps).
+    pub fn run(&self, corner: Corner, steps: &[usize], seed: u64) -> ConversionStats {
+        let p = corner.params();
+        let mut rng = Rng::new(seed ^ 0xC0FF_EE00);
+        let total_cells: usize = steps.iter().sum();
+        let span = total_cells as f64 * MAC_UNITS_PER_CELL;
+        let base = -0.5 * span; // bipolar MAC range, ramp starts negative
+
+        // ideal ladder for the same steps
+        let mut ideal = Vec::with_capacity(steps.len());
+        {
+            let mut v = base;
+            for &n in steps {
+                ideal.push(v);
+                v += n as f64 * MAC_UNITS_PER_CELL;
+            }
+        }
+
+        let mut analog_errors = Vec::new();
+        let mut code_errors = 0usize;
+        let mut code_error_mag = 0usize;
+        for inst in 0..self.cfg.instances {
+            // Replica bias: ramp cells see the same corner drive as the
+            // MAC array -> the factor cancels; model both sides at
+            // nominal drive with mismatch only.  Ablation: ramp nominal,
+            // MAC voltage carries the drive factor.
+            let ramp = RampGenerator::fabricate(
+                self.cfg.sigma_cell,
+                p.mismatch,
+                1.0,
+                self.cfg.calib_residual,
+                &mut rng,
+            );
+            let sa = SenseAmp::fabricate(
+                self.cfg.sa_offset_sigma,
+                self.cfg.sa_thermal_sigma,
+                p.mismatch,
+                &mut Rng::new(seed.wrapping_add(1) ^ ((inst as u64) << 17)),
+            );
+            let refs = ramp.generate(base, steps);
+            for _ in 0..self.cfg.conversions {
+                let v_ideal = rng.range(base, base + span);
+                let v_eff = if self.cfg.replica_bias {
+                    v_ideal
+                } else {
+                    v_ideal * p.drive
+                };
+                // thermometer conversion against the actual ladder (the
+                // 128 SAs share the ramp; one column modeled here)
+                let mut code = 0usize;
+                for (i, &r) in refs.iter().enumerate() {
+                    if sa.compare(v_eff, r, &mut rng) {
+                        code = i;
+                    }
+                }
+                let ideal_code =
+                    ideal.iter().rposition(|&r| v_ideal >= r).unwrap_or(0);
+                // analog error: effective threshold shift at the landing
+                // code = SA offset + thermal noise of the decisive
+                // comparison + calibration residue & local ramp deviation
+                // (refs[code] - ideal[code]) + gain error when replica
+                // bias is off
+                let gain_err = if self.cfg.replica_bias {
+                    0.0
+                } else {
+                    (p.drive - 1.0) * v_ideal
+                };
+                let analog_err = sa.offset
+                    + rng.normal(0.0, sa.thermal_sigma)
+                    + (refs[code] - ideal[code])
+                    + gain_err;
+                analog_errors.push(analog_err);
+                if code != ideal_code {
+                    code_errors += 1;
+                    code_error_mag += code.abs_diff(ideal_code);
+                }
+            }
+        }
+        let (mu, sigma) = stats::gaussian_fit(&analog_errors);
+        ConversionStats {
+            corner,
+            mu,
+            sigma,
+            code_error_rate: code_errors as f64 / analog_errors.len() as f64,
+            mean_code_error_steps: if code_errors > 0 {
+                code_error_mag as f64 / code_errors as f64
+            } else {
+                0.0
+            },
+            samples: analog_errors.len(),
+        }
+    }
+
+    /// Run all three corners (Fig. 7's three panels).
+    pub fn run_corners(&self, steps: &[usize], seed: u64) -> Vec<ConversionStats> {
+        Corner::ALL
+            .iter()
+            .map(|&c| self.run(c, steps, seed))
+            .collect()
+    }
+}
+
+/// A 4-bit NL ladder within the paper's 32-cell budget (16 steps, denser
+/// near zero like a BS-KMQ codebook); min step = 1 cell = 10 MAC units.
+pub fn default_4bit_steps() -> Vec<usize> {
+    vec![1, 1, 1, 1, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 4, 6]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tt_stats_match_paper_anchor() {
+        let mc = MonteCarlo::new(MonteCarloConfig::default());
+        let s = mc.run(Corner::TT, &default_4bit_steps(), 42);
+        assert!((s.mu - 0.21).abs() < 0.2, "mu {} vs paper 0.21", s.mu);
+        assert!(
+            (s.sigma - 1.07).abs() < 0.35,
+            "sigma {} vs paper 1.07",
+            s.sigma
+        );
+    }
+
+    #[test]
+    fn ss_sigma_ratio_about_1p2() {
+        let mc = MonteCarlo::new(MonteCarloConfig::default());
+        let tt = mc.run(Corner::TT, &default_4bit_steps(), 7);
+        let ss = mc.run(Corner::SS, &default_4bit_steps(), 7);
+        let ratio = ss.sigma / tt.sigma;
+        assert!(
+            (1.05..1.4).contains(&ratio),
+            "sigma ratio {ratio} should be ~1.2"
+        );
+    }
+
+    #[test]
+    fn replica_bias_ablation_hurts_off_corners() {
+        let cfg_off = MonteCarloConfig {
+            replica_bias: false,
+            ..Default::default()
+        };
+        let steps = default_4bit_steps();
+        let on = MonteCarlo::new(MonteCarloConfig::default())
+            .run(Corner::SS, &steps, 3);
+        let off = MonteCarlo::new(cfg_off).run(Corner::SS, &steps, 3);
+        // without replica biasing the SS gain error dominates
+        assert!(
+            off.sigma > 1.5 * on.sigma,
+            "off sigma {} should dwarf on sigma {}",
+            off.sigma,
+            on.sigma
+        );
+    }
+
+    #[test]
+    fn code_errors_are_rare_and_small() {
+        let mc = MonteCarlo::new(MonteCarloConfig::default());
+        let s = mc.run(Corner::TT, &default_4bit_steps(), 11);
+        assert!(s.code_error_rate < 0.3, "rate {}", s.code_error_rate);
+        assert!(s.mean_code_error_steps <= 1.5);
+    }
+}

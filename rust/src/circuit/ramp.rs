@@ -1,0 +1,158 @@
+//! NL-ADC reference (ramp) generation (§2.3, Fig. 3(a)).
+//!
+//! The ramp is built from the same replica dual-9T bitcells as the MAC
+//! array: RWL- cells pull the initial voltage V_initcalib negative, then
+//! each conversion step enables `n_i` RWL+ cells (the programmable step
+//! size), so the reference ladder is `V_init + dv * cumsum(n_i)` with
+//! per-cell mismatch riding on every step.  Zero-crossing calibration
+//! trims V_init with the 4 dedicated calibration cells, leaving a small
+//! residual offset.
+
+use crate::circuit::bitcell::{DualNineT, TernaryWeight};
+use crate::circuit::{CALIB_CELLS, MAC_UNITS_PER_CELL, USABLE_CELLS};
+use crate::util::rng::Rng;
+
+/// One fabricated ramp-generation column instance.
+pub struct RampGenerator {
+    /// replica cells used for ramp steps (up to 252)
+    cells: Vec<DualNineT>,
+    /// residual offset after zero-crossing calibration, MAC units
+    pub residual_offset: f64,
+    /// corner drive factor applied to the ramp (cancels under replica bias)
+    pub drive: f64,
+}
+
+impl RampGenerator {
+    /// Fabricate: per-cell mismatch ~ N(0, sigma_cell * mismatch_scale);
+    /// zero-crossing calibration leaves `calib_residual` (MAC units) of
+    /// systematic offset plus a small random trim error.
+    pub fn fabricate(
+        sigma_cell: f64,
+        mismatch_scale: f64,
+        drive: f64,
+        calib_residual: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let cells = (0..USABLE_CELLS)
+            .map(|_| {
+                DualNineT::fabricate(
+                    TernaryWeight::Plus,
+                    sigma_cell,
+                    mismatch_scale,
+                    rng,
+                )
+            })
+            .collect();
+        // the 4 calibration cells trim V_init in 1-cell granularity; the
+        // leftover is a sub-cell systematic residue + trim noise
+        let residual_offset = calib_residual
+            + rng.normal(0.0, 0.05 * MAC_UNITS_PER_CELL * mismatch_scale);
+        RampGenerator {
+            cells,
+            residual_offset,
+            drive,
+        }
+    }
+
+    /// Generate the actual reference ladder for integer step sizes
+    /// `steps[i]` (bitcells enabled at conversion step i).  `ideal_base`
+    /// is the programmed V_initcalib (MAC units).  Returns one actual
+    /// reference voltage per step (length = steps.len()).
+    pub fn generate(&self, ideal_base: f64, steps: &[usize]) -> Vec<f64> {
+        let total: usize = steps.iter().sum();
+        assert!(
+            total <= self.cells.len(),
+            "ramp needs {total} cells, only {} usable (budget 252)",
+            self.cells.len()
+        );
+        let mut refs = Vec::with_capacity(steps.len());
+        let mut v = ideal_base * self.drive + self.residual_offset;
+        let mut cell_idx = 0;
+        for &n in steps {
+            refs.push(v);
+            let mut dv = 0.0;
+            for c in &self.cells[cell_idx..cell_idx + n] {
+                dv += MAC_UNITS_PER_CELL
+                    * self.drive
+                    * (1.0 + c.mismatch);
+            }
+            cell_idx += n;
+            v += dv;
+        }
+        refs
+    }
+
+    /// Cells available for ramp generation (252 of 256; §2.3).
+    pub fn capacity(&self) -> usize {
+        self.cells.len()
+    }
+}
+
+/// §2.3 cell accounting: an NL ramp at `bits` needs 2^(bits+1) cells, a
+/// linear ramp needs 2^bits; both plus the 4 calibration cells.
+pub fn ramp_cells_nl(bits: u32) -> usize {
+    (1usize << (bits + 1)) + CALIB_CELLS
+}
+
+pub fn ramp_cells_linear(bits: u32) -> usize {
+    (1usize << bits) + CALIB_CELLS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ideal_ramp() -> RampGenerator {
+        RampGenerator {
+            cells: vec![
+                DualNineT {
+                    weight: TernaryWeight::Plus,
+                    mismatch: 0.0,
+                };
+                USABLE_CELLS
+            ],
+            residual_offset: 0.0,
+            drive: 1.0,
+        }
+    }
+
+    #[test]
+    fn ideal_ladder_matches_cumsum() {
+        let r = ideal_ramp();
+        let refs = r.generate(-20.0, &[1, 2, 4, 1]);
+        assert_eq!(refs, vec![-20.0, -10.0, 10.0, 50.0]);
+    }
+
+    #[test]
+    fn capacity_is_252() {
+        assert_eq!(ideal_ramp().capacity(), 252);
+    }
+
+    #[test]
+    #[should_panic(expected = "ramp needs")]
+    fn over_budget_panics() {
+        let r = ideal_ramp();
+        r.generate(0.0, &[200, 100]);
+    }
+
+    #[test]
+    fn paper_cell_accounting() {
+        // 4-bit NL: "only 32 bitcells are required (excluding the four
+        // calibration bitcells)"; linear needs 16.
+        assert_eq!(ramp_cells_nl(4) - CALIB_CELLS, 32);
+        assert_eq!(ramp_cells_linear(4) - CALIB_CELLS, 16);
+        // max resolution 7 bits fits the 252 usable cells + 4 calib
+        assert!(ramp_cells_nl(7) - CALIB_CELLS <= USABLE_CELLS + CALIB_CELLS);
+    }
+
+    #[test]
+    fn mismatch_perturbs_ladder() {
+        let mut rng = Rng::new(9);
+        let r = RampGenerator::fabricate(0.02, 1.0, 1.0, 2.1, &mut rng);
+        let refs = r.generate(0.0, &[2, 2, 2]);
+        // base offset present, steps near 20 but not exact
+        assert!((refs[0] - 2.1).abs() < 3.0);
+        let step = refs[1] - refs[0];
+        assert!((step - 20.0).abs() < 2.0 && step != 20.0);
+    }
+}

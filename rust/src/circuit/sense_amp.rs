@@ -1,0 +1,81 @@
+//! Double-differential sense amplifier (from [14], shared-reference
+//! scheme): compares the held V_MAC on the bitline capacitors against the
+//! global ramp V_ADC.  Behavioral model: a fabrication-time input offset
+//! plus per-comparison thermal noise.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SenseAmp {
+    /// input-referred offset, MAC units (fixed per instance)
+    pub offset: f64,
+    /// per-comparison thermal noise sigma, MAC units
+    pub thermal_sigma: f64,
+}
+
+impl SenseAmp {
+    pub fn fabricate(
+        offset_sigma: f64,
+        thermal_sigma: f64,
+        mismatch_scale: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        SenseAmp {
+            offset: rng.normal(0.0, offset_sigma * mismatch_scale),
+            thermal_sigma: thermal_sigma * mismatch_scale,
+        }
+    }
+
+    /// One comparison: true iff V_MAC (plus offset & noise) >= V_ADC.
+    pub fn compare(&self, v_mac: f64, v_adc: f64, rng: &mut Rng) -> bool {
+        let noise = if self.thermal_sigma > 0.0 {
+            rng.normal(0.0, self.thermal_sigma)
+        } else {
+            0.0
+        };
+        v_mac + self.offset + noise >= v_adc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noiseless_compare_is_exact() {
+        let sa = SenseAmp {
+            offset: 0.0,
+            thermal_sigma: 0.0,
+        };
+        let mut rng = Rng::new(0);
+        assert!(sa.compare(1.0, 0.5, &mut rng));
+        assert!(!sa.compare(0.4, 0.5, &mut rng));
+    }
+
+    #[test]
+    fn offset_shifts_threshold() {
+        let sa = SenseAmp {
+            offset: 1.0,
+            thermal_sigma: 0.0,
+        };
+        let mut rng = Rng::new(0);
+        assert!(sa.compare(0.0, 0.5, &mut rng)); // 0 + 1 >= 0.5
+    }
+
+    #[test]
+    fn thermal_noise_flips_marginal_decisions() {
+        let sa = SenseAmp {
+            offset: 0.0,
+            thermal_sigma: 1.0,
+        };
+        let mut rng = Rng::new(4);
+        let mut trues = 0;
+        for _ in 0..2000 {
+            if sa.compare(0.0, 0.0, &mut rng) {
+                trues += 1;
+            }
+        }
+        // marginal input: decisions split roughly evenly
+        assert!((800..1200).contains(&trues), "trues={trues}");
+    }
+}

@@ -1,0 +1,126 @@
+//! Calibration orchestration: streams batches through the model's
+//! `collect` graph, feeds every quantized layer's activation subsample to
+//! its own Algorithm 1 calibrator (or a baseline fitter), and programs
+//! the resulting codebooks — the per-layer, data-dependent quantization
+//! the prior NL-ADC hardware (fixed profiles) could not do.
+
+use anyhow::{ensure, Result};
+
+use crate::data::dataset::ModelData;
+use crate::quant::bs_kmq::BsKmqCalibrator;
+use crate::quant::codebook::{Codebook, MAX_LEVELS};
+use crate::quant::Method;
+use crate::runtime::model::{ModelRuntime, ProgrammedCodebooks};
+
+/// Per-tile conversion resolution: the reconfigurable ADC's maximum (7
+/// bit linear) — intermediate partial sums keep full hardware precision
+/// while the layer output uses the low-bit NL codebook.
+pub const TILE_BITS: u32 = 7;
+
+pub struct CalibrationResult {
+    /// per-layer NL codebooks (hardware-projected)
+    pub nl_books: Vec<Codebook>,
+    /// per-layer 7-bit linear tile codebooks
+    pub tile_books: Vec<Codebook>,
+    /// stacked tensors ready for the qfwd graph
+    pub programmed: ProgrammedCodebooks,
+    /// calibration batches consumed
+    pub batches: usize,
+    /// per-layer sample counts observed
+    pub samples_seen: Vec<usize>,
+}
+
+pub struct Calibrator<'a> {
+    runtime: &'a ModelRuntime,
+    pub method: Method,
+    pub bits: u32,
+}
+
+impl<'a> Calibrator<'a> {
+    pub fn new(runtime: &'a ModelRuntime, method: Method, bits: u32) -> Self {
+        Calibrator {
+            runtime,
+            method,
+            bits,
+        }
+    }
+
+    /// Stream `n_batches` of calibration data (Algorithm 1 stage 1), then
+    /// fit + hardware-project every layer's codebook (stage 2).
+    pub fn calibrate(
+        &self,
+        data: &ModelData,
+        n_batches: usize,
+    ) -> Result<CalibrationResult> {
+        let m = &self.runtime.manifest;
+        let nq = m.nq();
+        let batch = m.batch;
+        ensure!(
+            n_batches * batch <= data.n_calib(),
+            "need {} calib samples, have {}",
+            n_batches * batch,
+            data.n_calib()
+        );
+        let mut bs_calibs: Vec<BsKmqCalibrator> =
+            (0..nq).map(|i| BsKmqCalibrator::new(0.005, 200_000, i as u64)).collect();
+        let mut pooled: Vec<Vec<f64>> = vec![Vec::new(); nq];
+        let mut tile_max = vec![0f64; nq];
+        let mut samples_seen = vec![0usize; nq];
+
+        for b in 0..n_batches {
+            let xb = ModelData::batch(&data.x_calib, b, batch);
+            let out = self.runtime.run_collect(xb)?;
+            for i in 0..nq {
+                samples_seen[i] += out.samples[i].len();
+                match self.method {
+                    Method::BsKmq => bs_calibs[i].observe(&out.samples[i]),
+                    _ => pooled[i].extend(&out.samples[i]),
+                }
+                tile_max[i] = tile_max[i].max(out.tile_max[i]);
+            }
+        }
+
+        let mut nl_books = Vec::with_capacity(nq);
+        let mut tile_books = Vec::with_capacity(nq);
+        for i in 0..nq {
+            let centers = match self.method {
+                Method::BsKmq => bs_calibs[i].finish(self.bits, i as u64)?,
+                m => m.fit(&pooled[i], self.bits),
+            };
+            nl_books.push(
+                Codebook::from_centers(&centers).project_to_hardware(self.bits),
+            );
+            // per-tile linear conversion over the observed partial range
+            let r = tile_max[i].max(1e-6);
+            tile_books.push(Codebook::linear(-r, r, TILE_BITS));
+        }
+        let programmed =
+            ProgrammedCodebooks::stack(&nl_books, &tile_books, MAX_LEVELS)?;
+        Ok(CalibrationResult {
+            nl_books,
+            tile_books,
+            programmed,
+            batches: n_batches,
+            samples_seen,
+        })
+    }
+
+    /// Pool all calibration activations per layer (for the MSE figures,
+    /// which compare fitters on identical sample sets).
+    pub fn collect_samples(
+        &self,
+        data: &ModelData,
+        n_batches: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let m = &self.runtime.manifest;
+        let mut pooled: Vec<Vec<f64>> = vec![Vec::new(); m.nq()];
+        for b in 0..n_batches {
+            let xb = ModelData::batch(&data.x_calib, b, m.batch);
+            let out = self.runtime.run_collect(xb)?;
+            for (p, s) in pooled.iter_mut().zip(out.samples) {
+                p.extend(s);
+            }
+        }
+        Ok(pooled)
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordinator: the deployment pipeline of the paper — stream
+//! calibration batches through the `collect` graph, run Algorithm 1 per
+//! layer, program the NL-ADC codebooks, evaluate PTQ accuracy through the
+//! `qfwd` graph (optionally with circuit-derived conversion noise and
+//! quantized weights), and serve batched inference requests.
+
+pub mod calibrate;
+pub mod ptq;
+pub mod server;
+
+pub use calibrate::{CalibrationResult, Calibrator};
+pub use ptq::{PtqEvaluator, PtqResult};
+pub use server::{InferenceServer, ServerStats};

@@ -1,0 +1,94 @@
+//! Post-training-quantization evaluation: runs the test split through the
+//! deployed `qfwd` graph with programmed codebooks, optional ADC noise
+//! (Fig. 6/7) and optional weight quantization (Fig. 6), and reports
+//! accuracy against the exported labels.
+
+use anyhow::Result;
+
+use crate::data::dataset::ModelData;
+use crate::quant::weights::quantize_tensor;
+use crate::runtime::model::{ModelRuntime, ProgrammedCodebooks};
+
+#[derive(Clone, Debug)]
+pub struct PtqResult {
+    pub accuracy: f64,
+    pub batches: usize,
+    pub samples: usize,
+}
+
+pub struct PtqEvaluator<'a> {
+    runtime: &'a ModelRuntime,
+}
+
+impl<'a> PtqEvaluator<'a> {
+    pub fn new(runtime: &'a ModelRuntime) -> Self {
+        PtqEvaluator { runtime }
+    }
+
+    /// Accuracy over `n_batches` test batches through qfwd.
+    pub fn evaluate(
+        &self,
+        data: &ModelData,
+        books: &ProgrammedCodebooks,
+        noise_std: f32,
+        n_batches: usize,
+        seed: u32,
+    ) -> Result<PtqResult> {
+        let m = &self.runtime.manifest;
+        let batch = m.batch;
+        let classes = m.num_classes;
+        let n_batches = n_batches.min(data.n_test() / batch);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in 0..n_batches {
+            let xb = ModelData::batch(&data.x_test, b, batch);
+            let logits =
+                self.runtime
+                    .run_qfwd(xb, books, noise_std, seed.wrapping_add(b as u32))?;
+            for i in 0..batch {
+                let row = &logits[i * classes..(i + 1) * classes];
+                let pred = argmax(row);
+                if pred == data.y_test[b * batch + i] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(PtqResult {
+            accuracy: correct as f64 / total.max(1) as f64,
+            batches: n_batches,
+            samples: total,
+        })
+    }
+
+    /// A runtime clone with linearly quantized q-layer weights (Fig. 6).
+    pub fn quantize_weights(&self, w_bits: u32) -> Result<ModelRuntime> {
+        let mut weights = self.runtime.weights().to_vec();
+        for i in self.runtime.qweight_indices() {
+            weights[i] = quantize_tensor(&weights[i], w_bits);
+        }
+        self.runtime.with_weights(weights)
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0, -9.0]), 0);
+        assert_eq!(argmax(&[0.0]), 0);
+    }
+}

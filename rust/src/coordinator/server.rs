@@ -1,0 +1,186 @@
+//! Batched inference server: the request path of the deployed system.
+//!
+//! A dedicated inference thread owns the PJRT engine and the calibrated
+//! model (the xla handles never cross threads); intake happens over an
+//! mpsc channel from any number of client threads (or the TCP front in
+//! `main.rs`).  A dynamic batcher groups queued requests: full batches go
+//! through the batch-32 graph, stragglers through the batch-1 graph when
+//! the model has one (padding otherwise) — the vLLM-style policy scaled
+//! to this testbed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::calibrate::Calibrator;
+use crate::data::dataset::ModelData;
+use crate::quant::Method;
+use crate::runtime::engine::Engine;
+use crate::runtime::model::ModelRuntime;
+
+pub struct Request {
+    pub x: Vec<f32>,
+    pub reply: mpsc::Sender<Vec<f32>>,
+}
+
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub full_batches: AtomicU64,
+    pub singles: AtomicU64,
+    pub busy_us: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} full={} singles={} busy={:.1}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.full_batches.load(Ordering::Relaxed),
+            self.singles.load(Ordering::Relaxed),
+            self.busy_us.load(Ordering::Relaxed) as f64 / 1e3
+        )
+    }
+}
+
+pub struct InferenceServer {
+    tx: mpsc::Sender<Request>,
+    pub stats: Arc<ServerStats>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl InferenceServer {
+    /// Start the inference thread: load artifacts, calibrate `bits`-bit
+    /// BS-KMQ codebooks on `calib_batches`, then serve until dropped.
+    pub fn start(
+        artifacts: std::path::PathBuf,
+        model: String,
+        method: Method,
+        bits: u32,
+        noise_std: f32,
+        calib_batches: usize,
+    ) -> Result<InferenceServer> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stats = Arc::new(ServerStats::default());
+        let st = stats.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let setup = (|| -> Result<(Engine, ModelRuntime, ModelData)> {
+                let engine = Engine::cpu()?;
+                let runtime = ModelRuntime::load(&engine, &artifacts, &model)?;
+                let data = ModelData::load(&artifacts, &model)?;
+                Ok((engine, runtime, data))
+            })();
+            let (_engine, runtime, data) = match setup {
+                Ok(v) => v,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(anyhow::anyhow!("{e}")));
+                    return Err(e);
+                }
+            };
+            let calib = Calibrator::new(&runtime, method, bits)
+                .calibrate(&data, calib_batches)?;
+            let _ = ready_tx.send(Ok(()));
+            serve_loop(&runtime, &calib.programmed, noise_std, rx, &st)
+        });
+        ready_rx
+            .recv()
+            .context("inference thread died during setup")??;
+        Ok(InferenceServer {
+            tx,
+            stats,
+            handle: Some(handle),
+        })
+    }
+
+    /// Blocking request: returns the logits for one input.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request { x, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        reply_rx
+            .recv_timeout(Duration::from_secs(120))
+            .context("inference timed out")
+    }
+
+    /// Clone the intake handle for concurrent client threads.
+    pub fn client(&self) -> mpsc::Sender<Request> {
+        self.tx.clone()
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        // closing the channel ends the serve loop
+        let (tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.tx, tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_loop(
+    runtime: &ModelRuntime,
+    books: &crate::runtime::model::ProgrammedCodebooks,
+    noise_std: f32,
+    rx: mpsc::Receiver<Request>,
+    stats: &ServerStats,
+) -> Result<()> {
+    let batch = runtime.manifest.batch;
+    let classes = runtime.manifest.num_classes;
+    let in_elems = runtime.manifest.input_elems();
+    let mut seed = 1u32;
+    loop {
+        // block for the first request, then drain up to a full batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return Ok(()), // all senders dropped
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + Duration::from_millis(2);
+        while pending.len() < batch {
+            match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        let t0 = Instant::now();
+        seed = seed.wrapping_add(1);
+        if pending.len() == 1 && runtime.has_b1() {
+            let r = &pending[0];
+            let logits = runtime.run_qfwd_b1(&r.x, books, noise_std, seed)?;
+            let _ = r.reply.send(logits);
+            stats.singles.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // pad to the compiled batch with the first request's input
+            let mut x = Vec::with_capacity(batch * in_elems);
+            for r in &pending {
+                anyhow::ensure!(r.x.len() == in_elems, "bad input size");
+                x.extend_from_slice(&r.x);
+            }
+            for _ in pending.len()..batch {
+                x.extend_from_slice(&pending[0].x);
+            }
+            let logits = runtime.run_qfwd(&x, books, noise_std, seed)?;
+            for (i, r) in pending.iter().enumerate() {
+                let _ =
+                    r.reply.send(logits[i * classes..(i + 1) * classes].to_vec());
+            }
+            if pending.len() == batch {
+                stats.full_batches.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        stats.requests.fetch_add(pending.len() as u64, Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats
+            .busy_us
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+}

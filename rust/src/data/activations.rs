@@ -1,0 +1,109 @@
+//! Synthetic activation distributions for quantizer benchmarks: the
+//! distribution families the paper's figures study — ReLU zero spikes,
+//! clamp pile-ups, heavy signed tails (transformer projections).
+
+use crate::util::rng::Rng;
+
+/// Named activation profile (used by the fig1/fig4 benches as a
+/// controlled complement to the real collected activations).
+#[derive(Clone, Copy, Debug)]
+pub enum ActivationProfile {
+    /// post Conv-BN-ReLU: ~40-55 % exact zeros + half-Gaussian body
+    ReluConv,
+    /// ReLU + hardware clamp pile-up at the range top
+    ReluClamped,
+    /// signed, heavy-tailed attention projection (Fig. 4)
+    AttentionSigned,
+}
+
+/// ReLU-family samples with optional lognormal outlier tail.
+pub fn relu_activations(
+    n: usize,
+    mean: f64,
+    std: f64,
+    outlier_frac: f64,
+    seed: u64,
+) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut xs: Vec<f64> =
+        (0..n).map(|_| rng.normal(mean, std).max(0.0)).collect();
+    let n_out = (n as f64 * outlier_frac) as usize;
+    for _ in 0..n_out {
+        let i = rng.below(n);
+        xs[i] = rng.normal(1.2, 0.8).exp();
+    }
+    xs
+}
+
+/// Signed heavy-tailed samples (Student-t-ish via Gaussian mixtures).
+pub fn signed_activations(n: usize, std: f64, tail_frac: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            if rng.uniform() < tail_frac {
+                rng.normal(0.0, std * 6.0)
+            } else {
+                rng.normal(0.0, std)
+            }
+        })
+        .collect()
+}
+
+impl ActivationProfile {
+    pub fn sample(&self, n: usize, seed: u64) -> Vec<f64> {
+        match self {
+            ActivationProfile::ReluConv => {
+                relu_activations(n, 0.1, 1.0, 0.004, seed)
+            }
+            ActivationProfile::ReluClamped => {
+                let clamp = 2.2;
+                relu_activations(n, 0.3, 1.0, 0.0, seed)
+                    .into_iter()
+                    .map(|x| x.min(clamp))
+                    .collect()
+            }
+            ActivationProfile::AttentionSigned => {
+                signed_activations(n, 1.0, 0.02, seed)
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActivationProfile::ReluConv => "relu_conv",
+            ActivationProfile::ReluClamped => "relu_clamped",
+            ActivationProfile::AttentionSigned => "attention_signed",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_has_zero_spike() {
+        let xs = relu_activations(20_000, 0.1, 1.0, 0.0, 1);
+        let zeros = xs.iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros > 6_000, "zero spike too small: {zeros}");
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn clamped_profile_piles_up() {
+        let xs = ActivationProfile::ReluClamped.sample(20_000, 2);
+        let at_clamp = xs.iter().filter(|&&x| x >= 2.2).count();
+        assert!(at_clamp > 300, "clamp pile-up missing: {at_clamp}");
+    }
+
+    #[test]
+    fn signed_tail_is_heavy() {
+        let xs = ActivationProfile::AttentionSigned.sample(50_000, 3);
+        let sd = crate::util::stats::std(&xs);
+        let beyond_4sd =
+            xs.iter().filter(|&&x| x.abs() > 4.0 * sd).count() as f64
+                / xs.len() as f64;
+        // a Gaussian would have ~6e-5 beyond 4 sigma
+        assert!(beyond_4sd > 3e-4, "tail not heavy: {beyond_4sd}");
+    }
+}

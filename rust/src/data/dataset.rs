@@ -1,0 +1,52 @@
+//! Loader for `<model>_data.bin`: the calibration and test splits of the
+//! synthetic tasks, exported at AOT time so the Rust pipeline evaluates
+//! exactly the distribution the models were trained on.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::io::weights::load_tensors;
+use crate::tensor::Tensor;
+
+pub struct ModelData {
+    /// calibration inputs [n_calib, ...input_shape]
+    pub x_calib: Tensor,
+    /// test inputs [n_test, ...input_shape]
+    pub x_test: Tensor,
+    /// test labels [n_test] (stored as f32 class indices)
+    pub y_test: Vec<usize>,
+}
+
+impl ModelData {
+    pub fn load(artifacts: &Path, model: &str) -> Result<ModelData> {
+        let tm = load_tensors(artifacts.join(format!("{model}_data.bin")))?;
+        let x_calib = tm.get("x_calib")?.clone();
+        let x_test = tm.get("x_test")?.clone();
+        let y_test = tm
+            .get("y_test")?
+            .data
+            .iter()
+            .map(|&v| v as usize)
+            .collect();
+        Ok(ModelData {
+            x_calib,
+            x_test,
+            y_test,
+        })
+    }
+
+    pub fn n_calib(&self) -> usize {
+        self.x_calib.shape[0]
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.x_test.shape[0]
+    }
+
+    /// Batch `i` of `batch` samples from a split (row-major slice).
+    pub fn batch<'a>(x: &'a Tensor, i: usize, batch: usize) -> &'a [f32] {
+        let stride: usize = x.shape[1..].iter().product();
+        &x.data[i * batch * stride..(i + 1) * batch * stride]
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload data: loads the exported synthetic datasets (the exact
+//! streams the models were trained on, written by aot.py) and generates
+//! pure-Rust synthetic activation distributions for the quantizer
+//! benchmarks and circuit workloads.
+
+pub mod activations;
+pub mod dataset;
+
+pub use activations::{relu_activations, signed_activations, ActivationProfile};
+pub use dataset::ModelData;

@@ -1,0 +1,64 @@
+//! Fig. 1 / Fig. 4: MSE of the five quantizers on real collected
+//! activations — Fig. 1 uses the first Conv-BN-ReLU block of ResNet
+//! (3-bit), Fig. 4 the first attention query projection of DistilBERT
+//! (4-bit).  All codebooks are evaluated after the §2.3 hardware
+//! projection (the deployed form).
+
+use anyhow::Result;
+
+use crate::coordinator::calibrate::Calibrator;
+use crate::data::dataset::ModelData;
+use crate::experiments::ExpContext;
+use crate::quant::Method;
+use crate::runtime::model::ModelRuntime;
+
+pub struct MseRow {
+    pub method: &'static str,
+    pub mse: f64,
+}
+
+pub fn run(ctx: &ExpContext, model: &str, bits: u32) -> Result<Vec<MseRow>> {
+    let fig = if model == "resnet" { "Fig.1" } else { "Fig.4" };
+    println!("== {fig}: {bits}-bit quantizer MSE on {model} layer-0 activations ==");
+    let runtime = ModelRuntime::load(&ctx.engine, &ctx.artifacts, model)?;
+    let data = ModelData::load(&ctx.artifacts, model)?;
+    let calib = Calibrator::new(&runtime, Method::BsKmq, bits);
+    let samples = calib.collect_samples(&data, 8)?;
+    let layer0 = &samples[0];
+    println!(
+        "   layer '{}': {} samples, range [{:.3}, {:.3}]",
+        runtime.manifest.qlayers[0].name,
+        layer0.len(),
+        layer0.iter().cloned().fold(f64::INFINITY, f64::min),
+        layer0.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    );
+    let rows = mse_rows(layer0, bits);
+    print_rows(&rows);
+    Ok(rows)
+}
+
+/// Fit all five methods on one sample set and evaluate deployed MSE.
+pub fn mse_rows(samples: &[f64], bits: u32) -> Vec<MseRow> {
+    Method::ALL
+        .iter()
+        .map(|m| MseRow {
+            method: m.name(),
+            mse: m.fit_hw(samples, bits).mse(samples),
+        })
+        .collect()
+}
+
+fn print_rows(rows: &[MseRow]) {
+    let bs = rows
+        .iter()
+        .find(|r| r.method == "bs_kmq")
+        .map(|r| r.mse)
+        .unwrap_or(f64::NAN);
+    for r in rows {
+        let ratio = r.mse / bs;
+        println!(
+            "   {:<10} MSE {:>12.6}   ({:>5.2}x vs BS-KMQ)",
+            r.method, r.mse, ratio
+        );
+    }
+}

@@ -1,0 +1,90 @@
+//! Fig. 5: PTQ accuracy of linear vs BS-KMQ over the ADC bit sweep for
+//! all four models, plus the float baseline (BL) and the build-time
+//! fine-tuning (FT) results recorded by train.py.
+
+use anyhow::Result;
+
+use crate::coordinator::calibrate::Calibrator;
+use crate::coordinator::ptq::PtqEvaluator;
+use crate::data::dataset::ModelData;
+use crate::experiments::ExpContext;
+use crate::quant::Method;
+use crate::runtime::model::ModelRuntime;
+use crate::util::json::Json;
+
+pub const MODELS: [&str; 4] = ["resnet", "vgg", "inception", "distilbert"];
+pub const BIT_SWEEP: [u32; 4] = [2, 3, 4, 5];
+/// test batches per point (32 samples each)
+const EVAL_BATCHES: usize = 4;
+const CALIB_BATCHES: usize = 8;
+
+pub struct Fig5Row {
+    pub model: String,
+    pub bits: u32,
+    pub acc_linear: f64,
+    pub acc_bskmq: f64,
+}
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Fig5Row>> {
+    println!("== Fig.5: PTQ accuracy, linear vs BS-KMQ (BL = float) ==");
+    let train_results = load_train_results(ctx)?;
+    let mut rows = Vec::new();
+    for model in MODELS {
+        let runtime = ModelRuntime::load(&ctx.engine, &ctx.artifacts, model)?;
+        let data = ModelData::load(&ctx.artifacts, model)?;
+        let ev = PtqEvaluator::new(&runtime);
+        let bl = train_results
+            .get(model)
+            .and_then(|m| m.get("float_acc").ok().and_then(|v| v.as_f64().ok()))
+            .unwrap_or(f64::NAN);
+        println!("-- {model} (BL float acc {:.3}) --", bl);
+        for bits in BIT_SWEEP {
+            let mut accs = [0.0f64; 2];
+            for (i, method) in [Method::Linear, Method::BsKmq].iter().enumerate() {
+                let calib = Calibrator::new(&runtime, *method, bits)
+                    .calibrate(&data, CALIB_BATCHES)?;
+                let r = ev.evaluate(&data, &calib.programmed, 0.0,
+                                    EVAL_BATCHES, 7)?;
+                accs[i] = r.accuracy;
+            }
+            println!(
+                "   {bits}b: linear {:.3}  bs_kmq {:.3}  (gap {:+.1} pts)",
+                accs[0],
+                accs[1],
+                (accs[1] - accs[0]) * 100.0
+            );
+            rows.push(Fig5Row {
+                model: model.into(),
+                bits,
+                acc_linear: accs[0],
+                acc_bskmq: accs[1],
+            });
+        }
+        if let Some(m) = train_results.get(model) {
+            let g = |k: &str| {
+                m.get(k)
+                    .ok()
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(f64::NAN)
+            };
+            println!(
+                "   FT@{}b (build-time QAT): linear {:.3}  bs_kmq {:.3}",
+                g("paper_bits") as u32,
+                g("ft_linear"),
+                g("ft_bs_kmq")
+            );
+        }
+    }
+    Ok(rows)
+}
+
+fn load_train_results(
+    ctx: &ExpContext,
+) -> Result<std::collections::BTreeMap<String, Json>> {
+    let src =
+        std::fs::read_to_string(ctx.artifacts.join("train_results.json"))?;
+    match Json::parse(&src)? {
+        Json::Obj(m) => Ok(m.into_iter().collect()),
+        _ => anyhow::bail!("train_results.json is not an object"),
+    }
+}

@@ -1,0 +1,91 @@
+//! Fig. 6: quantization effects and ADC-noise impact on accuracy.
+//!
+//! Three bars per model: activation quantization only (PTQ at the
+//! paper's per-model bits), + linear weight quantization (2/3/4/4 bit),
+//! + ADC conversion noise injected at the circuit-sim-derived TT level
+//! (N(0.21, 1.07) MAC units at min step 10 -> sigma ~ 0.107 LSB).
+
+use anyhow::Result;
+
+use crate::circuit::montecarlo::{default_4bit_steps, MonteCarlo, MonteCarloConfig};
+use crate::circuit::{Corner, MAC_UNITS_PER_CELL};
+use crate::coordinator::calibrate::Calibrator;
+use crate::coordinator::ptq::PtqEvaluator;
+use crate::data::dataset::ModelData;
+use crate::experiments::ExpContext;
+use crate::quant::Method;
+use crate::runtime::model::ModelRuntime;
+
+/// (model, activation bits, weight bits) — the paper's Fig. 6 settings.
+/// The paper uses 2/3/4/4-bit weights on 10M+-param models; the minis
+/// (~20k params) sit ~2 bits left of the paper's redundancy cliff, so the
+/// iso-accuracy points are 4/4/4/4 (measured sweep in EXPERIMENTS.md) —
+/// the *trend* (small loss, noise adds little, deeper nets hurt more) is
+/// what Fig. 6 establishes.
+pub const SETTINGS: [(&str, u32, u32); 4] = [
+    ("resnet", 3, 4),
+    ("vgg", 3, 4),
+    ("inception", 4, 4),
+    ("distilbert", 4, 4),
+];
+const EVAL_BATCHES: usize = 4;
+
+pub struct Fig6Row {
+    pub model: String,
+    pub acc_act_quant: f64,
+    pub acc_plus_wquant: f64,
+    pub acc_plus_noise: f64,
+}
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Fig6Row>> {
+    println!("== Fig.6: weight quantization + ADC noise impact ==");
+    // derive the injected noise sigma from the circuit simulation at TT
+    let mc = MonteCarlo::new(MonteCarloConfig::default());
+    let tt = mc.run(Corner::TT, &default_4bit_steps(), 42);
+    let sigma_lsb = (tt.sigma / MAC_UNITS_PER_CELL) as f32;
+    println!(
+        "   circuit-sim TT error N({:.2}, {:.2}) MAC units -> sigma {:.3} LSB",
+        tt.mu, tt.sigma, sigma_lsb
+    );
+    let mut rows = Vec::new();
+    for (model, bits, wbits) in SETTINGS {
+        let runtime = ModelRuntime::load(&ctx.engine, &ctx.artifacts, model)?;
+        let data = ModelData::load(&ctx.artifacts, model)?;
+        let calib = Calibrator::new(&runtime, Method::BsKmq, bits)
+            .calibrate(&data, 8)?;
+
+        let ev = PtqEvaluator::new(&runtime);
+        let a0 = ev
+            .evaluate(&data, &calib.programmed, 0.0, EVAL_BATCHES, 3)?
+            .accuracy;
+        // + weight quantization; deployment order: recalibrate the NL-ADC
+        // codebooks on the quantized-weight hardware (Algorithm 1 runs on
+        // the deployed macro, not on a float simulator)
+        let wq_runtime = ev.quantize_weights(wbits)?;
+        let wq_books = Calibrator::new(&wq_runtime, Method::BsKmq, bits)
+            .calibrate(&data, 8)?;
+        let evw = PtqEvaluator::new(&wq_runtime);
+        let a1 = evw
+            .evaluate(&data, &wq_books.programmed, 0.0, EVAL_BATCHES, 3)?
+            .accuracy;
+        // + ADC noise at the TT level
+        let a2 = evw
+            .evaluate(&data, &wq_books.programmed, sigma_lsb, EVAL_BATCHES, 3)?
+            .accuracy;
+        println!(
+            "   {model:<11} act@{bits}b {:.3} | +w@{wbits}b {:.3} ({:+.2} pts) | +noise {:.3} ({:+.2} pts)",
+            a0,
+            a1,
+            (a1 - a0) * 100.0,
+            a2,
+            (a2 - a1) * 100.0
+        );
+        rows.push(Fig6Row {
+            model: model.into(),
+            acc_act_quant: a0,
+            acc_plus_wquant: a1,
+            acc_plus_noise: a2,
+        });
+    }
+    Ok(rows)
+}

@@ -1,0 +1,51 @@
+//! Fig. 8: macro energy and area breakdowns (6/4-bit I/O, 2-bit weight)
+//! plus the headline macro metrics and ADC-overhead comparison.
+
+use anyhow::Result;
+
+use crate::macro_model::{AreaBreakdown, MacroArea, MacroConfig, MacroEnergy};
+
+pub fn run() -> Result<()> {
+    let cfg = MacroConfig::paper_macro();
+    println!("== Fig.8(a): macro energy breakdown (6-bit in, 2-bit w, 4-bit out) ==");
+    let e = MacroEnergy::per_pass(cfg);
+    for (name, share) in e.shares() {
+        println!("   {:<11} {:>5.1}%", name, share * 100.0);
+    }
+    println!("   total {:.1} pJ per macro pass", e.total_pj());
+    println!(
+        "   macro: {:.0} TOPS/W (paper 246), {:.2} TOPS/mm^2 (paper 0.55)",
+        MacroEnergy::tops_per_watt(cfg),
+        MacroEnergy::tops_per_mm2(cfg)
+    );
+    let lin = MacroEnergy::per_pass(MacroConfig { nl_adc: false, ..cfg });
+    println!(
+        "   NL vs linear IM ADC energy: {:.2}x (paper ~1.3x)",
+        e.adc_pj / lin.adc_pj
+    );
+
+    println!("== Fig.8(b): macro area breakdown (total 0.248 mm^2) ==");
+    let a = MacroArea::proposed();
+    print_area(&a);
+    println!(
+        "   ADC overhead (NL-ADC/MAC array): {:.1}% — vs 23% NL ramp [15] ({:.1}x), 17% SAR [17] ({:.1}x)",
+        a.adc_overhead_ratio() * 100.0,
+        MacroArea::prior_nl_ramp().adc_overhead_ratio() / a.adc_overhead_ratio(),
+        MacroArea::prior_sar().adc_overhead_ratio() / a.adc_overhead_ratio()
+    );
+    Ok(())
+}
+
+fn print_area(a: &AreaBreakdown) {
+    let t = a.total();
+    for (name, v) in [
+        ("mac_array", a.mac_array_mm2),
+        ("nl_adc", a.nl_adc_mm2),
+        ("drivers", a.drivers_mm2),
+        ("sa_buffers", a.sa_buffers_mm2),
+        ("rcnt", a.rcnt_mm2),
+        ("control", a.control_mm2),
+    ] {
+        println!("   {:<11} {:>7.4} mm^2  ({:>4.1}%)", name, v, v / t * 100.0);
+    }
+}

@@ -1,0 +1,73 @@
+//! Experiment harnesses: one per paper table/figure (DESIGN.md §3).
+//! Each prints the same rows/series the paper reports and returns the
+//! numbers for EXPERIMENTS.md.  `run_all` regenerates everything.
+
+pub mod fig1_mse;
+pub mod fig5_ptq;
+pub mod fig6_noise;
+pub mod fig7_corners;
+pub mod fig8_macro;
+pub mod table1_system;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::runtime::engine::Engine;
+
+/// Shared context: one PJRT engine + the artifacts directory.
+pub struct ExpContext {
+    pub engine: Engine,
+    pub artifacts: PathBuf,
+}
+
+impl ExpContext {
+    pub fn new() -> Result<ExpContext> {
+        Ok(ExpContext {
+            engine: Engine::cpu()?,
+            artifacts: crate::artifacts_dir(),
+        })
+    }
+}
+
+/// Run one experiment by id ("fig1", "fig4", "fig5", "fig6", "fig7",
+/// "fig8", "table1" or "all").
+pub fn run(id: &str) -> Result<()> {
+    match id {
+        "fig1" => {
+            let ctx = ExpContext::new()?;
+            fig1_mse::run(&ctx, "resnet", 3)?;
+        }
+        "fig4" => {
+            let ctx = ExpContext::new()?;
+            fig1_mse::run(&ctx, "distilbert", 4)?;
+        }
+        "fig5" => {
+            let ctx = ExpContext::new()?;
+            fig5_ptq::run(&ctx)?;
+        }
+        "fig6" => {
+            let ctx = ExpContext::new()?;
+            fig6_noise::run(&ctx)?;
+        }
+        "fig7" => {
+            fig7_corners::run()?;
+        }
+        "fig8" => fig8_macro::run()?,
+        "table1" => table1_system::run()?,
+        "all" => {
+            let ctx = ExpContext::new()?;
+            fig1_mse::run(&ctx, "resnet", 3)?;
+            fig1_mse::run(&ctx, "distilbert", 4)?;
+            fig5_ptq::run(&ctx)?;
+            fig6_noise::run(&ctx)?;
+            fig7_corners::run()?;
+            fig8_macro::run()?;
+            table1_system::run()?;
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (fig1|fig4|fig5|fig6|fig7|fig8|table1|all)"
+        ),
+    }
+    Ok(())
+}

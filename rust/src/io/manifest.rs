@@ -1,0 +1,124 @@
+//! Typed view over the per-model AOT manifest JSON written by aot.py.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One quantized MAC layer (conv im2col'd or dense) of a model.
+#[derive(Clone, Debug)]
+pub struct QLayer {
+    pub name: String,
+    /// contraction size — determines the number of 256-row crossbar tiles
+    pub k: usize,
+    /// output features (crossbar columns)
+    pub n: usize,
+    /// ReLU'd activations (non-negative codebook) vs signed
+    pub relu: bool,
+}
+
+/// One weight argument of the AOT graphs, in call order.
+#[derive(Clone, Debug)]
+pub struct WeightArg {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Parsed `<model>_manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub input_is_int: bool,
+    pub num_classes: usize,
+    pub max_levels: usize,
+    pub qlayers: Vec<QLayer>,
+    pub weight_args: Vec<WeightArg>,
+    pub collect_out_len: usize,
+    pub collect_logits_len: usize,
+    pub samples_per_layer: usize,
+    pub tilemax_offset: usize,
+    pub collect_hlo: String,
+    pub qfwd_hlo: String,
+    pub qfwd_b1_hlo: Option<String>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&src)
+            .with_context(|| format!("parsing {}", path.display()))?;
+
+        let qlayers = j
+            .get("qlayers")?
+            .as_arr()?
+            .iter()
+            .map(|q| {
+                Ok(QLayer {
+                    name: q.get("name")?.as_str()?.to_string(),
+                    k: q.get("k")?.as_usize()?,
+                    n: q.get("n")?.as_usize()?,
+                    relu: q.get("relu")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let weight_args = j
+            .get("weight_args")?
+            .as_arr()?
+            .iter()
+            .map(|w| {
+                Ok(WeightArg {
+                    name: w.get("name")?.as_str()?.to_string(),
+                    shape: w
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let collect = j.get("collect")?;
+        let arts = j.get("artifacts")?;
+        Ok(Manifest {
+            model: j.get("model")?.as_str()?.to_string(),
+            batch: j.get("batch")?.as_usize()?,
+            input_shape: j
+                .get("input_shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            input_is_int: j.get("input_dtype")?.as_str()? == "i32",
+            num_classes: j.get("num_classes")?.as_usize()?,
+            max_levels: j.get("max_levels")?.as_usize()?,
+            qlayers,
+            weight_args,
+            collect_out_len: collect.get("out_len")?.as_usize()?,
+            collect_logits_len: collect.get("logits_len")?.as_usize()?,
+            samples_per_layer: collect.get("samples_per_layer")?.as_usize()?,
+            tilemax_offset: collect.get("tilemax_offset")?.as_usize()?,
+            collect_hlo: arts.get("collect")?.as_str()?.to_string(),
+            qfwd_hlo: arts.get("qfwd")?.as_str()?.to_string(),
+            qfwd_b1_hlo: arts
+                .get("qfwd_b1")
+                .ok()
+                .map(|s| s.as_str().map(str::to_string))
+                .transpose()?,
+        })
+    }
+
+    /// Number of quantized layers.
+    pub fn nq(&self) -> usize {
+        self.qlayers.len()
+    }
+
+    /// Per-sample input element count.
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}

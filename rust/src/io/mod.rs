@@ -1,0 +1,8 @@
+//! Artifact I/O: the flat tensor container written by
+//! `python/compile/weights_io.py` and the per-model AOT manifests.
+
+pub mod manifest;
+pub mod weights;
+
+pub use manifest::{Manifest, QLayer};
+pub use weights::{load_tensors, TensorMap};

@@ -1,0 +1,140 @@
+//! Reader for the flat tensor container (see python/compile/weights_io.py).
+//!
+//! Layout (little-endian): magic u32 "BSKQ" (0x42534B51), version u32 = 1,
+//! count u32, then per tensor: name_len u32, name bytes, ndim u32,
+//! dims u32*ndim, f32 data.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+pub const MAGIC: u32 = 0x4253_4B51;
+pub const VERSION: u32 = 1;
+
+/// Ordered name -> tensor map (insertion order preserved separately).
+pub struct TensorMap {
+    pub names: Vec<String>,
+    pub map: BTreeMap<String, Tensor>,
+}
+
+impl TensorMap {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .with_context(|| format!("tensor '{name}' missing from container"))
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Load every tensor in a container file.
+pub fn load_tensors(path: impl AsRef<Path>) -> Result<TensorMap> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    let magic = read_u32(&mut f)?;
+    let version = read_u32(&mut f)?;
+    if magic != MAGIC || version != VERSION {
+        bail!("bad container header {magic:#x} v{version} in {}", path.display());
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut names = Vec::with_capacity(count);
+    let mut map = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = read_u32(&mut f)? as usize;
+        if nlen > 4096 {
+            bail!("implausible tensor name length {nlen}");
+        }
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb)?;
+        let ndim = read_u32(&mut f)? as usize;
+        if ndim > 8 {
+            bail!("implausible rank {ndim} for '{name}'");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)
+            .with_context(|| format!("reading data of '{name}'"))?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        map.insert(name.clone(), Tensor::new(shape, data)?);
+        names.push(name);
+    }
+    Ok(TensorMap { names, map })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_container(tensors: &[(&str, Vec<usize>, Vec<f32>)]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend(MAGIC.to_le_bytes());
+        b.extend(VERSION.to_le_bytes());
+        b.extend((tensors.len() as u32).to_le_bytes());
+        for (name, shape, data) in tensors {
+            b.extend((name.len() as u32).to_le_bytes());
+            b.extend(name.as_bytes());
+            b.extend((shape.len() as u32).to_le_bytes());
+            for &d in shape {
+                b.extend((d as u32).to_le_bytes());
+            }
+            for &x in data {
+                b.extend(x.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = write_container(&[
+            ("a", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            ("b", vec![3], vec![5.0, 6.0, 7.0]),
+        ]);
+        let dir = std::env::temp_dir().join("bskmq_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&bytes)
+            .unwrap();
+        let tm = load_tensors(&path).unwrap();
+        assert_eq!(tm.names, vec!["a", "b"]);
+        assert_eq!(tm.get("a").unwrap().shape, vec![2, 2]);
+        assert_eq!(tm.get("b").unwrap().data, vec![5.0, 6.0, 7.0]);
+        assert!(tm.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = write_container(&[]);
+        bytes[0] = 0;
+        let dir = std::env::temp_dir().join("bskmq_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&bytes)
+            .unwrap();
+        assert!(load_tensors(&path).is_err());
+    }
+}

@@ -1,0 +1,52 @@
+//! BS-KMQ: In-Memory ADC-Based Nonlinear Activation Quantization —
+//! full-system reproduction (L3 coordinator + hardware substrates).
+//!
+//! Layer map (DESIGN.md):
+//! * [`runtime`] — PJRT CPU client loading the AOT HLO artifacts produced
+//!   by `python/compile/aot.py` (Python never runs on the request path).
+//! * [`quant`] — the BS-KMQ quantizer (paper Algorithm 1) plus the four
+//!   baselines (linear, Lloyd-Max, CDF, standard k-means) and the
+//!   floor-ADC codebook machinery (Eq. 2) with hardware projection (§2.3).
+//! * [`circuit`] / [`adc`] — behavioral simulation of the dual-9T SRAM
+//!   macro and the reconfigurable in-memory NL-ADC across process corners
+//!   (Fig. 7).
+//! * [`macro_model`] — energy/area/latency model of the 256x128 macro
+//!   (Fig. 8, 246 TOPS/W anchor).
+//! * [`arch`] — NeuroSim-style system-level accelerator simulator and the
+//!   Table 1 comparison against prior IMC designs.
+//! * [`coordinator`] — calibration orchestration (streaming Algorithm 1
+//!   over the `collect` graphs), PTQ evaluation, noise injection, and a
+//!   batched inference server.
+//! * [`experiments`] — one harness per paper table/figure.
+
+pub mod adc;
+pub mod arch;
+pub mod circuit;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod io;
+pub mod macro_model;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Repo-root-relative artifacts directory (override with `BSKMQ_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("BSKMQ_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from cwd until an `artifacts/` directory is found.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

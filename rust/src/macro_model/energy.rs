@@ -1,0 +1,197 @@
+//! Energy / throughput model (Fig. 8(a)) with per-component constants
+//! anchored to the paper's 246 TOPS/W at 6-bit input, 2-bit weight,
+//! 4-bit output and the Fig. 8(a) breakdown shares (NL-ADC and drivers
+//! dominate).  Scaling laws:
+//!
+//! * drivers  ~ rows x PWM cycles (2^in_bits)
+//! * array    ~ active cells x PWM cycles
+//! * ADC      ~ SA comparisons (cols x 2^out_bits) + ramp cell-cycles
+//!              (the NL ramp holds ~2x the cells of a linear ramp ->
+//!              the paper's ~30 % ADC energy increase)
+//! * buffers/RCNT ~ cols x 2^out_bits;  control ~ total cycles
+
+use crate::macro_model::weights::weight_columns;
+use crate::macro_model::{COLS, FREQ_MHZ, ROWS};
+
+// --- calibrated constants (fJ unless noted) -------------------------------
+const E_DRIVER_ROW_CYCLE: f64 = 4.877; // fJ per row driver per PWM cycle
+const E_CELL_CYCLE: f64 = 0.0254; // fJ per active cell per PWM cycle
+const E_SA_COMPARE: f64 = 23.1; // fJ per SA comparison
+const E_RAMP_CELL_CYCLE: f64 = 158.6; // fJ per enabled ramp cell-cycle
+const E_BUF_CYCLE: f64 = 11.7; // fJ per buffer per conversion step
+const E_RCNT_CYCLE: f64 = 6.5; // fJ per counter per conversion step
+const E_CTRL_CYCLE: f64 = 100.0; // fJ per macro cycle (control/clock)
+/// pipeline / handover overhead cycles per pass (anchors 0.55 TOPS/mm^2)
+const OVERHEAD_CYCLES: f64 = 16.0;
+/// average input activity (fraction of PWM cycles driving the rows)
+const ACTIVITY: f64 = 0.5;
+
+/// One macro operating point.
+#[derive(Clone, Copy, Debug)]
+pub struct MacroConfig {
+    pub in_bits: u32,
+    pub w_bits: u32,
+    pub out_bits: u32,
+    /// nonlinear (BS-KMQ) ramp vs plain linear ramp
+    pub nl_adc: bool,
+}
+
+impl MacroConfig {
+    /// The paper's macro evaluation point (Fig. 8): 6/2/4, NL.
+    pub fn paper_macro() -> Self {
+        MacroConfig { in_bits: 6, w_bits: 2, out_bits: 4, nl_adc: true }
+    }
+
+    /// The paper's system evaluation point (Table 1): 6/2/3, NL.
+    pub fn paper_system() -> Self {
+        MacroConfig { in_bits: 6, w_bits: 2, out_bits: 3, nl_adc: true }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EnergyBreakdown {
+    /// picojoules per macro pass
+    pub drivers_pj: f64,
+    pub array_pj: f64,
+    pub adc_pj: f64,
+    pub sa_buffers_pj: f64,
+    pub rcnt_pj: f64,
+    pub control_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.drivers_pj + self.array_pj + self.adc_pj + self.sa_buffers_pj
+            + self.rcnt_pj + self.control_pj
+    }
+
+    pub fn shares(&self) -> Vec<(&'static str, f64)> {
+        let t = self.total_pj();
+        vec![
+            ("nl_adc", self.adc_pj / t),
+            ("drivers", self.drivers_pj / t),
+            ("array", self.array_pj / t),
+            ("sa_buffers", self.sa_buffers_pj / t),
+            ("rcnt", self.rcnt_pj / t),
+            ("control", self.control_pj / t),
+        ]
+    }
+}
+
+pub struct MacroEnergy;
+
+impl MacroEnergy {
+    /// Energy of one full macro pass (all rows MAC'd, all columns
+    /// converted once).
+    pub fn per_pass(cfg: MacroConfig) -> EnergyBreakdown {
+        let pwm = (1u64 << cfg.in_bits) as f64;
+        let steps = (1u64 << cfg.out_bits) as f64;
+        let drivers = E_DRIVER_ROW_CYCLE * ROWS as f64 * pwm * ACTIVITY * 2.0;
+        let array =
+            E_CELL_CYCLE * (ROWS * COLS) as f64 * pwm * ACTIVITY * 2.0;
+        // ramp cell-cycles: enabled cells accumulate over the sweep;
+        // sum_i cum_i ~ total_cells * steps / 2
+        let ramp_cells = if cfg.nl_adc { 2.0 * steps } else { steps };
+        let ramp_cell_cycles = ramp_cells * steps / 2.0;
+        let adc = E_SA_COMPARE * COLS as f64 * steps
+            + E_RAMP_CELL_CYCLE * ramp_cell_cycles;
+        let sa_buffers = E_BUF_CYCLE * COLS as f64 * steps;
+        let rcnt = E_RCNT_CYCLE * COLS as f64 * steps;
+        let cycles = pwm + steps + OVERHEAD_CYCLES;
+        let control = E_CTRL_CYCLE * cycles;
+        EnergyBreakdown {
+            drivers_pj: drivers / 1e3,
+            array_pj: array / 1e3,
+            adc_pj: adc / 1e3,
+            sa_buffers_pj: sa_buffers / 1e3,
+            rcnt_pj: rcnt / 1e3,
+            control_pj: control / 1e3,
+        }
+    }
+
+    /// MAC+accumulate operations per pass (2 ops per stored weight x rows).
+    pub fn ops_per_pass(cfg: MacroConfig) -> f64 {
+        2.0 * ROWS as f64 * weight_columns(cfg.w_bits) as f64
+    }
+
+    /// Seconds per pass.
+    pub fn pass_seconds(cfg: MacroConfig) -> f64 {
+        let cycles =
+            (1u64 << cfg.in_bits) as f64 + (1u64 << cfg.out_bits) as f64
+                + OVERHEAD_CYCLES;
+        cycles / (FREQ_MHZ * 1e6)
+    }
+
+    /// TOPS/W at an operating point.
+    pub fn tops_per_watt(cfg: MacroConfig) -> f64 {
+        let ops = Self::ops_per_pass(cfg);
+        let e_j = Self::per_pass(cfg).total_pj() * 1e-12;
+        ops / e_j / 1e12
+    }
+
+    /// Peak TOPS of one macro.
+    pub fn tops(cfg: MacroConfig) -> f64 {
+        Self::ops_per_pass(cfg) / Self::pass_seconds(cfg) / 1e12
+    }
+
+    /// TOPS per mm^2 (uses the Fig. 8(b) floorplan).
+    pub fn tops_per_mm2(cfg: MacroConfig) -> f64 {
+        Self::tops(cfg) / super::area::MACRO_MM2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_246_topsw_and_0p55_topsmm2() {
+        let cfg = MacroConfig::paper_macro();
+        let tw = MacroEnergy::tops_per_watt(cfg);
+        assert!((tw - 246.0).abs() < 25.0, "TOPS/W {tw} vs anchor 246");
+        let tmm = MacroEnergy::tops_per_mm2(cfg);
+        assert!((tmm - 0.55).abs() < 0.06, "TOPS/mm2 {tmm} vs anchor 0.55");
+    }
+
+    #[test]
+    fn nl_adc_costs_about_30_percent_more() {
+        let nl = MacroEnergy::per_pass(MacroConfig::paper_macro());
+        let lin = MacroEnergy::per_pass(MacroConfig {
+            nl_adc: false,
+            ..MacroConfig::paper_macro()
+        });
+        let ratio = nl.adc_pj / lin.adc_pj;
+        assert!(
+            (1.2..1.45).contains(&ratio),
+            "NL/linear ADC energy ratio {ratio} (paper ~1.3)"
+        );
+    }
+
+    #[test]
+    fn adc_and_drivers_dominate() {
+        let e = MacroEnergy::per_pass(MacroConfig::paper_macro());
+        let shares = e.shares();
+        let adc = shares[0].1;
+        let drv = shares[1].1;
+        assert!(adc > 0.25 && drv > 0.2, "adc {adc} drivers {drv}");
+        assert!(adc + drv > 0.5);
+    }
+
+    #[test]
+    fn lower_out_bits_cut_adc_energy() {
+        let e4 = MacroEnergy::per_pass(MacroConfig::paper_macro());
+        let e3 = MacroEnergy::per_pass(MacroConfig::paper_system());
+        assert!(e3.adc_pj < 0.6 * e4.adc_pj);
+        assert!(e3.total_pj() < e4.total_pj());
+    }
+
+    #[test]
+    fn higher_weight_bits_reduce_efficiency() {
+        let t2 = MacroEnergy::tops_per_watt(MacroConfig::paper_macro());
+        let t4 = MacroEnergy::tops_per_watt(MacroConfig {
+            w_bits: 4,
+            ..MacroConfig::paper_macro()
+        });
+        assert!(t4 < t2 / 3.0, "t2 {t2} t4 {t4}");
+    }
+}

@@ -1,0 +1,25 @@
+//! Macro-level energy / area / latency model of the 256x128 dual-9T IMC
+//! macro with the in-memory NL-ADC (§3.2, Fig. 8).
+//!
+//! Stands in for the paper's SPICE-derived numbers; the per-component
+//! constants are *anchored* to the published figures — total area
+//! 0.248 mm^2, NL-ADC = 3.3 % of the MAC array area, 246 TOPS/W and
+//! 0.55 TOPS/mm^2 at 6-bit input / 2-bit weight / 4-bit output, ~30 %
+//! ADC energy increase vs a same-resolution linear IM ADC — and every
+//! other configuration is obtained by the scaling laws of the
+//! architecture (PWM input cycles = 2^in_bits, ramp steps and cells per
+//! §2.3, parallel bitcells per weight per §3.2).
+
+pub mod area;
+pub mod energy;
+pub mod weights;
+
+pub use area::{AreaBreakdown, MacroArea};
+pub use energy::{EnergyBreakdown, MacroConfig, MacroEnergy};
+pub use weights::weight_columns;
+
+/// Crossbar geometry (rows x columns).
+pub const ROWS: usize = 256;
+pub const COLS: usize = 128;
+/// Clock of both the PWM-input and IMA domains (MHz).
+pub const FREQ_MHZ: f64 = 200.0;

@@ -1,0 +1,48 @@
+//! Multi-bit weight mapping (§3.2): parallel bitcell connections.
+//!
+//! The magnitude bits of a w-bit weight map to parallel groups of 1, 2,
+//! 4, ... identical bitcells (7 cells for a 4-bit weight); the sign is
+//! free through the symmetric dual-9T left/right paths.  A 256x128 macro
+//! therefore stores fewer *weights* per row as precision grows.
+
+use crate::macro_model::COLS;
+use crate::quant::weights::bitcells_per_weight;
+
+/// Distinct weights stored per crossbar row at a precision.
+pub fn weight_columns(w_bits: u32) -> usize {
+    COLS / bitcells_per_weight(w_bits)
+}
+
+/// Cells activated for one weight value (energy accounting): the parallel
+/// groups corresponding to set magnitude bits.
+pub fn active_cells(weight_level: i32, w_bits: u32) -> usize {
+    let mag = weight_level.unsigned_abs() as usize;
+    let max_mag = (1usize << (w_bits - 1)) - 1;
+    assert!(mag <= max_mag, "level {weight_level} out of {w_bits}-bit range");
+    mag // groups of 1,2,4.. cells: total active cells == magnitude
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_counts() {
+        assert_eq!(weight_columns(2), 128); // ternary: 1 cell per weight
+        assert_eq!(weight_columns(3), 42);
+        assert_eq!(weight_columns(4), 18);
+    }
+
+    #[test]
+    fn active_cells_equal_magnitude() {
+        assert_eq!(active_cells(0, 4), 0);
+        assert_eq!(active_cells(5, 4), 5);
+        assert_eq!(active_cells(-7, 4), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_level_panics() {
+        active_cells(8, 4);
+    }
+}

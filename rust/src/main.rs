@@ -1,0 +1,166 @@
+//! BS-KMQ leader binary: experiment harnesses, the end-to-end pipeline
+//! and the batched inference server (TCP front).
+//!
+//! Usage:
+//!   bskmq exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|all>
+//!   bskmq calibrate <model> <bits>    # print per-layer codebooks
+//!   bskmq serve [--addr 127.0.0.1:7878] [--model resnet] [--bits 3]
+//!   bskmq info                        # artifacts + platform summary
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+
+use anyhow::{Context, Result};
+
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::coordinator::server::InferenceServer;
+use bskmq::data::dataset::ModelData;
+use bskmq::quant::Method;
+use bskmq::runtime::engine::Engine;
+use bskmq::runtime::model::ModelRuntime;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("exp") => {
+            let id = args.get(1).map(String::as_str).unwrap_or("all");
+            bskmq::experiments::run(id)
+        }
+        Some("calibrate") => {
+            let model = args.get(1).map(String::as_str).unwrap_or("resnet");
+            let bits: u32 = args
+                .get(2)
+                .map(|s| s.parse())
+                .transpose()
+                .context("bits must be an integer")?
+                .unwrap_or(3);
+            calibrate(model, bits)
+        }
+        Some("serve") => serve(args),
+        Some("info") => info(),
+        _ => {
+            eprintln!(
+                "usage: bskmq <exp|calibrate|serve|info> [...]\n\
+                 \x20 exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|all>\n\
+                 \x20 calibrate <model> <bits>\n\
+                 \x20 serve [--addr A] [--model M] [--bits B]\n\
+                 \x20 info"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn calibrate(model: &str, bits: u32) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let artifacts = bskmq::artifacts_dir();
+    let runtime = ModelRuntime::load(&engine, &artifacts, model)?;
+    let data = ModelData::load(&artifacts, model)?;
+    let calib = Calibrator::new(&runtime, Method::BsKmq, bits)
+        .calibrate(&data, 8)?;
+    println!("calibrated {model} at {bits}b over {} batches", calib.batches);
+    for (i, (book, q)) in calib
+        .nl_books
+        .iter()
+        .zip(&runtime.manifest.qlayers)
+        .enumerate()
+    {
+        println!(
+            "  layer {:>2} {:<10} K={:<4} centers[0..4] = {:?}",
+            i,
+            q.name,
+            q.k,
+            &book.centers[..4.min(book.centers.len())]
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let mut addr = "127.0.0.1:7878".to_string();
+    let mut model = "resnet".to_string();
+    let mut bits = 3u32;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--addr" => {
+                addr = args.get(i + 1).context("--addr value")?.clone();
+                i += 2;
+            }
+            "--model" => {
+                model = args.get(i + 1).context("--model value")?.clone();
+                i += 2;
+            }
+            "--bits" => {
+                bits = args.get(i + 1).context("--bits value")?.parse()?;
+                i += 2;
+            }
+            other => anyhow::bail!("unknown serve flag '{other}'"),
+        }
+    }
+    let server = InferenceServer::start(
+        bskmq::artifacts_dir(),
+        model.clone(),
+        Method::BsKmq,
+        bits,
+        0.0,
+        8,
+    )?;
+    let listener = TcpListener::bind(&addr)?;
+    println!("serving {model} ({bits}b BS-KMQ) on {addr}");
+    println!("protocol: one line of comma-separated input floats -> one line of logits");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut out = stream;
+        let mut line = String::new();
+        while {
+            line.clear();
+            reader.read_line(&mut line)? > 0
+        } {
+            let x: Vec<f32> = line
+                .trim()
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse::<f32>())
+                .collect::<std::result::Result<_, _>>()
+                .context("parsing input floats")?;
+            match server.infer(x) {
+                Ok(logits) => {
+                    let s: Vec<String> =
+                        logits.iter().map(|v| format!("{v:.6}")).collect();
+                    writeln!(out, "{}", s.join(","))?;
+                }
+                Err(e) => writeln!(out, "error: {e}")?,
+            }
+        }
+        println!("client done; stats: {}", server.stats.summary());
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let artifacts = bskmq::artifacts_dir();
+    println!("artifacts dir: {}", artifacts.display());
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    for model in ["resnet", "vgg", "inception", "distilbert"] {
+        match ModelRuntime::load(&engine, &artifacts, model) {
+            Ok(rt) => println!(
+                "  {model:<11} nq={:<3} batch={} input={:?}",
+                rt.manifest.nq(),
+                rt.manifest.batch,
+                rt.manifest.input_shape
+            ),
+            Err(e) => println!("  {model:<11} UNAVAILABLE: {e}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Network descriptors: layer shapes of the paper's four evaluation
+//! models at *paper scale* (for the system-level cost simulation of
+//! Table 1) and of the mini models (for cross-checks against the AOT
+//! manifests).
+
+pub mod zoo;
+
+pub use zoo::{distilbert, inception_v3, resnet18_cifar, vgg16_cifar, Layer, Network};

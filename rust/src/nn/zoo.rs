@@ -1,0 +1,203 @@
+//! Paper-scale network shape descriptors.
+//!
+//! Only the MAC structure matters for the system simulation: each layer
+//! contributes a weight matrix (K = receptive field, N = output features)
+//! and an output count (MAC rows per inference).
+
+/// One MAC layer as mapped onto IMC crossbars.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    /// contraction size (kh*kw*cin for convs, din for dense)
+    pub k: usize,
+    /// output features
+    pub n: usize,
+    /// output positions per inference (oh*ow for convs, tokens or 1)
+    pub positions: usize,
+}
+
+impl Layer {
+    pub fn conv(name: &str, cin: usize, cout: usize, ksz: usize,
+                oh: usize, ow: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            k: ksz * ksz * cin,
+            n: cout,
+            positions: oh * ow,
+        }
+    }
+
+    pub fn dense(name: &str, din: usize, dout: usize, positions: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            k: din,
+            n: dout,
+            positions,
+        }
+    }
+
+    /// MAC operations per inference (x2 for multiply+accumulate).
+    pub fn ops(&self) -> f64 {
+        2.0 * (self.k * self.n * self.positions) as f64
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_ops(&self) -> f64 {
+        self.layers.iter().map(Layer::ops).sum()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.k * l.n).sum()
+    }
+}
+
+/// ResNet-18 (CIFAR-10 variant, 32x32 input) — the Table 1 workload.
+pub fn resnet18_cifar() -> Network {
+    let mut layers = vec![Layer::conv("conv1", 3, 64, 3, 32, 32)];
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 32, 0), (128, 16, 1), (256, 8, 1), (512, 4, 1)];
+    let mut cin = 64;
+    for (si, &(c, hw, strided)) in stages.iter().enumerate() {
+        for b in 0..2 {
+            let in_c = if b == 0 { cin } else { c };
+            layers.push(Layer::conv(
+                &format!("s{si}b{b}c1"), in_c, c, 3, hw, hw));
+            layers.push(Layer::conv(
+                &format!("s{si}b{b}c2"), c, c, 3, hw, hw));
+            if b == 0 && strided == 1 {
+                layers.push(Layer::conv(
+                    &format!("s{si}sc"), in_c, c, 1, hw, hw));
+            }
+        }
+        cin = c;
+    }
+    layers.push(Layer::dense("fc", 512, 10, 1));
+    Network {
+        name: "resnet18".into(),
+        layers,
+    }
+}
+
+/// VGG-16 (CIFAR-100 variant).
+pub fn vgg16_cifar() -> Network {
+    let cfg: [(usize, usize, usize); 13] = [
+        (3, 64, 32), (64, 64, 32),
+        (64, 128, 16), (128, 128, 16),
+        (128, 256, 8), (256, 256, 8), (256, 256, 8),
+        (256, 512, 4), (512, 512, 4), (512, 512, 4),
+        (512, 512, 2), (512, 512, 2), (512, 512, 2),
+    ];
+    let mut layers: Vec<Layer> = cfg
+        .iter()
+        .enumerate()
+        .map(|(i, &(cin, cout, hw))| {
+            Layer::conv(&format!("conv{}", i + 1), cin, cout, 3, hw, hw)
+        })
+        .collect();
+    layers.push(Layer::dense("fc1", 512, 512, 1));
+    layers.push(Layer::dense("fc2", 512, 100, 1));
+    Network {
+        name: "vgg16".into(),
+        layers,
+    }
+}
+
+/// Inception-V3 (Tiny-ImageNet, 64x64 input) — coarse per-block shapes.
+pub fn inception_v3() -> Network {
+    let mut layers = vec![
+        Layer::conv("stem1", 3, 32, 3, 32, 32),
+        Layer::conv("stem2", 32, 64, 3, 32, 32),
+        Layer::conv("stem3", 64, 80, 1, 16, 16),
+        Layer::conv("stem4", 80, 192, 3, 16, 16),
+    ];
+    // 3 inception-A style blocks at 16x16 / 288 ch
+    let mut cin = 192;
+    for b in 0..3 {
+        for (bi, &(k, cout)) in
+            [(1, 64), (1, 48), (5, 64), (1, 64), (3, 96), (1, 64)]
+                .iter()
+                .enumerate()
+        {
+            layers.push(Layer::conv(
+                &format!("a{b}_{bi}"), cin.min(288), cout, k, 16, 16));
+        }
+        cin = 288;
+    }
+    // reduction + 2 inception-C style blocks at 8x8
+    layers.push(Layer::conv("red", 288, 384, 3, 8, 8));
+    for b in 0..2 {
+        for (bi, &(k, cout)) in
+            [(1, 320), (1, 384), (3, 384), (1, 448), (3, 384)]
+                .iter()
+                .enumerate()
+        {
+            layers.push(Layer::conv(
+                &format!("c{b}_{bi}"), 768, cout, k, 8, 8));
+        }
+    }
+    layers.push(Layer::dense("fc", 2048, 200, 1));
+    Network {
+        name: "inception_v3".into(),
+        layers,
+    }
+}
+
+/// DistilBERT-base (seq len 128): 6 layers, d=768, ff=3072.
+pub fn distilbert() -> Network {
+    let t = 128;
+    let d = 768;
+    let ff = 3072;
+    let mut layers = Vec::new();
+    for l in 0..6 {
+        for p in ["q", "k", "v", "o"] {
+            layers.push(Layer::dense(&format!("l{l}_{p}"), d, d, t));
+        }
+        layers.push(Layer::dense(&format!("l{l}_ff1"), d, ff, t));
+        layers.push(Layer::dense(&format!("l{l}_ff2"), ff, d, t));
+    }
+    layers.push(Layer::dense("qa", d, 2, t));
+    Network {
+        name: "distilbert".into(),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_shape_sanity() {
+        let net = resnet18_cifar();
+        // 1 stem + 4 stages x (2 blocks x 2 convs) + 3 shortcuts + fc
+        assert_eq!(net.layers.len(), 1 + 16 + 3 + 1);
+        // CIFAR ResNet-18: ~11M params, ~0.56 GMACs -> ~1.1 Gops
+        let w = net.total_weights() as f64;
+        assert!((1.0e7..1.3e7).contains(&w), "weights {w}");
+        let ops = net.total_ops();
+        assert!((0.9e9..1.4e9).contains(&ops), "ops {ops}");
+    }
+
+    #[test]
+    fn vgg16_has_more_weights_than_resnet18() {
+        // on CIFAR inputs VGG-16 has more *weights* (big dense stacks)
+        // while ResNet-18 has more ops (larger early feature maps)
+        assert!(vgg16_cifar().total_weights() > resnet18_cifar().total_weights());
+        assert!(resnet18_cifar().total_ops() > vgg16_cifar().total_ops());
+    }
+
+    #[test]
+    fn distilbert_param_count() {
+        let net = distilbert();
+        // ~42M MAC weights in the 6 encoder layers
+        let w = net.total_weights() as f64;
+        assert!((3.5e7..5.0e7).contains(&w), "weights {w}");
+    }
+}

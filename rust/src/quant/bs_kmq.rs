@@ -1,0 +1,261 @@
+//! Boundary Suppressed K-Means Quantization — paper Algorithm 1.
+//!
+//! Streaming calibrator: per batch, trim the extreme `alpha` tails, EMA
+//! the trimmed min/max into the global range (Eq. 1), buffer the interior
+//! samples; at finish, clamp to [g_min, g_max], *remove* samples
+//! saturating at either bound (ReLU zero spike / clamp pile-up), k-means
+//! the interior into 2^b - 2 centers, and re-attach g_min/g_max as the
+//! outermost centers.  This is the L3 coordinator's counterpart of
+//! `python/compile/quantlib/bs_kmq.py`.
+
+use anyhow::{ensure, Result};
+
+use crate::quant::kmeans::kmeans_1d;
+use crate::util::rng::Rng;
+
+
+pub const DEFAULT_ALPHA: f64 = 0.005;
+pub const EMA_KEEP: f64 = 0.9;
+pub const EMA_NEW: f64 = 0.1;
+
+/// Streaming implementation of Algorithm 1.
+pub struct BsKmqCalibrator {
+    alpha: f64,
+    pub g_min: Option<f64>,
+    pub g_max: Option<f64>,
+    buffer: Vec<f64>,
+    max_buffer: usize,
+    rng: Rng,
+    pub batches_seen: usize,
+}
+
+impl Default for BsKmqCalibrator {
+    fn default() -> Self {
+        Self::new(DEFAULT_ALPHA, 200_000, 0)
+    }
+}
+
+impl BsKmqCalibrator {
+    pub fn new(alpha: f64, max_buffer: usize, seed: u64) -> Self {
+        assert!((0.0..0.5).contains(&alpha), "alpha in [0, 0.5)");
+        BsKmqCalibrator {
+            alpha,
+            g_min: None,
+            g_max: None,
+            buffer: Vec::new(),
+            max_buffer,
+            rng: Rng::new(seed),
+            batches_seen: 0,
+        }
+    }
+
+    /// Algorithm 1 lines 5-17: trim tails, EMA the range, buffer interior.
+    pub fn observe(&mut self, batch: &[f64]) {
+        if batch.is_empty() {
+            return;
+        }
+        // one sort serves both tail quantiles (perf: was two full
+        // sort-based quantile() calls per batch — EXPERIMENTS.md §Perf)
+        let mut sorted = batch.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p_low = crate::util::stats::quantile_sorted(&sorted, self.alpha);
+        let p_high =
+            crate::util::stats::quantile_sorted(&sorted, 1.0 - self.alpha);
+        let mut cent: Vec<f64> = batch
+            .iter()
+            .copied()
+            .filter(|&a| a >= p_low && a <= p_high)
+            .collect();
+        if cent.is_empty() {
+            cent = batch.to_vec();
+        }
+        let b_min = cent.iter().copied().fold(f64::INFINITY, f64::min);
+        let b_max = cent.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        match (self.g_min, self.g_max) {
+            (None, _) | (_, None) => {
+                self.g_min = Some(b_min);
+                self.g_max = Some(b_max);
+            }
+            (Some(gmin), Some(gmax)) => {
+                self.g_min = Some(EMA_KEEP * gmin + EMA_NEW * b_min);
+                self.g_max = Some(EMA_KEEP * gmax + EMA_NEW * b_max);
+            }
+        }
+        self.batches_seen += 1;
+        // bounded buffering (reservoir-ish, matches the python side)
+        if self.buffer.len() + cent.len() > self.max_buffer {
+            let keep = self.max_buffer.saturating_sub(self.buffer.len());
+            if keep == 0 {
+                return;
+            }
+            cent = self.rng.sample(&cent, keep);
+        }
+        self.buffer.extend_from_slice(&cent);
+    }
+
+    /// Algorithm 1 lines 18-23: boundary-suppressed clustering.
+    pub fn finish(&self, bits: u32, seed: u64) -> Result<Vec<f64>> {
+        ensure!((1..=7).contains(&bits), "bits in [1,7], got {bits}");
+        let (g_min, g_max) = match (self.g_min, self.g_max) {
+            (Some(a), Some(b)) => (a, b),
+            _ => anyhow::bail!("finish() before any observe()"),
+        };
+        let g_max = if g_max > g_min { g_max } else { g_min + 1e-8 };
+        let k_interior = (1usize << bits) - 2;
+        if k_interior == 0 {
+            return Ok(vec![g_min, g_max]); // 1-bit: just the bounds
+        }
+        // clamp, then REMOVE boundary-saturating samples
+        let interior: Vec<f64> = self
+            .buffer
+            .iter()
+            .map(|&s| s.clamp(g_min, g_max))
+            .filter(|&s| s > g_min && s < g_max)
+            .collect();
+        let mut cq = if interior.len() < k_interior {
+            even_interior(g_min, g_max, k_interior)
+        } else {
+            let mut c = kmeans_1d(&interior, k_interior, 50, seed);
+            if c.len() < k_interior {
+                let pad = even_interior(g_min, g_max, k_interior - c.len());
+                c.extend(pad);
+                c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            c
+        };
+        let mut centers = Vec::with_capacity(k_interior + 2);
+        centers.push(g_min);
+        centers.append(&mut cq);
+        centers.push(g_max);
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(centers)
+    }
+}
+
+fn even_interior(lo: f64, hi: f64, k: usize) -> Vec<f64> {
+    let step = (hi - lo) / (k + 1) as f64;
+    (1..=k).map(|i| lo + step * i as f64).collect()
+}
+
+/// One-shot convenience wrapper: splits `samples` into 8 batches.
+pub fn fit_bs_kmq(samples: &[f64], bits: u32) -> Vec<f64> {
+    fit_bs_kmq_cfg(samples, bits, DEFAULT_ALPHA, 8, 0)
+}
+
+pub fn fit_bs_kmq_cfg(
+    samples: &[f64],
+    bits: u32,
+    alpha: f64,
+    batches: usize,
+    seed: u64,
+) -> Vec<f64> {
+    assert!(!samples.is_empty(), "empty sample set");
+    let mut calib = BsKmqCalibrator::new(alpha, 200_000, seed);
+    let bs = batches.clamp(1, samples.len());
+    let chunk = samples.len().div_ceil(bs);
+    for c in samples.chunks(chunk) {
+        calib.observe(c);
+    }
+    calib.finish(bits, seed).expect("observed at least one batch")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::Codebook;
+    use crate::util::rng::Rng;
+
+    fn relu_gaussian(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal(0.3, 1.0).max(0.0)).collect()
+    }
+
+    #[test]
+    fn includes_bounds_as_centers() {
+        let xs = relu_gaussian(50_000, 1);
+        let c = fit_bs_kmq(&xs, 3);
+        assert_eq!(c.len(), 8);
+        // g_min for ReLU data is ~0 and is the first center
+        assert!(c[0].abs() < 1e-6, "g_min {}", c[0]);
+        assert!(c.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn range_robust_to_outliers() {
+        let mut xs = relu_gaussian(50_000, 2);
+        // inject 0.2% giant outliers, spread across calibration batches
+        for i in 0..100 {
+            xs[i * 499] = 1e4;
+        }
+        let c = fit_bs_kmq(&xs, 4);
+        // the EMA'd, trimmed range must ignore the 1e4 spikes
+        assert!(
+            *c.last().unwrap() < 100.0,
+            "g_max exploded: {}",
+            c.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn streaming_matches_oneshot_shape() {
+        let xs = relu_gaussian(8_000, 3);
+        let mut calib = BsKmqCalibrator::default();
+        for c in xs.chunks(1000) {
+            calib.observe(c);
+        }
+        let centers = calib.finish(3, 0).unwrap();
+        assert_eq!(centers.len(), 8);
+        assert_eq!(calib.batches_seen, 8);
+    }
+
+    #[test]
+    fn one_bit_is_just_bounds() {
+        let xs = relu_gaussian(1_000, 4);
+        let c = fit_bs_kmq(&xs, 1);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn finish_before_observe_errors() {
+        let calib = BsKmqCalibrator::default();
+        assert!(calib.finish(3, 0).is_err());
+    }
+
+    /// The headline property (Fig. 1 mechanism): under the hardware
+    /// projection, BS-KMQ beats the baselines on ReLU-spiked, outlier-
+    /// tailed activations (averaged over seeds — individual k-means++
+    /// draws can get lucky).
+    #[test]
+    fn wins_under_hardware_projection() {
+        let bits = 3;
+        let mut wins = 0;
+        let trials = 5;
+        for seed in 0..trials {
+            let mut rng = Rng::new(700 + seed);
+            // heavy ReLU spike (~50% zeros) + lognormal outlier tail
+            let mut xs: Vec<f64> = (0..40_000)
+                .map(|_| rng.normal(0.0, 1.0).max(0.0))
+                .collect();
+            for _ in 0..200 {
+                let i = rng.below(xs.len());
+                xs[i] = rng.normal(1.5, 0.9).exp();
+            }
+            let bs = crate::quant::Method::BsKmq.fit_hw(&xs, bits).mse(&xs);
+            let all_beat = [
+                crate::quant::Method::Linear,
+                crate::quant::Method::Cdf,
+                crate::quant::Method::KMeans,
+                crate::quant::Method::LloydMax,
+            ]
+            .iter()
+            .all(|m| bs < m.fit_hw(&xs, bits).mse(&xs));
+            if all_beat {
+                wins += 1;
+            }
+        }
+        assert!(
+            wins * 2 > trials,
+            "bs_kmq won only {wins}/{trials} seeds under hw projection"
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! CDF (equal-probability) quantizer baseline [11]: centers at mid-cell
+//! quantiles.  On ReLU activations the zero spike collapses many quantiles
+//! onto the same value — the degeneracy the paper calls out; duplicates
+//! are nudged just enough to keep the reference ladder strictly sorted.
+
+use crate::util::stats::quantile_sorted;
+
+/// `2^bits` equal-probability-mass centers (mid-cell quantiles).
+pub fn fit_cdf(samples: &[f64], bits: u32) -> Vec<f64> {
+    assert!((1..=7).contains(&bits), "bits in [1,7]");
+    assert!(!samples.is_empty(), "empty sample set");
+    let k = 1usize << bits;
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let absmax = v
+        .iter()
+        .fold(1.0f64, |m, x| m.max(x.abs()));
+    let eps = 1e-12 + 1e-9 * absmax;
+    let mut centers: Vec<f64> = (0..k)
+        .map(|i| quantile_sorted(&v, (i as f64 + 0.5) / k as f64))
+        .collect();
+    for i in 1..k {
+        if centers[i] <= centers[i - 1] {
+            centers[i] = centers[i - 1] + eps;
+        }
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_mass_on_uniform() {
+        let xs: Vec<f64> = (0..10_000).map(|i| i as f64 / 10_000.0).collect();
+        let c = fit_cdf(&xs, 2);
+        let want = [0.125, 0.375, 0.625, 0.875];
+        for (a, b) in c.iter().zip(want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_spike_degenerates_but_stays_sorted() {
+        let mut xs = vec![0.0; 9_000];
+        xs.extend((0..1_000).map(|i| 1.0 + i as f64 / 1_000.0));
+        let c = fit_cdf(&xs, 3);
+        // strictly increasing despite 90% identical samples
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+        // most centers collapsed near the spike - the paper's failure mode
+        assert!(c[5] < 1e-3, "expected collapse, got {:?}", c);
+    }
+}

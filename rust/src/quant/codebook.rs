@@ -1,0 +1,259 @@
+//! Codebook: centers <-> floor-ADC references (paper Eq. 2) plus the §2.3
+//! hardware projection onto the IM NL-ADC's integer-bitcell ramp grid.
+
+use anyhow::{ensure, Result};
+
+/// 7-bit NL-ADC -> at most 128 levels (the macro's maximum resolution).
+pub const MAX_LEVELS: usize = 128;
+
+/// A fitted quantizer: sorted centers + derived reference ladder.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebook {
+    pub centers: Vec<f64>,
+    pub refs: Vec<f64>,
+}
+
+impl Codebook {
+    /// Eq. 2: `R_0 = C_0`, `R_i = (C_{i-1} + C_i) / 2` — emulates
+    /// nearest-center rounding on a floor-type ADC.
+    pub fn from_centers(centers: &[f64]) -> Codebook {
+        let mut c = centers.to_vec();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut refs = Vec::with_capacity(c.len());
+        refs.push(c[0]);
+        for i in 1..c.len() {
+            refs.push(0.5 * (c[i - 1] + c[i]));
+        }
+        Codebook { centers: c, refs }
+    }
+
+    pub fn levels(&self) -> usize {
+        self.centers.len()
+    }
+
+    /// Floor-ADC conversion: index of largest reference <= x.
+    #[inline]
+    pub fn index_of(&self, x: f64) -> usize {
+        // refs is sorted; binary search for the rightmost ref <= x
+        match self
+            .refs
+            .binary_search_by(|r| r.partial_cmp(&x).unwrap())
+        {
+            Ok(mut i) => {
+                // land on the last of an equal run
+                while i + 1 < self.refs.len() && self.refs[i + 1] == x {
+                    i += 1;
+                }
+                i
+            }
+            Err(0) => 0,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Quantize one value to its nearest center (via the reference ladder).
+    #[inline]
+    pub fn quantize(&self, x: f64) -> f64 {
+        self.centers[self.index_of(x)]
+    }
+
+    /// Quantize a slice.
+    pub fn quantize_all(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Mean squared quantization error on samples.
+    pub fn mse(&self, xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter()
+            .map(|&x| {
+                let q = self.quantize(x);
+                (x - q) * (x - q)
+            })
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+
+    /// Smallest positive reference step — the ADC LSB (noise unit, Fig. 7).
+    pub fn min_step(&self) -> f64 {
+        let mut m = f64::INFINITY;
+        for w in self.refs.windows(2) {
+            let d = w[1] - w[0];
+            if d > 0.0 && d < m {
+                m = d;
+            }
+        }
+        if m.is_finite() {
+            m
+        } else {
+            1.0
+        }
+    }
+
+    /// Ramp bitcell budget at a resolution (§2.3): the paper's 4-bit
+    /// NL-ADC uses 32 cells (vs 16 linear); budget(b) = 2^(b+1), capped
+    /// at the 252 usable cells of the 256-cell column (4 are calibration
+    /// cells), which is what limits the maximum resolution to 7 bits.
+    pub fn cell_budget(bits: u32) -> Result<usize> {
+        ensure!((1..=7).contains(&bits), "bits must be in [1,7], got {bits}");
+        Ok((1usize << (bits + 1)).min(252))
+    }
+
+    /// §2.3 / Fig. 3: project onto the realizable grid — integer bitcells
+    /// per ramp step (>=1, total <= budget) and `out_bits`-wide digital
+    /// centers.  Mirrors `quantlib.codebook.project_to_hardware`.
+    pub fn project_to_hardware(&self, bits: u32) -> Codebook {
+        self.project_to_hardware_out(bits, 6)
+    }
+
+    pub fn project_to_hardware_out(&self, bits: u32, out_bits: u32) -> Codebook {
+        let k = self.centers.len();
+        let budget = Self::cell_budget(bits).expect("bits in range") as i64;
+        let span = self.refs[k - 1] - self.refs[0];
+        if span <= 0.0 || k < 2 {
+            return self.clone();
+        }
+        let dv = span / budget as f64; // one ramp cell's increment
+        let mut n: Vec<i64> = self
+            .refs
+            .windows(2)
+            .map(|w| (((w[1] - w[0]) / dv).round() as i64).max(1))
+            .collect();
+        // enforce the budget by shaving the widest steps first
+        while n.iter().sum::<i64>() > budget {
+            let imax = (0..n.len()).max_by_key(|&i| n[i]).unwrap();
+            n[imax] -= 1;
+        }
+        let mut hw_refs = Vec::with_capacity(k);
+        hw_refs.push(self.refs[0]);
+        let mut acc = 0i64;
+        for &ni in &n {
+            acc += ni;
+            hw_refs.push(self.refs[0] + dv * acc as f64);
+        }
+        hw_refs.truncate(k);
+        // digital center grid: sub-cell resolution dv / 2^(out_bits-bits)
+        let grid = dv / (1u32 << out_bits.saturating_sub(bits)).max(1) as f64;
+        let mut hw_centers: Vec<f64> = self
+            .centers
+            .iter()
+            .map(|c| (c / grid).round() * grid)
+            .collect();
+        for i in 1..k {
+            if hw_centers[i] < hw_centers[i - 1] {
+                hw_centers[i] = hw_centers[i - 1];
+            }
+        }
+        // references must stay the Eq.-2 ladder of the *projected* ramp
+        Codebook {
+            centers: hw_centers,
+            refs: hw_refs,
+        }
+    }
+
+    /// Pad to `levels` slots for the fixed-shape AOT graphs: padding refs
+    /// are +inf (never selected), padding centers repeat the last center.
+    pub fn padded(&self, levels: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(self.levels() <= levels, "codebook exceeds capacity");
+        let mut refs = vec![f32::INFINITY; levels];
+        let mut centers = vec![*self.centers.last().unwrap() as f32; levels];
+        for (i, (&r, &c)) in self.refs.iter().zip(&self.centers).enumerate() {
+            refs[i] = r as f32;
+            centers[i] = c as f32;
+        }
+        (refs, centers)
+    }
+
+    /// Linear codebook over [lo, hi] — the per-tile high-resolution
+    /// conversion and the Fig. 1 "linear [14]" baseline.
+    pub fn linear(lo: f64, hi: f64, bits: u32) -> Codebook {
+        let k = 1usize << bits;
+        let hi = if hi > lo { hi } else { lo + 1e-8 };
+        let step = (hi - lo) / (k - 1) as f64;
+        let centers: Vec<f64> =
+            (0..k).map(|i| lo + step * i as f64).collect();
+        Codebook::from_centers(&centers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's worked 3-bit example (§2.1).
+    #[test]
+    fn paper_example_references() {
+        let centers = [0.0, 0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0];
+        let cb = Codebook::from_centers(&centers);
+        let expect = [0.0, 0.0625, 0.1875, 0.375, 0.75, 1.5, 3.0, 6.0];
+        for (r, e) in cb.refs.iter().zip(expect) {
+            assert!((r - e).abs() < 1e-12, "{r} vs {e}");
+        }
+        // "An input of 0.05 falls below R1 and maps to C0 = 0"
+        assert_eq!(cb.quantize(0.05), 0.0);
+        // "an input of 0.07 lies between R1 and R2 and maps to C1 = 0.125"
+        assert_eq!(cb.quantize(0.07), 0.125);
+    }
+
+    #[test]
+    fn quantize_is_nearest_center() {
+        let cb = Codebook::from_centers(&[-1.0, 0.0, 2.0, 5.0]);
+        for &(x, want) in &[(-9.0, -1.0), (-0.51, -1.0), (-0.49, 0.0),
+                            (0.99, 0.0), (1.01, 2.0), (3.49, 2.0),
+                            (3.51, 5.0), (99.0, 5.0)] {
+            assert_eq!(cb.quantize(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn min_step_and_budget() {
+        let cb = Codebook::from_centers(&[0.0, 1.0, 3.0, 7.0]);
+        assert!((cb.min_step() - 0.5).abs() < 1e-12);
+        assert_eq!(Codebook::cell_budget(4).unwrap(), 32);
+        assert!(Codebook::cell_budget(0).is_err());
+        assert!(Codebook::cell_budget(8).is_err());
+    }
+
+    #[test]
+    fn hardware_projection_respects_budget() {
+        // extreme step ratio: tiny steps near 0, huge tail step
+        let centers = [0.0, 1e-4, 2e-4, 3e-4, 0.5, 1.0, 50.0, 100.0];
+        let cb = Codebook::from_centers(&centers).project_to_hardware(3);
+        assert_eq!(cb.levels(), 8);
+        let span = cb.refs[7] - cb.refs[0];
+        let dv = span_ideal(&centers) / 16.0;
+        // every step is at least one cell and the total fits the budget
+        let total: f64 = cb.refs.windows(2).map(|w| w[1] - w[0]).sum();
+        assert!(total <= span_ideal(&centers) + 1e-9);
+        for w in cb.refs.windows(2) {
+            assert!(w[1] - w[0] >= dv * 0.999, "step below one cell");
+        }
+        let _ = span;
+    }
+
+    fn span_ideal(centers: &[f64]) -> f64 {
+        let cb = Codebook::from_centers(centers);
+        cb.refs[cb.refs.len() - 1] - cb.refs[0]
+    }
+
+    #[test]
+    fn linear_codebook_uniform() {
+        let cb = Codebook::linear(0.0, 7.0, 3);
+        assert_eq!(cb.levels(), 8);
+        for (i, c) in cb.centers.iter().enumerate() {
+            assert!((c - i as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn padded_semantics() {
+        let cb = Codebook::from_centers(&[0.0, 1.0]);
+        let (refs, centers) = cb.padded(4);
+        assert_eq!(refs[0], 0.0);
+        assert_eq!(refs[1], 0.5);
+        assert!(refs[2].is_infinite() && refs[3].is_infinite());
+        assert_eq!(centers, vec![0.0, 1.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,142 @@
+//! Standard 1-D k-means quantizer baseline [13]: k-means++ seeding +
+//! Lloyd iterations over the raw, untrimmed samples (no boundary
+//! suppression — the ReLU zero spike and clamp tails pull centroids
+//! toward the distribution edges, the instability BS-KMQ fixes).
+
+use crate::util::rng::Rng;
+
+const MAX_FIT_SAMPLES: usize = 20_000;
+
+fn kmeanspp_init(x: &[f64], k: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut centers = Vec::with_capacity(k);
+    centers.push(x[rng.below(x.len())]);
+    let mut d2: Vec<f64> = x
+        .iter()
+        .map(|&v| (v - centers[0]) * (v - centers[0]))
+        .collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            centers.push(x[rng.below(x.len())]);
+            continue;
+        }
+        let mut target = rng.uniform() * total;
+        let mut pick = x.len() - 1;
+        for (i, &d) in d2.iter().enumerate() {
+            target -= d;
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        let c = x[pick];
+        centers.push(c);
+        for (i, &v) in x.iter().enumerate() {
+            let nd = (v - c) * (v - c);
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    centers
+}
+
+/// Lloyd's algorithm in 1-D: sorted centroids, O(n log k) assignment.
+pub fn kmeans_1d(samples: &[f64], k: usize, iters: usize, seed: u64) -> Vec<f64> {
+    assert!(!samples.is_empty(), "kmeans on empty sample set");
+    let mut rng = Rng::new(seed);
+    let x: Vec<f64> = if samples.len() > MAX_FIT_SAMPLES {
+        rng.sample(samples, MAX_FIT_SAMPLES)
+    } else {
+        samples.to_vec()
+    };
+    let distinct = {
+        let mut v = x.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.dedup();
+        v.len()
+    };
+    let k = k.min(distinct.max(1));
+    let mut centers = kmeanspp_init(&x, k, &mut rng);
+    let mut sums = vec![0f64; k];
+    let mut counts = vec![0usize; k];
+    let mut bounds = vec![0f64; k.saturating_sub(1)];
+    for _ in 0..iters {
+        sums.iter_mut().for_each(|s| *s = 0.0);
+        counts.iter_mut().for_each(|c| *c = 0);
+        for (b, w) in bounds.iter_mut().zip(centers.windows(2)) {
+            *b = 0.5 * (w[0] + w[1]);
+        }
+        for &v in &x {
+            // binary search over boundary midpoints (perf: was an O(k)
+            // scan — see EXPERIMENTS.md §Perf)
+            let cell = bounds.partition_point(|&b| b < v);
+            sums[cell] += v;
+            counts[cell] += 1;
+        }
+        let mut moved = 0f64;
+        for i in 0..k {
+            if counts[i] > 0 {
+                let c = sums[i] / counts[i] as f64;
+                moved = moved.max((c - centers[i]).abs());
+                centers[i] = c;
+            }
+        }
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if moved < 1e-10 {
+            break;
+        }
+    }
+    centers
+}
+
+/// `2^bits` standard k-means centers over the raw sample set.
+pub fn fit_kmeans(samples: &[f64], bits: u32, seed: u64) -> Vec<f64> {
+    assert!((1..=7).contains(&bits), "bits in [1,7]");
+    let k = 1usize << bits;
+    let mut centers = kmeans_1d(samples, k, 50, seed);
+    while centers.len() < k {
+        centers.push(*centers.last().unwrap()); // degenerate data
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::Codebook;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        let mut rng = Rng::new(11);
+        let mut xs = Vec::new();
+        for &mu in &[0.0, 10.0, 20.0, 30.0] {
+            for _ in 0..500 {
+                xs.push(rng.normal(mu, 0.1));
+            }
+        }
+        let c = kmeans_1d(&xs, 4, 50, 0);
+        for (got, want) in c.iter().zip([0.0, 10.0, 20.0, 30.0]) {
+            assert!((got - want).abs() < 0.5, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn near_optimal_mse_in_1d() {
+        let mut rng = Rng::new(13);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.gaussian()).collect();
+        let km = Codebook::from_centers(&fit_kmeans(&xs, 3, 0));
+        let lin = Codebook::from_centers(
+            &crate::quant::linear::fit_linear(&xs, 3),
+        );
+        assert!(km.mse(&xs) < lin.mse(&xs));
+    }
+
+    #[test]
+    fn pads_degenerate_data() {
+        let c = fit_kmeans(&[1.0, 1.0, 1.0], 2, 0);
+        assert_eq!(c.len(), 4);
+    }
+}

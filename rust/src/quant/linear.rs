@@ -1,0 +1,44 @@
+//! Linear (uniform min-max) quantizer — the paper's baseline [14]: equal
+//! reference steps, no adaptation to the activation distribution.
+
+/// Evenly spaced `2^bits` centers over the observed [min, max].
+pub fn fit_linear(samples: &[f64], bits: u32) -> Vec<f64> {
+    assert!((1..=7).contains(&bits), "bits in [1,7]");
+    assert!(!samples.is_empty(), "empty sample set");
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in samples {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    fit_linear_range(lo, hi, bits)
+}
+
+/// Evenly spaced centers over an explicit range.
+pub fn fit_linear_range(lo: f64, hi: f64, bits: u32) -> Vec<f64> {
+    let k = 1usize << bits;
+    let hi = if hi > lo { hi } else { lo + 1e-8 };
+    let step = (hi - lo) / (k - 1) as f64;
+    (0..k).map(|i| lo + step * i as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_min_max() {
+        let c = fit_linear(&[-2.0, 0.0, 6.0], 2);
+        let want = [-2.0, -2.0 + 8.0 / 3.0, -2.0 + 16.0 / 3.0, 6.0];
+        for (a, b) in c.iter().zip(want) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn degenerate_range() {
+        let c = fit_linear(&[3.0, 3.0], 1);
+        assert_eq!(c.len(), 2);
+        assert!(c[1] > c[0]);
+    }
+}

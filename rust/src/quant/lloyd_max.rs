@@ -1,0 +1,95 @@
+//! Lloyd-Max quantizer baseline [2]: alternating boundary/centroid
+//! optimization on a histogram density estimate (512 bins), uniform init —
+//! the classic recipe, with its characteristic tail sensitivity (empty
+//! outer cells pin centroids to the tail region).
+
+const BINS: usize = 512;
+
+/// Fit `2^bits` Lloyd-Max centroids on a histogram density estimate.
+pub fn fit_lloyd_max(samples: &[f64], bits: u32) -> Vec<f64> {
+    fit_lloyd_max_iters(samples, bits, 60)
+}
+
+pub fn fit_lloyd_max_iters(samples: &[f64], bits: u32, iters: usize) -> Vec<f64> {
+    assert!((1..=7).contains(&bits), "bits in [1,7]");
+    assert!(!samples.is_empty(), "empty sample set");
+    let k = 1usize << bits;
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in samples {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if hi <= lo {
+        return vec![lo; k];
+    }
+    // histogram approximation of the pdf
+    let w = (hi - lo) / BINS as f64;
+    let mut hist = vec![0f64; BINS];
+    for &x in samples {
+        let i = (((x - lo) / w) as usize).min(BINS - 1);
+        hist[i] += 1.0;
+    }
+    let mids: Vec<f64> = (0..BINS)
+        .map(|i| lo + w * (i as f64 + 0.5))
+        .collect();
+
+    let step = (hi - lo) / (k - 1) as f64;
+    let mut centers: Vec<f64> = (0..k).map(|i| lo + step * i as f64).collect();
+    for _ in 0..iters {
+        // boundaries at midpoints, centroid = conditional mean per cell
+        let mut sums = vec![0f64; k];
+        let mut wts = vec![0f64; k];
+        let mut cell = 0usize;
+        for (m, h) in mids.iter().zip(&hist) {
+            while cell + 1 < k
+                && *m > 0.5 * (centers[cell] + centers[cell + 1])
+            {
+                cell += 1;
+            }
+            sums[cell] += m * h;
+            wts[cell] += h;
+        }
+        let mut moved = 0f64;
+        for i in 0..k {
+            if wts[i] > 0.0 {
+                let c = sums[i] / wts[i];
+                moved = moved.max((c - centers[i]).abs());
+                centers[i] = c;
+            }
+        }
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if moved < 1e-9 {
+            break;
+        }
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::Codebook;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn beats_linear_on_nonuniform_data() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f64> = (0..20_000)
+            .map(|_| rng.gaussian().max(0.0)) // ReLU-like
+            .collect();
+        let lm = Codebook::from_centers(&fit_lloyd_max(&xs, 3));
+        let lin = Codebook::from_centers(
+            &crate::quant::linear::fit_linear(&xs, 3),
+        );
+        assert!(lm.mse(&xs) < lin.mse(&xs));
+    }
+
+    #[test]
+    fn centers_sorted_and_sized() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64).sqrt()).collect();
+        let c = fit_lloyd_max(&xs, 4);
+        assert_eq!(c.len(), 16);
+        assert!(c.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -1,0 +1,117 @@
+//! Weight quantization (Fig. 6): the paper keeps weights on a *linear*
+//! symmetric grid (ranges are fixed after training) at 2/3/4/4 bits for
+//! ResNet-18 / VGG-16 / Inception-V3 / DistilBERT.  In hardware a w-bit
+//! weight is realised by parallel bitcell connections (1/2/4 cells per
+//! magnitude bit, sign via the dual 9T paths — §3.2), so the digital grid
+//! below is exactly what the macro can store.
+
+use crate::tensor::Tensor;
+
+/// Symmetric linear weight quantization to `bits` (including sign).
+/// 2-bit -> levels {-1, 0, +1} * delta (the native ternary cell).
+pub fn quantize_weights_linear(w: &[f32], bits: u32) -> Vec<f32> {
+    assert!((2..=8).contains(&bits), "weight bits in [2,8]");
+    let absmax = w.iter().fold(0f32, |m, x| m.max(x.abs()));
+    if absmax == 0.0 {
+        return w.to_vec();
+    }
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32; // e.g. 1 for 2-bit
+    let delta = absmax / qmax;
+    w.iter()
+        .map(|&x| (x / delta).round().clamp(-qmax, qmax) * delta)
+        .collect()
+}
+
+/// Quantize a weight tensor.  2-D `[K, N]` matrices (the q-layer mats)
+/// are quantized **per output column**: each crossbar column carries its
+/// own scale in the macro (the column's reference/DAC scaling), which is
+/// essential after BN folding spreads per-channel magnitudes over orders
+/// of magnitude.  Other ranks fall back to per-tensor.
+pub fn quantize_tensor(w: &Tensor, bits: u32) -> Tensor {
+    if w.shape.len() == 2 {
+        let (k, n) = (w.shape[0], w.shape[1]);
+        let mut data = w.data.clone();
+        for col in 0..n {
+            let mut absmax = 0f32;
+            for row in 0..k {
+                absmax = absmax.max(data[row * n + col].abs());
+            }
+            if absmax == 0.0 {
+                continue;
+            }
+            let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+            let delta = absmax / qmax;
+            for row in 0..k {
+                let v = &mut data[row * n + col];
+                *v = (*v / delta).round().clamp(-qmax, qmax) * delta;
+            }
+        }
+        return Tensor {
+            shape: w.shape.clone(),
+            data,
+        };
+    }
+    Tensor {
+        shape: w.shape.clone(),
+        data: quantize_weights_linear(&w.data, bits),
+    }
+}
+
+/// Mean squared weight quantization error (diagnostics for Fig. 6).
+pub fn weight_mse(w: &[f32], bits: u32) -> f64 {
+    let q = quantize_weights_linear(w, bits);
+    w.iter()
+        .zip(&q)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / w.len().max(1) as f64
+}
+
+/// Number of bitcells per weight at a precision (§3.2 parallel scheme):
+/// magnitude bits map to 1+2+4+... parallel cells; sign is free (dual 9T).
+pub fn bitcells_per_weight(bits: u32) -> usize {
+    assert!((2..=8).contains(&bits));
+    (1usize << (bits - 1)) - 1 // e.g. 4-bit -> 7 cells (1+2+4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_bit_is_ternary() {
+        let w = [0.9f32, -0.2, 0.1, -1.0, 0.5];
+        let q = quantize_weights_linear(&w, 2);
+        let delta = 1.0;
+        for v in &q {
+            let lv = v / delta;
+            assert!(
+                (lv - lv.round()).abs() < 1e-6 && lv.abs() <= 1.0,
+                "non-ternary level {lv}"
+            );
+        }
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let w: Vec<f32> = (0..1000).map(|i| ((i * 37) % 97) as f32 / 97.0 - 0.5).collect();
+        let e2 = weight_mse(&w, 2);
+        let e4 = weight_mse(&w, 4);
+        let e8 = weight_mse(&w, 8);
+        assert!(e2 > e4 && e4 > e8, "{e2} {e4} {e8}");
+    }
+
+    #[test]
+    fn cell_counts_match_paper() {
+        // "a 4-bit weight ... parallel connections of 1, 2, and 4 identical
+        // bitcell structures (7 cells per 4-bit weight)"
+        assert_eq!(bitcells_per_weight(4), 7);
+        assert_eq!(bitcells_per_weight(2), 1);
+    }
+
+    #[test]
+    fn zero_tensor_unchanged() {
+        let q = quantize_weights_linear(&[0.0; 8], 3);
+        assert_eq!(q, vec![0.0; 8]);
+    }
+}

@@ -1,0 +1,111 @@
+//! Thin wrapper over the `xla` crate: HLO text -> compiled executable ->
+//! literal execution.  One [`Engine`] per process (the PJRT CPU client);
+//! executables are compiled once and cached by artifact path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// Process-wide PJRT client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+/// A compiled HLO module.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<Executable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(e) = self.cache.lock().unwrap().get(&path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        let arc = std::sync::Arc::new(Executable {
+            exe,
+            path: path.clone(),
+        });
+        self.cache.lock().unwrap().insert(path, arc.clone());
+        Ok(arc)
+    }
+}
+
+impl Executable {
+    /// Execute with f32/i32 literal arguments; returns the flat f32
+    /// vector of the single (1-tuple) output.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.path.display()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple result: {e}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("result to_vec: {e}"))
+    }
+}
+
+/// Build an f32 literal from a tensor.
+pub fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // scalar: reshape to rank 0
+        return lit
+            .reshape(&[])
+            .map_err(|e| anyhow::anyhow!("scalar reshape: {e}"));
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape {:?}: {e}", t.shape))
+}
+
+/// Build an i32 literal from f32 class/token values (exact for < 2^24).
+pub fn literal_i32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let ints: Vec<i32> = data.iter().map(|&v| v as i32).collect();
+    let lit = xla::Literal::vec1(&ints);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e}"))
+}
+
+/// Scalar literals for qfwd's noise/seed arguments.
+pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn literal_scalar_u32(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the HLO-text artifacts lowered by aot.py, compiles
+//! them once on the CPU PJRT client, and executes them from the request
+//! path.  Python is never involved at runtime.
+
+pub mod engine;
+pub mod model;
+
+pub use engine::{Engine, Executable};
+pub use model::ModelRuntime;

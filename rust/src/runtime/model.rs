@@ -1,0 +1,253 @@
+//! Per-model runtime: manifest + trained weights + compiled graphs.
+//!
+//! Owns the weight literals (uploaded once) and exposes the two AOT entry
+//! points: `collect` (calibration activations) and `qfwd` (the deployed
+//! quantized forward with codebooks, noise sigma and PRNG seed).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::io::manifest::Manifest;
+use crate::io::weights::load_tensors;
+use crate::quant::codebook::Codebook;
+use crate::runtime::engine::{
+    literal_f32, literal_i32, literal_scalar_f32, literal_scalar_u32,
+    Engine, Executable,
+};
+use crate::tensor::Tensor;
+
+/// Output of one `collect` batch, sliced per the manifest layout.
+pub struct CollectOut {
+    pub logits: Vec<f32>,
+    /// per-quantized-layer activation subsamples
+    pub samples: Vec<Vec<f64>>,
+    /// per-layer crossbar-tile partial-sum absmax
+    pub tile_max: Vec<f64>,
+}
+
+/// Per-layer codebook pair programmed into the qfwd graph.
+pub struct ProgrammedCodebooks {
+    /// stacked padded NL refs/centers, shape [nq, 128] each
+    pub nl_refs: Tensor,
+    pub nl_centers: Tensor,
+    /// stacked per-tile (7-bit linear) refs/centers
+    pub tile_refs: Tensor,
+    pub tile_centers: Tensor,
+}
+
+impl ProgrammedCodebooks {
+    /// Stack per-layer codebooks into the graph's [nq, 128] tensors.
+    pub fn stack(
+        nl: &[Codebook],
+        tile: &[Codebook],
+        levels: usize,
+    ) -> Result<ProgrammedCodebooks> {
+        ensure!(nl.len() == tile.len(), "nl/tile layer count mismatch");
+        let nq = nl.len();
+        let mut buf = [
+            Vec::with_capacity(nq * levels),
+            Vec::with_capacity(nq * levels),
+            Vec::with_capacity(nq * levels),
+            Vec::with_capacity(nq * levels),
+        ];
+        for i in 0..nq {
+            let (r, c) = nl[i].padded(levels);
+            buf[0].extend(r);
+            buf[1].extend(c);
+            let (r, c) = tile[i].padded(levels);
+            buf[2].extend(r);
+            buf[3].extend(c);
+        }
+        let shape = vec![nq, levels];
+        let mut it = buf.into_iter();
+        Ok(ProgrammedCodebooks {
+            nl_refs: Tensor::new(shape.clone(), it.next().unwrap())?,
+            nl_centers: Tensor::new(shape.clone(), it.next().unwrap())?,
+            tile_refs: Tensor::new(shape.clone(), it.next().unwrap())?,
+            tile_centers: Tensor::new(shape, it.next().unwrap())?,
+        })
+    }
+}
+
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    collect_exe: Arc<Executable>,
+    qfwd_exe: Arc<Executable>,
+    qfwd_b1_exe: Option<Arc<Executable>>,
+    /// weight tensors in graph argument order
+    weights: Vec<Tensor>,
+}
+
+impl ModelRuntime {
+    pub fn load(engine: &Engine, artifacts: &Path, model: &str) -> Result<ModelRuntime> {
+        let manifest =
+            Manifest::load(artifacts.join(format!("{model}_manifest.json")))?;
+        let tm = load_tensors(artifacts.join(format!("{model}_weights.bin")))?;
+        let weights = manifest
+            .weight_args
+            .iter()
+            .map(|wa| {
+                let t = tm.get(&wa.name)?.clone();
+                ensure!(
+                    t.shape == wa.shape,
+                    "weight '{}' shape {:?} != manifest {:?}",
+                    wa.name,
+                    t.shape,
+                    wa.shape
+                );
+                Ok(t)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let collect_exe = engine
+            .load(artifacts.join(&manifest.collect_hlo))
+            .context("loading collect graph")?;
+        let qfwd_exe = engine
+            .load(artifacts.join(&manifest.qfwd_hlo))
+            .context("loading qfwd graph")?;
+        let qfwd_b1_exe = manifest
+            .qfwd_b1_hlo
+            .as_ref()
+            .map(|p| engine.load(artifacts.join(p)))
+            .transpose()?;
+        Ok(ModelRuntime {
+            manifest,
+            collect_exe,
+            qfwd_exe,
+            qfwd_b1_exe,
+            weights,
+        })
+    }
+
+    fn input_literal(&self, x: &[f32], batch: usize) -> Result<xla::Literal> {
+        let mut shape = vec![batch];
+        shape.extend(&self.manifest.input_shape);
+        let n: usize = shape.iter().product();
+        ensure!(x.len() == n, "input len {} != {:?}", x.len(), shape);
+        if self.manifest.input_is_int {
+            literal_i32(x, &shape)
+        } else {
+            literal_f32(&Tensor::new(shape, x.to_vec())?)
+        }
+    }
+
+    fn weight_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.weights.iter().map(literal_f32).collect()
+    }
+
+    /// Run one calibration batch through the collect graph.
+    pub fn run_collect(&self, x: &[f32]) -> Result<CollectOut> {
+        let m = &self.manifest;
+        let mut args = vec![self.input_literal(x, m.batch)?];
+        args.extend(self.weight_literals()?);
+        let out = self.collect_exe.run(&args)?;
+        ensure!(
+            out.len() == m.collect_out_len,
+            "collect output len {} != manifest {}",
+            out.len(),
+            m.collect_out_len
+        );
+        let nq = m.nq();
+        let spl = m.samples_per_layer;
+        let logits = out[..m.collect_logits_len].to_vec();
+        let samples = (0..nq)
+            .map(|i| {
+                let s = m.collect_logits_len + i * spl;
+                out[s..s + spl].iter().map(|&v| v as f64).collect()
+            })
+            .collect();
+        let tile_max = out[m.tilemax_offset..m.tilemax_offset + nq]
+            .iter()
+            .map(|&v| v as f64)
+            .collect();
+        Ok(CollectOut {
+            logits,
+            samples,
+            tile_max,
+        })
+    }
+
+    /// Run the quantized forward on one batch; returns flat logits.
+    pub fn run_qfwd(
+        &self,
+        x: &[f32],
+        books: &ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    ) -> Result<Vec<f32>> {
+        self.run_qfwd_on(&self.qfwd_exe, self.manifest.batch, x, books, noise_std, seed)
+    }
+
+    /// Batch-1 serving entry point (resnet only).
+    pub fn run_qfwd_b1(
+        &self,
+        x: &[f32],
+        books: &ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    ) -> Result<Vec<f32>> {
+        let exe = self
+            .qfwd_b1_exe
+            .as_ref()
+            .context("model has no batch-1 qfwd graph")?
+            .clone();
+        self.run_qfwd_on(&exe, 1, x, books, noise_std, seed)
+    }
+
+    pub fn has_b1(&self) -> bool {
+        self.qfwd_b1_exe.is_some()
+    }
+
+    fn run_qfwd_on(
+        &self,
+        exe: &Executable,
+        batch: usize,
+        x: &[f32],
+        books: &ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    ) -> Result<Vec<f32>> {
+        let mut args = vec![
+            self.input_literal(x, batch)?,
+            literal_f32(&books.nl_refs)?,
+            literal_f32(&books.nl_centers)?,
+            literal_f32(&books.tile_refs)?,
+            literal_f32(&books.tile_centers)?,
+            literal_scalar_f32(noise_std),
+            literal_scalar_u32(seed),
+        ];
+        args.extend(self.weight_literals()?);
+        exe.run(&args)
+    }
+
+    /// Weight tensors in graph order (for Fig. 6 weight quantization the
+    /// caller clones + quantizes and uses [`Self::with_weights`]).
+    pub fn weights(&self) -> &[Tensor] {
+        &self.weights
+    }
+
+    /// Replace the weight set (e.g. with quantized weights).
+    pub fn with_weights(&self, weights: Vec<Tensor>) -> Result<ModelRuntime> {
+        ensure!(weights.len() == self.weights.len(), "weight count mismatch");
+        Ok(ModelRuntime {
+            manifest: self.manifest.clone(),
+            collect_exe: self.collect_exe.clone(),
+            qfwd_exe: self.qfwd_exe.clone(),
+            qfwd_b1_exe: self.qfwd_b1_exe.clone(),
+            weights,
+        })
+    }
+
+    /// Indices of the q-layer weight matrices within `weights()` (the
+    /// tensors Fig. 6 quantizes — biases and digital params stay float).
+    pub fn qweight_indices(&self) -> Vec<usize> {
+        self.manifest
+            .weight_args
+            .iter()
+            .enumerate()
+            .filter(|(_, wa)| wa.name.starts_with('q') && wa.name.ends_with("_w"))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}

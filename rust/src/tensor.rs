@@ -1,0 +1,131 @@
+//! Minimal dense f32 tensor: shape + row-major data.
+//!
+//! The heavy math runs inside the AOT-compiled XLA executables; this type
+//! only carries data between the weights container, the codebook builders
+//! and the PJRT literals, so it stays deliberately small.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} needs {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2, "row() needs a 2-D tensor");
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Leading-dimension slice: element block `i` of the first axis.
+    pub fn slice0(&self, i: usize) -> &[f32] {
+        assert!(!self.shape.is_empty());
+        let stride: usize = self.shape[1..].iter().product();
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.data.iter().map(|&x| x as f64).collect()
+    }
+
+    /// Stack equal-shape tensors along a new leading axis.
+    pub fn stack(ts: &[Tensor]) -> Result<Tensor> {
+        if ts.is_empty() {
+            bail!("stack of zero tensors");
+        }
+        let shape = &ts[0].shape;
+        let mut data = Vec::with_capacity(ts.len() * ts[0].len());
+        for t in ts {
+            if &t.shape != shape {
+                bail!("stack shape mismatch {:?} vs {:?}", t.shape, shape);
+            }
+            data.extend_from_slice(&t.data);
+        }
+        let mut out_shape = vec![ts.len()];
+        out_shape.extend_from_slice(shape);
+        Ok(Tensor {
+            shape: out_shape,
+            data,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rows_and_slices() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect())
+            .unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(t.slice0(0), &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn stack_tensors() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        let s = Tensor::stack(&[a, b]).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,100 @@
+//! Micro-benchmark harness (criterion is not vendored offline).
+//!
+//! `cargo bench` binaries use [`Bencher`] for timed hot paths and plain
+//! printing for the paper-table regeneration harnesses.  Reports min /
+//! median / mean over timed iterations after a warmup phase.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  min {:>12?}  median {:>12?}  mean {:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean
+        );
+    }
+
+    /// Throughput line given work items per iteration.
+    pub fn print_throughput(&self, items: f64, unit: &str) {
+        let per_sec = items / self.mean.as_secs_f64();
+        println!(
+            "{:<44} mean {:>12?}  {:>14.1} {unit}/s",
+            self.name, self.mean, per_sec
+        );
+    }
+}
+
+/// Run `f` repeatedly: warm up for `warmup`, then time iterations until
+/// `budget` elapses (at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, Duration::from_millis(200), Duration::from_secs(1), 10, &mut f)
+}
+
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+    f: &mut F,
+) -> BenchResult {
+    let start = Instant::now();
+    while start.elapsed() < warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let timed = Instant::now();
+    while timed.elapsed() < budget || samples.len() < min_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let iters = samples.len();
+    let min = samples[0];
+    let median = samples[iters / 2];
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        min,
+        median,
+        mean,
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs() {
+        let r = bench_cfg(
+            "noop",
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+            5,
+            &mut || {
+                black_box(1 + 1);
+            },
+        );
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.median && r.median <= r.mean * 2);
+    }
+}

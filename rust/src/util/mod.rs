@@ -1,0 +1,9 @@
+//! Dependency-free utilities: PRNG, statistics, a minimal JSON parser and
+//! a micro-benchmark harness (this build environment is offline; only the
+//! `xla` + `anyhow` crates are vendored, so rand/serde/criterion substitutes
+//! live here).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;

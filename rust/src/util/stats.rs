@@ -1,0 +1,105 @@
+//! Small statistics helpers shared by the quantizers, circuit Monte-Carlo
+//! and experiment harnesses.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// `q`-quantile (linear interpolation) of unsorted data.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// `q`-quantile of data already sorted ascending.
+pub fn quantile_sorted(v: &[f64], q: f64) -> f64 {
+    let n = v.len();
+    if n == 1 {
+        return v[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 < n {
+        v[i] * (1.0 - frac) + v[i + 1] * frac
+    } else {
+        v[n - 1]
+    }
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Skewness-free Gaussian fit: returns (mu, sigma).
+pub fn gaussian_fit(xs: &[f64]) -> (f64, f64) {
+    (mean(xs), std(xs))
+}
+
+/// Histogram over [lo, hi] with `bins` buckets; returns counts.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    if hi <= lo {
+        return h;
+    }
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x < lo || x > hi {
+            continue;
+        }
+        let i = (((x - lo) / w) as usize).min(bins - 1);
+        h[i] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_quantile() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0.1, 0.2, 0.9], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 1]);
+    }
+}

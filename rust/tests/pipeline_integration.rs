@@ -1,0 +1,189 @@
+//! Integration tests over the full runtime pipeline: PJRT engine ->
+//! artifacts -> calibration -> PTQ -> server.  These require
+//! `make artifacts` to have run (they are the rust half of the paper's
+//! software evaluation) — they self-skip when artifacts are missing so
+//! plain `cargo test` works in a fresh checkout.
+
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::coordinator::ptq::PtqEvaluator;
+use bskmq::coordinator::server::InferenceServer;
+use bskmq::data::dataset::ModelData;
+use bskmq::quant::Method;
+use bskmq::runtime::engine::Engine;
+use bskmq::runtime::model::ModelRuntime;
+
+fn artifacts_ready() -> Option<std::path::PathBuf> {
+    let dir = bskmq::artifacts_dir();
+    if dir.join("resnet_manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn collect_graph_layout_matches_manifest() {
+    let Some(dir) = artifacts_ready() else { return };
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let out = rt
+        .run_collect(ModelData::batch(&data.x_calib, 0, rt.manifest.batch))
+        .unwrap();
+    assert_eq!(out.samples.len(), rt.manifest.nq());
+    assert_eq!(out.tile_max.len(), rt.manifest.nq());
+    assert_eq!(
+        out.logits.len(),
+        rt.manifest.batch * rt.manifest.num_classes
+    );
+    // ReLU'd layers must produce non-negative samples
+    for (i, q) in rt.manifest.qlayers.iter().enumerate() {
+        if q.relu {
+            assert!(
+                out.samples[i].iter().all(|&v| v >= 0.0),
+                "layer {} marked relu has negative activations",
+                q.name
+            );
+        }
+        assert!(out.tile_max[i] > 0.0, "tile max of {} is zero", q.name);
+    }
+}
+
+#[test]
+fn calibrate_then_ptq_beats_linear_at_3_bits() {
+    let Some(dir) = artifacts_ready() else { return };
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let ev = PtqEvaluator::new(&rt);
+    let bs = Calibrator::new(&rt, Method::BsKmq, 3)
+        .calibrate(&data, 8)
+        .unwrap();
+    let lin = Calibrator::new(&rt, Method::Linear, 3)
+        .calibrate(&data, 8)
+        .unwrap();
+    let acc_bs = ev
+        .evaluate(&data, &bs.programmed, 0.0, 4, 1)
+        .unwrap()
+        .accuracy;
+    let acc_lin = ev
+        .evaluate(&data, &lin.programmed, 0.0, 4, 1)
+        .unwrap()
+        .accuracy;
+    // the paper's headline: BS-KMQ dramatically beats linear at 3 bits
+    assert!(
+        acc_bs > acc_lin + 0.10,
+        "bs_kmq {acc_bs} should beat linear {acc_lin} by >10 pts"
+    );
+    assert!(acc_bs > 0.8, "bs_kmq PTQ collapsed: {acc_bs}");
+}
+
+#[test]
+fn noise_injection_degrades_gracefully() {
+    let Some(dir) = artifacts_ready() else { return };
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let ev = PtqEvaluator::new(&rt);
+    let bs = Calibrator::new(&rt, Method::BsKmq, 4)
+        .calibrate(&data, 8)
+        .unwrap();
+    let clean = ev
+        .evaluate(&data, &bs.programmed, 0.0, 4, 9)
+        .unwrap()
+        .accuracy;
+    let noisy = ev
+        .evaluate(&data, &bs.programmed, 0.11, 4, 9)
+        .unwrap()
+        .accuracy;
+    let destroyed = ev
+        .evaluate(&data, &bs.programmed, 8.0, 4, 9)
+        .unwrap()
+        .accuracy;
+    assert!(noisy >= clean - 0.08, "TT noise too destructive: {clean} -> {noisy}");
+    assert!(
+        destroyed < clean - 0.2,
+        "extreme noise should hurt: {clean} -> {destroyed}"
+    );
+}
+
+#[test]
+fn weight_quantization_small_loss_at_2bit() {
+    let Some(dir) = artifacts_ready() else { return };
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let bs = Calibrator::new(&rt, Method::BsKmq, 3)
+        .calibrate(&data, 8)
+        .unwrap();
+    let ev = PtqEvaluator::new(&rt);
+    let base = ev
+        .evaluate(&data, &bs.programmed, 0.0, 4, 2)
+        .unwrap()
+        .accuracy;
+    // mini models have ~500x fewer params than the paper's ResNet-18, so
+    // 4-bit is their iso-accuracy point of the paper's 2-bit (sweep in
+    // EXPERIMENTS.md); lower precisions must degrade monotonically, not
+    // catastrophically at 4b.
+    for (bits, floor) in [(4u32, base - 0.05), (3, 0.45), (2, 0.15)] {
+        let wq = ev.quantize_weights(bits).unwrap();
+        // deployment order: calibrate ON the quantized-weight hardware
+        let books = Calibrator::new(&wq, Method::BsKmq, 3)
+            .calibrate(&data, 8)
+            .unwrap();
+        let evw = PtqEvaluator::new(&wq);
+        let quant = evw
+            .evaluate(&data, &books.programmed, 0.0, 4, 2)
+            .unwrap()
+            .accuracy;
+        assert!(
+            quant >= floor,
+            "{bits}-bit weights too destructive: {base} -> {quant}"
+        );
+    }
+}
+
+#[test]
+fn server_batches_and_answers() {
+    let Some(dir) = artifacts_ready() else { return };
+    let server = InferenceServer::start(
+        dir.clone(),
+        "resnet".into(),
+        Method::BsKmq,
+        3,
+        0.0,
+        4,
+    )
+    .unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let in_elems: usize = data.x_test.shape[1..].iter().product();
+    // fire a few requests and check logits shape + determinism of shape
+    for i in 0..5 {
+        let x = data.x_test.data[i * in_elems..(i + 1) * in_elems].to_vec();
+        let logits = server.infer(x).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+    let stats = server.stats.summary();
+    assert!(stats.contains("requests=5"), "{stats}");
+}
+
+#[test]
+fn all_four_models_run_qfwd() {
+    let Some(dir) = artifacts_ready() else { return };
+    let engine = Engine::cpu().unwrap();
+    for model in ["resnet", "vgg", "inception", "distilbert"] {
+        let rt = ModelRuntime::load(&engine, &dir, model).unwrap();
+        let data = ModelData::load(&dir, model).unwrap();
+        let calib = Calibrator::new(&rt, Method::BsKmq, 4)
+            .calibrate(&data, 2)
+            .unwrap();
+        let ev = PtqEvaluator::new(&rt);
+        let r = ev
+            .evaluate(&data, &calib.programmed, 0.0, 1, 3)
+            .unwrap();
+        assert_eq!(r.samples, rt.manifest.batch, "{model}");
+        assert!(r.accuracy.is_finite());
+    }
+}
