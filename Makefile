@@ -1,0 +1,16 @@
+# Convenience targets.  `make artifacts` needs the Python toolchain
+# (jax + the repo's compile package); everything else is pure Rust.
+
+.PHONY: artifacts build test bench
+
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench backends

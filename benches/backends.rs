@@ -1,0 +1,66 @@
+//! Bench: NativeBackend vs XlaBackend forward latency on the resnet-mini
+//! config — single-sample and batch-32 qfwd, plus the collect path.
+//! The xla column needs `--features xla` and the lowered HLO artifacts;
+//! the native column only needs the manifest + weights container.
+//!
+//!   cargo bench --bench backends
+//!
+//! Requires `make artifacts`.
+
+use bskmq::backend::{load, Backend, BackendKind};
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::data::dataset::ModelData;
+use bskmq::quant::Method;
+use bskmq::util::bench::{bench, black_box};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bskmq::artifacts_dir();
+    if !artifacts.join("resnet_manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+
+    let mut backends: Vec<Box<dyn Backend>> =
+        vec![load(BackendKind::Native, &artifacts, "resnet")?];
+    if cfg!(feature = "xla") {
+        match load(BackendKind::Xla, &artifacts, "resnet") {
+            Ok(b) => backends.push(b),
+            Err(e) => eprintln!("xla column skipped: {e:#}"),
+        }
+    } else {
+        eprintln!("xla column skipped (build with --features xla)");
+    }
+
+    let data = ModelData::load(&artifacts, "resnet")?;
+    for be in &backends {
+        let name = be.name();
+        println!("=== {name} backend (resnet) ===");
+        let calib =
+            Calibrator::new(be.as_ref(), Method::BsKmq, 3).calibrate(&data, 8)?;
+        let batch = be.manifest().batch;
+        let in_elems = be.manifest().input_elems();
+        let xb = &data.x_test.data[..batch * in_elems];
+        let x1 = &data.x_test.data[..in_elems];
+
+        let r = bench(&format!("{name}: qfwd batch-{batch}"), || {
+            black_box(be.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap());
+        });
+        r.print_throughput(batch as f64, "inferences");
+
+        if be.supports_batch(1) {
+            let r = bench(&format!("{name}: qfwd batch-1"), || {
+                black_box(be.run_qfwd(x1, &calib.programmed, 0.0, 7).unwrap());
+            });
+            r.print_throughput(1.0, "inferences");
+        } else {
+            println!("{name}: no batch-1 path");
+        }
+
+        let r = bench(&format!("{name}: collect batch-{batch}"), || {
+            black_box(be.run_collect(xb).unwrap());
+        });
+        r.print_throughput(batch as f64, "samples");
+        println!();
+    }
+    Ok(())
+}

@@ -1,52 +1,61 @@
-//! Bench: PJRT request-path latency — the L3 hot path (qfwd execution,
-//! batch-32 and batch-1, and the standalone crossbar MAC kernel graph).
+//! Bench: request-path latency of the selected backend — the L3 hot path
+//! (qfwd execution, batch-32 and batch-1, the calibration path, and — on
+//! xla builds — the standalone crossbar MAC kernel graph).
 //!
 //!   cargo bench --bench runtime
 //!
 //! Requires `make artifacts`.
 
+use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::data::dataset::ModelData;
-use bskmq::quant::codebook::{Codebook, MAX_LEVELS};
 use bskmq::quant::Method;
-use bskmq::runtime::engine::{literal_f32, Engine};
-use bskmq::runtime::model::ModelRuntime;
-use bskmq::tensor::Tensor;
 use bskmq::util::bench::{bench, black_box};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = bskmq::artifacts_dir();
-    let engine = Engine::cpu()?;
+    let backend = load(BackendKind::from_env(), &artifacts, "resnet")?;
 
-    println!("=== qfwd request path (resnet) ===");
-    let runtime = ModelRuntime::load(&engine, &artifacts, "resnet")?;
+    println!("=== qfwd request path (resnet, {} backend) ===", backend.name());
     let data = ModelData::load(&artifacts, "resnet")?;
-    let calib = Calibrator::new(&runtime, Method::BsKmq, 3).calibrate(&data, 8)?;
-    let batch = runtime.manifest.batch;
-    let in_elems = runtime.manifest.input_elems();
+    let calib =
+        Calibrator::new(backend.as_ref(), Method::BsKmq, 3).calibrate(&data, 8)?;
+    let batch = backend.manifest().batch;
+    let in_elems = backend.manifest().input_elems();
     let xb = &data.x_test.data[..batch * in_elems];
 
     let r = bench("qfwd batch-32", || {
-        black_box(runtime.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap());
+        black_box(backend.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap());
     });
     r.print_throughput(batch as f64, "inferences");
-    if runtime.has_b1() {
+    if backend.supports_batch(1) {
         let x1 = &data.x_test.data[..in_elems];
         let r = bench("qfwd batch-1", || {
             black_box(
-                runtime
-                    .run_qfwd_b1(x1, &calib.programmed, 0.0, 7)
-                    .unwrap(),
+                backend.run_qfwd(x1, &calib.programmed, 0.0, 7).unwrap(),
             );
         });
         r.print_throughput(1.0, "inferences");
     }
     let r = bench("collect batch-32 (calibration path)", || {
-        black_box(runtime.run_collect(xb).unwrap());
+        black_box(backend.run_collect(xb).unwrap());
     });
     r.print_throughput(batch as f64, "samples");
 
+    #[cfg(feature = "xla")]
+    mac_tile_bench(&artifacts)?;
+    Ok(())
+}
+
+/// Standalone crossbar MAC+ADC kernel graph (xla builds only).
+#[cfg(feature = "xla")]
+fn mac_tile_bench(artifacts: &std::path::Path) -> anyhow::Result<()> {
+    use bskmq::quant::codebook::{Codebook, MAX_LEVELS};
+    use bskmq::runtime::engine::{literal_f32, Engine};
+    use bskmq::tensor::Tensor;
+
     println!("\n=== standalone crossbar MAC+ADC kernel graph ===");
+    let engine = Engine::cpu()?;
     let exe = engine.load(artifacts.join("mac_tile.hlo.txt"))?;
     let (m, k, n) = (64usize, 512usize, 128usize);
     let x = Tensor::new(vec![m, k], vec![0.5; m * k])?;

@@ -1,8 +1,9 @@
 //! End-to-end driver (the repository's headline validation run): exercise
 //! every layer of the stack on the mini-ResNet workload.
 //!
-//!   1. load the AOT artifacts (L2 JAX graphs with the L1 Pallas
-//!      MAC+ADC kernel inside) on the PJRT runtime;
+//!   1. load the model artifacts on the selected execution backend (the
+//!      PJRT engine over the AOT graphs with `--features xla`, the native
+//!      integer IMC engine otherwise);
 //!   2. stream calibration batches through `collect`, run Algorithm 1
 //!      per layer in Rust, program the NL-ADC codebooks;
 //!   3. evaluate PTQ accuracy through `qfwd`: float-reference vs linear
@@ -19,6 +20,7 @@
 use std::time::Instant;
 
 use bskmq::arch::accelerator::{Accelerator, SystemConfig};
+use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::circuit::montecarlo::{default_4bit_steps, MonteCarlo, MonteCarloConfig};
 use bskmq::circuit::{Corner, MAC_UNITS_PER_CELL};
 use bskmq::coordinator::calibrate::Calibrator;
@@ -26,24 +28,22 @@ use bskmq::coordinator::ptq::PtqEvaluator;
 use bskmq::data::dataset::ModelData;
 use bskmq::nn::zoo::resnet18_cifar;
 use bskmq::quant::Method;
-use bskmq::runtime::engine::Engine;
-use bskmq::runtime::model::ModelRuntime;
 
 fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     let artifacts = bskmq::artifacts_dir();
-    let engine = Engine::cpu()?;
-    println!("[1/4] loading artifacts on PJRT ({})", engine.platform());
-    let runtime = ModelRuntime::load(&engine, &artifacts, "resnet")?;
+    let backend = load(BackendKind::from_env(), &artifacts, "resnet")?;
+    println!("[1/4] loading artifacts ({} backend)", backend.name());
     let data = ModelData::load(&artifacts, "resnet")?;
 
     println!("[2/4] calibrating (Algorithm 1, 8 batches x 32)");
     let bits = 3;
-    let bs = Calibrator::new(&runtime, Method::BsKmq, bits).calibrate(&data, 8)?;
-    let lin = Calibrator::new(&runtime, Method::Linear, bits).calibrate(&data, 8)?;
+    let be = backend.as_ref();
+    let bs = Calibrator::new(be, Method::BsKmq, bits).calibrate(&data, 8)?;
+    let lin = Calibrator::new(be, Method::Linear, bits).calibrate(&data, 8)?;
     // float reference: 7-bit linear codebooks ~ no activation quantization
-    let float_ref = Calibrator::new(&runtime, Method::Linear, 7).calibrate(&data, 8)?;
-    for (i, q) in runtime.manifest.qlayers.iter().enumerate() {
+    let float_ref = Calibrator::new(be, Method::Linear, 7).calibrate(&data, 8)?;
+    for (i, q) in be.manifest().qlayers.iter().enumerate() {
         println!(
             "    layer {:<6} range [{:.3}, {:.3}] min-step {:.4}",
             q.name,
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("[3/4] PTQ evaluation (16 batches x 32 = 512 test samples)");
-    let ev = PtqEvaluator::new(&runtime);
+    let ev = PtqEvaluator::new(be);
     let n = 16;
     let acc_float = ev.evaluate(&data, &float_ref.programmed, 0.0, n, 1)?.accuracy;
     let acc_lin = ev.evaluate(&data, &lin.programmed, 0.0, n, 1)?.accuracy;
@@ -74,8 +74,8 @@ fn main() -> anyhow::Result<()> {
     let sigma_lsb = (tt.sigma / MAC_UNITS_PER_CELL) as f32;
     let wq = ev.quantize_weights(4)?;
     let wq_books =
-        Calibrator::new(&wq, Method::BsKmq, bits).calibrate(&data, 8)?;
-    let evw = PtqEvaluator::new(&wq);
+        Calibrator::new(wq.as_ref(), Method::BsKmq, bits).calibrate(&data, 8)?;
+    let evw = PtqEvaluator::new(wq.as_ref());
     let acc_deploy = evw
         .evaluate(&data, &wq_books.programmed, sigma_lsb, n, 1)?
         .accuracy;

@@ -1,36 +1,36 @@
 //! Quickstart: calibrate a BS-KMQ codebook on one layer's activations and
 //! compare its deployed quantization error against the four baselines —
-//! the library's core loop in ~40 lines.
+//! the library's core loop in ~40 lines.  Runs on whichever execution
+//! backend is selected (`BSKMQ_BACKEND=native|xla|auto`).
 //!
 //!   cargo run --release --example quickstart
 
+use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::data::dataset::ModelData;
 use bskmq::quant::Method;
-use bskmq::runtime::engine::Engine;
-use bskmq::runtime::model::ModelRuntime;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = bskmq::artifacts_dir();
-    let engine = Engine::cpu()?;
 
-    // load the AOT-compiled mini-ResNet and its synthetic dataset
-    let runtime = ModelRuntime::load(&engine, &artifacts, "resnet")?;
+    // load the mini-ResNet on the selected backend + its synthetic dataset
+    let backend = load(BackendKind::from_env(), &artifacts, "resnet")?;
     let data = ModelData::load(&artifacts, "resnet")?;
     println!(
-        "model: resnet ({} quantized layers, batch {})",
-        runtime.manifest.nq(),
-        runtime.manifest.batch
+        "model: resnet ({} quantized layers, batch {}, {} backend)",
+        backend.manifest().nq(),
+        backend.manifest().batch,
+        backend.name()
     );
 
-    // stream calibration batches through the collect graph
-    let calib = Calibrator::new(&runtime, Method::BsKmq, 3);
+    // stream calibration batches through the collect entry point
+    let calib = Calibrator::new(backend.as_ref(), Method::BsKmq, 3);
     let samples = calib.collect_samples(&data, 8)?;
     let layer0 = &samples[0];
     println!(
         "collected {} activations from layer '{}'",
         layer0.len(),
-        runtime.manifest.qlayers[0].name
+        backend.manifest().qlayers[0].name
     );
 
     // fit every quantizer at 3 bits and compare deployed MSE

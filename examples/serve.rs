@@ -8,6 +8,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use bskmq::backend::BackendKind;
 use bskmq::coordinator::server::InferenceServer;
 use bskmq::data::dataset::ModelData;
 use bskmq::quant::Method;
@@ -15,10 +16,15 @@ use bskmq::quant::Method;
 fn main() -> anyhow::Result<()> {
     let artifacts = bskmq::artifacts_dir();
     let model = "resnet";
-    println!("starting inference server ({model}, 3-bit BS-KMQ)...");
+    let kind = BackendKind::from_env();
+    println!(
+        "starting inference server ({model}, 3-bit BS-KMQ, {} backend)...",
+        kind.name()
+    );
     let server = InferenceServer::start(
         artifacts.clone(),
         model.into(),
+        kind,
         Method::BsKmq,
         3,
         0.0,

@@ -1,0 +1,281 @@
+//! Pluggable execution backends (DESIGN.md §8).
+//!
+//! A [`Backend`] executes the two per-model entry points the coordinator
+//! needs — `collect` (float forward emitting calibration activations) and
+//! `qfwd` (the deployed quantized forward) — behind a trait object, so the
+//! calibration pipeline, the PTQ evaluator, the inference server and the
+//! experiment harnesses are all engine-agnostic:
+//!
+//! * [`native::NativeBackend`] — executes the quantized network entirely
+//!   in Rust: integer-domain MACs tiled onto the 256-row macro geometry,
+//!   partial sums digitized through the NL-ADC codebook ladder, ReLU/clamp
+//!   folded into the codebook exactly as the hardware does.  No PJRT, no
+//!   `xla` crate, no HLO artifacts on the request path.
+//! * [`xla::XlaBackend`] (feature `xla`) — adapter over the PJRT engine +
+//!   the AOT HLO artifacts lowered by `python/compile/aot.py`.
+//!
+//! Select with [`BackendKind`] (CLI `--backend`, env `BSKMQ_BACKEND`).
+
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla;
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::io::manifest::Manifest;
+use crate::quant::codebook::Codebook;
+use crate::tensor::Tensor;
+
+/// Output of one `collect` batch, sliced per the manifest layout.
+pub struct CollectOut {
+    pub logits: Vec<f32>,
+    /// per-quantized-layer activation subsamples
+    pub samples: Vec<Vec<f64>>,
+    /// per-layer crossbar-tile partial-sum absmax
+    pub tile_max: Vec<f64>,
+}
+
+/// Per-layer codebook pairs programmed into the deployed forward: the
+/// low-bit NL-ADC codebooks plus the 7-bit linear per-tile codebooks,
+/// stacked/padded to the fixed `[nq, max_levels]` shape both backends
+/// consume (the XLA graphs take them as literals, the native backend
+/// reads the rows directly).
+pub struct ProgrammedCodebooks {
+    /// stacked padded NL refs/centers, shape [nq, levels] each
+    pub nl_refs: Tensor,
+    pub nl_centers: Tensor,
+    /// stacked per-tile (7-bit linear) refs/centers
+    pub tile_refs: Tensor,
+    pub tile_centers: Tensor,
+}
+
+impl ProgrammedCodebooks {
+    /// Stack per-layer codebooks into the `[nq, levels]` tensors.
+    pub fn stack(
+        nl: &[Codebook],
+        tile: &[Codebook],
+        levels: usize,
+    ) -> Result<ProgrammedCodebooks> {
+        ensure!(nl.len() == tile.len(), "nl/tile layer count mismatch");
+        let nq = nl.len();
+        let mut buf = [
+            Vec::with_capacity(nq * levels),
+            Vec::with_capacity(nq * levels),
+            Vec::with_capacity(nq * levels),
+            Vec::with_capacity(nq * levels),
+        ];
+        for i in 0..nq {
+            let (r, c) = nl[i].padded(levels);
+            buf[0].extend(r);
+            buf[1].extend(c);
+            let (r, c) = tile[i].padded(levels);
+            buf[2].extend(r);
+            buf[3].extend(c);
+        }
+        let shape = vec![nq, levels];
+        let mut it = buf.into_iter();
+        Ok(ProgrammedCodebooks {
+            nl_refs: Tensor::new(shape.clone(), it.next().unwrap())?,
+            nl_centers: Tensor::new(shape.clone(), it.next().unwrap())?,
+            tile_refs: Tensor::new(shape.clone(), it.next().unwrap())?,
+            tile_centers: Tensor::new(shape, it.next().unwrap())?,
+        })
+    }
+
+    /// Number of levels per stacked row.
+    pub fn levels(&self) -> usize {
+        self.nl_refs.shape[1]
+    }
+
+    /// Layer `i`'s four padded rows: (nl_refs, nl_centers, tile_refs,
+    /// tile_centers).
+    pub fn layer_rows(&self, i: usize) -> (&[f32], &[f32], &[f32], &[f32]) {
+        (
+            self.nl_refs.row(i),
+            self.nl_centers.row(i),
+            self.tile_refs.row(i),
+            self.tile_centers.row(i),
+        )
+    }
+}
+
+/// An execution engine for one loaded model.
+///
+/// Implementations are created per model via [`load`]; the trait is
+/// deliberately object-safe so the coordinator layers hold a
+/// `Box<dyn Backend>` / `&dyn Backend` and never name an engine.
+pub trait Backend {
+    /// Short engine identifier ("native", "xla").
+    fn name(&self) -> &'static str;
+
+    /// The model's AOT manifest (layer table, shapes, batch).
+    fn manifest(&self) -> &Manifest;
+
+    /// Capability probe: can `run_qfwd` execute a batch of exactly `n`
+    /// samples?  The native backend accepts any `n >= 1`; the XLA backend
+    /// only the compiled batch sizes.
+    fn supports_batch(&self, n: usize) -> bool;
+
+    /// Run one calibration batch (`manifest().batch` samples) through the
+    /// float forward, recording per-layer activation subsamples and
+    /// crossbar-tile partial-sum absmax.
+    fn run_collect(&self, x: &[f32]) -> Result<CollectOut>;
+
+    /// Run the quantized forward; the batch is inferred from
+    /// `x.len() / manifest().input_elems()` and must satisfy
+    /// [`Backend::supports_batch`].  Returns flat `[batch * classes]`
+    /// logits.
+    fn run_qfwd(
+        &self,
+        x: &[f32],
+        books: &ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    ) -> Result<Vec<f32>>;
+
+    /// Weight tensors in graph argument order.
+    fn weights(&self) -> &[Tensor];
+
+    /// A backend clone with a replaced weight set (Fig. 6 weight
+    /// quantization).
+    fn with_weights(&self, weights: Vec<Tensor>) -> Result<Box<dyn Backend>>;
+
+    /// Indices of the q-layer weight matrices within `weights()` (the
+    /// tensors Fig. 6 quantizes — biases and digital params stay float).
+    fn qweight_indices(&self) -> Vec<usize> {
+        self.manifest()
+            .weight_args
+            .iter()
+            .enumerate()
+            .filter(|(_, wa)| wa.name.starts_with('q') && wa.name.ends_with("_w"))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Backend selector, settable per invocation (CLI) or process (env).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// XLA when compiled in and loadable, native otherwise.
+    Auto,
+    /// Pure-Rust integer IMC execution (always available).
+    Native,
+    /// PJRT/XLA engine over the AOT HLO artifacts (feature `xla`).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => anyhow::bail!("unknown backend '{other}' (auto|native|xla)"),
+        }
+    }
+
+    /// `BSKMQ_BACKEND` env override, defaulting to `Auto`.  An invalid
+    /// value is loudly ignored rather than silently re-routed.
+    pub fn from_env() -> BackendKind {
+        match std::env::var("BSKMQ_BACKEND") {
+            Ok(v) => match BackendKind::parse(&v) {
+                Ok(k) => k,
+                Err(e) => {
+                    eprintln!("warning: ignoring BSKMQ_BACKEND: {e}");
+                    BackendKind::Auto
+                }
+            },
+            Err(_) => BackendKind::Auto,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Load a backend for `model` from the artifacts directory.
+///
+/// `Auto` prefers the XLA engine when the crate is built with the `xla`
+/// feature and the HLO artifacts load, and falls back to the native
+/// backend otherwise (the native path only needs the manifest + weights
+/// container, not the lowered graphs).
+pub fn load(
+    kind: BackendKind,
+    artifacts: &Path,
+    model: &str,
+) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => {
+            Ok(Box::new(native::NativeBackend::load(artifacts, model)?))
+        }
+        BackendKind::Xla => {
+            #[cfg(feature = "xla")]
+            {
+                Ok(Box::new(xla::XlaBackend::load(artifacts, model)?))
+            }
+            #[cfg(not(feature = "xla"))]
+            {
+                anyhow::bail!(
+                    "backend 'xla' requested but this build has no `xla` \
+                     feature; rebuild with `--features xla` or use --backend native"
+                )
+            }
+        }
+        BackendKind::Auto => {
+            #[cfg(feature = "xla")]
+            {
+                match xla::XlaBackend::load(artifacts, model) {
+                    Ok(b) => return Ok(Box::new(b)),
+                    Err(e) => {
+                        eprintln!(
+                            "auto backend: xla unavailable ({e:#}); \
+                             falling back to native"
+                        );
+                    }
+                }
+            }
+            Ok(Box::new(native::NativeBackend::load(artifacts, model)?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn stacked_codebooks_expose_rows() {
+        let nl = vec![
+            Codebook::from_centers(&[0.0, 1.0]),
+            Codebook::from_centers(&[-1.0, 2.0]),
+        ];
+        let tile = vec![
+            Codebook::linear(-4.0, 4.0, 2),
+            Codebook::linear(-8.0, 8.0, 2),
+        ];
+        let pb = ProgrammedCodebooks::stack(&nl, &tile, 8).unwrap();
+        assert_eq!(pb.levels(), 8);
+        let (nr, nc, tr, tc) = pb.layer_rows(1);
+        assert_eq!(nr[0], -1.0);
+        assert_eq!(nc[1], 2.0);
+        assert_eq!(tr.len(), 8);
+        assert_eq!(tc[0], -8.0);
+        // padding refs are +inf, never selected
+        assert!(nr[7].is_infinite());
+    }
+}

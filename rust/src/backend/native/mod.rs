@@ -1,0 +1,175 @@
+//! Native integer IMC execution backend: runs the quantized network
+//! entirely in Rust — no PJRT client, no HLO artifacts, no Python.
+//!
+//! The forward pass is executed the way the silicon does it (Fig. 2/3):
+//! every MAC layer is im2col'd and tiled onto the 256-row macro geometry,
+//! each tile's partial sum is digitized through the programmed per-tile
+//! codebook ladder, partials accumulate digitally, and the layer output
+//! goes through the layer's NL-ADC codebook with ReLU folded in.  Only
+//! the manifest + weights container (+ data splits) are needed on disk.
+
+pub mod models;
+pub mod ops;
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::backend::{Backend, CollectOut, ProgrammedCodebooks};
+use crate::io::manifest::Manifest;
+use crate::io::weights::load_tensors;
+use crate::tensor::Tensor;
+
+pub use models::ModelKind;
+
+pub struct NativeBackend {
+    manifest: Manifest,
+    /// weight tensors in graph argument order
+    weights: Vec<Tensor>,
+    kind: ModelKind,
+}
+
+impl NativeBackend {
+    /// Load manifest + weights container from the artifacts directory
+    /// (the HLO graphs are not touched).
+    pub fn load(artifacts: &Path, model: &str) -> Result<NativeBackend> {
+        let manifest = Manifest::load(
+            artifacts.join(format!("{model}_manifest.json")),
+        )?;
+        let tm = load_tensors(artifacts.join(format!("{model}_weights.bin")))
+            .context("loading weights container")?;
+        let weights = manifest
+            .weight_args
+            .iter()
+            .map(|wa| {
+                let t = tm.get(&wa.name)?.clone();
+                ensure!(
+                    t.shape == wa.shape,
+                    "weight '{}' shape {:?} != manifest {:?}",
+                    wa.name,
+                    t.shape,
+                    wa.shape
+                );
+                Ok(t)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::from_parts(manifest, weights)
+    }
+
+    /// Build from an in-memory manifest + weight set (tests, weight
+    /// quantization clones).
+    pub fn from_parts(
+        manifest: Manifest,
+        weights: Vec<Tensor>,
+    ) -> Result<NativeBackend> {
+        let kind = ModelKind::from_name(&manifest.model)?;
+        kind.check_manifest(&manifest)?;
+        ensure!(
+            weights.len() == manifest.weight_args.len(),
+            "weight count {} != manifest {}",
+            weights.len(),
+            manifest.weight_args.len()
+        );
+        ensure!(
+            weights.len() >= 2 * manifest.nq(),
+            "weight table too short for {} q-layers",
+            manifest.nq()
+        );
+        Ok(NativeBackend {
+            manifest,
+            weights,
+            kind,
+        })
+    }
+
+    fn check_books(&self, books: &ProgrammedCodebooks) -> Result<()> {
+        ensure!(
+            books.nl_refs.shape.len() == 2
+                && books.nl_refs.shape[0] == self.manifest.nq(),
+            "codebook stack shape {:?} != [{}, levels]",
+            books.nl_refs.shape,
+            self.manifest.nq()
+        );
+        Ok(())
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn supports_batch(&self, n: usize) -> bool {
+        n >= 1
+    }
+
+    fn run_collect(&self, x: &[f32]) -> Result<CollectOut> {
+        let m = &self.manifest;
+        ensure!(
+            x.len() == m.batch * m.input_elems(),
+            "collect input len {} != batch {} x {:?}",
+            x.len(),
+            m.batch,
+            m.input_shape
+        );
+        let mut ctx = models::ForwardCtx::new(
+            m,
+            &self.weights,
+            models::Mode::Collect {
+                samples: Vec::with_capacity(m.nq()),
+                tile_max: Vec::with_capacity(m.nq()),
+            },
+        );
+        let logits = models::forward(self.kind, &mut ctx, x, m.batch)?;
+        match ctx.mode {
+            models::Mode::Collect { samples, tile_max } => Ok(CollectOut {
+                logits: logits.data,
+                samples,
+                tile_max,
+            }),
+            _ => unreachable!("collect mode preserved across forward"),
+        }
+    }
+
+    fn run_qfwd(
+        &self,
+        x: &[f32],
+        books: &ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        self.check_books(books)?;
+        let elems = m.input_elems();
+        ensure!(
+            !x.is_empty() && x.len() % elems == 0,
+            "qfwd input len {} not a multiple of {:?}",
+            x.len(),
+            m.input_shape
+        );
+        let batch = x.len() / elems;
+        let mut ctx = models::ForwardCtx::new(
+            m,
+            &self.weights,
+            models::Mode::Quant {
+                books,
+                noise_std,
+                seed,
+            },
+        );
+        let logits = models::forward(self.kind, &mut ctx, x, batch)?;
+        Ok(logits.data)
+    }
+
+    fn weights(&self) -> &[Tensor] {
+        &self.weights
+    }
+
+    fn with_weights(&self, weights: Vec<Tensor>) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(Self::from_parts(self.manifest.clone(), weights)?))
+    }
+}

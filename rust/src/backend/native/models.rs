@@ -1,0 +1,344 @@
+//! Native forward passes for the four mini models — the Rust counterparts
+//! of `python/compile/models/*` `forward_infer`, consuming quantized MAC
+//! layers in the exact manifest order so the same calibrated codebooks
+//! drive either backend.
+//!
+//! Each MAC layer runs through [`ForwardCtx::qmatmul`]: in collect mode a
+//! float matmul that records the activation subsample + crossbar-tile
+//! absmax; in quant mode the tiled integer MAC with per-tile ADC
+//! digitization and the layer's NL-ADC output codebook (ReLU folded in
+//! before the conversion, exactly as the hardware's non-negative
+//! codebooks realize it).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::ops::{
+    add_bias_relu, add_mat, add_relu, attention, avg_pool3_same, collect_subsample,
+    concat_c, global_avg_pool, im2col, layer_norm, max_pool2, mean_over_seq,
+    min_ref_step, nl_convert, tiled_mac, Feat, Mat, QuantSpec,
+};
+use crate::backend::ProgrammedCodebooks;
+use crate::io::manifest::Manifest;
+use crate::macro_model::ROWS;
+use crate::tensor::Tensor;
+
+/// Transformer head count of the mini DistilBERT (export-side constant).
+const BERT_HEADS: usize = 4;
+
+/// The model topologies the native backend can execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Resnet,
+    Vgg,
+    Inception,
+    Distilbert,
+}
+
+impl ModelKind {
+    pub fn from_name(name: &str) -> Result<ModelKind> {
+        match name {
+            "resnet" => Ok(ModelKind::Resnet),
+            "vgg" => Ok(ModelKind::Vgg),
+            "inception" => Ok(ModelKind::Inception),
+            "distilbert" => Ok(ModelKind::Distilbert),
+            other => bail!(
+                "native backend has no forward for model '{other}' \
+                 (supported: resnet, vgg, inception, distilbert)"
+            ),
+        }
+    }
+
+    /// Reject manifests whose q-layer count cannot match this topology —
+    /// the forward consumes a fixed layer sequence, and an undersized
+    /// table would otherwise panic mid-inference instead of erroring at
+    /// load time.
+    pub fn check_manifest(&self, manifest: &Manifest) -> Result<()> {
+        let nq = manifest.nq();
+        let ok = match self {
+            ModelKind::Resnet | ModelKind::Vgg => nq == 7,
+            ModelKind::Inception => nq == 10,
+            // per encoder layer: q, k, v, o, ff1, ff2; plus the classifier
+            ModelKind::Distilbert => nq >= 7 && (nq - 1) % 6 == 0,
+        };
+        ensure!(
+            ok,
+            "manifest declares {nq} q-layers, incompatible with the \
+             {self:?} topology"
+        );
+        Ok(())
+    }
+}
+
+/// Execution mode of one forward pass.
+pub(crate) enum Mode<'a> {
+    /// Float forward recording calibration statistics.
+    Collect {
+        samples: Vec<Vec<f64>>,
+        tile_max: Vec<f64>,
+    },
+    /// Deployed quantized forward with programmed codebooks.
+    Quant {
+        books: &'a ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    },
+}
+
+/// Per-forward state: weight table + running quantized-layer index.
+pub(crate) struct ForwardCtx<'a> {
+    pub manifest: &'a Manifest,
+    pub weights: &'a [Tensor],
+    pub mode: Mode<'a>,
+    qi: usize,
+}
+
+fn layer_seed(seed: u32, wi: usize, salt: u64) -> u64 {
+    (seed as u64)
+        .wrapping_mul(0xA076_1D64_78BD_642F)
+        .wrapping_add((wi as u64).wrapping_mul(0xE703_7ED1_A0B4_28DB))
+        ^ salt
+}
+
+impl<'a> ForwardCtx<'a> {
+    pub fn new(
+        manifest: &'a Manifest,
+        weights: &'a [Tensor],
+        mode: Mode<'a>,
+    ) -> ForwardCtx<'a> {
+        ForwardCtx {
+            manifest,
+            weights,
+            mode,
+            qi: 0,
+        }
+    }
+
+    /// Digital (non-MAC) parameter by manifest argument name.
+    fn digital(&self, name: &str) -> Result<&'a Tensor> {
+        let idx = self
+            .manifest
+            .weight_args
+            .iter()
+            .position(|wa| wa.name == name)
+            .with_context(|| format!("digital param '{name}' not in manifest"))?;
+        Ok(&self.weights[idx])
+    }
+
+    /// One quantized MAC layer on 2-D operands (consumes the next qlayer).
+    fn qmatmul(&mut self, x: &Mat, relu: bool) -> Mat {
+        let wi = self.qi;
+        self.qi += 1;
+        let w = &self.weights[2 * wi];
+        let bias = &self.weights[2 * wi + 1];
+        debug_assert_eq!(
+            self.manifest.qlayers[wi].relu, relu,
+            "topology relu flag out of sync with manifest at layer {wi}"
+        );
+        match &mut self.mode {
+            Mode::Collect { samples, tile_max } => {
+                let (mut y, absmax) = tiled_mac(x, w, ROWS, None);
+                add_bias_relu(&mut y, &bias.data, relu);
+                tile_max.push(absmax);
+                samples.push(collect_subsample(
+                    &y.data,
+                    self.manifest.samples_per_layer,
+                ));
+                y
+            }
+            Mode::Quant {
+                books,
+                noise_std,
+                seed,
+            } => {
+                let (n_refs, n_centers, t_refs, t_centers) = books.layer_rows(wi);
+                let spec = QuantSpec {
+                    refs: t_refs,
+                    centers: t_centers,
+                    sigma: *noise_std * min_ref_step(t_refs),
+                    seed: layer_seed(*seed, wi, 0),
+                };
+                let (mut y, _) = tiled_mac(x, w, ROWS, Some(&spec));
+                add_bias_relu(&mut y, &bias.data, relu);
+                nl_convert(
+                    &mut y,
+                    n_refs,
+                    n_centers,
+                    *noise_std * min_ref_step(n_refs),
+                    layer_seed(*seed, wi, 0x5851_F42D_4C95_7F2D),
+                );
+                y
+            }
+        }
+    }
+
+    /// Quantized convolution = im2col + [`Self::qmatmul`] (the IMC mapping).
+    fn qconv(&mut self, x: &Feat, k: usize, stride: usize, relu: bool) -> Feat {
+        let (x2d, oh, ow) = im2col(x, k, k, stride, true);
+        let y = self.qmatmul(&x2d, relu);
+        Feat::from_mat(y, x.b, oh, ow)
+    }
+}
+
+/// Run one forward pass; returns `[batch, num_classes]` logits.
+pub(crate) fn forward(
+    kind: ModelKind,
+    ctx: &mut ForwardCtx,
+    x: &[f32],
+    batch: usize,
+) -> Result<Mat> {
+    let logits = if kind == ModelKind::Distilbert {
+        distilbert(ctx, x, batch)?
+    } else {
+        let feat = image_input(ctx.manifest, x, batch)?;
+        match kind {
+            ModelKind::Resnet => resnet(ctx, feat),
+            ModelKind::Vgg => vgg(ctx, feat),
+            ModelKind::Inception => inception(ctx, feat),
+            ModelKind::Distilbert => unreachable!(),
+        }
+    };
+    ensure!(
+        ctx.qi == ctx.manifest.nq(),
+        "forward consumed {} q-layers, manifest has {}",
+        ctx.qi,
+        ctx.manifest.nq()
+    );
+    ensure!(
+        logits.cols == ctx.manifest.num_classes,
+        "logit width {} != num_classes {}",
+        logits.cols,
+        ctx.manifest.num_classes
+    );
+    Ok(logits)
+}
+
+fn image_input(manifest: &Manifest, x: &[f32], batch: usize) -> Result<Feat> {
+    ensure!(
+        manifest.input_shape.len() == 3,
+        "image model expects [h, w, c] input shape, got {:?}",
+        manifest.input_shape
+    );
+    let (h, w, c) = (
+        manifest.input_shape[0],
+        manifest.input_shape[1],
+        manifest.input_shape[2],
+    );
+    ensure!(
+        x.len() == batch * h * w * c,
+        "input len {} != batch {batch} x {:?}",
+        x.len(),
+        manifest.input_shape
+    );
+    Ok(Feat::new(batch, h, w, c, x.to_vec()))
+}
+
+/// Mini ResNet: stem, one identity block, one strided projection block,
+/// GAP, linear classifier.  Residual adds + ReLUs are digital.
+fn resnet(ctx: &mut ForwardCtx, x: Feat) -> Mat {
+    let y = ctx.qconv(&x, 3, 1, true); // conv0
+    let h = ctx.qconv(&y, 3, 1, true); // b1c1
+    let h = ctx.qconv(&h, 3, 1, false); // b1c2
+    let y = add_relu(&y, &h);
+    let h = ctx.qconv(&y, 3, 2, true); // b2c1
+    let h = ctx.qconv(&h, 3, 1, false); // b2c2
+    let sc = ctx.qconv(&y, 1, 2, false); // b2sc
+    let y = add_relu(&h, &sc);
+    let p = global_avg_pool(&y);
+    ctx.qmatmul(&p, false) // fc
+}
+
+/// Mini VGG: five Conv-ReLU layers with max-pool downsampling after
+/// conv2/conv4/conv5, then the two-layer classifier head.
+fn vgg(ctx: &mut ForwardCtx, x: Feat) -> Mat {
+    const POOL_AFTER: [bool; 5] = [false, true, false, true, true];
+    let mut y = x;
+    for pool in POOL_AFTER {
+        y = ctx.qconv(&y, 3, 1, true);
+        if pool {
+            y = max_pool2(&y);
+        }
+    }
+    let m = y.flatten();
+    let m = ctx.qmatmul(&m, true); // fc1
+    ctx.qmatmul(&m, false) // fc2
+}
+
+/// Mini Inception: stem + max-pool, two blocks of three parallel branches
+/// (1x1, 1x1->3x3, avg-pool->1x1) concatenated along channels, GAP, fc.
+fn inception(ctx: &mut ForwardCtx, x: Feat) -> Mat {
+    let mut y = max_pool2(&ctx.qconv(&x, 3, 1, true)); // stem
+    for _ in 0..2 {
+        let br0 = ctx.qconv(&y, 1, 1, true); // b0
+        let t = ctx.qconv(&y, 1, 1, true); // b1a
+        let br1 = ctx.qconv(&t, 3, 1, true); // b1b
+        let pooled = avg_pool3_same(&y);
+        let br2 = ctx.qconv(&pooled, 1, 1, true); // pp
+        y = concat_c(&[&br0, &br1, &br2]);
+    }
+    let p = global_avg_pool(&y);
+    ctx.qmatmul(&p, false) // fc
+}
+
+/// Mini DistilBERT: embedding + position add, N post-LN encoder layers
+/// (quantized Q/K/V/O/FF projections, digital attention + layernorm),
+/// mean pooling, classifier.
+fn distilbert(ctx: &mut ForwardCtx, x: &[f32], batch: usize) -> Result<Mat> {
+    let manifest = ctx.manifest;
+    ensure!(
+        manifest.input_shape.len() == 1,
+        "sequence model expects [t] input shape, got {:?}",
+        manifest.input_shape
+    );
+    let t = manifest.input_shape[0];
+    ensure!(
+        x.len() == batch * t,
+        "input len {} != batch {batch} x seq {t}",
+        x.len()
+    );
+    let d = manifest.qlayers[0].n;
+    let embed = ctx.digital("d_embed")?;
+    let pos = ctx.digital("d_pos")?;
+    ensure!(
+        embed.shape.len() == 2 && embed.shape[1] == d,
+        "embedding shape {:?} inconsistent with d_model {d}",
+        embed.shape
+    );
+    ensure!(
+        pos.shape == vec![t, d],
+        "positional shape {:?} != [{t}, {d}]",
+        pos.shape
+    );
+    let vocab = embed.shape[0];
+
+    let mut h = Mat::zeros(batch * t, d);
+    for bi in 0..batch {
+        for ti in 0..t {
+            let tok = (x[bi * t + ti].max(0.0) as usize).min(vocab - 1);
+            let erow = &embed.data[tok * d..(tok + 1) * d];
+            let prow = &pos.data[ti * d..(ti + 1) * d];
+            let orow = &mut h.data[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+            for dd in 0..d {
+                orow[dd] = erow[dd] + prow[dd];
+            }
+        }
+    }
+
+    let n_layers = (manifest.nq() - 1) / 6;
+    for l in 0..n_layers {
+        let q = ctx.qmatmul(&h, false);
+        let k = ctx.qmatmul(&h, false);
+        let v = ctx.qmatmul(&h, false);
+        let a = attention(&q, &k, &v, batch, t, BERT_HEADS);
+        let o = ctx.qmatmul(&a, false);
+        let ln1g = ctx.digital(&format!("d_l{l}_ln1_gamma"))?;
+        let ln1b = ctx.digital(&format!("d_l{l}_ln1_beta"))?;
+        h = layer_norm(&add_mat(&h, &o), &ln1g.data, &ln1b.data);
+        let f = ctx.qmatmul(&h, true); // ff1: GeLU -> ReLU substitution
+        let f = ctx.qmatmul(&f, false); // ff2
+        let ln2g = ctx.digital(&format!("d_l{l}_ln2_gamma"))?;
+        let ln2b = ctx.digital(&format!("d_l{l}_ln2_beta"))?;
+        h = layer_norm(&add_mat(&h, &f), &ln2g.data, &ln2b.data);
+    }
+    let pooled = mean_over_seq(&h, batch, t);
+    Ok(ctx.qmatmul(&pooled, false)) // cls
+}

@@ -1,0 +1,676 @@
+//! Numeric kernels of the native IMC backend: im2col, the 256-row-tiled
+//! integer MAC with per-tile NL-ADC digitization, pooling, layernorm and
+//! attention — pure Rust, data-parallel across output rows via scoped
+//! threads (this build environment vendors no rayon; the row partition is
+//! deterministic and noise RNG is seeded per row, so results do not
+//! depend on the thread count).
+
+use std::sync::Mutex;
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Dense row-major 2-D activation matrix.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len(), "Mat shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// NHWC feature map.
+#[derive(Clone, Debug)]
+pub struct Feat {
+    pub b: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Feat {
+    pub fn new(b: usize, h: usize, w: usize, c: usize, data: Vec<f32>) -> Feat {
+        assert_eq!(b * h * w * c, data.len(), "Feat shape/data mismatch");
+        Feat { b, h, w, c, data }
+    }
+
+    /// Reinterpret a `[b*oh*ow, c]` matmul output as NHWC.
+    pub fn from_mat(m: Mat, b: usize, h: usize, w: usize) -> Feat {
+        assert_eq!(m.rows, b * h * w, "Feat::from_mat row mismatch");
+        Feat::new(b, h, w, m.cols, m.data)
+    }
+
+    /// `[b, h*w*c]` view (row-major NHWC flatten, the VGG head layout).
+    pub fn flatten(self) -> Mat {
+        let cols = self.h * self.w * self.c;
+        Mat::new(self.b, cols, self.data)
+    }
+}
+
+/// Worker thread count (env `BSKMQ_THREADS` overrides).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("BSKMQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(first_row, block)` over row blocks of `out` on scoped threads.
+pub fn par_row_blocks<F>(rows: usize, cols: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), rows * cols, "par_row_blocks shape mismatch");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let threads = num_threads().min(rows);
+    if threads <= 1 {
+        f(0, out);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (ti, block) in out.chunks_mut(chunk_rows * cols).enumerate() {
+            s.spawn(move || f(ti * chunk_rows, block));
+        }
+    });
+}
+
+/// Floor-ADC conversion against a padded reference ladder: the index of
+/// the largest reference `<= v` (padding slots are `+inf`, never taken),
+/// mapped to its digital center — `ref.ref_nl_quantize` semantics.
+#[inline]
+pub fn floor_adc(refs: &[f32], centers: &[f32], v: f32) -> f32 {
+    let cnt = refs.partition_point(|&r| r <= v);
+    centers[cnt.saturating_sub(1).min(centers.len() - 1)]
+}
+
+/// Smallest positive finite reference step — the ADC LSB (noise unit).
+pub fn min_ref_step(refs: &[f32]) -> f32 {
+    let mut m = f32::INFINITY;
+    for w in refs.windows(2) {
+        let d = w[1] - w[0];
+        if d.is_finite() && d > 0.0 && d < m {
+            m = d;
+        }
+    }
+    if m.is_finite() {
+        m
+    } else {
+        1.0
+    }
+}
+
+/// Per-tile conversion programmed into the MAC loop (quant mode).
+pub struct QuantSpec<'a> {
+    pub refs: &'a [f32],
+    pub centers: &'a [f32],
+    /// pre-scaled conversion noise sigma in MAC units (noise_std * LSB)
+    pub sigma: f32,
+    /// per-layer noise seed (row index is mixed in per output row)
+    pub seed: u64,
+}
+
+const ROW_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The crossbar dataflow of Fig. 2: the contraction dimension is split
+/// into `tile_k`-row tiles (one analog accumulation each); every tile's
+/// partial sum is digitized — through the per-tile codebook in quant mode
+/// — and digitally accumulated into the output block.
+///
+/// Returns `(acc [m, n], absmax)` where `absmax` is the largest |partial|
+/// observed across tiles (float mode only; 0.0 in quant mode).
+pub fn tiled_mac(
+    x: &Mat,
+    w: &Tensor,
+    tile_k: usize,
+    quant: Option<&QuantSpec>,
+) -> (Mat, f64) {
+    assert_eq!(w.shape.len(), 2, "weight matrix must be 2-D");
+    let (k, n) = (w.shape[0], w.shape[1]);
+    assert_eq!(x.cols, k, "contraction mismatch {} vs {}", x.cols, k);
+    let m = x.rows;
+    let kt = k.div_ceil(tile_k).max(1);
+    let mut out = vec![0f32; m * n];
+    let absmax = Mutex::new(0f64);
+    par_row_blocks(m, n, &mut out, |row0, block| {
+        let mut scratch = vec![0f32; n];
+        let mut local_max = 0f64;
+        for (ri, orow) in block.chunks_mut(n).enumerate() {
+            let r = row0 + ri;
+            let xrow = &x.data[r * k..(r + 1) * k];
+            let mut rng = quant.map(|q| {
+                Rng::new(q.seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX))
+            });
+            for t in 0..kt {
+                let lo = t * tile_k;
+                let hi = ((t + 1) * tile_k).min(k);
+                scratch.fill(0.0);
+                for (kk, &a) in xrow.iter().enumerate().take(hi).skip(lo) {
+                    if a != 0.0 {
+                        let wrow = &w.data[kk * n..kk * n + n];
+                        for (sj, &wj) in scratch.iter_mut().zip(wrow) {
+                            *sj += a * wj;
+                        }
+                    }
+                }
+                match quant {
+                    None => {
+                        for (oj, &v) in orow.iter_mut().zip(scratch.iter()) {
+                            local_max = local_max.max(v.abs() as f64);
+                            *oj += v;
+                        }
+                    }
+                    Some(q) => {
+                        let rng = rng.as_mut().unwrap();
+                        for (oj, &v) in orow.iter_mut().zip(scratch.iter()) {
+                            let mut p = v;
+                            if q.sigma != 0.0 {
+                                p += q.sigma * rng.gaussian() as f32;
+                            }
+                            *oj += floor_adc(q.refs, q.centers, p);
+                        }
+                    }
+                }
+            }
+        }
+        if quant.is_none() {
+            let mut g = absmax.lock().unwrap();
+            if local_max > *g {
+                *g = local_max;
+            }
+        }
+    });
+    (Mat::new(m, n, out), absmax.into_inner().unwrap())
+}
+
+/// `y += bias` (broadcast over rows), then optional ReLU.
+pub fn add_bias_relu(y: &mut Mat, bias: &[f32], relu: bool) {
+    assert_eq!(bias.len(), y.cols, "bias length mismatch");
+    for row in y.data.chunks_mut(y.cols) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+            if relu && *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Layer-output NL-ADC conversion (optionally with conversion noise).
+pub fn nl_convert(y: &mut Mat, refs: &[f32], centers: &[f32], sigma: f32, seed: u64) {
+    let cols = y.cols;
+    par_row_blocks(y.rows, cols, &mut y.data, |row0, block| {
+        for (ri, row) in block.chunks_mut(cols).enumerate() {
+            let r = row0 + ri;
+            let mut rng =
+                Rng::new(seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX).rotate_left(17));
+            for v in row.iter_mut() {
+                let mut p = *v;
+                if sigma != 0.0 {
+                    p += sigma * rng.gaussian() as f32;
+                }
+                *v = floor_adc(refs, centers, p);
+            }
+        }
+    });
+}
+
+/// im2col with `(kh, kw, cin)` feature ordering — matches the export-time
+/// `w.reshape(kh*kw*cin, cout)` of HWIO conv weights.  `same` pads like
+/// XLA SAME (low pad = total/2); otherwise VALID.
+pub fn im2col(
+    x: &Feat,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    same: bool,
+) -> (Mat, usize, usize) {
+    let (b, h, w, c) = (x.b, x.h, x.w, x.c);
+    let (oh, ow, pt, pl) = if same {
+        let oh = h.div_ceil(stride);
+        let ow = w.div_ceil(stride);
+        let ph = ((oh - 1) * stride + kh).saturating_sub(h);
+        let pw = ((ow - 1) * stride + kw).saturating_sub(w);
+        (oh, ow, ph / 2, pw / 2)
+    } else {
+        ((h - kh) / stride + 1, (w - kw) / stride + 1, 0, 0)
+    };
+    let cols = kh * kw * c;
+    let mut data = vec![0f32; b * oh * ow * cols];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((bi * oh + oy) * ow + ox) * cols;
+                for i in 0..kh {
+                    let iy = (oy * stride + i) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // zero padding rows add nothing
+                    }
+                    for j in 0..kw {
+                        let ix = (ox * stride + j) as isize - pl as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let dst = row + (i * kw + j) * c;
+                        data[dst..dst + c]
+                            .copy_from_slice(&x.data[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (Mat::new(b * oh * ow, cols, data), oh, ow)
+}
+
+/// 2x2 stride-2 VALID max pool.
+pub fn max_pool2(x: &Feat) -> Feat {
+    let (oh, ow) = (x.h / 2, x.w / 2);
+    let mut data = vec![0f32; x.b * oh * ow * x.c];
+    for bi in 0..x.b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..x.c {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let src = ((bi * x.h + oy * 2 + dy) * x.w
+                                + ox * 2
+                                + dx)
+                                * x.c
+                                + ci;
+                            m = m.max(x.data[src]);
+                        }
+                    }
+                    data[((bi * oh + oy) * ow + ox) * x.c + ci] = m;
+                }
+            }
+        }
+    }
+    Feat::new(x.b, oh, ow, x.c, data)
+}
+
+/// 3x3 stride-1 SAME average pool with a fixed /9 divisor (the inception
+/// pool branch: `reduce_window` sum over SAME padding, then / 9).
+pub fn avg_pool3_same(x: &Feat) -> Feat {
+    let mut data = vec![0f32; x.data.len()];
+    for bi in 0..x.b {
+        for oy in 0..x.h {
+            for ox in 0..x.w {
+                for ci in 0..x.c {
+                    let mut s = 0f32;
+                    for dy in -1isize..=1 {
+                        let iy = oy as isize + dy;
+                        if iy < 0 || iy >= x.h as isize {
+                            continue;
+                        }
+                        for dx in -1isize..=1 {
+                            let ix = ox as isize + dx;
+                            if ix < 0 || ix >= x.w as isize {
+                                continue;
+                            }
+                            s += x.data[((bi * x.h + iy as usize) * x.w
+                                + ix as usize)
+                                * x.c
+                                + ci];
+                        }
+                    }
+                    data[((bi * x.h + oy) * x.w + ox) * x.c + ci] = s / 9.0;
+                }
+            }
+        }
+    }
+    Feat::new(x.b, x.h, x.w, x.c, data)
+}
+
+/// Global average pool to `[b, c]`.
+pub fn global_avg_pool(x: &Feat) -> Mat {
+    let hw = (x.h * x.w) as f32;
+    let mut data = vec![0f32; x.b * x.c];
+    for bi in 0..x.b {
+        let orow = bi * x.c;
+        for p in 0..x.h * x.w {
+            let src = (bi * x.h * x.w + p) * x.c;
+            for ci in 0..x.c {
+                data[orow + ci] += x.data[src + ci];
+            }
+        }
+        for ci in 0..x.c {
+            data[orow + ci] /= hw;
+        }
+    }
+    Mat::new(x.b, x.c, data)
+}
+
+/// Digital residual connection: `relu(a + b)` elementwise.
+pub fn add_relu(a: &Feat, b: &Feat) -> Feat {
+    assert_eq!(a.data.len(), b.data.len(), "residual shape mismatch");
+    let data = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| (x + y).max(0.0))
+        .collect();
+    Feat::new(a.b, a.h, a.w, a.c, data)
+}
+
+/// Channel concatenation of equal-spatial feature maps.
+pub fn concat_c(parts: &[&Feat]) -> Feat {
+    let (b, h, w) = (parts[0].b, parts[0].h, parts[0].w);
+    let c: usize = parts.iter().map(|p| p.c).sum();
+    let mut data = vec![0f32; b * h * w * c];
+    for p_idx in 0..b * h * w {
+        let mut off = p_idx * c;
+        for p in parts {
+            assert_eq!((p.b, p.h, p.w), (b, h, w), "concat spatial mismatch");
+            let src = p_idx * p.c;
+            data[off..off + p.c].copy_from_slice(&p.data[src..src + p.c]);
+            off += p.c;
+        }
+    }
+    Feat::new(b, h, w, c, data)
+}
+
+/// Row-wise layer norm (eps matches the export-side 1e-6).
+pub fn layer_norm(y: &Mat, gamma: &[f32], beta: &[f32]) -> Mat {
+    let n = y.cols;
+    assert_eq!(gamma.len(), n, "layernorm gamma mismatch");
+    let mut data = vec![0f32; y.data.len()];
+    for (orow, row) in data.chunks_mut(n).zip(y.data.chunks(n)) {
+        let mu = row.iter().sum::<f32>() / n as f32;
+        let var =
+            row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        for j in 0..n {
+            orow[j] = (row[j] - mu) * inv * gamma[j] + beta[j];
+        }
+    }
+    Mat::new(y.rows, n, data)
+}
+
+/// Elementwise sum of equal-shape matrices.
+pub fn add_mat(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.data.len(), b.data.len(), "add shape mismatch");
+    Mat::new(
+        a.rows,
+        a.cols,
+        a.data.iter().zip(&b.data).map(|(&x, &y)| x + y).collect(),
+    )
+}
+
+fn softmax_inplace(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut s = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+        s += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= s;
+    }
+}
+
+/// Digital-domain multi-head attention over quantized Q/K/V `[b*t, d]`
+/// row matrices (the transformer's non-MAC stage).
+pub fn attention(q: &Mat, k: &Mat, v: &Mat, b: usize, t: usize, heads: usize) -> Mat {
+    let d = q.cols;
+    assert_eq!(d % heads, 0, "d_model not divisible by heads");
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0f32; b * t * d];
+    let mut scores = vec![0f32; t * t];
+    for bi in 0..b {
+        for h in 0..heads {
+            let off = h * hd;
+            for t1 in 0..t {
+                let qrow = &q.data[(bi * t + t1) * d + off..][..hd];
+                for t2 in 0..t {
+                    let krow = &k.data[(bi * t + t2) * d + off..][..hd];
+                    let mut s = 0f32;
+                    for dd in 0..hd {
+                        s += qrow[dd] * krow[dd];
+                    }
+                    scores[t1 * t + t2] = s * scale;
+                }
+            }
+            for t1 in 0..t {
+                softmax_inplace(&mut scores[t1 * t..(t1 + 1) * t]);
+            }
+            for t1 in 0..t {
+                let orow = &mut out[(bi * t + t1) * d + off..][..hd];
+                for t2 in 0..t {
+                    let a = scores[t1 * t + t2];
+                    let vrow = &v.data[(bi * t + t2) * d + off..][..hd];
+                    for dd in 0..hd {
+                        orow[dd] += a * vrow[dd];
+                    }
+                }
+            }
+        }
+    }
+    Mat::new(b * t, d, out)
+}
+
+/// Mean over the sequence axis: `[b*t, d]` -> `[b, d]`.
+pub fn mean_over_seq(h: &Mat, b: usize, t: usize) -> Mat {
+    let d = h.cols;
+    let mut data = vec![0f32; b * d];
+    for bi in 0..b {
+        for ti in 0..t {
+            let src = (bi * t + ti) * d;
+            for dd in 0..d {
+                data[bi * d + dd] += h.data[src + dd];
+            }
+        }
+        for dd in 0..d {
+            data[bi * d + dd] /= t as f32;
+        }
+    }
+    Mat::new(b, d, data)
+}
+
+/// Deterministic strided activation subsample — mirrors the collect
+/// graph's `_collect_subsample` (stride-decimate to `want`, wrap-pad
+/// tiny layers).
+pub fn collect_subsample(flat: &[f32], want: usize) -> Vec<f64> {
+    assert!(!flat.is_empty(), "subsample of empty activation");
+    let stride = (flat.len() / want).max(1);
+    let mut sub: Vec<f64> = flat
+        .iter()
+        .step_by(stride)
+        .take(want)
+        .map(|&v| v as f64)
+        .collect();
+    if sub.len() < want {
+        let base = sub.clone();
+        while sub.len() < want {
+            let need = want - sub.len();
+            sub.extend(base.iter().take(need));
+        }
+    }
+    sub
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_adc_matches_padded_semantics() {
+        let refs = [0.0f32, 0.5, 1.5, f32::INFINITY];
+        let centers = [0.0f32, 1.0, 2.0, 2.0];
+        assert_eq!(floor_adc(&refs, &centers, -3.0), 0.0); // below base
+        assert_eq!(floor_adc(&refs, &centers, 0.49), 0.0);
+        assert_eq!(floor_adc(&refs, &centers, 0.5), 1.0); // boundary: >=
+        assert_eq!(floor_adc(&refs, &centers, 99.0), 2.0); // pad never hit
+        assert!((min_ref_step(&refs) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tiled_mac_matches_plain_matmul_in_float_mode() {
+        // k = 5 with tile_k = 2 exercises ragged tiling
+        let x = Mat::new(2, 5, (0..10).map(|v| v as f32).collect());
+        let w = Tensor::new(
+            vec![5, 3],
+            (0..15).map(|v| (v as f32) * 0.1 - 0.7).collect(),
+        )
+        .unwrap();
+        let (acc, absmax) = tiled_mac(&x, &w, 2, None);
+        for r in 0..2 {
+            for j in 0..3 {
+                let mut want = 0f32;
+                for kk in 0..5 {
+                    want += x.data[r * 5 + kk] * w.data[kk * 3 + j];
+                }
+                let got = acc.data[r * 3 + j];
+                assert!((got - want).abs() < 1e-4, "r={r} j={j}: {got} vs {want}");
+            }
+        }
+        assert!(absmax > 0.0);
+    }
+
+    #[test]
+    fn tiled_mac_quant_digitizes_each_tile() {
+        // identity-ish: wide linear codebook ~ no quantization
+        let x = Mat::new(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::new(vec![4, 1], vec![1.0; 4]).unwrap();
+        let cb = crate::quant::codebook::Codebook::linear(-128.0, 128.0, 7);
+        let (refs, centers) = cb.padded(128);
+        let spec = QuantSpec {
+            refs: &refs,
+            centers: &centers,
+            sigma: 0.0,
+            seed: 1,
+        };
+        let (acc, _) = tiled_mac(&x, &w, 2, Some(&spec));
+        // two tiles: q(1+2) + q(3+4) with ~2-unit steps
+        assert!((acc.data[0] - 10.0).abs() <= 2.0 * cb.min_step() as f32 + 1e-3);
+    }
+
+    #[test]
+    fn im2col_same_identity_kernel() {
+        // 1x1 kernel stride 1: im2col is just a reshape
+        let x = Feat::new(1, 2, 2, 3, (0..12).map(|v| v as f32).collect());
+        let (m, oh, ow) = im2col(&x, 1, 1, 1, true);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(m.rows, 4);
+        assert_eq!(m.cols, 3);
+        assert_eq!(m.data, x.data);
+    }
+
+    #[test]
+    fn im2col_same_pads_borders_with_zeros() {
+        let x = Feat::new(1, 2, 2, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let (m, oh, ow) = im2col(&x, 3, 3, 1, true);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(m.cols, 9);
+        // output (0,0): 3x3 patch centered at (0,0) — corners padded
+        let r = m.row(0);
+        assert_eq!(r[0], 0.0); // (-1,-1)
+        assert_eq!(r[4], 1.0); // center
+        assert_eq!(r[5], 2.0); // (0, 1)
+        assert_eq!(r[8], 4.0); // (1, 1)
+    }
+
+    #[test]
+    fn im2col_strided_downsamples() {
+        let x = Feat::new(1, 4, 4, 1, (0..16).map(|v| v as f32).collect());
+        let (m, oh, ow) = im2col(&x, 1, 1, 2, true);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(m.data, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn pools_and_gap() {
+        let x = Feat::new(1, 2, 2, 1, vec![1.0, 5.0, 3.0, 2.0]);
+        let p = max_pool2(&x);
+        assert_eq!((p.h, p.w), (1, 1));
+        assert_eq!(p.data, vec![5.0]);
+        let g = global_avg_pool(&x);
+        assert_eq!(g.data, vec![11.0 / 4.0]);
+        // 3x3 SAME avg on a 1x1 map: single element / 9
+        let tiny = Feat::new(1, 1, 1, 1, vec![9.0]);
+        assert_eq!(avg_pool3_same(&tiny).data, vec![1.0]);
+    }
+
+    #[test]
+    fn layer_norm_normalizes_rows() {
+        let y = Mat::new(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let ln = layer_norm(&y, &g, &b);
+        let mu: f32 = ln.data.iter().sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-5);
+        assert!(ln.data[3] > ln.data[0]);
+    }
+
+    #[test]
+    fn attention_uniform_value_passthrough() {
+        // all V rows identical -> attention output equals that row
+        let b = 1;
+        let t = 3;
+        let d = 4;
+        let q = Mat::zeros(b * t, d);
+        let k = Mat::zeros(b * t, d);
+        let v = Mat::new(b * t, d, [1.0f32, 2.0, 3.0, 4.0].repeat(t));
+        let o = attention(&q, &k, &v, b, t, 2);
+        for ti in 0..t {
+            for dd in 0..d {
+                assert!((o.data[ti * d + dd] - (dd as f32 + 1.0)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn subsample_strides_and_wraps() {
+        let xs: Vec<f32> = (0..100).map(|v| v as f32).collect();
+        let s = collect_subsample(&xs, 10);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s[1], 10.0); // stride = 100/10
+        let tiny = collect_subsample(&[7.0, 8.0], 5);
+        assert_eq!(tiny, vec![7.0, 8.0, 7.0, 8.0, 7.0]);
+    }
+
+    #[test]
+    fn parallel_partition_is_deterministic() {
+        let rows = 37;
+        let cols = 5;
+        let mut a = vec![0f32; rows * cols];
+        par_row_blocks(rows, cols, &mut a, |row0, block| {
+            for (ri, row) in block.chunks_mut(cols).enumerate() {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = ((row0 + ri) * cols + j) as f32;
+                }
+            }
+        });
+        for (i, &v) in a.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+    }
+}

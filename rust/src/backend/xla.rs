@@ -1,0 +1,108 @@
+//! XLA execution backend: adapter wrapping the PJRT engine and the
+//! per-model [`ModelRuntime`] behind the [`Backend`] trait.  Only built
+//! with `--features xla`; the artifacts directory must hold the AOT HLO
+//! graphs lowered by `python/compile/aot.py`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::backend::{Backend, CollectOut, ProgrammedCodebooks};
+use crate::io::manifest::Manifest;
+use crate::runtime::engine::Engine;
+use crate::runtime::model::ModelRuntime;
+use crate::tensor::Tensor;
+
+pub struct XlaBackend {
+    /// shared PJRT client (executables cache inside it)
+    engine: Arc<Engine>,
+    runtime: ModelRuntime,
+}
+
+thread_local! {
+    /// One PJRT client per thread: PJRT handles never cross threads, and
+    /// every backend loaded on a thread (e.g. the `exp all` sweep over
+    /// four models) shares the same client + executable cache instead of
+    /// spinning up a fresh runtime each.
+    static THREAD_ENGINE: std::cell::RefCell<Option<Arc<Engine>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn shared_engine() -> Result<Arc<Engine>> {
+    THREAD_ENGINE.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if let Some(e) = slot.as_ref() {
+            return Ok(e.clone());
+        }
+        let e = Arc::new(Engine::cpu()?);
+        *slot = Some(e.clone());
+        Ok(e)
+    })
+}
+
+impl XlaBackend {
+    pub fn load(artifacts: &Path, model: &str) -> Result<XlaBackend> {
+        let engine = shared_engine()?;
+        let runtime = ModelRuntime::load(&engine, artifacts, model)?;
+        Ok(XlaBackend { engine, runtime })
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.runtime.manifest
+    }
+
+    fn supports_batch(&self, n: usize) -> bool {
+        n == self.runtime.manifest.batch || (n == 1 && self.runtime.has_b1())
+    }
+
+    fn run_collect(&self, x: &[f32]) -> Result<CollectOut> {
+        self.runtime.run_collect(x)
+    }
+
+    fn run_qfwd(
+        &self,
+        x: &[f32],
+        books: &ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    ) -> Result<Vec<f32>> {
+        let m = &self.runtime.manifest;
+        let elems = m.input_elems();
+        ensure!(
+            !x.is_empty() && x.len() % elems == 0,
+            "qfwd input len {} not a multiple of {:?}",
+            x.len(),
+            m.input_shape
+        );
+        let batch = x.len() / elems;
+        if batch == m.batch {
+            self.runtime.run_qfwd(x, books, noise_std, seed)
+        } else if batch == 1 && self.runtime.has_b1() {
+            self.runtime.run_qfwd_b1(x, books, noise_std, seed)
+        } else {
+            anyhow::bail!(
+                "xla backend compiled for batch {} (and 1: {}); got {batch}",
+                m.batch,
+                self.runtime.has_b1()
+            )
+        }
+    }
+
+    fn weights(&self) -> &[Tensor] {
+        self.runtime.weights()
+    }
+
+    fn with_weights(&self, weights: Vec<Tensor>) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(XlaBackend {
+            engine: self.engine.clone(),
+            runtime: self.runtime.with_weights(weights)?,
+        }))
+    }
+}

@@ -1,16 +1,17 @@
 //! Calibration orchestration: streams batches through the model's
-//! `collect` graph, feeds every quantized layer's activation subsample to
-//! its own Algorithm 1 calibrator (or a baseline fitter), and programs
-//! the resulting codebooks — the per-layer, data-dependent quantization
-//! the prior NL-ADC hardware (fixed profiles) could not do.
+//! `collect` entry point (any [`Backend`]), feeds every quantized layer's
+//! activation subsample to its own Algorithm 1 calibrator (or a baseline
+//! fitter), and programs the resulting codebooks — the per-layer,
+//! data-dependent quantization the prior NL-ADC hardware (fixed profiles)
+//! could not do.
 
 use anyhow::{ensure, Result};
 
+use crate::backend::{Backend, ProgrammedCodebooks};
 use crate::data::dataset::ModelData;
 use crate::quant::bs_kmq::BsKmqCalibrator;
 use crate::quant::codebook::{Codebook, MAX_LEVELS};
 use crate::quant::Method;
-use crate::runtime::model::{ModelRuntime, ProgrammedCodebooks};
 
 /// Per-tile conversion resolution: the reconfigurable ADC's maximum (7
 /// bit linear) — intermediate partial sums keep full hardware precision
@@ -22,7 +23,7 @@ pub struct CalibrationResult {
     pub nl_books: Vec<Codebook>,
     /// per-layer 7-bit linear tile codebooks
     pub tile_books: Vec<Codebook>,
-    /// stacked tensors ready for the qfwd graph
+    /// stacked tensors ready for the deployed forward
     pub programmed: ProgrammedCodebooks,
     /// calibration batches consumed
     pub batches: usize,
@@ -31,15 +32,15 @@ pub struct CalibrationResult {
 }
 
 pub struct Calibrator<'a> {
-    runtime: &'a ModelRuntime,
+    backend: &'a dyn Backend,
     pub method: Method,
     pub bits: u32,
 }
 
 impl<'a> Calibrator<'a> {
-    pub fn new(runtime: &'a ModelRuntime, method: Method, bits: u32) -> Self {
+    pub fn new(backend: &'a dyn Backend, method: Method, bits: u32) -> Self {
         Calibrator {
-            runtime,
+            backend,
             method,
             bits,
         }
@@ -52,7 +53,7 @@ impl<'a> Calibrator<'a> {
         data: &ModelData,
         n_batches: usize,
     ) -> Result<CalibrationResult> {
-        let m = &self.runtime.manifest;
+        let m = self.backend.manifest();
         let nq = m.nq();
         let batch = m.batch;
         ensure!(
@@ -69,7 +70,7 @@ impl<'a> Calibrator<'a> {
 
         for b in 0..n_batches {
             let xb = ModelData::batch(&data.x_calib, b, batch);
-            let out = self.runtime.run_collect(xb)?;
+            let out = self.backend.run_collect(xb)?;
             for i in 0..nq {
                 samples_seen[i] += out.samples[i].len();
                 match self.method {
@@ -112,11 +113,11 @@ impl<'a> Calibrator<'a> {
         data: &ModelData,
         n_batches: usize,
     ) -> Result<Vec<Vec<f64>>> {
-        let m = &self.runtime.manifest;
+        let m = self.backend.manifest();
         let mut pooled: Vec<Vec<f64>> = vec![Vec::new(); m.nq()];
         for b in 0..n_batches {
             let xb = ModelData::batch(&data.x_calib, b, m.batch);
-            let out = self.runtime.run_collect(xb)?;
+            let out = self.backend.run_collect(xb)?;
             for (p, s) in pooled.iter_mut().zip(out.samples) {
                 p.extend(s);
             }

@@ -1,13 +1,14 @@
 //! Post-training-quantization evaluation: runs the test split through the
-//! deployed `qfwd` graph with programmed codebooks, optional ADC noise
-//! (Fig. 6/7) and optional weight quantization (Fig. 6), and reports
-//! accuracy against the exported labels.
+//! deployed quantized forward of any [`Backend`] with programmed
+//! codebooks, optional ADC noise (Fig. 6/7) and optional weight
+//! quantization (Fig. 6), and reports accuracy against the exported
+//! labels.
 
 use anyhow::Result;
 
+use crate::backend::{Backend, ProgrammedCodebooks};
 use crate::data::dataset::ModelData;
 use crate::quant::weights::quantize_tensor;
-use crate::runtime::model::{ModelRuntime, ProgrammedCodebooks};
 
 #[derive(Clone, Debug)]
 pub struct PtqResult {
@@ -17,12 +18,12 @@ pub struct PtqResult {
 }
 
 pub struct PtqEvaluator<'a> {
-    runtime: &'a ModelRuntime,
+    backend: &'a dyn Backend,
 }
 
 impl<'a> PtqEvaluator<'a> {
-    pub fn new(runtime: &'a ModelRuntime) -> Self {
-        PtqEvaluator { runtime }
+    pub fn new(backend: &'a dyn Backend) -> Self {
+        PtqEvaluator { backend }
     }
 
     /// Accuracy over `n_batches` test batches through qfwd.
@@ -34,7 +35,7 @@ impl<'a> PtqEvaluator<'a> {
         n_batches: usize,
         seed: u32,
     ) -> Result<PtqResult> {
-        let m = &self.runtime.manifest;
+        let m = self.backend.manifest();
         let batch = m.batch;
         let classes = m.num_classes;
         let n_batches = n_batches.min(data.n_test() / batch);
@@ -43,7 +44,7 @@ impl<'a> PtqEvaluator<'a> {
         for b in 0..n_batches {
             let xb = ModelData::batch(&data.x_test, b, batch);
             let logits =
-                self.runtime
+                self.backend
                     .run_qfwd(xb, books, noise_std, seed.wrapping_add(b as u32))?;
             for i in 0..batch {
                 let row = &logits[i * classes..(i + 1) * classes];
@@ -61,13 +62,13 @@ impl<'a> PtqEvaluator<'a> {
         })
     }
 
-    /// A runtime clone with linearly quantized q-layer weights (Fig. 6).
-    pub fn quantize_weights(&self, w_bits: u32) -> Result<ModelRuntime> {
-        let mut weights = self.runtime.weights().to_vec();
-        for i in self.runtime.qweight_indices() {
+    /// A backend clone with linearly quantized q-layer weights (Fig. 6).
+    pub fn quantize_weights(&self, w_bits: u32) -> Result<Box<dyn Backend>> {
+        let mut weights = self.backend.weights().to_vec();
+        for i in self.backend.qweight_indices() {
             weights[i] = quantize_tensor(&weights[i], w_bits);
         }
-        self.runtime.with_weights(weights)
+        self.backend.with_weights(weights)
     }
 }
 

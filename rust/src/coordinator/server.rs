@@ -1,29 +1,54 @@
 //! Batched inference server: the request path of the deployed system.
 //!
-//! A dedicated inference thread owns the PJRT engine and the calibrated
-//! model (the xla handles never cross threads); intake happens over an
-//! mpsc channel from any number of client threads (or the TCP front in
-//! `main.rs`).  A dynamic batcher groups queued requests: full batches go
-//! through the batch-32 graph, stragglers through the batch-1 graph when
-//! the model has one (padding otherwise) — the vLLM-style policy scaled
-//! to this testbed.
+//! A dedicated inference thread owns the execution backend and the
+//! calibrated model (PJRT handles never cross threads; the native backend
+//! simply lives where its work is); intake happens over an mpsc channel
+//! from any number of client threads (or the TCP front in `main.rs`).  A
+//! dynamic batcher groups queued requests: full batches go through the
+//! batch-32 path, stragglers through whatever smaller batch the backend
+//! supports (the native backend runs any size exactly; the XLA backend
+//! falls back to its batch-1 graph or padding) — the vLLM-style policy
+//! scaled to this testbed.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::backend::{Backend, BackendKind};
 use crate::coordinator::calibrate::Calibrator;
 use crate::data::dataset::ModelData;
 use crate::quant::Method;
-use crate::runtime::engine::Engine;
-use crate::runtime::model::ModelRuntime;
 
 pub struct Request {
     pub x: Vec<f32>,
     pub reply: mpsc::Sender<Vec<f32>>,
+}
+
+/// Upper bound on retained latency samples (~8 MB worst case).
+const MAX_LATENCY_SAMPLES: usize = 1 << 20;
+
+/// Latency sample store: a ring over the most recent
+/// [`MAX_LATENCY_SAMPLES`] service times, so percentiles keep tracking a
+/// long-running server instead of freezing on the warm-up era.
+#[derive(Default)]
+struct LatencyRing {
+    samples: Vec<u64>,
+    /// next overwrite position once the ring is full
+    head: usize,
+}
+
+impl LatencyRing {
+    fn push(&mut self, us: u64) {
+        if self.samples.len() < MAX_LATENCY_SAMPLES {
+            self.samples.push(us);
+        } else {
+            self.samples[self.head] = us;
+            self.head = (self.head + 1) % MAX_LATENCY_SAMPLES;
+        }
+    }
 }
 
 #[derive(Default)]
@@ -33,17 +58,55 @@ pub struct ServerStats {
     pub full_batches: AtomicU64,
     pub singles: AtomicU64,
     pub busy_us: AtomicU64,
+    /// per-request service latency samples (us)
+    lat_us: Mutex<LatencyRing>,
 }
 
 impl ServerStats {
+    /// Record the service latency of a batch covering `n` requests.
+    pub fn record_latency(&self, us: u64, n: usize) {
+        let mut lat = self.lat_us.lock().unwrap();
+        for _ in 0..n {
+            lat.push(us);
+        }
+    }
+
+    /// Latency percentiles in milliseconds, one per requested quantile
+    /// (all 0.0 when no samples yet).  One lock (copy only) + one sort
+    /// outside the lock, so the serving thread never stalls on a reader.
+    pub fn percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
+        let raw = self.lat_us.lock().unwrap().samples.clone(); // memcpy only
+        let mut sorted: Vec<f64> = raw.into_iter().map(|u| u as f64).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        qs.iter()
+            .map(|&q| {
+                if sorted.is_empty() {
+                    0.0
+                } else {
+                    crate::util::stats::quantile_sorted(&sorted, q) / 1e3
+                }
+            })
+            .collect()
+    }
+
+    /// Latency percentile in milliseconds (0.0 when no samples yet).
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        self.percentiles_ms(&[q])[0]
+    }
+
     pub fn summary(&self) -> String {
+        let p = self.percentiles_ms(&[0.50, 0.95, 0.99]);
         format!(
-            "requests={} batches={} full={} singles={} busy={:.1}ms",
+            "requests={} batches={} full={} singles={} busy={:.1}ms \
+             p50={:.2}ms p95={:.2}ms p99={:.2}ms",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.full_batches.load(Ordering::Relaxed),
             self.singles.load(Ordering::Relaxed),
-            self.busy_us.load(Ordering::Relaxed) as f64 / 1e3
+            self.busy_us.load(Ordering::Relaxed) as f64 / 1e3,
+            p[0],
+            p[1],
+            p[2],
         )
     }
 }
@@ -55,11 +118,12 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start the inference thread: load artifacts, calibrate `bits`-bit
-    /// BS-KMQ codebooks on `calib_batches`, then serve until dropped.
+    /// Start the inference thread: load the selected backend, calibrate
+    /// `bits`-bit codebooks on `calib_batches`, then serve until dropped.
     pub fn start(
         artifacts: std::path::PathBuf,
         model: String,
+        backend: BackendKind,
         method: Method,
         bits: u32,
         noise_std: f32,
@@ -68,29 +132,36 @@ impl InferenceServer {
         let (tx, rx) = mpsc::channel::<Request>();
         let stats = Arc::new(ServerStats::default());
         let st = stats.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
         let handle = std::thread::spawn(move || -> Result<()> {
-            let setup = (|| -> Result<(Engine, ModelRuntime, ModelData)> {
-                let engine = Engine::cpu()?;
-                let runtime = ModelRuntime::load(&engine, &artifacts, &model)?;
+            let setup = (|| -> Result<(Box<dyn Backend>, ModelData)> {
+                let be = crate::backend::load(backend, &artifacts, &model)?;
                 let data = ModelData::load(&artifacts, &model)?;
-                Ok((engine, runtime, data))
+                Ok((be, data))
             })();
-            let (_engine, runtime, data) = match setup {
+            let (be, data) = match setup {
                 Ok(v) => v,
                 Err(e) => {
                     let _ = ready_tx.send(Err(anyhow::anyhow!("{e}")));
                     return Err(e);
                 }
             };
-            let calib = Calibrator::new(&runtime, method, bits)
-                .calibrate(&data, calib_batches)?;
-            let _ = ready_tx.send(Ok(()));
-            serve_loop(&runtime, &calib.programmed, noise_std, rx, &st)
+            let calib = match Calibrator::new(be.as_ref(), method, bits)
+                .calibrate(&data, calib_batches)
+            {
+                Ok(c) => c,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(anyhow::anyhow!("{e}")));
+                    return Err(e);
+                }
+            };
+            let _ = ready_tx.send(Ok(be.name().to_string()));
+            serve_loop(be.as_ref(), &calib.programmed, noise_std, rx, &st)
         });
-        ready_rx
+        let engine = ready_rx
             .recv()
             .context("inference thread died during setup")??;
+        eprintln!("inference server ready ({engine} backend)");
         Ok(InferenceServer {
             tx,
             stats,
@@ -106,7 +177,7 @@ impl InferenceServer {
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         reply_rx
             .recv_timeout(Duration::from_secs(120))
-            .context("inference timed out")
+            .context("request dropped (bad input size?) or timed out")
     }
 
     /// Clone the intake handle for concurrent client threads.
@@ -127,15 +198,15 @@ impl Drop for InferenceServer {
 }
 
 fn serve_loop(
-    runtime: &ModelRuntime,
-    books: &crate::runtime::model::ProgrammedCodebooks,
+    backend: &dyn Backend,
+    books: &crate::backend::ProgrammedCodebooks,
     noise_std: f32,
     rx: mpsc::Receiver<Request>,
     stats: &ServerStats,
 ) -> Result<()> {
-    let batch = runtime.manifest.batch;
-    let classes = runtime.manifest.num_classes;
-    let in_elems = runtime.manifest.input_elems();
+    let batch = backend.manifest().batch;
+    let classes = backend.manifest().num_classes;
+    let in_elems = backend.manifest().input_elems();
     let mut seed = 1u32;
     loop {
         // block for the first request, then drain up to a full batch
@@ -151,36 +222,67 @@ fn serve_loop(
                 Err(_) => break,
             }
         }
+        // drop wrong-sized requests (their reply sender drops, so the
+        // client sees an immediate error) instead of killing the server
+        pending.retain(|r| {
+            let ok = r.x.len() == in_elems;
+            if !ok {
+                eprintln!(
+                    "dropping request with {} elements (model wants {in_elems})",
+                    r.x.len()
+                );
+            }
+            ok
+        });
+        if pending.is_empty() {
+            continue;
+        }
         let t0 = Instant::now();
         seed = seed.wrapping_add(1);
-        if pending.len() == 1 && runtime.has_b1() {
-            let r = &pending[0];
-            let logits = runtime.run_qfwd_b1(&r.x, books, noise_std, seed)?;
-            let _ = r.reply.send(logits);
-            stats.singles.fetch_add(1, Ordering::Relaxed);
-        } else {
-            // pad to the compiled batch with the first request's input
-            let mut x = Vec::with_capacity(batch * in_elems);
-            for r in &pending {
-                anyhow::ensure!(r.x.len() == in_elems, "bad input size");
-                x.extend_from_slice(&r.x);
-            }
-            for _ in pending.len()..batch {
-                x.extend_from_slice(&pending[0].x);
-            }
-            let logits = runtime.run_qfwd(&x, books, noise_std, seed)?;
-            for (i, r) in pending.iter().enumerate() {
-                let _ =
-                    r.reply.send(logits[i * classes..(i + 1) * classes].to_vec());
-            }
-            if pending.len() == batch {
-                stats.full_batches.fetch_add(1, Ordering::Relaxed);
-            }
+        let n = pending.len();
+        // exact-size execution when the backend can (native: always;
+        // xla: full batch or the batch-1 graph); otherwise pad up to the
+        // compiled batch
+        let run_n = if backend.supports_batch(n) { n } else { batch };
+        let mut x = Vec::with_capacity(run_n * in_elems);
+        for r in &pending {
+            x.extend_from_slice(&r.x);
         }
-        stats.requests.fetch_add(pending.len() as u64, Ordering::Relaxed);
+        for _ in n..run_n {
+            x.extend_from_slice(&pending[0].x);
+        }
+        let logits = backend.run_qfwd(&x, books, noise_std, seed)?;
+        for (i, r) in pending.iter().enumerate() {
+            let _ = r.reply.send(logits[i * classes..(i + 1) * classes].to_vec());
+        }
+        if n == batch {
+            stats.full_batches.fetch_add(1, Ordering::Relaxed);
+        } else if n == 1 {
+            stats.singles.fetch_add(1, Ordering::Relaxed);
+        }
+        let elapsed_us = t0.elapsed().as_micros() as u64;
+        stats.requests.fetch_add(n as u64, Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats
-            .busy_us
-            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        stats.busy_us.fetch_add(elapsed_us, Ordering::Relaxed);
+        stats.record_latency(elapsed_us, n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let st = ServerStats::default();
+        assert_eq!(st.percentile_ms(0.5), 0.0);
+        for us in [1000u64, 2000, 3000, 4000] {
+            st.record_latency(us, 1);
+        }
+        assert!((st.percentile_ms(0.5) - 2.5).abs() < 1e-9);
+        assert!(st.percentile_ms(0.99) <= 4.0);
+        let s = st.summary();
+        assert!(s.contains("p50="), "{s}");
+        assert!(s.contains("p99="), "{s}");
     }
 }

@@ -1,0 +1,118 @@
+//! Backend agreement harness: calibrates once, then runs the same test
+//! batch with the same programmed codebooks through the native integer
+//! backend and (when compiled in) the XLA engine, reporting logit-level
+//! agreement.  Residual differences come from float summation order
+//! crossing a floor-ADC reference — i.e. at most codebook quantization
+//! tolerance per conversion.
+
+use anyhow::Result;
+
+use crate::backend::{self, Backend, BackendKind};
+use crate::coordinator::calibrate::Calibrator;
+use crate::coordinator::ptq::argmax;
+use crate::data::dataset::ModelData;
+use crate::experiments::ExpContext;
+use crate::quant::Method;
+
+pub const MODELS: [&str; 4] = ["resnet", "vgg", "inception", "distilbert"];
+
+/// Per-model agreement statistics (native vs reference logits).
+pub struct AgreeRow {
+    pub model: String,
+    /// fraction of exactly equal logits
+    pub exact: f64,
+    /// fraction of matching per-sample argmax decisions
+    pub argmax_match: f64,
+    pub max_abs_diff: f64,
+}
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<AgreeRow>> {
+    println!("== Backend agreement: native integer IMC vs XLA qfwd ==");
+    #[allow(unused_mut)] // pushed only when the xla feature is compiled in
+    let mut rows = Vec::new();
+    for model in MODELS {
+        let native =
+            match backend::load(BackendKind::Native, &ctx.artifacts, model) {
+                Ok(b) => b,
+                Err(e) => {
+                    println!("   {model:<11} SKIP (native load: {e:#})");
+                    continue;
+                }
+            };
+        let data = ModelData::load(&ctx.artifacts, model)?;
+        let calib = Calibrator::new(native.as_ref(), Method::BsKmq, 3)
+            .calibrate(&data, 4)?;
+        let m = native.manifest();
+        let xb = ModelData::batch(&data.x_test, 0, m.batch);
+        let nat = native.run_qfwd(xb, &calib.programmed, 0.0, 7)?;
+        anyhow::ensure!(
+            nat.iter().all(|v| v.is_finite()),
+            "{model}: native logits not finite"
+        );
+
+        #[cfg(feature = "xla")]
+        {
+            let xla_be =
+                match backend::load(BackendKind::Xla, &ctx.artifacts, model) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        println!("   {model:<11} native ok; xla SKIP ({e:#})");
+                        continue;
+                    }
+                };
+            let ref_logits = xla_be.run_qfwd(xb, &calib.programmed, 0.0, 7)?;
+            let row = compare(model, &nat, &ref_logits, m.batch, m.num_classes);
+            println!(
+                "   {model:<11} exact {:.1}%  argmax {:.1}%  max|diff| {:.4}",
+                row.exact * 100.0,
+                row.argmax_match * 100.0,
+                row.max_abs_diff
+            );
+            rows.push(row);
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            println!(
+                "   {model:<11} native ok ({} logits finite; build with \
+                 --features xla for the cross-backend diff)",
+                nat.len()
+            );
+        }
+    }
+    Ok(rows)
+}
+
+/// Logit-level agreement between two backends' outputs.
+pub fn compare(
+    model: &str,
+    a: &[f32],
+    b: &[f32],
+    batch: usize,
+    classes: usize,
+) -> AgreeRow {
+    assert_eq!(a.len(), b.len(), "logit length mismatch");
+    let exact = a
+        .iter()
+        .zip(b)
+        .filter(|(x, y)| x == y)
+        .count() as f64
+        / a.len() as f64;
+    let mut max_abs_diff = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        max_abs_diff = max_abs_diff.max((x - y).abs() as f64);
+    }
+    let mut agree = 0usize;
+    for i in 0..batch {
+        let ra = &a[i * classes..(i + 1) * classes];
+        let rb = &b[i * classes..(i + 1) * classes];
+        if argmax(ra) == argmax(rb) {
+            agree += 1;
+        }
+    }
+    AgreeRow {
+        model: model.into(),
+        exact,
+        argmax_match: agree as f64 / batch as f64,
+        max_abs_diff,
+    }
+}

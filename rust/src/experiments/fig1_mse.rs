@@ -6,11 +6,11 @@
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::coordinator::calibrate::Calibrator;
 use crate::data::dataset::ModelData;
 use crate::experiments::ExpContext;
 use crate::quant::Method;
-use crate::runtime::model::ModelRuntime;
 
 pub struct MseRow {
     pub method: &'static str,
@@ -20,14 +20,14 @@ pub struct MseRow {
 pub fn run(ctx: &ExpContext, model: &str, bits: u32) -> Result<Vec<MseRow>> {
     let fig = if model == "resnet" { "Fig.1" } else { "Fig.4" };
     println!("== {fig}: {bits}-bit quantizer MSE on {model} layer-0 activations ==");
-    let runtime = ModelRuntime::load(&ctx.engine, &ctx.artifacts, model)?;
+    let backend = ctx.backend(model)?;
     let data = ModelData::load(&ctx.artifacts, model)?;
-    let calib = Calibrator::new(&runtime, Method::BsKmq, bits);
+    let calib = Calibrator::new(backend.as_ref(), Method::BsKmq, bits);
     let samples = calib.collect_samples(&data, 8)?;
     let layer0 = &samples[0];
     println!(
         "   layer '{}': {} samples, range [{:.3}, {:.3}]",
-        runtime.manifest.qlayers[0].name,
+        backend.manifest().qlayers[0].name,
         layer0.len(),
         layer0.iter().cloned().fold(f64::INFINITY, f64::min),
         layer0.iter().cloned().fold(f64::NEG_INFINITY, f64::max),

@@ -9,7 +9,6 @@ use crate::coordinator::ptq::PtqEvaluator;
 use crate::data::dataset::ModelData;
 use crate::experiments::ExpContext;
 use crate::quant::Method;
-use crate::runtime::model::ModelRuntime;
 use crate::util::json::Json;
 
 pub const MODELS: [&str; 4] = ["resnet", "vgg", "inception", "distilbert"];
@@ -30,9 +29,9 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<Fig5Row>> {
     let train_results = load_train_results(ctx)?;
     let mut rows = Vec::new();
     for model in MODELS {
-        let runtime = ModelRuntime::load(&ctx.engine, &ctx.artifacts, model)?;
+        let backend = ctx.backend(model)?;
         let data = ModelData::load(&ctx.artifacts, model)?;
-        let ev = PtqEvaluator::new(&runtime);
+        let ev = PtqEvaluator::new(backend.as_ref());
         let bl = train_results
             .get(model)
             .and_then(|m| m.get("float_acc").ok().and_then(|v| v.as_f64().ok()))
@@ -41,7 +40,7 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<Fig5Row>> {
         for bits in BIT_SWEEP {
             let mut accs = [0.0f64; 2];
             for (i, method) in [Method::Linear, Method::BsKmq].iter().enumerate() {
-                let calib = Calibrator::new(&runtime, *method, bits)
+                let calib = Calibrator::new(backend.as_ref(), *method, bits)
                     .calibrate(&data, CALIB_BATCHES)?;
                 let r = ev.evaluate(&data, &calib.programmed, 0.0,
                                     EVAL_BATCHES, 7)?;

@@ -14,7 +14,6 @@ use crate::coordinator::ptq::PtqEvaluator;
 use crate::data::dataset::ModelData;
 use crate::experiments::ExpContext;
 use crate::quant::Method;
-use crate::runtime::model::ModelRuntime;
 
 /// (model, activation bits, weight bits) — the paper's Fig. 6 settings.
 /// The paper uses 2/3/4/4-bit weights on 10M+-param models; the minis
@@ -49,22 +48,22 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<Fig6Row>> {
     );
     let mut rows = Vec::new();
     for (model, bits, wbits) in SETTINGS {
-        let runtime = ModelRuntime::load(&ctx.engine, &ctx.artifacts, model)?;
+        let backend = ctx.backend(model)?;
         let data = ModelData::load(&ctx.artifacts, model)?;
-        let calib = Calibrator::new(&runtime, Method::BsKmq, bits)
+        let calib = Calibrator::new(backend.as_ref(), Method::BsKmq, bits)
             .calibrate(&data, 8)?;
 
-        let ev = PtqEvaluator::new(&runtime);
+        let ev = PtqEvaluator::new(backend.as_ref());
         let a0 = ev
             .evaluate(&data, &calib.programmed, 0.0, EVAL_BATCHES, 3)?
             .accuracy;
         // + weight quantization; deployment order: recalibrate the NL-ADC
         // codebooks on the quantized-weight hardware (Algorithm 1 runs on
         // the deployed macro, not on a float simulator)
-        let wq_runtime = ev.quantize_weights(wbits)?;
-        let wq_books = Calibrator::new(&wq_runtime, Method::BsKmq, bits)
+        let wq_backend = ev.quantize_weights(wbits)?;
+        let wq_books = Calibrator::new(wq_backend.as_ref(), Method::BsKmq, bits)
             .calibrate(&data, 8)?;
-        let evw = PtqEvaluator::new(&wq_runtime);
+        let evw = PtqEvaluator::new(wq_backend.as_ref());
         let a1 = evw
             .evaluate(&data, &wq_books.programmed, 0.0, EVAL_BATCHES, 3)?
             .accuracy;

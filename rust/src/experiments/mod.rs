@@ -2,6 +2,7 @@
 //! Each prints the same rows/series the paper reports and returns the
 //! numbers for EXPERIMENTS.md.  `run_all` regenerates everything.
 
+pub mod backends_agree;
 pub mod fig1_mse;
 pub mod fig5_ptq;
 pub mod fig6_noise;
@@ -13,25 +14,31 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::runtime::engine::Engine;
+use crate::backend::{Backend, BackendKind};
 
-/// Shared context: one PJRT engine + the artifacts directory.
+/// Shared context: the artifacts directory + the selected execution
+/// backend (env `BSKMQ_BACKEND`, default auto).
 pub struct ExpContext {
-    pub engine: Engine,
     pub artifacts: PathBuf,
+    pub kind: BackendKind,
 }
 
 impl ExpContext {
     pub fn new() -> Result<ExpContext> {
         Ok(ExpContext {
-            engine: Engine::cpu()?,
             artifacts: crate::artifacts_dir(),
+            kind: BackendKind::from_env(),
         })
+    }
+
+    /// Load the selected backend for one model.
+    pub fn backend(&self, model: &str) -> Result<Box<dyn Backend>> {
+        crate::backend::load(self.kind, &self.artifacts, model)
     }
 }
 
 /// Run one experiment by id ("fig1", "fig4", "fig5", "fig6", "fig7",
-/// "fig8", "table1" or "all").
+/// "fig8", "table1", "backends" or "all").
 pub fn run(id: &str) -> Result<()> {
     match id {
         "fig1" => {
@@ -55,6 +62,10 @@ pub fn run(id: &str) -> Result<()> {
         }
         "fig8" => fig8_macro::run()?,
         "table1" => table1_system::run()?,
+        "backends" => {
+            let ctx = ExpContext::new()?;
+            backends_agree::run(&ctx)?;
+        }
         "all" => {
             let ctx = ExpContext::new()?;
             fig1_mse::run(&ctx, "resnet", 3)?;
@@ -64,9 +75,11 @@ pub fn run(id: &str) -> Result<()> {
             fig7_corners::run()?;
             fig8_macro::run()?;
             table1_system::run()?;
+            backends_agree::run(&ctx)?;
         }
         other => anyhow::bail!(
-            "unknown experiment '{other}' (fig1|fig4|fig5|fig6|fig7|fig8|table1|all)"
+            "unknown experiment '{other}' \
+             (fig1|fig4|fig5|fig6|fig7|fig8|table1|backends|all)"
         ),
     }
     Ok(())

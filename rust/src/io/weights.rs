@@ -1,11 +1,12 @@
-//! Reader for the flat tensor container (see python/compile/weights_io.py).
+//! Reader/writer for the flat tensor container (see
+//! python/compile/weights_io.py).
 //!
 //! Layout (little-endian): magic u32 "BSKQ" (0x42534B51), version u32 = 1,
 //! count u32, then per tensor: name_len u32, name bytes, ndim u32,
 //! dims u32*ndim, f32 data.
 
 use std::collections::BTreeMap;
-use std::io::Read;
+use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -80,10 +81,39 @@ pub fn load_tensors(path: impl AsRef<Path>) -> Result<TensorMap> {
     Ok(TensorMap { names, map })
 }
 
+/// Write a container file — the Rust counterpart of
+/// `weights_io.save_tensors` (same byte layout), used by the native
+/// backend's synthetic-artifact tests and future export tooling.
+pub fn save_tensors(
+    path: impl AsRef<Path>,
+    tensors: &[(&str, &Tensor)],
+) -> Result<()> {
+    let path = path.as_ref();
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(&MAGIC.to_le_bytes())?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::Write;
 
     fn write_container(tensors: &[(&str, Vec<usize>, Vec<f32>)]) -> Vec<u8> {
         let mut b = Vec::new();
@@ -122,6 +152,21 @@ mod tests {
         assert_eq!(tm.get("a").unwrap().shape, vec![2, 2]);
         assert_eq!(tm.get("b").unwrap().data, vec![5.0, 6.0, 7.0]);
         assert!(tm.get("missing").is_err());
+    }
+
+    #[test]
+    fn save_tensors_roundtrips_through_loader() {
+        let a = Tensor::new(vec![2, 3], (0..6).map(|v| v as f32).collect())
+            .unwrap();
+        let b = Tensor::new(vec![4], vec![9.0, 8.0, 7.0, 6.0]).unwrap();
+        let dir = std::env::temp_dir().join("bskmq_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("saved.bin");
+        save_tensors(&path, &[("alpha", &a), ("beta", &b)]).unwrap();
+        let tm = load_tensors(&path).unwrap();
+        assert_eq!(tm.names, vec!["alpha", "beta"]);
+        assert_eq!(tm.get("alpha").unwrap(), &a);
+        assert_eq!(tm.get("beta").unwrap(), &b);
     }
 
     #[test]

@@ -2,8 +2,12 @@
 //! full-system reproduction (L3 coordinator + hardware substrates).
 //!
 //! Layer map (DESIGN.md):
+//! * [`backend`] — pluggable execution engines behind the [`backend::Backend`]
+//!   trait: the pure-Rust native integer IMC backend (always available) and
+//!   the PJRT/XLA adapter (feature `xla`).
 //! * [`runtime`] — PJRT CPU client loading the AOT HLO artifacts produced
-//!   by `python/compile/aot.py` (Python never runs on the request path).
+//!   by `python/compile/aot.py` (feature `xla`; Python never runs on the
+//!   request path).
 //! * [`quant`] — the BS-KMQ quantizer (paper Algorithm 1) plus the four
 //!   baselines (linear, Lloyd-Max, CDF, standard k-means) and the
 //!   floor-ADC codebook machinery (Eq. 2) with hardware projection (§2.3).
@@ -21,6 +25,7 @@
 
 pub mod adc;
 pub mod arch;
+pub mod backend;
 pub mod circuit;
 pub mod coordinator;
 pub mod data;

@@ -2,22 +2,26 @@
 //! and the batched inference server (TCP front).
 //!
 //! Usage:
-//!   bskmq exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|all>
-//!   bskmq calibrate <model> <bits>    # print per-layer codebooks
+//!   bskmq exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|backends|all>
+//!   bskmq calibrate <model> <bits> [--backend B]   # print per-layer codebooks
 //!   bskmq serve [--addr 127.0.0.1:7878] [--model resnet] [--bits 3]
-//!   bskmq info                        # artifacts + platform summary
+//!               [--backend auto|native|xla]
+//!   bskmq info                        # artifacts + backend summary
+//!
+//! The execution backend defaults to `auto` (XLA when compiled in and
+//! loadable, the native integer IMC engine otherwise); `BSKMQ_BACKEND`
+//! sets the process-wide default.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
 
 use anyhow::{Context, Result};
 
+use bskmq::backend::{Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::coordinator::server::InferenceServer;
 use bskmq::data::dataset::ModelData;
 use bskmq::quant::Method;
-use bskmq::runtime::engine::Engine;
-use bskmq::runtime::model::ModelRuntime;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -37,20 +41,21 @@ fn dispatch(args: &[String]) -> Result<()> {
             let model = args.get(1).map(String::as_str).unwrap_or("resnet");
             let bits: u32 = args
                 .get(2)
+                .filter(|s| !s.starts_with("--"))
                 .map(|s| s.parse())
                 .transpose()
                 .context("bits must be an integer")?
                 .unwrap_or(3);
-            calibrate(model, bits)
+            calibrate(model, bits, parse_backend_flag(args)?)
         }
         Some("serve") => serve(args),
         Some("info") => info(),
         _ => {
             eprintln!(
                 "usage: bskmq <exp|calibrate|serve|info> [...]\n\
-                 \x20 exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|all>\n\
-                 \x20 calibrate <model> <bits>\n\
-                 \x20 serve [--addr A] [--model M] [--bits B]\n\
+                 \x20 exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|backends|all>\n\
+                 \x20 calibrate <model> <bits> [--backend B]\n\
+                 \x20 serve [--addr A] [--model M] [--bits B] [--backend B]\n\
                  \x20 info"
             );
             Ok(())
@@ -58,18 +63,32 @@ fn dispatch(args: &[String]) -> Result<()> {
     }
 }
 
-fn calibrate(model: &str, bits: u32) -> Result<()> {
-    let engine = Engine::cpu()?;
+/// `--backend <kind>` anywhere in the args, else the env/auto default.
+fn parse_backend_flag(args: &[String]) -> Result<BackendKind> {
+    for i in 0..args.len() {
+        if args[i] == "--backend" {
+            let v = args.get(i + 1).context("--backend value")?;
+            return BackendKind::parse(v);
+        }
+    }
+    Ok(BackendKind::from_env())
+}
+
+fn calibrate(model: &str, bits: u32, kind: BackendKind) -> Result<()> {
     let artifacts = bskmq::artifacts_dir();
-    let runtime = ModelRuntime::load(&engine, &artifacts, model)?;
+    let backend = bskmq::backend::load(kind, &artifacts, model)?;
     let data = ModelData::load(&artifacts, model)?;
-    let calib = Calibrator::new(&runtime, Method::BsKmq, bits)
+    let calib = Calibrator::new(backend.as_ref(), Method::BsKmq, bits)
         .calibrate(&data, 8)?;
-    println!("calibrated {model} at {bits}b over {} batches", calib.batches);
+    println!(
+        "calibrated {model} at {bits}b over {} batches ({} backend)",
+        calib.batches,
+        backend.name()
+    );
     for (i, (book, q)) in calib
         .nl_books
         .iter()
-        .zip(&runtime.manifest.qlayers)
+        .zip(&backend.manifest().qlayers)
         .enumerate()
     {
         println!(
@@ -87,6 +106,7 @@ fn serve(args: &[String]) -> Result<()> {
     let mut addr = "127.0.0.1:7878".to_string();
     let mut model = "resnet".to_string();
     let mut bits = 3u32;
+    let mut kind = BackendKind::from_env();
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
@@ -102,46 +122,82 @@ fn serve(args: &[String]) -> Result<()> {
                 bits = args.get(i + 1).context("--bits value")?.parse()?;
                 i += 2;
             }
+            "--backend" => {
+                kind = BackendKind::parse(
+                    args.get(i + 1).context("--backend value")?,
+                )?;
+                i += 2;
+            }
             other => anyhow::bail!("unknown serve flag '{other}'"),
         }
     }
     let server = InferenceServer::start(
         bskmq::artifacts_dir(),
         model.clone(),
+        kind,
         Method::BsKmq,
         bits,
         0.0,
         8,
     )?;
     let listener = TcpListener::bind(&addr)?;
-    println!("serving {model} ({bits}b BS-KMQ) on {addr}");
+    println!(
+        "serving {model} ({bits}b BS-KMQ, {} backend) on {addr}",
+        kind.name()
+    );
     println!("protocol: one line of comma-separated input floats -> one line of logits");
     for stream in listener.incoming() {
-        let stream = stream?;
-        let mut reader = BufReader::new(stream.try_clone()?);
-        let mut out = stream;
-        let mut line = String::new();
-        while {
-            line.clear();
-            reader.read_line(&mut line)? > 0
-        } {
-            let x: Vec<f32> = line
-                .trim()
-                .split(',')
-                .filter(|s| !s.is_empty())
-                .map(|s| s.trim().parse::<f32>())
-                .collect::<std::result::Result<_, _>>()
-                .context("parsing input floats")?;
-            match server.infer(x) {
-                Ok(logits) => {
-                    let s: Vec<String> =
-                        logits.iter().map(|v| format!("{v:.6}")).collect();
-                    writeln!(out, "{}", s.join(","))?;
-                }
-                Err(e) => writeln!(out, "error: {e}")?,
+        // one misbehaving client must not take the server down: per-line
+        // errors answer on the wire, connection errors just end it
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("accept failed: {e}");
+                continue;
             }
+        };
+        if let Err(e) = handle_client(&server, stream) {
+            eprintln!("client connection error: {e}");
         }
         println!("client done; stats: {}", server.stats.summary());
+    }
+    Ok(())
+}
+
+/// One TCP client session: lines of comma-separated floats in, lines of
+/// logits (or `error: ...`) out.  Returns Err only on connection IO.
+fn handle_client(
+    server: &InferenceServer,
+    stream: std::net::TcpStream,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    while {
+        line.clear();
+        reader.read_line(&mut line)? > 0
+    } {
+        let parsed: std::result::Result<Vec<f32>, _> = line
+            .trim()
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse::<f32>())
+            .collect();
+        let x = match parsed {
+            Ok(x) => x,
+            Err(e) => {
+                writeln!(out, "error: parsing input floats: {e}")?;
+                continue;
+            }
+        };
+        match server.infer(x) {
+            Ok(logits) => {
+                let s: Vec<String> =
+                    logits.iter().map(|v| format!("{v:.6}")).collect();
+                writeln!(out, "{}", s.join(","))?;
+            }
+            Err(e) => writeln!(out, "error: {e}")?,
+        }
     }
     Ok(())
 }
@@ -149,18 +205,30 @@ fn serve(args: &[String]) -> Result<()> {
 fn info() -> Result<()> {
     let artifacts = bskmq::artifacts_dir();
     println!("artifacts dir: {}", artifacts.display());
-    let engine = Engine::cpu()?;
-    println!("PJRT platform: {}", engine.platform());
+    println!(
+        "compiled backends: native{}",
+        if cfg!(feature = "xla") { " + xla" } else { "" }
+    );
     for model in ["resnet", "vgg", "inception", "distilbert"] {
-        match ModelRuntime::load(&engine, &artifacts, model) {
-            Ok(rt) => println!(
-                "  {model:<11} nq={:<3} batch={} input={:?}",
-                rt.manifest.nq(),
-                rt.manifest.batch,
-                rt.manifest.input_shape
-            ),
-            Err(e) => println!("  {model:<11} UNAVAILABLE: {e}"),
+        print!("  {model:<11}");
+        match bskmq::backend::load(BackendKind::Native, &artifacts, model) {
+            Ok(b) => {
+                let m = b.manifest();
+                print!(
+                    " native[nq={} batch={} input={:?}]",
+                    m.nq(),
+                    m.batch,
+                    m.input_shape
+                );
+            }
+            Err(e) => print!(" native[UNAVAILABLE: {e}]"),
         }
+        #[cfg(feature = "xla")]
+        match bskmq::backend::load(BackendKind::Xla, &artifacts, model) {
+            Ok(_) => print!(" xla[ok]"),
+            Err(e) => print!(" xla[UNAVAILABLE: {e}]"),
+        }
+        println!();
     }
     Ok(())
 }

@@ -247,6 +247,78 @@ mod tests {
         }
     }
 
+    /// Constant-input calibration: every fitter must stay finite and
+    /// quantize back to (numerically) the constant, and the hardware
+    /// projection must not blow up on a zero-span ladder.
+    #[test]
+    fn constant_input_calibration_is_stable() {
+        let xs = vec![3.7f64; 5_000];
+        for m in crate::quant::Method::ALL {
+            for bits in [1u32, 3] {
+                let cb = m.fit_hw(&xs, bits);
+                assert_eq!(cb.levels(), 1 << bits, "{} {bits}b", m.name());
+                assert!(
+                    cb.centers.iter().all(|c| c.is_finite()),
+                    "{}: non-finite centers {:?}",
+                    m.name(),
+                    cb.centers
+                );
+                assert!(
+                    cb.refs.windows(2).all(|w| w[0] <= w[1]),
+                    "{}: refs not sorted",
+                    m.name()
+                );
+                let q = cb.quantize(3.7);
+                assert!(
+                    (q - 3.7).abs() < 1e-3,
+                    "{}: constant 3.7 quantized to {q}",
+                    m.name()
+                );
+            }
+        }
+    }
+
+    /// Duplicated centers (k-means empty clusters pad by repeating) must
+    /// survive the hardware projection: every ramp step stays >= one cell
+    /// (so refs become strictly increasing), the cell budget holds, and
+    /// centers stay monotone.
+    #[test]
+    fn projection_handles_empty_cluster_duplicates() {
+        let centers = [0.0, 0.0, 0.0, 1.0, 2.0, 2.0, 3.0, 5.0];
+        let ideal = Codebook::from_centers(&centers);
+        let span = ideal.refs[7] - ideal.refs[0];
+        let cb = ideal.project_to_hardware(3);
+        assert_eq!(cb.levels(), 8);
+        let budget = Codebook::cell_budget(3).unwrap() as f64;
+        let dv = span / budget;
+        for w in cb.refs.windows(2) {
+            assert!(w[1] - w[0] >= dv * 0.999, "step collapsed: {:?}", cb.refs);
+        }
+        let total: f64 = cb.refs.windows(2).map(|w| w[1] - w[0]).sum();
+        assert!(total <= span + 1e-9, "budget exceeded: {total} > {span}");
+        assert!(cb.centers.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    /// Floor-ADC semantics at exact reference values: an input equal to a
+    /// boundary midpoint belongs to the *upper* cell (x >= R_i), and an
+    /// equal-run of references resolves to the last of the run.
+    #[test]
+    fn index_of_exact_boundary_midpoints() {
+        let cb = Codebook::from_centers(&[-1.0, 0.0, 2.0, 5.0]);
+        // refs = [-1.0, -0.5, 1.0, 3.5]
+        assert_eq!(cb.index_of(-1.0), 0); // base reference
+        assert_eq!(cb.index_of(-0.5), 1); // exact midpoint -> upper cell
+        assert_eq!(cb.index_of(1.0), 2);
+        assert_eq!(cb.index_of(3.5), 3);
+        assert_eq!(cb.index_of(-100.0), 0); // below base clamps to 0
+        assert_eq!(cb.quantize(-0.5), 0.0);
+        // duplicated references (degenerate centers) pick the run's end
+        let dup = Codebook::from_centers(&[0.0, 0.0, 2.0]);
+        assert_eq!(dup.refs, vec![0.0, 0.0, 1.0]);
+        assert_eq!(dup.index_of(0.0), 1);
+        assert_eq!(dup.quantize(0.0), 0.0);
+    }
+
     #[test]
     fn padded_semantics() {
         let cb = Codebook::from_centers(&[0.0, 1.0]);

@@ -1,9 +1,21 @@
-//! PJRT runtime: loads the HLO-text artifacts lowered by aot.py, compiles
-//! them once on the CPU PJRT client, and executes them from the request
-//! path.  Python is never involved at runtime.
+//! PJRT runtime (feature `xla`): loads the HLO-text artifacts lowered by
+//! aot.py, compiles them once on the CPU PJRT client, and executes them
+//! from the request path.  Python is never involved at runtime.
+//!
+//! Builds without the `xla` feature omit this engine entirely; the
+//! [`crate::backend::native`] backend covers the same entry points in
+//! pure Rust.  The shared interchange types ([`CollectOut`],
+//! [`ProgrammedCodebooks`]) live in [`crate::backend`].
 
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod model;
 
+#[cfg(feature = "xla")]
 pub use engine::{Engine, Executable};
+#[cfg(feature = "xla")]
 pub use model::ModelRuntime;
+
+#[cfg(feature = "xla")]
+pub use crate::backend::{CollectOut, ProgrammedCodebooks};

@@ -9,67 +9,14 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::backend::{CollectOut, ProgrammedCodebooks};
 use crate::io::manifest::Manifest;
 use crate::io::weights::load_tensors;
-use crate::quant::codebook::Codebook;
 use crate::runtime::engine::{
     literal_f32, literal_i32, literal_scalar_f32, literal_scalar_u32,
     Engine, Executable,
 };
 use crate::tensor::Tensor;
-
-/// Output of one `collect` batch, sliced per the manifest layout.
-pub struct CollectOut {
-    pub logits: Vec<f32>,
-    /// per-quantized-layer activation subsamples
-    pub samples: Vec<Vec<f64>>,
-    /// per-layer crossbar-tile partial-sum absmax
-    pub tile_max: Vec<f64>,
-}
-
-/// Per-layer codebook pair programmed into the qfwd graph.
-pub struct ProgrammedCodebooks {
-    /// stacked padded NL refs/centers, shape [nq, 128] each
-    pub nl_refs: Tensor,
-    pub nl_centers: Tensor,
-    /// stacked per-tile (7-bit linear) refs/centers
-    pub tile_refs: Tensor,
-    pub tile_centers: Tensor,
-}
-
-impl ProgrammedCodebooks {
-    /// Stack per-layer codebooks into the graph's [nq, 128] tensors.
-    pub fn stack(
-        nl: &[Codebook],
-        tile: &[Codebook],
-        levels: usize,
-    ) -> Result<ProgrammedCodebooks> {
-        ensure!(nl.len() == tile.len(), "nl/tile layer count mismatch");
-        let nq = nl.len();
-        let mut buf = [
-            Vec::with_capacity(nq * levels),
-            Vec::with_capacity(nq * levels),
-            Vec::with_capacity(nq * levels),
-            Vec::with_capacity(nq * levels),
-        ];
-        for i in 0..nq {
-            let (r, c) = nl[i].padded(levels);
-            buf[0].extend(r);
-            buf[1].extend(c);
-            let (r, c) = tile[i].padded(levels);
-            buf[2].extend(r);
-            buf[3].extend(c);
-        }
-        let shape = vec![nq, levels];
-        let mut it = buf.into_iter();
-        Ok(ProgrammedCodebooks {
-            nl_refs: Tensor::new(shape.clone(), it.next().unwrap())?,
-            nl_centers: Tensor::new(shape.clone(), it.next().unwrap())?,
-            tile_refs: Tensor::new(shape.clone(), it.next().unwrap())?,
-            tile_centers: Tensor::new(shape, it.next().unwrap())?,
-        })
-    }
-}
 
 pub struct ModelRuntime {
     pub manifest: Manifest,
@@ -239,15 +186,4 @@ impl ModelRuntime {
         })
     }
 
-    /// Indices of the q-layer weight matrices within `weights()` (the
-    /// tensors Fig. 6 quantizes — biases and digital params stay float).
-    pub fn qweight_indices(&self) -> Vec<usize> {
-        self.manifest
-            .weight_args
-            .iter()
-            .enumerate()
-            .filter(|(_, wa)| wa.name.starts_with('q') && wa.name.ends_with("_w"))
-            .map(|(i, _)| i)
-            .collect()
-    }
 }

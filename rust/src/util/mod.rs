@@ -1,7 +1,7 @@
 //! Dependency-free utilities: PRNG, statistics, a minimal JSON parser and
 //! a micro-benchmark harness (this build environment is offline; only the
-//! `xla` + `anyhow` crates are vendored, so rand/serde/criterion substitutes
-//! live here).
+//! `anyhow` crate — plus `xla` behind the `xla` feature — is vendored, so
+//! rand/serde/criterion/rayon substitutes live here).
 
 pub mod bench;
 pub mod json;

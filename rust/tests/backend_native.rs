@@ -1,0 +1,272 @@
+//! Native-backend end-to-end tests on *synthetic* artifacts: a
+//! resnet-topology manifest + random weights + data splits are written
+//! from Rust (no Python, no HLO lowering), then the full pipeline —
+//! collect, Algorithm 1 calibration, quantized forward, weight
+//! quantization, inference server — runs through the NativeBackend.
+//! These tests always run; nothing here touches the XLA artifacts path.
+
+use bskmq::backend::{load, Backend, BackendKind};
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::coordinator::ptq::PtqEvaluator;
+use bskmq::coordinator::server::InferenceServer;
+use bskmq::data::dataset::ModelData;
+use bskmq::io::weights::save_tensors;
+use bskmq::quant::Method;
+use bskmq::tensor::Tensor;
+use bskmq::util::rng::Rng;
+
+const BATCH: usize = 4;
+const CLASSES: usize = 10;
+const SPL: usize = 4096;
+/// resnet qlayer table: (name, k, n, relu)
+const QLAYERS: [(&str, usize, usize, bool); 7] = [
+    ("conv0", 27, 16, true),
+    ("b1c1", 144, 16, true),
+    ("b1c2", 144, 16, false),
+    ("b2c1", 144, 32, true),
+    ("b2c2", 288, 32, false),
+    ("b2sc", 16, 32, false),
+    ("fc", 32, CLASSES, false),
+];
+
+/// Write a self-consistent synthetic resnet artifact set into `dir`.
+fn synth_artifacts(dir: &std::path::Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    let mut rng = Rng::new(42);
+
+    // --- weights container (he-init mats, zero biases)
+    let mut tensors: Vec<(String, Tensor)> = Vec::new();
+    let mut weight_args = String::new();
+    for (i, (name, k, n, _relu)) in QLAYERS.iter().enumerate() {
+        let scale = (2.0 / *k as f64).sqrt();
+        let w: Vec<f32> = (0..k * n)
+            .map(|_| (rng.gaussian() * scale) as f32)
+            .collect();
+        let b: Vec<f32> = (0..*n).map(|_| (rng.gaussian() * 0.05) as f32).collect();
+        let wname = format!("q{i:02}_{name}_w");
+        let bname = format!("q{i:02}_{name}_b");
+        if i > 0 {
+            weight_args.push(',');
+        }
+        weight_args.push_str(&format!(
+            r#"{{"name": "{wname}", "shape": [{k}, {n}]}},
+               {{"name": "{bname}", "shape": [{n}]}}"#
+        ));
+        tensors.push((wname, Tensor::new(vec![*k, *n], w).unwrap()));
+        tensors.push((bname, Tensor::new(vec![*n], b).unwrap()));
+    }
+    let refs: Vec<(&str, &Tensor)> =
+        tensors.iter().map(|(n, t)| (n.as_str(), t)).collect();
+    save_tensors(dir.join("resnet_weights.bin"), &refs).unwrap();
+
+    // --- manifest
+    let nq = QLAYERS.len();
+    let logits_len = BATCH * CLASSES;
+    let qlayers_json: Vec<String> = QLAYERS
+        .iter()
+        .map(|(name, k, n, relu)| {
+            format!(r#"{{"name": "{name}", "k": {k}, "n": {n}, "relu": {relu}}}"#)
+        })
+        .collect();
+    let manifest = format!(
+        r#"{{
+  "model": "resnet",
+  "batch": {BATCH},
+  "input_shape": [16, 16, 3],
+  "input_dtype": "f32",
+  "num_classes": {CLASSES},
+  "max_levels": 128,
+  "qlayers": [{}],
+  "weight_args": [{weight_args}],
+  "collect": {{
+    "out_len": {},
+    "logits_len": {logits_len},
+    "samples_per_layer": {SPL},
+    "tilemax_offset": {}
+  }},
+  "artifacts": {{
+    "collect": "resnet_collect.hlo.txt",
+    "qfwd": "resnet_qfwd.hlo.txt"
+  }}
+}}"#,
+        qlayers_json.join(","),
+        logits_len + nq * SPL + nq,
+        logits_len + nq * SPL,
+    );
+    std::fs::write(dir.join("resnet_manifest.json"), manifest).unwrap();
+
+    // --- data splits (smooth-ish random images)
+    let elems = 16 * 16 * 3;
+    let n_calib = 4 * BATCH;
+    let n_test = 2 * BATCH;
+    let gen_imgs = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n * elems).map(|_| (rng.gaussian() * 0.6) as f32).collect()
+    };
+    let x_calib =
+        Tensor::new(vec![n_calib, 16, 16, 3], gen_imgs(&mut rng, n_calib))
+            .unwrap();
+    let x_test =
+        Tensor::new(vec![n_test, 16, 16, 3], gen_imgs(&mut rng, n_test))
+            .unwrap();
+    let y_test: Vec<f32> =
+        (0..n_test).map(|_| (rng.below(CLASSES)) as f32).collect();
+    let y_test = Tensor::new(vec![n_test], y_test).unwrap();
+    save_tensors(
+        dir.join("resnet_data.bin"),
+        &[
+            ("x_calib", &x_calib),
+            ("x_test", &x_test),
+            ("y_test", &y_test),
+        ],
+    )
+    .unwrap();
+}
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bskmq_native_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    synth_artifacts(&dir);
+    dir
+}
+
+#[test]
+fn collect_layout_relu_and_tilemax() {
+    let dir = fresh_dir("collect");
+    let be = load(BackendKind::Native, &dir, "resnet").unwrap();
+    assert_eq!(be.name(), "native");
+    let m = be.manifest();
+    assert_eq!(m.nq(), QLAYERS.len());
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let out = be
+        .run_collect(ModelData::batch(&data.x_calib, 0, m.batch))
+        .unwrap();
+    assert_eq!(out.logits.len(), m.batch * m.num_classes);
+    assert_eq!(out.samples.len(), m.nq());
+    assert_eq!(out.tile_max.len(), m.nq());
+    for (i, q) in m.qlayers.iter().enumerate() {
+        assert_eq!(out.samples[i].len(), SPL, "layer {}", q.name);
+        if q.relu {
+            assert!(
+                out.samples[i].iter().all(|&v| v >= 0.0),
+                "relu layer {} has negative samples",
+                q.name
+            );
+        }
+        assert!(out.tile_max[i] > 0.0, "tile max of {} is zero", q.name);
+        assert!(out.samples[i].iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn qfwd_batches_determinism_and_noise() {
+    let dir = fresh_dir("qfwd");
+    let be = load(BackendKind::Native, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
+        .calibrate(&data, 3)
+        .unwrap();
+    let m = be.manifest();
+    let elems = m.input_elems();
+    let xb = ModelData::batch(&data.x_test, 0, m.batch);
+
+    // the native backend accepts any batch size, exactly
+    for n in [1usize, 3, m.batch] {
+        assert!(be.supports_batch(n));
+        let logits = be
+            .run_qfwd(&xb[..n * elems], &calib.programmed, 0.0, 7)
+            .unwrap();
+        assert_eq!(logits.len(), n * m.num_classes, "batch {n}");
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    // deterministic given (input, books, seed)...
+    let a = be.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap();
+    let b = be.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap();
+    assert_eq!(a, b);
+    // ...and batch-1 logits equal the first row of the batch run (no
+    // cross-sample coupling in the dataflow)
+    let one = be
+        .run_qfwd(&xb[..elems], &calib.programmed, 0.0, 7)
+        .unwrap();
+    assert_eq!(one, a[..m.num_classes].to_vec());
+    // heavy conversion noise must perturb the quantized logits
+    let noisy = be.run_qfwd(xb, &calib.programmed, 2.0, 7).unwrap();
+    assert_ne!(a, noisy, "2-LSB conversion noise changed nothing");
+
+    // weight quantization path (with_weights + qweight_indices)
+    let ev = PtqEvaluator::new(be.as_ref());
+    let wq = ev.quantize_weights(4).unwrap();
+    assert_eq!(wq.name(), "native");
+    let books = Calibrator::new(wq.as_ref(), Method::BsKmq, 3)
+        .calibrate(&data, 3)
+        .unwrap();
+    let r = PtqEvaluator::new(wq.as_ref())
+        .evaluate(&data, &books.programmed, 0.0, 2, 3)
+        .unwrap();
+    assert_eq!(r.samples, 2 * m.batch);
+    assert!(r.accuracy.is_finite());
+}
+
+/// The integer/codebook-domain forward at the ADC's maximum resolution
+/// (7-bit NL + 7-bit tile codebooks) must track the float forward within
+/// accumulated codebook quantization tolerance.
+#[test]
+fn high_resolution_qfwd_tracks_float_forward() {
+    let dir = fresh_dir("agree");
+    let be = load(BackendKind::Native, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let m = be.manifest();
+    // calibrate on the same batch we evaluate: tile ranges then cover the
+    // evaluated partial sums exactly
+    let calib = Calibrator::new(be.as_ref(), Method::Linear, 7)
+        .calibrate(&data, 3)
+        .unwrap();
+    let xb = ModelData::batch(&data.x_calib, 0, m.batch);
+    let float_logits = be.run_collect(xb).unwrap().logits;
+    let q_logits = be.run_qfwd(xb, &calib.programmed, 0.0, 1).unwrap();
+    assert_eq!(float_logits.len(), q_logits.len());
+    let absmax = float_logits
+        .iter()
+        .fold(0f32, |acc, v| acc.max(v.abs()));
+    let tol = 0.15 * (1.0 + absmax);
+    let mut worst = 0f32;
+    for (q, f) in q_logits.iter().zip(&float_logits) {
+        worst = worst.max((q - f).abs());
+    }
+    assert!(
+        worst <= tol,
+        "7-bit quantized forward drifted from float: max|diff| {worst} > {tol}"
+    );
+}
+
+/// Acceptance: the inference server starts and serves with the native
+/// backend in a directory that contains NO HLO artifacts at all.
+#[test]
+fn server_serves_natively_without_hlo_artifacts() {
+    let dir = fresh_dir("server");
+    assert!(
+        !dir.join("resnet_qfwd.hlo.txt").exists(),
+        "test dir must not contain lowered graphs"
+    );
+    let server = InferenceServer::start(
+        dir.clone(),
+        "resnet".into(),
+        BackendKind::Native,
+        Method::BsKmq,
+        3,
+        0.0,
+        2,
+    )
+    .unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let elems: usize = data.x_test.shape[1..].iter().product();
+    for i in 0..3 {
+        let x = data.x_test.data[i * elems..(i + 1) * elems].to_vec();
+        let logits = server.infer(x).unwrap();
+        assert_eq!(logits.len(), CLASSES);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+    let stats = server.stats.summary();
+    assert!(stats.contains("requests=3"), "{stats}");
+    assert!(stats.contains("p50="), "{stats}");
+}

@@ -1,16 +1,18 @@
-//! Integration tests over the full runtime pipeline: PJRT engine ->
+//! Integration tests over the full runtime pipeline: backend ->
 //! artifacts -> calibration -> PTQ -> server.  These require
 //! `make artifacts` to have run (they are the rust half of the paper's
 //! software evaluation) — they self-skip when artifacts are missing so
-//! plain `cargo test` works in a fresh checkout.
+//! plain `cargo test` works in a fresh checkout.  The backend follows
+//! `BSKMQ_BACKEND` (default auto: XLA when compiled in, native else);
+//! `backend_native.rs` covers the native engine on synthetic artifacts
+//! without any of this gating.
 
+use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::coordinator::ptq::PtqEvaluator;
 use bskmq::coordinator::server::InferenceServer;
 use bskmq::data::dataset::ModelData;
 use bskmq::quant::Method;
-use bskmq::runtime::engine::Engine;
-use bskmq::runtime::model::ModelRuntime;
 
 fn artifacts_ready() -> Option<std::path::PathBuf> {
     let dir = bskmq::artifacts_dir();
@@ -22,23 +24,24 @@ fn artifacts_ready() -> Option<std::path::PathBuf> {
     }
 }
 
+fn backend_for(dir: &std::path::Path, model: &str) -> Box<dyn Backend> {
+    load(BackendKind::from_env(), dir, model).unwrap()
+}
+
 #[test]
 fn collect_graph_layout_matches_manifest() {
     let Some(dir) = artifacts_ready() else { return };
-    let engine = Engine::cpu().unwrap();
-    let rt = ModelRuntime::load(&engine, &dir, "resnet").unwrap();
+    let be = backend_for(&dir, "resnet");
     let data = ModelData::load(&dir, "resnet").unwrap();
-    let out = rt
-        .run_collect(ModelData::batch(&data.x_calib, 0, rt.manifest.batch))
+    let m = be.manifest();
+    let out = be
+        .run_collect(ModelData::batch(&data.x_calib, 0, m.batch))
         .unwrap();
-    assert_eq!(out.samples.len(), rt.manifest.nq());
-    assert_eq!(out.tile_max.len(), rt.manifest.nq());
-    assert_eq!(
-        out.logits.len(),
-        rt.manifest.batch * rt.manifest.num_classes
-    );
+    assert_eq!(out.samples.len(), m.nq());
+    assert_eq!(out.tile_max.len(), m.nq());
+    assert_eq!(out.logits.len(), m.batch * m.num_classes);
     // ReLU'd layers must produce non-negative samples
-    for (i, q) in rt.manifest.qlayers.iter().enumerate() {
+    for (i, q) in m.qlayers.iter().enumerate() {
         if q.relu {
             assert!(
                 out.samples[i].iter().all(|&v| v >= 0.0),
@@ -53,14 +56,13 @@ fn collect_graph_layout_matches_manifest() {
 #[test]
 fn calibrate_then_ptq_beats_linear_at_3_bits() {
     let Some(dir) = artifacts_ready() else { return };
-    let engine = Engine::cpu().unwrap();
-    let rt = ModelRuntime::load(&engine, &dir, "resnet").unwrap();
+    let be = backend_for(&dir, "resnet");
     let data = ModelData::load(&dir, "resnet").unwrap();
-    let ev = PtqEvaluator::new(&rt);
-    let bs = Calibrator::new(&rt, Method::BsKmq, 3)
+    let ev = PtqEvaluator::new(be.as_ref());
+    let bs = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
         .calibrate(&data, 8)
         .unwrap();
-    let lin = Calibrator::new(&rt, Method::Linear, 3)
+    let lin = Calibrator::new(be.as_ref(), Method::Linear, 3)
         .calibrate(&data, 8)
         .unwrap();
     let acc_bs = ev
@@ -82,11 +84,10 @@ fn calibrate_then_ptq_beats_linear_at_3_bits() {
 #[test]
 fn noise_injection_degrades_gracefully() {
     let Some(dir) = artifacts_ready() else { return };
-    let engine = Engine::cpu().unwrap();
-    let rt = ModelRuntime::load(&engine, &dir, "resnet").unwrap();
+    let be = backend_for(&dir, "resnet");
     let data = ModelData::load(&dir, "resnet").unwrap();
-    let ev = PtqEvaluator::new(&rt);
-    let bs = Calibrator::new(&rt, Method::BsKmq, 4)
+    let ev = PtqEvaluator::new(be.as_ref());
+    let bs = Calibrator::new(be.as_ref(), Method::BsKmq, 4)
         .calibrate(&data, 8)
         .unwrap();
     let clean = ev
@@ -111,13 +112,12 @@ fn noise_injection_degrades_gracefully() {
 #[test]
 fn weight_quantization_small_loss_at_2bit() {
     let Some(dir) = artifacts_ready() else { return };
-    let engine = Engine::cpu().unwrap();
-    let rt = ModelRuntime::load(&engine, &dir, "resnet").unwrap();
+    let be = backend_for(&dir, "resnet");
     let data = ModelData::load(&dir, "resnet").unwrap();
-    let bs = Calibrator::new(&rt, Method::BsKmq, 3)
+    let bs = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
         .calibrate(&data, 8)
         .unwrap();
-    let ev = PtqEvaluator::new(&rt);
+    let ev = PtqEvaluator::new(be.as_ref());
     let base = ev
         .evaluate(&data, &bs.programmed, 0.0, 4, 2)
         .unwrap()
@@ -129,10 +129,10 @@ fn weight_quantization_small_loss_at_2bit() {
     for (bits, floor) in [(4u32, base - 0.05), (3, 0.45), (2, 0.15)] {
         let wq = ev.quantize_weights(bits).unwrap();
         // deployment order: calibrate ON the quantized-weight hardware
-        let books = Calibrator::new(&wq, Method::BsKmq, 3)
+        let books = Calibrator::new(wq.as_ref(), Method::BsKmq, 3)
             .calibrate(&data, 8)
             .unwrap();
-        let evw = PtqEvaluator::new(&wq);
+        let evw = PtqEvaluator::new(wq.as_ref());
         let quant = evw
             .evaluate(&data, &books.programmed, 0.0, 4, 2)
             .unwrap()
@@ -150,6 +150,7 @@ fn server_batches_and_answers() {
     let server = InferenceServer::start(
         dir.clone(),
         "resnet".into(),
+        BackendKind::from_env(),
         Method::BsKmq,
         3,
         0.0,
@@ -167,23 +168,68 @@ fn server_batches_and_answers() {
     }
     let stats = server.stats.summary();
     assert!(stats.contains("requests=5"), "{stats}");
+    assert!(stats.contains("p50="), "{stats}");
 }
 
 #[test]
 fn all_four_models_run_qfwd() {
     let Some(dir) = artifacts_ready() else { return };
-    let engine = Engine::cpu().unwrap();
     for model in ["resnet", "vgg", "inception", "distilbert"] {
-        let rt = ModelRuntime::load(&engine, &dir, model).unwrap();
+        let be = backend_for(&dir, model);
         let data = ModelData::load(&dir, model).unwrap();
-        let calib = Calibrator::new(&rt, Method::BsKmq, 4)
+        let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 4)
             .calibrate(&data, 2)
             .unwrap();
-        let ev = PtqEvaluator::new(&rt);
+        let ev = PtqEvaluator::new(be.as_ref());
         let r = ev
             .evaluate(&data, &calib.programmed, 0.0, 1, 3)
             .unwrap();
-        assert_eq!(r.samples, rt.manifest.batch, "{model}");
+        assert_eq!(r.samples, be.manifest().batch, "{model}");
         assert!(r.accuracy.is_finite());
     }
+}
+
+/// Acceptance: with real artifacts present, the native integer backend's
+/// quantized forward agrees with the XLA engine's to within codebook
+/// quantization tolerance (only meaningful with `--features xla`).
+#[cfg(feature = "xla")]
+#[test]
+fn native_agrees_with_xla_qfwd() {
+    let Some(dir) = artifacts_ready() else { return };
+    let native = load(BackendKind::Native, &dir, "resnet").unwrap();
+    let xla = match load(BackendKind::Xla, &dir, "resnet") {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("SKIP: xla backend unavailable ({e:#})");
+            return;
+        }
+    };
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let calib = Calibrator::new(native.as_ref(), Method::BsKmq, 3)
+        .calibrate(&data, 8)
+        .unwrap();
+    let m = native.manifest();
+    let xb = ModelData::batch(&data.x_test, 0, m.batch);
+    let a = native.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap();
+    let b = xla.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap();
+    let row = bskmq::experiments::backends_agree::compare(
+        "resnet",
+        &a,
+        &b,
+        m.batch,
+        m.num_classes,
+    );
+    // logits are themselves codebook centers; disagreements only arise
+    // when float summation order crosses a floor-ADC reference
+    assert!(
+        row.exact >= 0.9,
+        "only {:.1}% of logits identical (max|diff| {})",
+        row.exact * 100.0,
+        row.max_abs_diff
+    );
+    assert!(
+        row.argmax_match >= 0.9,
+        "argmax agreement {:.1}%",
+        row.argmax_match * 100.0
+    );
 }
