@@ -1,0 +1,62 @@
+//! Bench: replica-pool serving throughput vs replica count (the scaling
+//! the pool architecture buys on one box).  Runs on the trained
+//! artifacts when present, otherwise on the library's synthetic ones —
+//! no Python, no HLO needed.
+//!
+//!   cargo bench --bench serving
+//!   BSKMQ_THREADS=1 cargo bench --bench serving   # per-replica 1 thread
+
+use std::time::Instant;
+
+use bskmq::backend::BackendKind;
+use bskmq::coordinator::server::{ModelPool, PoolConfig};
+use bskmq::data::dataset::ModelData;
+use bskmq::data::synth;
+
+fn main() -> anyhow::Result<()> {
+    // trained artifacts when present, synthetic fallback otherwise
+    let artifacts = synth::ensure_artifacts()?;
+    println!("artifacts: {}", artifacts.display());
+    let data = ModelData::load(&artifacts, "resnet")?;
+    let in_elems: usize = data.x_test.shape[1..].iter().product();
+    let n_clients = 8usize;
+    let reqs_per_client = 64usize;
+
+    for replicas in [1usize, 2, 4] {
+        let cfg = PoolConfig {
+            backend: BackendKind::Native,
+            replicas,
+            queue_depth: 4096,
+            calib_batches: 2,
+            ..PoolConfig::default()
+        };
+        let pool =
+            ModelPool::start(artifacts.clone(), "resnet".to_string(), &cfg)?;
+        // warm up the whole pool once before timing
+        pool.infer(data.x_test.data[..in_elems].to_vec())?;
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..n_clients {
+                let client = pool.client();
+                let x_test = &data.x_test;
+                s.spawn(move || {
+                    for r in 0..reqs_per_client {
+                        let idx = (c * 31 + r * 7) % x_test.shape[0];
+                        let x = x_test.data
+                            [idx * in_elems..(idx + 1) * in_elems]
+                            .to_vec();
+                        client.infer(x).expect("bench request failed");
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let total = (n_clients * reqs_per_client) as f64;
+        println!(
+            "replicas {replicas}: {total:.0} reqs in {wall:.2}s -> {:7.1} req/s",
+            total / wall
+        );
+        println!("  {}", pool.stats.summary());
+    }
+    Ok(())
+}

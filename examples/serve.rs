@@ -1,69 +1,94 @@
-//! Serving example: start the batched inference server in-process, fire
-//! concurrent client threads at it, and report latency / throughput and
-//! the dynamic batcher's behaviour (full batches vs singles).
+//! Serving example: start a two-model replica-pool registry in-process,
+//! fire concurrent client threads at both models, and report latency /
+//! throughput, the per-replica batching behaviour, and admission
+//! control rejecting a burst against a tiny queue.  Falls back to
+//! synthetic artifacts when the trained ones are absent, so it runs in
+//! any checkout:
 //!
 //!   cargo run --release --example serve
+//!   BSKMQ_REPLICAS=4 cargo run --release --example serve
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
 use std::time::Instant;
 
 use bskmq::backend::BackendKind;
-use bskmq::coordinator::server::InferenceServer;
+use bskmq::coordinator::server::{ModelPool, ModelRegistry, PoolConfig};
 use bskmq::data::dataset::ModelData;
-use bskmq::quant::Method;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = bskmq::artifacts_dir();
-    let model = "resnet";
-    let kind = BackendKind::from_env();
+    // trained artifacts when present, synthetic fallback otherwise
+    let artifacts = bskmq::data::synth::ensure_artifacts()?;
+    println!("artifacts: {}", artifacts.display());
+    let replicas: usize = std::env::var("BSKMQ_REPLICAS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let mut cfg = PoolConfig {
+        backend: BackendKind::from_env(),
+        replicas,
+        queue_depth: 512,
+        ..PoolConfig::default()
+    };
+    let models: Vec<String> =
+        vec!["resnet".to_string(), "vgg".to_string()];
     println!(
-        "starting inference server ({model}, 3-bit BS-KMQ, {} backend)...",
-        kind.name()
+        "starting registry: {} x {replicas} replica(s), 3-bit BS-KMQ, {} backend",
+        models.join("+"),
+        cfg.backend.name()
     );
-    let server = InferenceServer::start(
-        artifacts.clone(),
-        model.into(),
-        kind,
-        Method::BsKmq,
-        3,
-        0.0,
-        8,
-    )?;
-
-    // real test inputs as the request stream
-    let data = ModelData::load(&artifacts, model)?;
-    let in_elems: usize = data.x_test.shape[1..].iter().product();
-    let n_requests = 256usize;
-    let n_clients = 8usize;
-
-    println!("firing {n_requests} requests from {n_clients} client threads");
-    let latency_us = Arc::new(AtomicU64::new(0));
-    let t0 = Instant::now();
-    std::thread::scope(|s| {
-        for c in 0..n_clients {
-            let tx = server.client();
-            let lat = latency_us.clone();
-            let x_test = &data.x_test;
-            s.spawn(move || {
-                for r in 0..n_requests / n_clients {
-                    let idx = (c * 97 + r * 13) % (x_test.shape[0]);
-                    let x =
-                        x_test.data[idx * in_elems..(idx + 1) * in_elems].to_vec();
-                    let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-                    let t = Instant::now();
-                    tx.send(bskmq::coordinator::server::Request {
-                        x,
-                        reply: reply_tx,
-                    })
-                    .unwrap();
-                    let logits = reply_rx.recv().unwrap();
-                    lat.fetch_add(t.elapsed().as_micros() as u64, Ordering::Relaxed);
-                    assert_eq!(logits.len(), 10);
-                }
-            });
+    let registry = match ModelRegistry::start(&artifacts, &models, &cfg) {
+        Ok(r) => r,
+        Err(e) if cfg.replicas > 1 => {
+            // e.g. the XLA engine cannot replicate; demo with one worker
+            eprintln!("{} replicas unavailable ({e:#}); using 1", cfg.replicas);
+            cfg.replicas = 1;
+            ModelRegistry::start(&artifacts, &models, &cfg)?
         }
-    });
+        Err(e) => return Err(e),
+    };
+
+    // real test inputs as the request stream, both models concurrently
+    let n_clients_per_model = 4usize;
+    let reqs_per_client = 32usize;
+    let n_requests = models.len() * n_clients_per_model * reqs_per_client;
+    println!(
+        "firing {n_requests} requests from {} client threads",
+        models.len() * n_clients_per_model
+    );
+    let latency_us = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        for model in &models {
+            let data = ModelData::load(&artifacts, model)?;
+            let in_elems: usize = data.x_test.shape[1..].iter().product();
+            let pool = registry
+                .get(model)
+                .expect("registry serves what it started");
+            // one shared copy of the test split per model
+            let x_test = std::sync::Arc::new(data.x_test);
+            for c in 0..n_clients_per_model {
+                let client = pool.client();
+                let lat = &latency_us;
+                let x_test = x_test.clone();
+                s.spawn(move || {
+                    for r in 0..reqs_per_client {
+                        let idx = (c * 97 + r * 13) % x_test.shape[0];
+                        let x = x_test.data
+                            [idx * in_elems..(idx + 1) * in_elems]
+                            .to_vec();
+                        let t = Instant::now();
+                        let logits = client.infer(x).expect("serve failed");
+                        lat.fetch_add(
+                            t.elapsed().as_micros() as u64,
+                            Ordering::Relaxed,
+                        );
+                        assert_eq!(logits.len(), client.num_classes());
+                    }
+                });
+            }
+        }
+        Ok(())
+    })?;
     let wall = t0.elapsed();
     let mean_lat_ms =
         latency_us.load(Ordering::Relaxed) as f64 / n_requests as f64 / 1e3;
@@ -73,6 +98,37 @@ fn main() -> anyhow::Result<()> {
         n_requests as f64 / wall.as_secs_f64(),
         mean_lat_ms
     );
-    println!("batcher: {}", server.stats.summary());
+    println!("{}", registry.summary());
+
+    // admission control: a depth-2 queue under a 64-burst rejects loudly
+    println!("\nadmission-control demo (queue depth 2, replicas 1):");
+    let tiny = ModelPool::start(
+        artifacts.clone(),
+        "resnet".to_string(),
+        &PoolConfig {
+            backend: cfg.backend,
+            replicas: 1,
+            queue_depth: 2,
+            calib_batches: 2,
+            ..PoolConfig::default()
+        },
+    )?;
+    let client = tiny.client();
+    let data = ModelData::load(&artifacts, "resnet")?;
+    let in_elems: usize = data.x_test.shape[1..].iter().product();
+    let mut kept = Vec::new();
+    for _ in 0..64 {
+        if let Ok(rx) = client.submit(data.x_test.data[..in_elems].to_vec()) {
+            kept.push(rx);
+        }
+    }
+    for rx in &kept {
+        let _ = rx.recv();
+    }
+    println!(
+        "  burst of 64: {} accepted (all answered), {} rejected",
+        kept.len(),
+        tiny.rejected()
+    );
     Ok(())
 }

@@ -142,6 +142,22 @@ pub trait Backend {
     /// quantization).
     fn with_weights(&self, weights: Vec<Tensor>) -> Result<Box<dyn Backend>>;
 
+    /// A cheap additional instance of this engine for a worker replica —
+    /// the software analogue of programming the same weights into another
+    /// crossbar bank.  Replicas share immutable state (the native backend
+    /// hands out `Arc` clones of its weight/manifest set) and must be
+    /// `Send` so the replica pool can move them onto worker threads.
+    ///
+    /// Engines that cannot replicate (the PJRT client's handles are
+    /// thread-bound) return an error; a pool configured with one replica
+    /// never calls this, so such engines still serve at `--replicas 1`.
+    fn replicate(&self) -> Result<Box<dyn Backend + Send>> {
+        anyhow::bail!(
+            "{} backend does not support replication; serve with --replicas 1",
+            self.name()
+        )
+    }
+
     /// Indices of the q-layer weight matrices within `weights()` (the
     /// tensors Fig. 6 quantizes — biases and digital params stay float).
     fn qweight_indices(&self) -> Vec<usize> {

@@ -12,6 +12,7 @@ pub mod models;
 pub mod ops;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
@@ -22,10 +23,14 @@ use crate::tensor::Tensor;
 
 pub use models::ModelKind;
 
+/// Immutable model state is behind `Arc`s, so [`Backend::replicate`]
+/// hands the replica pool additional instances that share one weight set
+/// instead of re-reading the container per worker.
+#[derive(Clone)]
 pub struct NativeBackend {
-    manifest: Manifest,
+    manifest: Arc<Manifest>,
     /// weight tensors in graph argument order
-    weights: Vec<Tensor>,
+    weights: Arc<Vec<Tensor>>,
     kind: ModelKind,
 }
 
@@ -76,8 +81,8 @@ impl NativeBackend {
             manifest.nq()
         );
         Ok(NativeBackend {
-            manifest,
-            weights,
+            manifest: Arc::new(manifest),
+            weights: Arc::new(weights),
             kind,
         })
     }
@@ -100,7 +105,7 @@ impl Backend for NativeBackend {
     }
 
     fn manifest(&self) -> &Manifest {
-        &self.manifest
+        self.manifest.as_ref()
     }
 
     fn supports_batch(&self, n: usize) -> bool {
@@ -108,7 +113,7 @@ impl Backend for NativeBackend {
     }
 
     fn run_collect(&self, x: &[f32]) -> Result<CollectOut> {
-        let m = &self.manifest;
+        let m: &Manifest = &self.manifest;
         ensure!(
             x.len() == m.batch * m.input_elems(),
             "collect input len {} != batch {} x {:?}",
@@ -118,7 +123,7 @@ impl Backend for NativeBackend {
         );
         let mut ctx = models::ForwardCtx::new(
             m,
-            &self.weights,
+            self.weights.as_slice(),
             models::Mode::Collect {
                 samples: Vec::with_capacity(m.nq()),
                 tile_max: Vec::with_capacity(m.nq()),
@@ -142,7 +147,7 @@ impl Backend for NativeBackend {
         noise_std: f32,
         seed: u32,
     ) -> Result<Vec<f32>> {
-        let m = &self.manifest;
+        let m: &Manifest = &self.manifest;
         self.check_books(books)?;
         let elems = m.input_elems();
         ensure!(
@@ -154,7 +159,7 @@ impl Backend for NativeBackend {
         let batch = x.len() / elems;
         let mut ctx = models::ForwardCtx::new(
             m,
-            &self.weights,
+            self.weights.as_slice(),
             models::Mode::Quant {
                 books,
                 noise_std,
@@ -166,10 +171,18 @@ impl Backend for NativeBackend {
     }
 
     fn weights(&self) -> &[Tensor] {
-        &self.weights
+        self.weights.as_slice()
     }
 
     fn with_weights(&self, weights: Vec<Tensor>) -> Result<Box<dyn Backend>> {
-        Ok(Box::new(Self::from_parts(self.manifest.clone(), weights)?))
+        Ok(Box::new(Self::from_parts(
+            (*self.manifest).clone(),
+            weights,
+        )?))
+    }
+
+    fn replicate(&self) -> Result<Box<dyn Backend + Send>> {
+        // `Arc` clones of the shared weight/manifest set: O(1), no disk
+        Ok(Box::new(self.clone()))
     }
 }

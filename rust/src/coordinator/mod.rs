@@ -2,7 +2,8 @@
 //! calibration batches through the `collect` graph, run Algorithm 1 per
 //! layer, program the NL-ADC codebooks, evaluate PTQ accuracy through the
 //! `qfwd` graph (optionally with circuit-derived conversion noise and
-//! quantized weights), and serve batched inference requests.
+//! quantized weights), and serve inference from a multi-model,
+//! multi-replica pool with admission control.
 
 pub mod calibrate;
 pub mod ptq;
@@ -10,4 +11,7 @@ pub mod server;
 
 pub use calibrate::{CalibrationResult, Calibrator};
 pub use ptq::{PtqEvaluator, PtqResult};
-pub use server::{InferenceServer, ServerStats};
+pub use server::{
+    AdmissionError, InferenceServer, ModelPool, ModelRegistry, PoolClient,
+    PoolConfig, ServerStats,
+};

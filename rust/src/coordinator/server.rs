@@ -1,52 +1,86 @@
-//! Batched inference server: the request path of the deployed system.
+//! Replica-pool inference serving: the request path of the deployed
+//! system.
 //!
-//! A dedicated inference thread owns the execution backend and the
-//! calibrated model (PJRT handles never cross threads; the native backend
-//! simply lives where its work is); intake happens over an mpsc channel
-//! from any number of client threads (or the TCP front in `main.rs`).  A
-//! dynamic batcher groups queued requests: full batches go through the
-//! batch-32 path, stragglers through whatever smaller batch the backend
-//! supports (the native backend runs any size exactly; the XLA backend
-//! falls back to its batch-1 graph or padding) — the vLLM-style policy
-//! scaled to this testbed.
+//! One process hosts a [`ModelRegistry`] of independently calibrated
+//! models.  Each model is served by a [`ModelPool`]: a shared **bounded**
+//! intake queue with admission control (a full queue rejects the request
+//! with an error instead of buffering without bound) feeding N worker
+//! replicas.  Every worker owns its own [`Backend`] instance — replicas
+//! come from [`Backend::replicate`], which for the native engine is an
+//! `Arc` clone of the shared weight set, the software analogue of
+//! programming the same weights into another crossbar bank — and batches
+//! greedily: pop everything queued up to the model batch size, top a
+//! partial batch up for a short window, execute, reply.  The vLLM-style
+//! dynamic batching of the single-thread server, scaled across replicas.
+//!
+//! Shutdown is an explicit signal on the queue, not a channel-hangup
+//! side effect: dropping a pool closes the queue, which wakes and drains
+//! every worker even while [`PoolClient`] handles are still alive in
+//! other threads (the bug the old mpsc-based server had).
+//!
+//! With zero conversion noise the quantized forward is a deterministic
+//! per-sample function (per-(layer, row) noise seeding, no cross-sample
+//! coupling), so logits are bit-identical regardless of replica count,
+//! batch composition, or thread interleaving — the property the
+//! concurrency suite (`rust/tests/server_concurrency.rs`) pins.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::backend::{Backend, BackendKind};
-use crate::coordinator::calibrate::Calibrator;
+use crate::backend::{Backend, BackendKind, ProgrammedCodebooks};
+use crate::coordinator::calibrate::{CalibrationResult, Calibrator};
 use crate::data::dataset::ModelData;
 use crate::quant::Method;
 
-pub struct Request {
-    pub x: Vec<f32>,
-    pub reply: mpsc::Sender<Vec<f32>>,
+/// Outcome of one request: logits, or a serving-side error message.
+pub type Reply = std::result::Result<Vec<f32>, String>;
+
+/// One queued inference request.  Internal: the only producer is
+/// [`PoolClient::submit`], which has already validated the input size.
+struct Request {
+    x: Vec<f32>,
+    reply: mpsc::Sender<Reply>,
 }
 
 /// Upper bound on retained latency samples (~8 MB worst case).
-const MAX_LATENCY_SAMPLES: usize = 1 << 20;
+pub const MAX_LATENCY_SAMPLES: usize = 1 << 20;
 
-/// Latency sample store: a ring over the most recent
-/// [`MAX_LATENCY_SAMPLES`] service times, so percentiles keep tracking a
-/// long-running server instead of freezing on the warm-up era.
-#[derive(Default)]
+/// Latency sample store: a ring over the most recent `capacity` service
+/// times, so percentiles keep tracking a long-running server instead of
+/// freezing on the warm-up era.
 struct LatencyRing {
     samples: Vec<u64>,
+    capacity: usize,
     /// next overwrite position once the ring is full
     head: usize,
 }
 
+impl Default for LatencyRing {
+    fn default() -> Self {
+        LatencyRing::with_capacity(MAX_LATENCY_SAMPLES)
+    }
+}
+
 impl LatencyRing {
+    fn with_capacity(capacity: usize) -> LatencyRing {
+        LatencyRing {
+            samples: Vec::new(),
+            capacity: capacity.max(1),
+            head: 0,
+        }
+    }
+
     fn push(&mut self, us: u64) {
-        if self.samples.len() < MAX_LATENCY_SAMPLES {
+        if self.samples.len() < self.capacity {
             self.samples.push(us);
         } else {
             self.samples[self.head] = us;
-            self.head = (self.head + 1) % MAX_LATENCY_SAMPLES;
+            self.head = (self.head + 1) % self.capacity;
         }
     }
 }
@@ -58,6 +92,8 @@ pub struct ServerStats {
     pub full_batches: AtomicU64,
     pub singles: AtomicU64,
     pub busy_us: AtomicU64,
+    /// requests refused by admission control (bounded queue full)
+    pub rejected: AtomicU64,
     /// per-request service latency samples (us)
     lat_us: Mutex<LatencyRing>,
 }
@@ -71,9 +107,23 @@ impl ServerStats {
         }
     }
 
+    /// Record one executed batch of `n` requests against the model's
+    /// compiled batch size.
+    pub fn record_batch(&self, n: usize, full_batch: usize, us: u64) {
+        self.requests.fetch_add(n as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        if n == full_batch {
+            self.full_batches.fetch_add(1, Ordering::Relaxed);
+        } else if n == 1 {
+            self.singles.fetch_add(1, Ordering::Relaxed);
+        }
+        self.busy_us.fetch_add(us, Ordering::Relaxed);
+        self.record_latency(us, n);
+    }
+
     /// Latency percentiles in milliseconds, one per requested quantile
     /// (all 0.0 when no samples yet).  One lock (copy only) + one sort
-    /// outside the lock, so the serving thread never stalls on a reader.
+    /// outside the lock, so the serving threads never stall on a reader.
     pub fn percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
         let raw = self.lat_us.lock().unwrap().samples.clone(); // memcpy only
         let mut sorted: Vec<f64> = raw.into_iter().map(|u| u as f64).collect();
@@ -97,12 +147,13 @@ impl ServerStats {
     pub fn summary(&self) -> String {
         let p = self.percentiles_ms(&[0.50, 0.95, 0.99]);
         format!(
-            "requests={} batches={} full={} singles={} busy={:.1}ms \
-             p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+            "requests={} batches={} full={} singles={} rejected={} \
+             busy={:.1}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.full_batches.load(Ordering::Relaxed),
             self.singles.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
             self.busy_us.load(Ordering::Relaxed) as f64 / 1e3,
             p[0],
             p[1],
@@ -111,131 +162,461 @@ impl ServerStats {
     }
 }
 
-pub struct InferenceServer {
-    tx: mpsc::Sender<Request>,
+/// Why intake refused a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// bounded queue at capacity — back off and retry
+    Full { depth: usize },
+    /// pool shut down
+    Closed,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::Full { depth } => write!(
+                f,
+                "queue full (depth {depth}): request rejected by admission \
+                 control"
+            ),
+            AdmissionError::Closed => write!(f, "server shut down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+struct QueueInner {
+    jobs: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Shared bounded work queue: the single intake point of a pool.
+/// `push` applies admission control; `close` is the explicit shutdown
+/// signal workers observe even while client handles stay alive.
+struct JobQueue {
+    inner: Mutex<QueueInner>,
+    ready: Condvar,
+    depth: usize,
+}
+
+impl JobQueue {
+    fn with_depth(depth: usize) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(QueueInner {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    /// Enqueue or reject immediately — never blocks, never buffers past
+    /// the configured depth.
+    fn push(&self, r: Request) -> std::result::Result<(), AdmissionError> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err(AdmissionError::Closed);
+        }
+        if q.jobs.len() >= self.depth {
+            return Err(AdmissionError::Full { depth: self.depth });
+        }
+        q.jobs.push_back(r);
+        drop(q);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Blocking batched pop: waits for at least one job, drains up to
+    /// `max`, then tops a partial batch up for at most `window`.  Returns
+    /// an empty vec only on shutdown with the queue fully drained.
+    fn pop_batch(&self, max: usize, window: Duration) -> Vec<Request> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if !q.jobs.is_empty() {
+                break;
+            }
+            if q.closed {
+                return Vec::new();
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+        let mut out = Vec::with_capacity(max.min(q.jobs.len()));
+        while out.len() < max {
+            match q.jobs.pop_front() {
+                Some(j) => out.push(j),
+                None => break,
+            }
+        }
+        if out.len() < max && !window.is_zero() {
+            let deadline = Instant::now() + window;
+            while out.len() < max && !q.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) =
+                    self.ready.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+                while out.len() < max {
+                    match q.jobs.pop_front() {
+                        Some(j) => out.push(j),
+                        None => break,
+                    }
+                }
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    fn close(&self) {
+        let mut q = self.inner.lock().unwrap();
+        q.closed = true;
+        drop(q);
+        self.ready.notify_all();
+    }
+}
+
+/// Per-pool serving configuration.  `replicas` and `queue_depth` are the
+/// scaling knobs; the rest mirrors the calibration pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    pub backend: BackendKind,
+    pub method: Method,
+    pub bits: u32,
+    pub noise_std: f32,
+    pub calib_batches: usize,
+    /// worker replicas, each owning its own `Backend` instance
+    pub replicas: usize,
+    /// bounded intake queue depth (admission control threshold)
+    pub queue_depth: usize,
+    /// how long a worker waits to top up a partial batch
+    pub batch_window: Duration,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            backend: BackendKind::Auto,
+            method: Method::BsKmq,
+            bits: 3,
+            noise_std: 0.0,
+            calib_batches: 8,
+            replicas: 1,
+            queue_depth: 256,
+            batch_window: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Cloneable intake handle: validates the input size, then submits
+/// through the pool's admission-controlled queue.  Holding one does NOT
+/// keep the pool alive — shutdown closes the queue underneath it and
+/// later submissions fail with [`AdmissionError::Closed`].
+#[derive(Clone)]
+pub struct PoolClient {
+    queue: Arc<JobQueue>,
+    stats: Arc<ServerStats>,
+    in_elems: usize,
+    num_classes: usize,
+}
+
+impl PoolClient {
+    /// Non-blocking submit under admission control; on acceptance the
+    /// receiver yields exactly one [`Reply`].  Rejections (queue full,
+    /// shutdown, wrong input size) surface as immediate errors — a
+    /// request is never silently dropped.
+    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Reply>> {
+        ensure!(
+            x.len() == self.in_elems,
+            "input has {} elements, model wants {}",
+            x.len(),
+            self.in_elems
+        );
+        let (tx, rx) = mpsc::channel();
+        match self.queue.push(Request { x, reply: tx }) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                if matches!(e, AdmissionError::Full { .. }) {
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(anyhow::Error::new(e))
+            }
+        }
+    }
+
+    /// Blocking request: submit, then wait for the logits.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        let rx = self.submit(x)?;
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(Ok(logits)) => Ok(logits),
+            Ok(Err(msg)) => bail!("inference failed: {msg}"),
+            Err(_) => bail!("request dropped or timed out"),
+        }
+    }
+
+    /// Logit vector length of the served model.
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Per-sample input element count of the served model.
+    pub fn in_elems(&self) -> usize {
+        self.in_elems
+    }
+}
+
+/// What the coordinator thread reports back once serving can start.
+struct PoolReady {
+    engine: String,
+    in_elems: usize,
+    num_classes: usize,
+    batch: usize,
+}
+
+/// One model's serving pool: N replica workers behind a bounded queue.
+pub struct ModelPool {
+    pub model: String,
+    queue: Arc<JobQueue>,
+    /// pool-wide aggregate (every worker records here too)
     pub stats: Arc<ServerStats>,
+    /// per-replica counters, index = replica id
+    pub replica_stats: Vec<Arc<ServerStats>>,
+    engine: String,
+    in_elems: usize,
+    num_classes: usize,
+    batch: usize,
     handle: Option<std::thread::JoinHandle<Result<()>>>,
 }
 
-impl InferenceServer {
-    /// Start the inference thread: load the selected backend, calibrate
-    /// `bits`-bit codebooks on `calib_batches`, then serve until dropped.
+impl ModelPool {
+    /// Start the pool: a coordinator thread loads the backend, calibrates
+    /// `cfg.bits`-bit codebooks on `cfg.calib_batches` batches, spawns
+    /// `cfg.replicas - 1` additional workers over [`Backend::replicate`]
+    /// clones, then serves as worker 0 until the pool is dropped.
     pub fn start(
         artifacts: std::path::PathBuf,
         model: String,
-        backend: BackendKind,
-        method: Method,
-        bits: u32,
-        noise_std: f32,
-        calib_batches: usize,
-    ) -> Result<InferenceServer> {
-        let (tx, rx) = mpsc::channel::<Request>();
+        cfg: &PoolConfig,
+    ) -> Result<ModelPool> {
+        let cfg = *cfg;
+        ensure!(cfg.replicas >= 1, "pool needs at least one replica");
+        let queue = Arc::new(JobQueue::with_depth(cfg.queue_depth));
         let stats = Arc::new(ServerStats::default());
+        let replica_stats: Vec<Arc<ServerStats>> = (0..cfg.replicas)
+            .map(|_| Arc::new(ServerStats::default()))
+            .collect();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<PoolReady>>();
+
+        let m_name = model.clone();
+        let q = queue.clone();
         let st = stats.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
+        let rst = replica_stats.clone();
         let handle = std::thread::spawn(move || -> Result<()> {
-            let setup = (|| -> Result<(Box<dyn Backend>, ModelData)> {
-                let be = crate::backend::load(backend, &artifacts, &model)?;
-                let data = ModelData::load(&artifacts, &model)?;
-                Ok((be, data))
-            })();
-            let (be, data) = match setup {
+            // setup: load + calibrate, reporting failure instead of
+            // leaving the caller blocked
+            let (be, calib) = match pool_setup(&cfg, &artifacts, &m_name) {
                 Ok(v) => v,
                 Err(e) => {
-                    let _ = ready_tx.send(Err(anyhow::anyhow!("{e}")));
+                    let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
                     return Err(e);
                 }
             };
-            let calib = match Calibrator::new(be.as_ref(), method, bits)
-                .calibrate(&data, calib_batches)
-            {
-                Ok(c) => c,
-                Err(e) => {
-                    let _ = ready_tx.send(Err(anyhow::anyhow!("{e}")));
-                    return Err(e);
-                }
-            };
-            let _ = ready_tx.send(Ok(be.name().to_string()));
-            serve_loop(be.as_ref(), &calib.programmed, noise_std, rx, &st)
+            let books = Arc::new(calib.programmed);
+            // replicas 1..N each own a cheap clone of the engine
+            let mut workers = Vec::new();
+            for (i, mine) in rst.iter().enumerate().skip(1) {
+                let rep = match be.replicate() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let e = e.context(format!(
+                            "cannot serve '{m_name}' with {} replicas",
+                            cfg.replicas
+                        ));
+                        let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                        q.close();
+                        for w in workers {
+                            let _ = w.join();
+                        }
+                        return Err(e);
+                    }
+                };
+                let q = q.clone();
+                let st = st.clone();
+                let mine = mine.clone();
+                let books = books.clone();
+                workers.push(std::thread::spawn(move || {
+                    worker_loop(
+                        rep.as_ref(),
+                        &books,
+                        cfg.noise_std,
+                        &q,
+                        cfg.batch_window,
+                        i as u32,
+                        &mine,
+                        &st,
+                    );
+                }));
+            }
+            let m = be.manifest();
+            let _ = ready_tx.send(Ok(PoolReady {
+                engine: be.name().to_string(),
+                in_elems: m.input_elems(),
+                num_classes: m.num_classes,
+                batch: m.batch,
+            }));
+            // worker 0 serves on the coordinator thread (PJRT handles
+            // never cross threads; the native replicas simply live where
+            // their work is)
+            worker_loop(
+                be.as_ref(),
+                &books,
+                cfg.noise_std,
+                &q,
+                cfg.batch_window,
+                0,
+                &rst[0],
+                &st,
+            );
+            for w in workers {
+                let _ = w.join();
+            }
+            Ok(())
         });
-        let engine = ready_rx
-            .recv()
-            .context("inference thread died during setup")??;
-        eprintln!("inference server ready ({engine} backend)");
-        Ok(InferenceServer {
-            tx,
+
+        let ready = match ready_rx.recv() {
+            Ok(Ok(r)) => r,
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                return Err(e);
+            }
+            Err(_) => {
+                let _ = handle.join();
+                bail!("pool coordinator died during setup");
+            }
+        };
+        Ok(ModelPool {
+            model,
+            queue,
             stats,
+            replica_stats,
+            engine: ready.engine,
+            in_elems: ready.in_elems,
+            num_classes: ready.num_classes,
+            batch: ready.batch,
             handle: Some(handle),
         })
     }
 
-    /// Blocking request: returns the logits for one input.
+    /// Clone-able intake handle for client threads.
+    pub fn client(&self) -> PoolClient {
+        PoolClient {
+            queue: self.queue.clone(),
+            stats: self.stats.clone(),
+            in_elems: self.in_elems,
+            num_classes: self.num_classes,
+        }
+    }
+
+    /// Blocking request against this pool.
     pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Request { x, reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        reply_rx
-            .recv_timeout(Duration::from_secs(120))
-            .context("request dropped (bad input size?) or timed out")
+        self.client().infer(x)
     }
 
-    /// Clone the intake handle for concurrent client threads.
-    pub fn client(&self) -> mpsc::Sender<Request> {
-        self.tx.clone()
+    /// Execution engine serving this pool ("native", "xla").
+    pub fn engine(&self) -> &str {
+        &self.engine
     }
-}
 
-impl Drop for InferenceServer {
-    fn drop(&mut self) {
-        // closing the channel ends the serve loop
-        let (tx, _) = mpsc::channel();
-        let _ = std::mem::replace(&mut self.tx, tx);
+    /// Replica count.
+    pub fn replicas(&self) -> usize {
+        self.replica_stats.len()
+    }
+
+    /// Compiled batch size of the served model.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Requests refused by admission control so far.
+    pub fn rejected(&self) -> u64 {
+        self.stats.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Explicit shutdown: close the queue (rejecting new requests), wake
+    /// and drain every worker, join them.  Idempotent; also runs on Drop.
+    /// Live [`PoolClient`] handles cannot keep the pool alive.
+    pub fn shutdown(&mut self) {
+        self.queue.close();
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
     }
+
+    /// Pool summary: aggregate line plus one line per replica.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{} [{} backend, {} replica(s), queue depth {}]\n  all: {}",
+            self.model,
+            self.engine,
+            self.replicas(),
+            self.queue.depth,
+            self.stats.summary()
+        );
+        for (i, r) in self.replica_stats.iter().enumerate() {
+            s.push_str(&format!("\n  r{i}:  {}", r.summary()));
+        }
+        s
+    }
 }
 
-fn serve_loop(
+impl Drop for ModelPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Load + calibrate one model for a pool (runs on the coordinator
+/// thread so PJRT-style engines never cross threads).
+fn pool_setup(
+    cfg: &PoolConfig,
+    artifacts: &std::path::Path,
+    model: &str,
+) -> Result<(Box<dyn Backend>, CalibrationResult)> {
+    let be = crate::backend::load(cfg.backend, artifacts, model)?;
+    let data = ModelData::load(artifacts, model)?;
+    let calib = Calibrator::new(be.as_ref(), cfg.method, cfg.bits)
+        .calibrate(&data, cfg.calib_batches)?;
+    Ok((be, calib))
+}
+
+/// One worker replica: pop a batch, execute, reply, repeat until the
+/// queue closes and drains.  Backend failures answer the affected batch
+/// with errors and keep the worker alive.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
     backend: &dyn Backend,
-    books: &crate::backend::ProgrammedCodebooks,
+    books: &ProgrammedCodebooks,
     noise_std: f32,
-    rx: mpsc::Receiver<Request>,
-    stats: &ServerStats,
-) -> Result<()> {
-    let batch = backend.manifest().batch;
-    let classes = backend.manifest().num_classes;
-    let in_elems = backend.manifest().input_elems();
-    let mut seed = 1u32;
+    queue: &JobQueue,
+    window: Duration,
+    replica: u32,
+    mine: &ServerStats,
+    global: &ServerStats,
+) {
+    let m = backend.manifest();
+    let batch = m.batch;
+    let classes = m.num_classes;
+    let in_elems = m.input_elems();
+    let mut seed = replica.wrapping_mul(0x9E37);
     loop {
-        // block for the first request, then drain up to a full batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return Ok(()), // all senders dropped
-        };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + Duration::from_millis(2);
-        while pending.len() < batch {
-            match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
-                Ok(r) => pending.push(r),
-                Err(_) => break,
-            }
-        }
-        // drop wrong-sized requests (their reply sender drops, so the
-        // client sees an immediate error) instead of killing the server
-        pending.retain(|r| {
-            let ok = r.x.len() == in_elems;
-            if !ok {
-                eprintln!(
-                    "dropping request with {} elements (model wants {in_elems})",
-                    r.x.len()
-                );
-            }
-            ok
-        });
+        let pending = queue.pop_batch(batch, window);
         if pending.is_empty() {
-            continue;
+            return; // shutdown signal observed, queue drained
         }
         let t0 = Instant::now();
         seed = seed.wrapping_add(1);
@@ -251,20 +632,137 @@ fn serve_loop(
         for _ in n..run_n {
             x.extend_from_slice(&pending[0].x);
         }
-        let logits = backend.run_qfwd(&x, books, noise_std, seed)?;
-        for (i, r) in pending.iter().enumerate() {
-            let _ = r.reply.send(logits[i * classes..(i + 1) * classes].to_vec());
-        }
-        if n == batch {
-            stats.full_batches.fetch_add(1, Ordering::Relaxed);
-        } else if n == 1 {
-            stats.singles.fetch_add(1, Ordering::Relaxed);
-        }
+        let result = backend.run_qfwd(&x, books, noise_std, seed);
+        // record BEFORE replying: a client that just received its answer
+        // must already see itself in the counters
         let elapsed_us = t0.elapsed().as_micros() as u64;
-        stats.requests.fetch_add(n as u64, Ordering::Relaxed);
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.busy_us.fetch_add(elapsed_us, Ordering::Relaxed);
-        stats.record_latency(elapsed_us, n);
+        mine.record_batch(n, batch, elapsed_us);
+        global.record_batch(n, batch, elapsed_us);
+        match result {
+            Ok(logits) => {
+                for (i, r) in pending.iter().enumerate() {
+                    let _ = r
+                        .reply
+                        .send(Ok(logits[i * classes..(i + 1) * classes].to_vec()));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                eprintln!("worker r{replica}: batch of {n} failed: {msg}");
+                for r in &pending {
+                    let _ = r.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Several models served from one process, each behind its own
+/// [`ModelPool`].  Routing is by model name; the first model is the
+/// default route.
+pub struct ModelRegistry {
+    pools: Vec<ModelPool>,
+}
+
+impl ModelRegistry {
+    /// Load + calibrate every model sequentially; any failure aborts the
+    /// whole registry (fail fast beats serving a partial fleet silently).
+    pub fn start(
+        artifacts: &std::path::Path,
+        models: &[String],
+        cfg: &PoolConfig,
+    ) -> Result<ModelRegistry> {
+        ensure!(!models.is_empty(), "registry needs at least one model");
+        let mut pools: Vec<ModelPool> = Vec::with_capacity(models.len());
+        for name in models {
+            ensure!(
+                pools.iter().all(|p| &p.model != name),
+                "model '{name}' listed twice"
+            );
+            pools.push(ModelPool::start(
+                artifacts.to_path_buf(),
+                name.clone(),
+                cfg,
+            )?);
+        }
+        Ok(ModelRegistry { pools })
+    }
+
+    /// Pool by model name.
+    pub fn get(&self, model: &str) -> Option<&ModelPool> {
+        self.pools.iter().find(|p| p.model == model)
+    }
+
+    /// The default route (first model listed).
+    pub fn default_pool(&self) -> &ModelPool {
+        &self.pools[0]
+    }
+
+    pub fn pools(&self) -> &[ModelPool] {
+        &self.pools
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.pools.iter().map(|p| p.model.as_str()).collect()
+    }
+
+    /// Multi-line summary: per-pool aggregate + per-replica stats.
+    pub fn summary(&self) -> String {
+        let lines: Vec<String> =
+            self.pools.iter().map(|p| p.summary()).collect();
+        lines.join("\n")
+    }
+}
+
+/// Single-model compatibility front over [`ModelPool`] (the pre-pool
+/// API).  `start` keeps its historical signature; replica count and
+/// queue depth come from [`PoolConfig::default`] unless the pool API is
+/// used directly.
+pub struct InferenceServer {
+    pool: ModelPool,
+    pub stats: Arc<ServerStats>,
+}
+
+impl InferenceServer {
+    /// Start a one-model, default-config pool: load the selected backend,
+    /// calibrate `bits`-bit codebooks on `calib_batches`, then serve
+    /// until dropped.
+    pub fn start(
+        artifacts: std::path::PathBuf,
+        model: String,
+        backend: BackendKind,
+        method: Method,
+        bits: u32,
+        noise_std: f32,
+        calib_batches: usize,
+    ) -> Result<InferenceServer> {
+        let cfg = PoolConfig {
+            backend,
+            method,
+            bits,
+            noise_std,
+            calib_batches,
+            ..PoolConfig::default()
+        };
+        let pool = ModelPool::start(artifacts, model, &cfg)?;
+        eprintln!("inference server ready ({} backend)", pool.engine());
+        let stats = pool.stats.clone();
+        Ok(InferenceServer { pool, stats })
+    }
+
+    /// Blocking request: returns the logits for one input.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.pool.infer(x)
+    }
+
+    /// Clone-able intake handle for concurrent client threads.
+    pub fn client(&self) -> PoolClient {
+        self.pool.client()
+    }
+
+    /// The underlying pool (replica stats, admission counters).
+    pub fn pool(&self) -> &ModelPool {
+        &self.pool
     }
 }
 
@@ -284,5 +782,95 @@ mod tests {
         let s = st.summary();
         assert!(s.contains("p50="), "{s}");
         assert!(s.contains("p99="), "{s}");
+        assert!(s.contains("rejected=0"), "{s}");
+    }
+
+    /// Empty ring: every percentile is 0.0, for any quantile list.
+    #[test]
+    fn empty_ring_percentiles_are_zero() {
+        let st = ServerStats::default();
+        assert_eq!(
+            st.percentiles_ms(&[0.0, 0.25, 0.5, 0.95, 1.0]),
+            vec![0.0; 5]
+        );
+        assert_eq!(st.percentiles_ms(&[]), Vec::<f64>::new());
+    }
+
+    /// Small-capacity ring against a naive keep-the-last-K reference:
+    /// wraparound must retain exactly the most recent `capacity` samples.
+    #[test]
+    fn ring_wraparound_matches_naive_reference() {
+        let cap = 8;
+        let mut ring = LatencyRing::with_capacity(cap);
+        let feed: Vec<u64> = (0..31).map(|i| (i * 37 + 5) % 97).collect();
+        for &v in &feed {
+            ring.push(v);
+        }
+        assert_eq!(ring.samples.len(), cap, "ring exceeded its capacity");
+        let mut got = ring.samples.clone();
+        got.sort_unstable();
+        let mut want: Vec<u64> = feed[feed.len() - cap..].to_vec();
+        want.sort_unstable();
+        assert_eq!(got, want, "ring lost or kept the wrong samples");
+    }
+
+    /// Full-size ring: push past MAX_LATENCY_SAMPLES and check the
+    /// percentiles against a sort-everything reference over the retained
+    /// window (the last MAX samples).
+    #[test]
+    fn ring_wraps_past_max_and_percentiles_track_recent_window() {
+        let st = ServerStats::default();
+        let extra = 1234usize;
+        let total = MAX_LATENCY_SAMPLES + extra;
+        for i in 0..total {
+            st.record_latency(i as u64, 1);
+        }
+        assert_eq!(
+            st.lat_us.lock().unwrap().samples.len(),
+            MAX_LATENCY_SAMPLES,
+            "ring grew past its bound"
+        );
+        // retained window = values extra..total (the most recent MAX)
+        let window: Vec<f64> =
+            (extra..total).map(|v| v as f64).collect(); // already sorted
+        let qs = [0.0, 0.01, 0.5, 0.95, 1.0];
+        let got = st.percentiles_ms(&qs); // one sort for all quantiles
+        for (q, got) in qs.iter().zip(got) {
+            let want =
+                crate::util::stats::quantile_sorted(&window, *q) / 1e3;
+            assert!(
+                (got - want).abs() < 1e-6,
+                "q={q}: got {got} want {want}"
+            );
+        }
+    }
+
+    /// Bounded queue semantics: admission rejection at depth, explicit
+    /// close rejects producers and releases consumers.
+    #[test]
+    fn job_queue_admission_and_close() {
+        let q = JobQueue::with_depth(2);
+        let mk = || {
+            let (tx, rx) = mpsc::channel();
+            (Request { x: vec![0.0], reply: tx }, rx)
+        };
+        let (r1, _k1) = mk();
+        let (r2, _k2) = mk();
+        let (r3, _k3) = mk();
+        assert!(q.push(r1).is_ok());
+        assert!(q.push(r2).is_ok());
+        assert_eq!(
+            q.push(r3).unwrap_err(),
+            AdmissionError::Full { depth: 2 }
+        );
+        let got = q.pop_batch(8, Duration::ZERO);
+        assert_eq!(got.len(), 2, "drain returns everything queued");
+        q.close();
+        let (r4, _k4) = mk();
+        assert_eq!(q.push(r4).unwrap_err(), AdmissionError::Closed);
+        assert!(
+            q.pop_batch(8, Duration::from_millis(50)).is_empty(),
+            "closed+empty queue must release consumers immediately"
+        );
     }
 }

@@ -5,6 +5,7 @@
 
 pub mod activations;
 pub mod dataset;
+pub mod synth;
 
 pub use activations::{relu_activations, signed_activations, ActivationProfile};
 pub use dataset::ModelData;

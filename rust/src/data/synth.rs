@@ -1,0 +1,334 @@
+//! Pure-Rust synthetic artifact writer: a self-consistent manifest +
+//! weights container + data splits for every native model topology, with
+//! no Python and no HLO lowering.  This is what the native-backend tests,
+//! the concurrency soak suite and the serving benches run on when the
+//! real `make artifacts` outputs are absent — the shapes are miniature
+//! but the layer sequence matches `backend::native::models` exactly, so
+//! the full pipeline (collect -> Algorithm 1 -> qfwd -> replica pool)
+//! exercises the same code paths as the trained artifacts.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::io::weights::save_tensors;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Batch size baked into every synthetic manifest.
+pub const BATCH: usize = 4;
+/// Classifier width of every synthetic model.
+pub const CLASSES: usize = 10;
+/// Per-layer activation subsample length (collect layout).
+pub const SPL: usize = 4096;
+/// Calibration split size (supports up to 8 calibration batches).
+pub const N_CALIB: usize = 8 * BATCH;
+/// Test split size.
+pub const N_TEST: usize = 4 * BATCH;
+/// Vocabulary of the synthetic distilbert task.
+pub const BERT_VOCAB: usize = 32;
+/// Sequence length of the synthetic distilbert task.
+pub const BERT_SEQ: usize = 6;
+
+/// The mixture input family used by the property/fuzz tests: zero spike +
+/// gaussian body + occasional far outliers, with random parameters per
+/// call — the activation shape BS-KMQ is designed around.
+pub fn mixture_samples(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let spike_frac = rng.uniform() * 0.6;
+    let mu = rng.range(-2.0, 2.0);
+    let sigma = rng.range(0.1, 3.0);
+    let relu = rng.uniform() < 0.5;
+    (0..n)
+        .map(|_| {
+            let v = if rng.uniform() < spike_frac {
+                0.0
+            } else if rng.uniform() < 0.01 {
+                rng.normal(mu, sigma * 8.0)
+            } else {
+                rng.normal(mu, sigma)
+            };
+            if relu {
+                v.max(0.0)
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+/// One quantized MAC layer of a synthetic topology: (name, k, n, relu).
+type QSpec = (&'static str, usize, usize, bool);
+
+/// resnet-mini layer table (sequence consumed by `models::resnet`).
+const RESNET: [QSpec; 7] = [
+    ("conv0", 27, 16, true),
+    ("b1c1", 144, 16, true),
+    ("b1c2", 144, 16, false),
+    ("b2c1", 144, 32, true),
+    ("b2c2", 288, 32, false),
+    ("b2sc", 16, 32, false),
+    ("fc", 32, CLASSES, false),
+];
+
+/// vgg-mini: five 3x3 conv-relu layers (pool after conv1/conv3/conv4 per
+/// `models::vgg::POOL_AFTER`), flatten at 2x2x16, two dense layers.
+const VGG: [QSpec; 7] = [
+    ("conv0", 27, 8, true),
+    ("conv1", 72, 8, true),
+    ("conv2", 72, 16, true),
+    ("conv3", 144, 16, true),
+    ("conv4", 144, 16, true),
+    ("fc1", 64, 32, true),
+    ("fc2", 32, CLASSES, false),
+];
+
+/// inception-mini: stem + two 3-branch blocks (concat 4+8+4 -> 16 then
+/// 8+8+8 -> 24 channels) + classifier, consumed in `models::inception`
+/// order (b0, b1a, b1b, pp per block).
+const INCEPTION: [QSpec; 10] = [
+    ("stem", 27, 8, true),
+    ("i1b0", 8, 4, true),
+    ("i1b1a", 8, 4, true),
+    ("i1b1b", 36, 8, true),
+    ("i1pp", 8, 4, true),
+    ("i2b0", 16, 8, true),
+    ("i2b1a", 16, 4, true),
+    ("i2b1b", 36, 8, true),
+    ("i2pp", 16, 8, true),
+    ("fc", 24, CLASSES, false),
+];
+
+/// distilbert-mini: one encoder layer (q/k/v/o at d=8, ff 8->16->8) plus
+/// the classifier; digital embedding/positional/layernorm params ride in
+/// `weight_args` after the q-layer pairs.
+const DISTILBERT: [QSpec; 7] = [
+    ("l0_q", 8, 8, false),
+    ("l0_k", 8, 8, false),
+    ("l0_v", 8, 8, false),
+    ("l0_o", 8, 8, false),
+    ("l0_ff1", 8, 16, true),
+    ("l0_ff2", 16, 8, false),
+    ("cls", 8, CLASSES, false),
+];
+
+struct Topology {
+    qlayers: &'static [QSpec],
+    input_shape: &'static [usize],
+    /// extra non-MAC parameters: (name, shape)
+    digital: Vec<(String, Vec<usize>)>,
+    /// inputs are token ids rather than images
+    tokens: bool,
+}
+
+fn topology(model: &str) -> Result<Topology> {
+    let t = match model {
+        "resnet" => Topology {
+            qlayers: &RESNET,
+            input_shape: &[16, 16, 3],
+            digital: Vec::new(),
+            tokens: false,
+        },
+        "vgg" => Topology {
+            qlayers: &VGG,
+            input_shape: &[16, 16, 3],
+            digital: Vec::new(),
+            tokens: false,
+        },
+        "inception" => Topology {
+            qlayers: &INCEPTION,
+            input_shape: &[16, 16, 3],
+            digital: Vec::new(),
+            tokens: false,
+        },
+        "distilbert" => {
+            let d = DISTILBERT[0].2; // d_model = first projection width
+            Topology {
+                qlayers: &DISTILBERT,
+                input_shape: &[BERT_SEQ],
+                digital: vec![
+                    ("d_embed".into(), vec![BERT_VOCAB, d]),
+                    ("d_pos".into(), vec![BERT_SEQ, d]),
+                    ("d_l0_ln1_gamma".into(), vec![d]),
+                    ("d_l0_ln1_beta".into(), vec![d]),
+                    ("d_l0_ln2_gamma".into(), vec![d]),
+                    ("d_l0_ln2_beta".into(), vec![d]),
+                ],
+                tokens: true,
+            }
+        }
+        other => bail!("no synthetic topology for model '{other}'"),
+    };
+    Ok(t)
+}
+
+/// Write a self-consistent synthetic artifact set (`<model>_manifest.json`,
+/// `<model>_weights.bin`, `<model>_data.bin`) for one model into `dir`.
+/// Deterministic: same model + same `seed` -> bit-identical artifacts.
+pub fn write_model(dir: &Path, model: &str, seed: u64) -> Result<()> {
+    let topo = topology(model)?;
+    std::fs::create_dir_all(dir)?;
+    let mut rng = Rng::new(seed ^ 0x5EED_A171);
+
+    // --- weights container: he-init mats, small random biases, digital
+    // params (layernorm scales at 1, shifts at 0, embeddings gaussian)
+    let mut tensors: Vec<(String, Tensor)> = Vec::new();
+    let mut weight_args: Vec<String> = Vec::new();
+    for (i, (name, k, n, _relu)) in topo.qlayers.iter().enumerate() {
+        let scale = (2.0 / *k as f64).sqrt();
+        let w: Vec<f32> = (0..k * n)
+            .map(|_| (rng.gaussian() * scale) as f32)
+            .collect();
+        let b: Vec<f32> =
+            (0..*n).map(|_| (rng.gaussian() * 0.05) as f32).collect();
+        let wname = format!("q{i:02}_{name}_w");
+        let bname = format!("q{i:02}_{name}_b");
+        weight_args
+            .push(format!(r#"{{"name": "{wname}", "shape": [{k}, {n}]}}"#));
+        weight_args.push(format!(r#"{{"name": "{bname}", "shape": [{n}]}}"#));
+        tensors.push((wname, Tensor::new(vec![*k, *n], w)?));
+        tensors.push((bname, Tensor::new(vec![*n], b)?));
+    }
+    for (name, shape) in &topo.digital {
+        let len: usize = shape.iter().product();
+        let data: Vec<f32> = if name.contains("gamma") {
+            vec![1.0; len]
+        } else if name.contains("beta") {
+            vec![0.0; len]
+        } else {
+            (0..len).map(|_| (rng.gaussian() * 0.5) as f32).collect()
+        };
+        let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+        weight_args.push(format!(
+            r#"{{"name": "{name}", "shape": [{}]}}"#,
+            dims.join(", ")
+        ));
+        tensors.push((name.clone(), Tensor::new(shape.clone(), data)?));
+    }
+    let refs: Vec<(&str, &Tensor)> =
+        tensors.iter().map(|(n, t)| (n.as_str(), t)).collect();
+    save_tensors(dir.join(format!("{model}_weights.bin")), &refs)?;
+
+    // --- manifest (same JSON layout aot.py writes)
+    let nq = topo.qlayers.len();
+    let logits_len = BATCH * CLASSES;
+    let qlayers_json: Vec<String> = topo
+        .qlayers
+        .iter()
+        .map(|(name, k, n, relu)| {
+            format!(
+                r#"{{"name": "{name}", "k": {k}, "n": {n}, "relu": {relu}}}"#
+            )
+        })
+        .collect();
+    let shape_json: Vec<String> =
+        topo.input_shape.iter().map(|d| d.to_string()).collect();
+    let manifest = format!(
+        r#"{{
+  "model": "{model}",
+  "batch": {BATCH},
+  "input_shape": [{}],
+  "input_dtype": "f32",
+  "num_classes": {CLASSES},
+  "max_levels": 128,
+  "qlayers": [{}],
+  "weight_args": [{}],
+  "collect": {{
+    "out_len": {},
+    "logits_len": {logits_len},
+    "samples_per_layer": {SPL},
+    "tilemax_offset": {}
+  }},
+  "artifacts": {{
+    "collect": "{model}_collect.hlo.txt",
+    "qfwd": "{model}_qfwd.hlo.txt"
+  }}
+}}"#,
+        shape_json.join(", "),
+        qlayers_json.join(","),
+        weight_args.join(","),
+        logits_len + nq * SPL + nq,
+        logits_len + nq * SPL,
+    );
+    std::fs::write(dir.join(format!("{model}_manifest.json")), manifest)?;
+
+    // --- data splits: smooth-ish random images, or token-id sequences
+    let elems: usize = topo.input_shape.iter().product();
+    let gen = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n * elems)
+            .map(|_| {
+                if topo.tokens {
+                    rng.below(BERT_VOCAB) as f32
+                } else {
+                    (rng.gaussian() * 0.6) as f32
+                }
+            })
+            .collect()
+    };
+    let mut shape = vec![N_CALIB];
+    shape.extend_from_slice(topo.input_shape);
+    let x_calib = Tensor::new(shape, gen(&mut rng, N_CALIB))?;
+    let mut shape = vec![N_TEST];
+    shape.extend_from_slice(topo.input_shape);
+    let x_test = Tensor::new(shape, gen(&mut rng, N_TEST))?;
+    let y: Vec<f32> = (0..N_TEST).map(|_| rng.below(CLASSES) as f32).collect();
+    let y_test = Tensor::new(vec![N_TEST], y)?;
+    save_tensors(
+        dir.join(format!("{model}_data.bin")),
+        &[
+            ("x_calib", &x_calib),
+            ("x_test", &x_test),
+            ("y_test", &y_test),
+        ],
+    )?;
+    Ok(())
+}
+
+/// Write synthetic artifacts for every supported topology into `dir`.
+pub fn write_all(dir: &Path, seed: u64) -> Result<()> {
+    for model in ["resnet", "vgg", "inception", "distilbert"] {
+        write_model(dir, model, seed)?;
+    }
+    Ok(())
+}
+
+/// The trained artifacts directory when present, otherwise a synthetic
+/// set written under the system temp dir — the examples/benches
+/// fallback, so they run in any checkout without Python.
+pub fn ensure_artifacts() -> Result<std::path::PathBuf> {
+    let dir = crate::artifacts_dir();
+    if dir.join("resnet_manifest.json").exists() {
+        return Ok(dir);
+    }
+    let dir = std::env::temp_dir().join("bskmq_synth_artifacts");
+    write_all(&dir, 42)?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{load, Backend, BackendKind};
+    use crate::data::dataset::ModelData;
+
+    #[test]
+    fn all_topologies_load_and_forward() {
+        let dir =
+            std::env::temp_dir().join("bskmq_synth_smoke");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_all(&dir, 7).unwrap();
+        for model in ["resnet", "vgg", "inception", "distilbert"] {
+            let be = load(BackendKind::Native, &dir, model).unwrap();
+            let data = ModelData::load(&dir, model).unwrap();
+            let m = be.manifest();
+            assert_eq!(m.batch, BATCH, "{model}");
+            let out = be
+                .run_collect(ModelData::batch(&data.x_calib, 0, m.batch))
+                .unwrap();
+            assert_eq!(out.logits.len(), BATCH * CLASSES, "{model}");
+            assert!(
+                out.logits.iter().all(|v| v.is_finite()),
+                "{model} produced non-finite logits"
+            );
+        }
+    }
+}

@@ -20,7 +20,7 @@
 //!   Table 1 comparison against prior IMC designs.
 //! * [`coordinator`] — calibration orchestration (streaming Algorithm 1
 //!   over the `collect` graphs), PTQ evaluation, noise injection, and a
-//!   batched inference server.
+//!   multi-model replica-pool inference server with admission control.
 //! * [`experiments`] — one harness per paper table/figure.
 
 pub mod adc;

@@ -1,25 +1,31 @@
 //! BS-KMQ leader binary: experiment harnesses, the end-to-end pipeline
-//! and the batched inference server (TCP front).
+//! and the replica-pool inference server (TCP front).
 //!
 //! Usage:
 //!   bskmq exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|backends|all>
 //!   bskmq calibrate <model> <bits> [--backend B]   # print per-layer codebooks
-//!   bskmq serve [--addr 127.0.0.1:7878] [--model resnet] [--bits 3]
-//!               [--backend auto|native|xla]
+//!   bskmq serve [--addr 127.0.0.1:7878] [--models resnet,vgg] [--bits 3]
+//!               [--backend auto|native|xla] [--replicas N]
+//!               [--queue-depth N] [--calib-batches N]
+//!   bskmq synth <dir>                 # write synthetic artifacts (4 models)
 //!   bskmq info                        # artifacts + backend summary
 //!
 //! The execution backend defaults to `auto` (XLA when compiled in and
 //! loadable, the native integer IMC engine otherwise); `BSKMQ_BACKEND`
-//! sets the process-wide default.
+//! sets the process-wide default.  `--replicas` spawns that many worker
+//! replicas per model (native backends share one weight set via `Arc`);
+//! `--queue-depth` bounds each model's intake queue — a full queue
+//! rejects requests with an error line instead of buffering them.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
+use std::sync::atomic::Ordering;
 
 use anyhow::{Context, Result};
 
 use bskmq::backend::{Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
-use bskmq::coordinator::server::InferenceServer;
+use bskmq::coordinator::server::{ModelRegistry, PoolConfig};
 use bskmq::data::dataset::ModelData;
 use bskmq::quant::Method;
 
@@ -49,13 +55,27 @@ fn dispatch(args: &[String]) -> Result<()> {
             calibrate(model, bits, parse_backend_flag(args)?)
         }
         Some("serve") => serve(args),
+        Some("synth") => {
+            let dir = args.get(1).context(
+                "usage: bskmq synth <dir> (refuses to guess where to write)",
+            )?;
+            bskmq::data::synth::write_all(std::path::Path::new(dir), 42)?;
+            println!(
+                "wrote synthetic artifacts for resnet/vgg/inception/distilbert \
+                 into {dir}"
+            );
+            println!("serve them with: BSKMQ_ARTIFACTS={dir} bskmq serve ...");
+            Ok(())
+        }
         Some("info") => info(),
         _ => {
             eprintln!(
-                "usage: bskmq <exp|calibrate|serve|info> [...]\n\
+                "usage: bskmq <exp|calibrate|serve|synth|info> [...]\n\
                  \x20 exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|backends|all>\n\
                  \x20 calibrate <model> <bits> [--backend B]\n\
-                 \x20 serve [--addr A] [--model M] [--bits B] [--backend B]\n\
+                 \x20 serve [--addr A] [--models M1,M2] [--bits B] [--backend B]\n\
+                 \x20       [--replicas N] [--queue-depth N] [--calib-batches N]\n\
+                 \x20 synth <dir>\n\
                  \x20 info"
             );
             Ok(())
@@ -104,9 +124,11 @@ fn calibrate(model: &str, bits: u32, kind: BackendKind) -> Result<()> {
 
 fn serve(args: &[String]) -> Result<()> {
     let mut addr = "127.0.0.1:7878".to_string();
-    let mut model = "resnet".to_string();
-    let mut bits = 3u32;
-    let mut kind = BackendKind::from_env();
+    let mut models: Vec<String> = vec!["resnet".to_string()];
+    let mut cfg = PoolConfig {
+        backend: BackendKind::from_env(),
+        ..PoolConfig::default()
+    };
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
@@ -114,60 +136,112 @@ fn serve(args: &[String]) -> Result<()> {
                 addr = args.get(i + 1).context("--addr value")?.clone();
                 i += 2;
             }
-            "--model" => {
-                model = args.get(i + 1).context("--model value")?.clone();
+            "--model" | "--models" => {
+                models = args
+                    .get(i + 1)
+                    .context("--models value")?
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect();
                 i += 2;
             }
             "--bits" => {
-                bits = args.get(i + 1).context("--bits value")?.parse()?;
+                cfg.bits = args.get(i + 1).context("--bits value")?.parse()?;
                 i += 2;
             }
             "--backend" => {
-                kind = BackendKind::parse(
+                cfg.backend = BackendKind::parse(
                     args.get(i + 1).context("--backend value")?,
                 )?;
+                i += 2;
+            }
+            "--replicas" => {
+                cfg.replicas = args
+                    .get(i + 1)
+                    .context("--replicas value")?
+                    .parse()?;
+                i += 2;
+            }
+            "--queue-depth" => {
+                cfg.queue_depth = args
+                    .get(i + 1)
+                    .context("--queue-depth value")?
+                    .parse()?;
+                i += 2;
+            }
+            "--calib-batches" => {
+                cfg.calib_batches = args
+                    .get(i + 1)
+                    .context("--calib-batches value")?
+                    .parse()?;
                 i += 2;
             }
             other => anyhow::bail!("unknown serve flag '{other}'"),
         }
     }
-    let server = InferenceServer::start(
-        bskmq::artifacts_dir(),
-        model.clone(),
-        kind,
-        Method::BsKmq,
-        bits,
-        0.0,
-        8,
-    )?;
+    let registry =
+        ModelRegistry::start(&bskmq::artifacts_dir(), &models, &cfg)?;
     let listener = TcpListener::bind(&addr)?;
     println!(
-        "serving {model} ({bits}b BS-KMQ, {} backend) on {addr}",
-        kind.name()
+        "serving {} ({}b {}, {} replica(s)/model, queue depth {}) on {addr}",
+        registry.models().join("+"),
+        cfg.bits,
+        cfg.method.name(),
+        cfg.replicas,
+        cfg.queue_depth,
     );
-    println!("protocol: one line of comma-separated input floats -> one line of logits");
-    for stream in listener.incoming() {
-        // one misbehaving client must not take the server down: per-line
-        // errors answer on the wire, connection errors just end it
-        let stream = match stream {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("accept failed: {e}");
-                continue;
-            }
-        };
-        if let Err(e) = handle_client(&server, stream) {
-            eprintln!("client connection error: {e}");
+    println!(
+        "protocol: one line `[model:]f1,f2,...` -> one line of logits; \
+         `stats` -> pool summary; default model is {}",
+        registry.default_pool().model
+    );
+    // one thread per connection: the replica pool is the concurrency
+    // limiter, not the accept loop
+    std::thread::scope(|s| {
+        for stream in listener.incoming() {
+            // one misbehaving client must not take the server down:
+            // per-line errors answer on the wire, connection errors just
+            // end that session
+            let stream = match stream {
+                Ok(st) => st,
+                Err(e) => {
+                    eprintln!("accept failed: {e}");
+                    continue;
+                }
+            };
+            let registry = &registry;
+            s.spawn(move || {
+                if let Err(e) = handle_client(registry, stream) {
+                    eprintln!("client connection error: {e}");
+                }
+                // cheap atomic counters only — the full percentile
+                // summary (clone + sort per latency ring) stays behind
+                // the `stats` protocol command
+                let brief: Vec<String> = registry
+                    .pools()
+                    .iter()
+                    .map(|p| {
+                        format!(
+                            "{}:{}req/{}rej",
+                            p.model,
+                            p.stats.requests.load(Ordering::Relaxed),
+                            p.rejected()
+                        )
+                    })
+                    .collect();
+                println!("client done; {}", brief.join(" "));
+            });
         }
-        println!("client done; stats: {}", server.stats.summary());
-    }
+    });
     Ok(())
 }
 
-/// One TCP client session: lines of comma-separated floats in, lines of
-/// logits (or `error: ...`) out.  Returns Err only on connection IO.
+/// One TCP client session: lines of `[model:]` + comma-separated floats
+/// in, lines of logits (or `error: ...`) out.  Returns Err only on
+/// connection IO.
 fn handle_client(
-    server: &InferenceServer,
+    registry: &ModelRegistry,
     stream: std::net::TcpStream,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -177,8 +251,30 @@ fn handle_client(
         line.clear();
         reader.read_line(&mut line)? > 0
     } {
-        let parsed: std::result::Result<Vec<f32>, _> = line
-            .trim()
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if t == "stats" {
+            writeln!(out, "{}", registry.summary().replace('\n', " | "))?;
+            continue;
+        }
+        // route by `model:` prefix; bare lines go to the default pool
+        let (pool, payload) = match t.split_once(':') {
+            Some((name, rest)) => match registry.get(name) {
+                Some(p) => (p, rest),
+                None => {
+                    writeln!(
+                        out,
+                        "error: unknown model '{name}' (serving: {})",
+                        registry.models().join(",")
+                    )?;
+                    continue;
+                }
+            },
+            None => (registry.default_pool(), t),
+        };
+        let parsed: std::result::Result<Vec<f32>, _> = payload
             .split(',')
             .filter(|s| !s.is_empty())
             .map(|s| s.trim().parse::<f32>())
@@ -190,13 +286,13 @@ fn handle_client(
                 continue;
             }
         };
-        match server.infer(x) {
+        match pool.infer(x) {
             Ok(logits) => {
                 let s: Vec<String> =
                     logits.iter().map(|v| format!("{v:.6}")).collect();
                 writeln!(out, "{}", s.join(","))?;
             }
-            Err(e) => writeln!(out, "error: {e}")?,
+            Err(e) => writeln!(out, "error: {e:#}")?,
         }
     }
     Ok(())

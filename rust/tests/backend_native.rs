@@ -1,141 +1,34 @@
-//! Native-backend end-to-end tests on *synthetic* artifacts: a
-//! resnet-topology manifest + random weights + data splits are written
-//! from Rust (no Python, no HLO lowering), then the full pipeline —
-//! collect, Algorithm 1 calibration, quantized forward, weight
-//! quantization, inference server — runs through the NativeBackend.
-//! These tests always run; nothing here touches the XLA artifacts path.
+//! Native-backend end-to-end tests on *synthetic* artifacts: the
+//! library's own artifact writer (`bskmq::data::synth`) emits a
+//! manifest + random weights + data splits from Rust (no Python, no HLO
+//! lowering), then the full pipeline — collect, Algorithm 1 calibration,
+//! quantized forward, weight quantization, inference server — runs
+//! through the NativeBackend.  These tests always run; nothing here
+//! touches the XLA artifacts path.
 
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
-use bskmq::coordinator::ptq::PtqEvaluator;
+use bskmq::coordinator::ptq::{argmax, PtqEvaluator};
 use bskmq::coordinator::server::InferenceServer;
 use bskmq::data::dataset::ModelData;
-use bskmq::io::weights::save_tensors;
+use bskmq::data::synth;
 use bskmq::quant::Method;
-use bskmq::tensor::Tensor;
 use bskmq::util::rng::Rng;
 
-const BATCH: usize = 4;
-const CLASSES: usize = 10;
-const SPL: usize = 4096;
-/// resnet qlayer table: (name, k, n, relu)
-const QLAYERS: [(&str, usize, usize, bool); 7] = [
-    ("conv0", 27, 16, true),
-    ("b1c1", 144, 16, true),
-    ("b1c2", 144, 16, false),
-    ("b2c1", 144, 32, true),
-    ("b2c2", 288, 32, false),
-    ("b2sc", 16, 32, false),
-    ("fc", 32, CLASSES, false),
-];
-
-/// Write a self-consistent synthetic resnet artifact set into `dir`.
-fn synth_artifacts(dir: &std::path::Path) {
-    std::fs::create_dir_all(dir).unwrap();
-    let mut rng = Rng::new(42);
-
-    // --- weights container (he-init mats, zero biases)
-    let mut tensors: Vec<(String, Tensor)> = Vec::new();
-    let mut weight_args = String::new();
-    for (i, (name, k, n, _relu)) in QLAYERS.iter().enumerate() {
-        let scale = (2.0 / *k as f64).sqrt();
-        let w: Vec<f32> = (0..k * n)
-            .map(|_| (rng.gaussian() * scale) as f32)
-            .collect();
-        let b: Vec<f32> = (0..*n).map(|_| (rng.gaussian() * 0.05) as f32).collect();
-        let wname = format!("q{i:02}_{name}_w");
-        let bname = format!("q{i:02}_{name}_b");
-        if i > 0 {
-            weight_args.push(',');
-        }
-        weight_args.push_str(&format!(
-            r#"{{"name": "{wname}", "shape": [{k}, {n}]}},
-               {{"name": "{bname}", "shape": [{n}]}}"#
-        ));
-        tensors.push((wname, Tensor::new(vec![*k, *n], w).unwrap()));
-        tensors.push((bname, Tensor::new(vec![*n], b).unwrap()));
-    }
-    let refs: Vec<(&str, &Tensor)> =
-        tensors.iter().map(|(n, t)| (n.as_str(), t)).collect();
-    save_tensors(dir.join("resnet_weights.bin"), &refs).unwrap();
-
-    // --- manifest
-    let nq = QLAYERS.len();
-    let logits_len = BATCH * CLASSES;
-    let qlayers_json: Vec<String> = QLAYERS
-        .iter()
-        .map(|(name, k, n, relu)| {
-            format!(r#"{{"name": "{name}", "k": {k}, "n": {n}, "relu": {relu}}}"#)
-        })
-        .collect();
-    let manifest = format!(
-        r#"{{
-  "model": "resnet",
-  "batch": {BATCH},
-  "input_shape": [16, 16, 3],
-  "input_dtype": "f32",
-  "num_classes": {CLASSES},
-  "max_levels": 128,
-  "qlayers": [{}],
-  "weight_args": [{weight_args}],
-  "collect": {{
-    "out_len": {},
-    "logits_len": {logits_len},
-    "samples_per_layer": {SPL},
-    "tilemax_offset": {}
-  }},
-  "artifacts": {{
-    "collect": "resnet_collect.hlo.txt",
-    "qfwd": "resnet_qfwd.hlo.txt"
-  }}
-}}"#,
-        qlayers_json.join(","),
-        logits_len + nq * SPL + nq,
-        logits_len + nq * SPL,
-    );
-    std::fs::write(dir.join("resnet_manifest.json"), manifest).unwrap();
-
-    // --- data splits (smooth-ish random images)
-    let elems = 16 * 16 * 3;
-    let n_calib = 4 * BATCH;
-    let n_test = 2 * BATCH;
-    let gen_imgs = |rng: &mut Rng, n: usize| -> Vec<f32> {
-        (0..n * elems).map(|_| (rng.gaussian() * 0.6) as f32).collect()
-    };
-    let x_calib =
-        Tensor::new(vec![n_calib, 16, 16, 3], gen_imgs(&mut rng, n_calib))
-            .unwrap();
-    let x_test =
-        Tensor::new(vec![n_test, 16, 16, 3], gen_imgs(&mut rng, n_test))
-            .unwrap();
-    let y_test: Vec<f32> =
-        (0..n_test).map(|_| (rng.below(CLASSES)) as f32).collect();
-    let y_test = Tensor::new(vec![n_test], y_test).unwrap();
-    save_tensors(
-        dir.join("resnet_data.bin"),
-        &[
-            ("x_calib", &x_calib),
-            ("x_test", &x_test),
-            ("y_test", &y_test),
-        ],
-    )
-    .unwrap();
-}
-
-fn fresh_dir(tag: &str) -> std::path::PathBuf {
+fn fresh_dir(tag: &str, model: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("bskmq_native_{tag}"));
     let _ = std::fs::remove_dir_all(&dir);
-    synth_artifacts(&dir);
+    synth::write_model(&dir, model, 42).unwrap();
     dir
 }
 
 #[test]
 fn collect_layout_relu_and_tilemax() {
-    let dir = fresh_dir("collect");
+    let dir = fresh_dir("collect", "resnet");
     let be = load(BackendKind::Native, &dir, "resnet").unwrap();
     assert_eq!(be.name(), "native");
     let m = be.manifest();
-    assert_eq!(m.nq(), QLAYERS.len());
+    assert_eq!(m.nq(), 7);
     let data = ModelData::load(&dir, "resnet").unwrap();
     let out = be
         .run_collect(ModelData::batch(&data.x_calib, 0, m.batch))
@@ -144,7 +37,7 @@ fn collect_layout_relu_and_tilemax() {
     assert_eq!(out.samples.len(), m.nq());
     assert_eq!(out.tile_max.len(), m.nq());
     for (i, q) in m.qlayers.iter().enumerate() {
-        assert_eq!(out.samples[i].len(), SPL, "layer {}", q.name);
+        assert_eq!(out.samples[i].len(), synth::SPL, "layer {}", q.name);
         if q.relu {
             assert!(
                 out.samples[i].iter().all(|&v| v >= 0.0),
@@ -159,7 +52,7 @@ fn collect_layout_relu_and_tilemax() {
 
 #[test]
 fn qfwd_batches_determinism_and_noise() {
-    let dir = fresh_dir("qfwd");
+    let dir = fresh_dir("qfwd", "resnet");
     let be = load(BackendKind::Native, &dir, "resnet").unwrap();
     let data = ModelData::load(&dir, "resnet").unwrap();
     let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
@@ -207,12 +100,37 @@ fn qfwd_batches_determinism_and_noise() {
     assert!(r.accuracy.is_finite());
 }
 
+/// `Backend::replicate` hands out instances that share the weight set:
+/// same manifest, same weight tensors (bitwise), identical qfwd logits.
+#[test]
+fn replicate_shares_weights_and_agrees() {
+    let dir = fresh_dir("replicate", "resnet");
+    let be = load(BackendKind::Native, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
+        .calibrate(&data, 3)
+        .unwrap();
+    let rep = be.replicate().unwrap();
+    assert_eq!(rep.name(), "native");
+    assert_eq!(rep.manifest().nq(), be.manifest().nq());
+    assert_eq!(rep.weights().len(), be.weights().len());
+    for (a, b) in be.weights().iter().zip(rep.weights()) {
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.data, b.data);
+    }
+    let m = be.manifest();
+    let xb = ModelData::batch(&data.x_test, 0, m.batch);
+    let la = be.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap();
+    let lb = rep.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap();
+    assert_eq!(la, lb, "replica diverged from its source backend");
+}
+
 /// The integer/codebook-domain forward at the ADC's maximum resolution
 /// (7-bit NL + 7-bit tile codebooks) must track the float forward within
 /// accumulated codebook quantization tolerance.
 #[test]
 fn high_resolution_qfwd_tracks_float_forward() {
-    let dir = fresh_dir("agree");
+    let dir = fresh_dir("agree", "resnet");
     let be = load(BackendKind::Native, &dir, "resnet").unwrap();
     let data = ModelData::load(&dir, "resnet").unwrap();
     let m = be.manifest();
@@ -239,11 +157,96 @@ fn high_resolution_qfwd_tracks_float_forward() {
     );
 }
 
+/// Fuzz agreement across every native topology: seeded random-input
+/// families from the mixture generator (the same one the quantizer
+/// property tests use) through the integer path at max ADC resolution
+/// and zero conversion noise must reproduce the float path's argmax on
+/// every confidently-classified sample (float top-2 margin beyond the
+/// observed quantization drift) — and such samples must actually occur.
+#[test]
+fn fuzz_argmax_agreement_all_topologies() {
+    for (mi, model) in ["resnet", "vgg", "inception", "distilbert"]
+        .iter()
+        .enumerate()
+    {
+        let dir = fresh_dir(&format!("fuzz_{model}"), model);
+        let be = load(BackendKind::Native, &dir, model).unwrap();
+        let data = ModelData::load(&dir, model).unwrap();
+        let m = be.manifest();
+        let classes = m.num_classes;
+        let elems = m.input_elems();
+        let calib = Calibrator::new(be.as_ref(), Method::Linear, 7)
+            .calibrate(&data, 8)
+            .unwrap();
+        let mut rng = Rng::new(900 + mi as u64);
+        let mut total = 0usize;
+        let mut checked = 0usize;
+        for family in 0..4 {
+            let raw = synth::mixture_samples(&mut rng, m.batch * elems);
+            let x: Vec<f32> = if *model == "distilbert" {
+                // sequence model: map the mixture onto token ids
+                raw.iter()
+                    .map(|v| {
+                        ((v.abs() * 7.0) as usize % synth::BERT_VOCAB) as f32
+                    })
+                    .collect()
+            } else {
+                // image models: normalize each sample into the calibrated
+                // activation range so tile clipping stays physical
+                let mut x = Vec::with_capacity(raw.len());
+                for chunk in raw.chunks(elems) {
+                    let absmax = chunk
+                        .iter()
+                        .fold(0f64, |acc, v| acc.max(v.abs()));
+                    let scale = if absmax > 2.0 { 2.0 / absmax } else { 1.0 };
+                    x.extend(chunk.iter().map(|v| (v * scale) as f32));
+                }
+                x
+            };
+            let f_logits = be.run_collect(&x).unwrap().logits;
+            let q_logits =
+                be.run_qfwd(&x, &calib.programmed, 0.0, 1).unwrap();
+            assert_eq!(f_logits.len(), q_logits.len());
+            for s in 0..m.batch {
+                total += 1;
+                let fl = &f_logits[s * classes..(s + 1) * classes];
+                let ql = &q_logits[s * classes..(s + 1) * classes];
+                let top = argmax(fl);
+                let margin = fl
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != top)
+                    .fold(f32::NEG_INFINITY, |acc, (_, v)| acc.max(*v));
+                let margin = fl[top] - margin;
+                let drift = fl
+                    .iter()
+                    .zip(ql)
+                    .fold(0f32, |acc, (f, q)| acc.max((f - q).abs()));
+                if margin > 2.0 * drift + 1e-6 {
+                    checked += 1;
+                    assert_eq!(
+                        argmax(ql),
+                        top,
+                        "{model} family {family} sample {s}: integer path \
+                         flipped a confident argmax (margin {margin}, \
+                         drift {drift})"
+                    );
+                }
+            }
+        }
+        assert!(
+            checked * 4 >= total,
+            "{model}: only {checked}/{total} samples were confidently \
+             separated — agreement check has no teeth"
+        );
+    }
+}
+
 /// Acceptance: the inference server starts and serves with the native
 /// backend in a directory that contains NO HLO artifacts at all.
 #[test]
 fn server_serves_natively_without_hlo_artifacts() {
-    let dir = fresh_dir("server");
+    let dir = fresh_dir("server", "resnet");
     assert!(
         !dir.join("resnet_qfwd.hlo.txt").exists(),
         "test dir must not contain lowered graphs"
@@ -263,7 +266,7 @@ fn server_serves_natively_without_hlo_artifacts() {
     for i in 0..3 {
         let x = data.x_test.data[i * elems..(i + 1) * elems].to_vec();
         let logits = server.infer(x).unwrap();
-        assert_eq!(logits.len(), CLASSES);
+        assert_eq!(logits.len(), synth::CLASSES);
         assert!(logits.iter().all(|v| v.is_finite()));
     }
     let stats = server.stats.summary();

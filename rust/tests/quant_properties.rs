@@ -1,34 +1,13 @@
 //! Property-based tests on the quantizer/codebook invariants (proptest is
 //! not vendored offline; properties are checked over seeded random input
 //! families via the library's own PRNG — same spirit, deterministic).
+//! The mixture input family lives in `bskmq::data::synth` and is shared
+//! with the cross-backend fuzz agreement tests.
 
+use bskmq::data::synth::mixture_samples as random_samples;
 use bskmq::quant::codebook::Codebook;
 use bskmq::quant::Method;
 use bskmq::util::rng::Rng;
-
-fn random_samples(rng: &mut Rng, n: usize) -> Vec<f64> {
-    // mixture family: spike + gaussian + occasional outliers, random params
-    let spike_frac = rng.uniform() * 0.6;
-    let mu = rng.range(-2.0, 2.0);
-    let sigma = rng.range(0.1, 3.0);
-    let relu = rng.uniform() < 0.5;
-    (0..n)
-        .map(|_| {
-            let v = if rng.uniform() < spike_frac {
-                0.0
-            } else if rng.uniform() < 0.01 {
-                rng.normal(mu, sigma * 8.0)
-            } else {
-                rng.normal(mu, sigma)
-            };
-            if relu {
-                v.max(0.0)
-            } else {
-                v
-            }
-        })
-        .collect()
-}
 
 /// Quantized output is always one of the codebook centers.
 #[test]

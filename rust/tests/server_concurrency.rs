@@ -1,0 +1,336 @@
+//! Concurrency / agreement soak suite for the replica-pool server, on
+//! synthetic artifacts (no Python, no HLO).  Pins the serving-layer
+//! contract:
+//!
+//! * every accepted request gets exactly one reply, and the stats
+//!   counters account for every one of them;
+//! * logits are bit-identical regardless of replica count and thread
+//!   interleaving (zero conversion noise makes the quantized forward a
+//!   deterministic per-sample function);
+//! * a full bounded queue rejects with an error — requests are never
+//!   silently dropped and clients never hang;
+//! * dropping the server while client handles are still alive shuts the
+//!   pool down instead of hanging the serve loop (regression for the
+//!   old mpsc-hangup Drop).
+//!
+//! CI runs this suite with `BSKMQ_THREADS` at 1 and 8 to catch
+//! thread-count-dependent results.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use bskmq::backend::BackendKind;
+use bskmq::coordinator::server::{
+    AdmissionError, InferenceServer, ModelPool, ModelRegistry, PoolConfig,
+};
+use bskmq::data::dataset::ModelData;
+use bskmq::data::synth;
+use bskmq::quant::Method;
+
+const CLIENT_THREADS: usize = 16;
+const REQS_PER_THREAD: usize = 8;
+const UNIQUE_INPUTS: usize = 8;
+
+fn fresh_dir(tag: &str, models: &[&str]) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bskmq_conc_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    for m in models {
+        synth::write_model(&dir, m, 42).unwrap();
+    }
+    dir
+}
+
+fn native_cfg(replicas: usize, queue_depth: usize) -> PoolConfig {
+    PoolConfig {
+        backend: BackendKind::Native,
+        method: Method::BsKmq,
+        bits: 3,
+        noise_std: 0.0,
+        calib_batches: 2,
+        replicas,
+        queue_depth,
+        batch_window: Duration::from_millis(1),
+    }
+}
+
+/// Pull `UNIQUE_INPUTS` distinct test inputs out of the synthetic split.
+fn unique_inputs(dir: &std::path::Path, model: &str) -> Vec<Vec<f32>> {
+    let data = ModelData::load(dir, model).unwrap();
+    let elems: usize = data.x_test.shape[1..].iter().product();
+    (0..UNIQUE_INPUTS)
+        .map(|i| data.x_test.data[i * elems..(i + 1) * elems].to_vec())
+        .collect()
+}
+
+/// Soak one pool with `CLIENT_THREADS` threads and return the logits per
+/// unique input, after asserting the exactly-one-reply and accounting
+/// invariants.
+fn soak_pool(pool: &ModelPool, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let total = CLIENT_THREADS * REQS_PER_THREAD;
+    let replies: Mutex<Vec<(usize, Vec<f32>)>> =
+        Mutex::new(Vec::with_capacity(total));
+    std::thread::scope(|s| {
+        for t in 0..CLIENT_THREADS {
+            let client = pool.client();
+            let replies = &replies;
+            s.spawn(move || {
+                for r in 0..REQS_PER_THREAD {
+                    let idx = (t * 7 + r * 3) % UNIQUE_INPUTS;
+                    let rx = client
+                        .submit(inputs[idx].clone())
+                        .expect("queue sized for the whole soak");
+                    let reply = rx
+                        .recv_timeout(Duration::from_secs(120))
+                        .expect("accepted request must be answered");
+                    let logits =
+                        reply.expect("soak request failed server-side");
+                    assert_eq!(logits.len(), synth::CLASSES);
+                    assert!(logits.iter().all(|v| v.is_finite()));
+                    // exactly one reply: the worker dropped its sender
+                    // after answering, so a second receive disconnects
+                    assert!(
+                        rx.recv_timeout(Duration::from_millis(200)).is_err(),
+                        "request answered more than once"
+                    );
+                    replies.lock().unwrap().push((idx, logits));
+                }
+            });
+        }
+    });
+    let replies = replies.into_inner().unwrap();
+    assert_eq!(replies.len(), total, "a request went unanswered");
+
+    // stats account for every reply, globally and per replica
+    let stats_requests =
+        pool.stats.requests.load(std::sync::atomic::Ordering::SeqCst);
+    assert_eq!(stats_requests, total as u64, "stats lost requests");
+    let per_replica: u64 = pool
+        .replica_stats
+        .iter()
+        .map(|s| s.requests.load(std::sync::atomic::Ordering::SeqCst))
+        .sum();
+    assert_eq!(per_replica, total as u64, "replica stats don't add up");
+    assert_eq!(pool.rejected(), 0, "sized queue must not reject");
+
+    // bit-identical logits per input across every interleaving
+    let mut by_input: HashMap<usize, Vec<f32>> = HashMap::new();
+    for (idx, logits) in replies {
+        match by_input.entry(idx) {
+            Entry::Occupied(e) => assert_eq!(
+                e.get(),
+                &logits,
+                "input {idx}: logits depended on batch interleaving"
+            ),
+            Entry::Vacant(v) => {
+                v.insert(logits);
+            }
+        }
+    }
+    (0..UNIQUE_INPUTS)
+        .map(|i| by_input.remove(&i).expect("every input was exercised"))
+        .collect()
+}
+
+/// The headline soak: 16 client threads against replica counts 1 and 4;
+/// every request answered exactly once, logits bit-identical between the
+/// two pool shapes.
+#[test]
+fn soak_replica_counts_agree_bitwise() {
+    let dir = fresh_dir("soak", &["resnet"]);
+    let inputs = unique_inputs(&dir, "resnet");
+
+    let pool1 = ModelPool::start(
+        dir.clone(),
+        "resnet".into(),
+        &native_cfg(1, 4096),
+    )
+    .unwrap();
+    assert_eq!(pool1.replicas(), 1);
+    let logits1 = soak_pool(&pool1, &inputs);
+    drop(pool1);
+
+    let pool4 = ModelPool::start(
+        dir.clone(),
+        "resnet".into(),
+        &native_cfg(4, 4096),
+    )
+    .unwrap();
+    assert_eq!(pool4.replicas(), 4);
+    // with >1 replica, more than one worker must have actually served
+    let logits4 = soak_pool(&pool4, &inputs);
+    let active = pool4
+        .replica_stats
+        .iter()
+        .filter(|s| s.requests.load(std::sync::atomic::Ordering::SeqCst) > 0)
+        .count();
+    assert!(
+        active >= 2,
+        "only {active} of 4 replicas served any request"
+    );
+    drop(pool4);
+
+    for (i, (a, b)) in logits1.iter().zip(&logits4).enumerate() {
+        assert_eq!(
+            a, b,
+            "input {i}: replica count changed the logits bitwise"
+        );
+    }
+}
+
+/// Admission control: a depth-1 queue flooded from one thread must
+/// reject (as immediate errors, attributable to the queue) — and every
+/// *accepted* request must still be answered.  No hangs, no silent
+/// drops.
+#[test]
+fn queue_full_rejections_surface_as_errors() {
+    let dir = fresh_dir("reject", &["resnet"]);
+    let inputs = unique_inputs(&dir, "resnet");
+    let pool = ModelPool::start(
+        dir.clone(),
+        "resnet".into(),
+        &native_cfg(1, 1),
+    )
+    .unwrap();
+    let client = pool.client();
+
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..200 {
+        match client.submit(inputs[i % UNIQUE_INPUTS].clone()) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                let adm = e
+                    .downcast_ref::<AdmissionError>()
+                    .expect("rejection must be an AdmissionError");
+                assert_eq!(adm, &AdmissionError::Full { depth: 1 });
+                assert!(e.to_string().contains("queue full"), "{e}");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "depth-1 queue never rejected a 200-burst");
+    assert!(!accepted.is_empty(), "admission let nothing through");
+    for rx in accepted.iter() {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("accepted request must be answered, not dropped");
+        assert!(reply.is_ok(), "accepted request failed: {reply:?}");
+    }
+    assert_eq!(pool.rejected(), rejected, "rejection counter drifted");
+    let served =
+        pool.stats.requests.load(std::sync::atomic::Ordering::SeqCst);
+    assert_eq!(served, accepted.len() as u64);
+}
+
+/// Regression (old `InferenceServer::Drop`): senders cloned via
+/// `client()` used to keep the serve loop alive, hanging the join.  The
+/// explicit shutdown signal must win even with live client handles.
+#[test]
+fn drop_with_live_clients_does_not_hang() {
+    let dir = fresh_dir("drop", &["resnet"]);
+    let inputs = unique_inputs(&dir, "resnet");
+    let server = InferenceServer::start(
+        dir.clone(),
+        "resnet".into(),
+        BackendKind::Native,
+        Method::BsKmq,
+        3,
+        0.0,
+        2,
+    )
+    .unwrap();
+    let logits = server.infer(inputs[0].clone()).unwrap();
+    assert_eq!(logits.len(), synth::CLASSES);
+
+    // two live client handles on another thread outlive the server
+    let c1 = server.client();
+    let c2 = server.client();
+    let (done_tx, done_rx) = mpsc::channel::<()>();
+    std::thread::spawn(move || {
+        drop(server);
+        let _ = done_tx.send(());
+    });
+    assert!(
+        done_rx.recv_timeout(Duration::from_secs(60)).is_ok(),
+        "dropping the server hung while client handles were alive"
+    );
+    // the survivors get clean rejections, not hangs
+    for c in [c1, c2] {
+        let err = c.submit(inputs[0].clone()).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<AdmissionError>(),
+            Some(&AdmissionError::Closed),
+            "{err}"
+        );
+    }
+}
+
+/// Oversized/undersized inputs are refused at submit time with an error,
+/// never enqueued.
+#[test]
+fn wrong_sized_input_is_an_immediate_error() {
+    let dir = fresh_dir("badsize", &["resnet"]);
+    let pool = ModelPool::start(
+        dir.clone(),
+        "resnet".into(),
+        &native_cfg(1, 8),
+    )
+    .unwrap();
+    let client = pool.client();
+    let err = client.submit(vec![0.0; 3]).unwrap_err();
+    assert!(err.to_string().contains("elements"), "{err}");
+    assert_eq!(
+        pool.stats.requests.load(std::sync::atomic::Ordering::SeqCst),
+        0
+    );
+}
+
+/// Acceptance: one registry serving two models with two replicas each,
+/// under concurrent clients on both, with correct per-pool accounting
+/// and name routing.
+#[test]
+fn registry_serves_two_models_with_two_replicas() {
+    let dir = fresh_dir("registry", &["resnet", "vgg"]);
+    let models = vec!["resnet".to_string(), "vgg".to_string()];
+    let registry =
+        ModelRegistry::start(&dir, &models, &native_cfg(2, 1024)).unwrap();
+    assert_eq!(registry.models(), vec!["resnet", "vgg"]);
+    assert!(registry.get("inception").is_none());
+    assert_eq!(registry.default_pool().model, "resnet");
+
+    let per_model = 4 * REQS_PER_THREAD;
+    std::thread::scope(|s| {
+        for model in ["resnet", "vgg"] {
+            let inputs = unique_inputs(&dir, model);
+            let pool = registry.get(model).unwrap();
+            for t in 0..4 {
+                let client = pool.client();
+                let inputs = inputs.clone();
+                s.spawn(move || {
+                    for r in 0..REQS_PER_THREAD {
+                        let idx = (t * 5 + r) % UNIQUE_INPUTS;
+                        let logits =
+                            client.infer(inputs[idx].clone()).unwrap();
+                        assert_eq!(logits.len(), synth::CLASSES);
+                    }
+                });
+            }
+        }
+    });
+    for model in ["resnet", "vgg"] {
+        let pool = registry.get(model).unwrap();
+        assert_eq!(pool.engine(), "native");
+        assert_eq!(pool.replicas(), 2);
+        assert_eq!(
+            pool.stats.requests.load(std::sync::atomic::Ordering::SeqCst),
+            per_model as u64,
+            "{model} lost requests"
+        );
+        let summary = pool.summary();
+        assert!(summary.contains("r0:"), "{summary}");
+        assert!(summary.contains("r1:"), "{summary}");
+    }
+}
