@@ -1,12 +1,24 @@
 //! Bench: NativeBackend vs XlaBackend forward latency on the resnet-mini
-//! config — single-sample and batch-32 qfwd, plus the collect path.
+//! config — single-sample and batch-32 qfwd, plus the collect path and a
+//! per-op timing breakdown from the scratch-arena graph executor.
 //! The xla column needs `--features xla` and the lowered HLO artifacts;
 //! the native column only needs the manifest + weights container.
 //!
 //!   cargo bench --bench backends
 //!
-//! Requires `make artifacts`.
+//! Uses `make artifacts` outputs when present, the synthetic set
+//! otherwise.
+//!
+//! Baseline note: the graph executor replaced the hardcoded per-model
+//! forwards of commit 695adc0 ("PR 2").  Both paths run the identical
+//! kernel sequence (the golden suite pins logits bit-identical), so any
+//! executor overhead is pure dispatch + arena bookkeeping; to measure it
+//! directly, run this bench, then `git checkout 695adc0 && cargo bench
+//! --bench backends` and compare the qfwd rows.
 
+use std::collections::BTreeMap;
+
+use bskmq::backend::native::NativeBackend;
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::data::dataset::ModelData;
@@ -14,11 +26,7 @@ use bskmq::quant::Method;
 use bskmq::util::bench::{bench, black_box};
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = bskmq::artifacts_dir();
-    if !artifacts.join("resnet_manifest.json").exists() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return Ok(());
-    }
+    let artifacts = bskmq::data::synth::ensure_artifacts()?;
 
     let mut backends: Vec<Box<dyn Backend>> =
         vec![load(BackendKind::Native, &artifacts, "resnet")?];
@@ -60,6 +68,53 @@ fn main() -> anyhow::Result<()> {
             black_box(be.run_collect(xb).unwrap());
         });
         r.print_throughput(batch as f64, "samples");
+        println!();
+    }
+
+    // --- per-op breakdown (native graph executor, every topology) ---
+    // timings come from the scratch-arena interpreter itself, so the
+    // split reflects exactly what the serving hot path executes
+    const PROFILE_ITERS: usize = 20;
+    for model in bskmq::data::synth::MODELS {
+        // trained artifact dirs carry only the aot.py models (no mixer)
+        let be = match NativeBackend::load(&artifacts, model) {
+            Ok(be) => be,
+            Err(e) => {
+                eprintln!("per-op breakdown: {model} skipped ({e:#})");
+                continue;
+            }
+        };
+        let data = ModelData::load(&artifacts, model)?;
+        let calib =
+            Calibrator::new(&be, Method::BsKmq, 3).calibrate(&data, 8)?;
+        let batch = be.manifest().batch;
+        let xb = &data.x_test.data[..batch * be.manifest().input_elems()];
+
+        // (sum nanos, out elems) per op, in graph order
+        let mut agg: BTreeMap<usize, (String, u128, usize)> = BTreeMap::new();
+        let mut total: u128 = 0;
+        for _ in 0..PROFILE_ITERS {
+            let (_, timings) =
+                be.run_qfwd_profiled(xb, &calib.programmed, 0.0, 7)?;
+            for (i, t) in timings.iter().enumerate() {
+                let e = agg.entry(i).or_insert_with(|| {
+                    (format!("{} ({})", t.name, t.kind), 0, t.out_elems)
+                });
+                e.1 += t.nanos;
+                total += t.nanos;
+            }
+        }
+        println!(
+            "=== per-op breakdown: {model} qfwd batch-{batch} \
+             (mean over {PROFILE_ITERS} runs) ==="
+        );
+        for (_, (label, nanos, out_elems)) in &agg {
+            let mean_us = *nanos as f64 / PROFILE_ITERS as f64 / 1e3;
+            println!(
+                "  {label:<24} {mean_us:>9.1} us  {:>5.1}%  out {out_elems}",
+                100.0 * *nanos as f64 / total.max(1) as f64
+            );
+        }
         println!();
     }
     Ok(())

@@ -1,0 +1,1301 @@
+//! The layer-graph IR executor: load-time validation + a generic
+//! interpreter that replaces the four hand-written per-model forwards.
+//!
+//! [`GraphProgram::compile`] turns a manifest's declarative `graph`
+//! section into an executable program, rejecting every malformed graph
+//! *before* any inference runs: unknown op kinds, out-of-order / cyclic
+//! edges, dangling values, shape mismatches between an edge and its
+//! consumer, q-layer/weight-table inconsistencies — each error names the
+//! offending op and edge.  [`GraphProgram::execute`] then interprets the
+//! validated op list in both pipeline modes (`collect` float statistics
+//! and the deployed quantized forward) through the `ops` kernels.
+//!
+//! Hot-path memory: value edges are mapped onto a small set of reusable
+//! arena slots at compile time (liveness-based — an edge's buffer is
+//! recycled after its last consumer), and one [`ExecBuffers`] arena is
+//! reused across forwards, so steady-state inference performs no per-op
+//! tensor allocations.  Optional per-op timings feed the
+//! `cargo bench --bench backends` breakdown and `bskmq graph`.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::ops::{
+    add_bias_relu_into, add_into, attention_into, avg_pool3_same_into,
+    collect_subsample, concat_c_into, conv_dims, global_avg_pool_into,
+    im2col_into, layer_norm_into, max_pool2_into, mean_over_seq_into,
+    min_ref_step, nl_convert_into, tiled_mac_into, QuantSpec,
+};
+use crate::backend::ProgrammedCodebooks;
+use crate::io::manifest::Manifest;
+use crate::macro_model::ROWS;
+use crate::tensor::Tensor;
+
+/// Per-sample shape of a value edge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VShape {
+    /// NHWC feature map: `h*w*c` elements per sample.
+    Feat { h: usize, w: usize, c: usize },
+    /// Row matrix: `rows*cols` elements per sample (`rows` = tokens for
+    /// sequence values, 1 for pooled/classifier values).
+    Mat { rows: usize, cols: usize },
+}
+
+impl VShape {
+    /// Elements per sample.
+    pub fn elems(&self) -> usize {
+        match *self {
+            VShape::Feat { h, w, c } => h * w * c,
+            VShape::Mat { rows, cols } => rows * cols,
+        }
+    }
+}
+
+impl std::fmt::Display for VShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            VShape::Feat { h, w, c } => write!(f, "feat[{h}, {w}, {c}]"),
+            VShape::Mat { rows, cols } => write!(f, "mat[{rows}, {cols}]"),
+        }
+    }
+}
+
+/// A validated, resolved op (q-layer / weight-arg names are indices).
+#[derive(Clone, Copy, Debug)]
+enum OpKind {
+    Conv {
+        q: usize,
+        kernel: usize,
+        stride: usize,
+        same: bool,
+    },
+    Dense {
+        q: usize,
+    },
+    MaxPool2,
+    AvgPool3,
+    GlobalAvgPool,
+    Flatten,
+    Tokens,
+    Concat,
+    Add {
+        relu: bool,
+    },
+    Relu,
+    LayerNorm {
+        gamma: usize,
+        beta: usize,
+    },
+    Attention {
+        heads: usize,
+    },
+    Embed {
+        table: usize,
+        pos: usize,
+    },
+    MeanOverSeq,
+}
+
+impl OpKind {
+    fn name(&self) -> &'static str {
+        match self {
+            OpKind::Conv { .. } => "conv",
+            OpKind::Dense { .. } => "dense",
+            OpKind::MaxPool2 => "maxpool2",
+            OpKind::AvgPool3 => "avgpool3",
+            OpKind::GlobalAvgPool => "gap",
+            OpKind::Flatten => "flatten",
+            OpKind::Tokens => "tokens",
+            OpKind::Concat => "concat",
+            OpKind::Add { .. } => "add",
+            OpKind::Relu => "relu",
+            OpKind::LayerNorm { .. } => "layernorm",
+            OpKind::Attention { .. } => "attention",
+            OpKind::Embed { .. } => "embed",
+            OpKind::MeanOverSeq => "meanseq",
+        }
+    }
+
+    fn qlayer(&self) -> Option<usize> {
+        match *self {
+            OpKind::Conv { q, .. } | OpKind::Dense { q } => Some(q),
+            _ => None,
+        }
+    }
+}
+
+const KNOWN_OPS: &str = "conv, dense, maxpool2, avgpool3, gap, flatten, \
+                         tokens, concat, add, relu, layernorm, attention, \
+                         embed, meanseq";
+
+#[derive(Clone, Debug)]
+struct ValueInfo {
+    name: String,
+    shape: VShape,
+    /// arena slot carrying this edge at runtime
+    slot: usize,
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    name: String,
+    kind: OpKind,
+    /// value ids consumed
+    inputs: Vec<usize>,
+    /// value id produced
+    output: usize,
+}
+
+/// One row of the per-op dump (`bskmq graph`, bench breakdowns).
+#[derive(Clone, Debug)]
+pub struct OpSummary {
+    pub name: String,
+    pub kind: &'static str,
+    pub inputs: Vec<String>,
+    pub output: String,
+    pub out_shape: String,
+    pub qlayer: Option<String>,
+}
+
+/// Wall-clock of one executed op (profiled runs only).
+#[derive(Clone, Debug)]
+pub struct OpTiming {
+    pub name: String,
+    pub kind: &'static str,
+    /// output elements written (whole batch)
+    pub out_elems: usize,
+    pub nanos: u128,
+}
+
+/// Reusable execution arena: value-edge slots plus the im2col patch and
+/// attention score scratch buffers.  Buffers only ever grow; a backend
+/// keeps a pool of these so steady-state forwards allocate nothing per
+/// op.
+#[derive(Default)]
+pub struct ExecBuffers {
+    slots: Vec<Vec<f32>>,
+    patch: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+/// Execution mode of one forward pass.
+#[derive(Clone, Copy)]
+pub enum ExecMode<'a> {
+    /// Float forward recording calibration statistics.
+    Collect,
+    /// Deployed quantized forward with programmed codebooks.
+    Quant {
+        books: &'a ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    },
+}
+
+/// Output of one interpreted forward.
+pub struct ExecOut {
+    /// flat `[batch, num_classes]` logits
+    pub logits: Vec<f32>,
+    /// per-q-layer activation subsamples (collect mode; else empty)
+    pub samples: Vec<Vec<f64>>,
+    /// per-q-layer crossbar-tile absmax (collect mode; else empty)
+    pub tile_max: Vec<f64>,
+}
+
+/// Noise-seed salt of the layer-output NL-ADC conversion (the per-tile
+/// conversion uses salt 0) — fixed since the first native backend so
+/// calibrated deployments reproduce bit-identically.
+pub const NL_SEED_SALT: u64 = 0x5851_F42D_4C95_7F2D;
+
+/// Per-(layer, salt) RNG seed of the quantized forward's conversion
+/// noise; `wi` is the q-layer index in manifest order.
+pub fn layer_seed(seed: u32, wi: usize, salt: u64) -> u64 {
+    (seed as u64)
+        .wrapping_mul(0xA076_1D64_78BD_642F)
+        .wrapping_add((wi as u64).wrapping_mul(0xE703_7ED1_A0B4_28DB))
+        ^ salt
+}
+
+/// A compiled, validated layer graph, ready to interpret.
+#[derive(Clone, Debug)]
+pub struct GraphProgram {
+    nodes: Vec<Node>,
+    values: Vec<ValueInfo>,
+    input_vid: usize,
+    output_vid: usize,
+    n_slots: usize,
+    nq: usize,
+}
+
+fn pop_or_new(free: &mut Vec<usize>, n_slots: &mut usize) -> usize {
+    free.pop().unwrap_or_else(|| {
+        let s = *n_slots;
+        *n_slots += 1;
+        s
+    })
+}
+
+impl GraphProgram {
+    /// Validate the manifest's `graph` section and resolve it into an
+    /// executable program.  Every structural error — unknown op kind,
+    /// out-of-order (cyclic) or dangling edge, shape mismatch, q-layer /
+    /// weight-table inconsistency — is reported here, naming the
+    /// offending op and edge, so nothing panics mid-inference.
+    pub fn compile(m: &Manifest) -> Result<GraphProgram> {
+        let g = m.graph.as_ref().ok_or_else(|| {
+            anyhow!(
+                "manifest for model '{}' has no `graph` section; the native \
+                 backend executes only graph-bearing manifests",
+                m.model
+            )
+        })?;
+        ensure!(!g.ops.is_empty(), "graph has no ops");
+
+        // weight-arg and q-layer name resolution tables
+        let warg_idx: HashMap<&str, usize> = m
+            .weight_args
+            .iter()
+            .enumerate()
+            .map(|(i, wa)| (wa.name.as_str(), i))
+            .collect();
+        let q_idx: HashMap<&str, usize> = m
+            .qlayers
+            .iter()
+            .enumerate()
+            .map(|(i, q)| (q.name.as_str(), i))
+            .collect();
+
+        // the MAC weight indexing scheme: weight_args[2i], [2i+1] are
+        // q-layer i's matrix and bias
+        ensure!(
+            m.weight_args.len() >= 2 * m.nq(),
+            "weight table has {} args, too short for {} q-layer (w, b) pairs",
+            m.weight_args.len(),
+            m.nq()
+        );
+        for (i, ql) in m.qlayers.iter().enumerate() {
+            ensure!(
+                ql.k >= 1 && ql.n >= 1,
+                "q-layer '{}' has zero width (k = {}, n = {})",
+                ql.name,
+                ql.k,
+                ql.n
+            );
+            let w = &m.weight_args[2 * i];
+            let b = &m.weight_args[2 * i + 1];
+            ensure!(
+                w.shape == vec![ql.k, ql.n],
+                "q-layer '{}': weight arg '{}' has shape {:?}, want [{}, {}]",
+                ql.name,
+                w.name,
+                w.shape,
+                ql.k,
+                ql.n
+            );
+            ensure!(
+                b.shape == vec![ql.n],
+                "q-layer '{}': bias arg '{}' has shape {:?}, want [{}]",
+                ql.name,
+                b.name,
+                b.shape,
+                ql.n
+            );
+        }
+
+        ensure!(
+            m.input_shape.iter().all(|&d| d >= 1),
+            "input shape {:?} has a zero dimension",
+            m.input_shape
+        );
+        let in_shape = match m.input_shape.len() {
+            3 => VShape::Feat {
+                h: m.input_shape[0],
+                w: m.input_shape[1],
+                c: m.input_shape[2],
+            },
+            1 => VShape::Mat {
+                rows: 1,
+                cols: m.input_shape[0],
+            },
+            _ => bail!(
+                "unsupported input shape {:?} (want [h, w, c] or [t])",
+                m.input_shape
+            ),
+        };
+
+        let mut values = vec![ValueInfo {
+            name: g.input.clone(),
+            shape: in_shape,
+            slot: usize::MAX,
+        }];
+        let mut by_name: HashMap<String, usize> = HashMap::new();
+        by_name.insert(g.input.clone(), 0);
+        // which op consumed each q-layer (exactly-once bookkeeping)
+        let mut q_used: Vec<Option<String>> = vec![None; m.nq()];
+        let mut nodes: Vec<Node> = Vec::new();
+
+        for def in &g.ops {
+            let op_name = def.name.as_str();
+            // edge resolution: every input must already exist — the op
+            // list is required to be topologically ordered, so a forward
+            // reference is a cycle or a dangling name either way
+            let mut input_ids = Vec::with_capacity(def.inputs.len());
+            let mut in_shapes = Vec::with_capacity(def.inputs.len());
+            for e in &def.inputs {
+                let vid = *by_name.get(e.as_str()).ok_or_else(|| {
+                    anyhow!(
+                        "op '{op_name}': input edge '{e}' is not produced by \
+                         any earlier op or the graph input (cyclic or \
+                         dangling reference)"
+                    )
+                })?;
+                input_ids.push(vid);
+                in_shapes.push(values[vid].shape);
+            }
+
+            let arity = |want: usize| -> Result<()> {
+                ensure!(
+                    def.inputs.len() == want,
+                    "op '{op_name}' ({}): takes {want} input(s), got {}",
+                    def.op,
+                    def.inputs.len()
+                );
+                Ok(())
+            };
+            // resolve the q-layer of a MAC op and enforce exactly-once use
+            let mut resolve_q = |qname: &Option<String>| -> Result<usize> {
+                let qname = qname.as_deref().ok_or_else(|| {
+                    anyhow!("op '{op_name}' ({}): missing `qlayer`", def.op)
+                })?;
+                let q = *q_idx.get(qname).ok_or_else(|| {
+                    anyhow!(
+                        "op '{op_name}': q-layer '{qname}' is not in the \
+                         manifest qlayers table"
+                    )
+                })?;
+                if let Some(prev) = &q_used[q] {
+                    bail!(
+                        "op '{op_name}': q-layer '{qname}' already consumed \
+                         by op '{prev}' (each q-layer maps to one crossbar \
+                         programming and must be used exactly once)"
+                    );
+                }
+                if let Some(r) = def.relu {
+                    ensure!(
+                        r == m.qlayers[q].relu,
+                        "op '{op_name}': relu attribute {r} contradicts \
+                         q-layer '{qname}' (relu = {})",
+                        m.qlayers[q].relu
+                    );
+                }
+                q_used[q] = Some(op_name.to_string());
+                Ok(q)
+            };
+            let resolve_warg = |attr: &str, name: &Option<String>| -> Result<usize> {
+                let name = name.as_deref().ok_or_else(|| {
+                    anyhow!("op '{op_name}' ({}): missing `{attr}`", def.op)
+                })?;
+                warg_idx.get(name).copied().ok_or_else(|| {
+                    anyhow!(
+                        "op '{op_name}': {attr} weight arg '{name}' is not \
+                         in the manifest weight_args table"
+                    )
+                })
+            };
+            let feat_input = |i: usize| -> Result<(usize, usize, usize)> {
+                match in_shapes[i] {
+                    VShape::Feat { h, w, c } => Ok((h, w, c)),
+                    s => bail!(
+                        "op '{op_name}' ({}): input edge '{}' has shape {s}, \
+                         want an NHWC feature map",
+                        def.op,
+                        def.inputs[i]
+                    ),
+                }
+            };
+            let mat_input = |i: usize| -> Result<(usize, usize)> {
+                match in_shapes[i] {
+                    VShape::Mat { rows, cols } => Ok((rows, cols)),
+                    s => bail!(
+                        "op '{op_name}' ({}): input edge '{}' has shape {s}, \
+                         want a row matrix",
+                        def.op,
+                        def.inputs[i]
+                    ),
+                }
+            };
+
+            let (kind, out_shape) = match def.op.as_str() {
+                "conv" => {
+                    arity(1)?;
+                    let (h, w, c) = feat_input(0)?;
+                    let q = resolve_q(&def.qlayer)?;
+                    let kernel = def.kernel.ok_or_else(|| {
+                        anyhow!("op '{op_name}' (conv): missing `kernel`")
+                    })?;
+                    ensure!(
+                        kernel >= 1,
+                        "op '{op_name}' (conv): kernel must be >= 1"
+                    );
+                    let stride = def.stride.unwrap_or(1);
+                    ensure!(
+                        stride >= 1,
+                        "op '{op_name}' (conv): stride must be >= 1"
+                    );
+                    let same = match def.pad.as_deref().unwrap_or("same") {
+                        "same" => true,
+                        "valid" => false,
+                        p => bail!(
+                            "op '{op_name}' (conv): pad '{p}' is neither \
+                             'same' nor 'valid'"
+                        ),
+                    };
+                    let ql = &m.qlayers[q];
+                    ensure!(
+                        ql.k == kernel * kernel * c,
+                        "op '{op_name}': input edge '{}' has {c} channels, \
+                         so a {kernel}x{kernel} conv contracts over {} — \
+                         but q-layer '{}' declares k = {}",
+                        def.inputs[0],
+                        kernel * kernel * c,
+                        ql.name,
+                        ql.k
+                    );
+                    if !same {
+                        ensure!(
+                            h >= kernel && w >= kernel,
+                            "op '{op_name}' (conv): {kernel}x{kernel} VALID \
+                             kernel exceeds the {h}x{w} input map of edge \
+                             '{}'",
+                            def.inputs[0]
+                        );
+                    }
+                    let (oh, ow, _, _) =
+                        conv_dims(h, w, kernel, kernel, stride, same);
+                    (
+                        OpKind::Conv {
+                            q,
+                            kernel,
+                            stride,
+                            same,
+                        },
+                        VShape::Feat {
+                            h: oh,
+                            w: ow,
+                            c: ql.n,
+                        },
+                    )
+                }
+                "dense" => {
+                    arity(1)?;
+                    let (rows, cols) = mat_input(0)?;
+                    let q = resolve_q(&def.qlayer)?;
+                    let ql = &m.qlayers[q];
+                    ensure!(
+                        ql.k == cols,
+                        "op '{op_name}': input edge '{}' has {cols} \
+                         features, but q-layer '{}' declares k = {}",
+                        def.inputs[0],
+                        ql.name,
+                        ql.k
+                    );
+                    (OpKind::Dense { q }, VShape::Mat { rows, cols: ql.n })
+                }
+                "maxpool2" => {
+                    arity(1)?;
+                    let (h, w, c) = feat_input(0)?;
+                    ensure!(
+                        h % 2 == 0 && w % 2 == 0 && h >= 2 && w >= 2,
+                        "op '{op_name}' (maxpool2): input edge '{}' is \
+                         {h}x{w}, want even spatial dims >= 2",
+                        def.inputs[0]
+                    );
+                    (
+                        OpKind::MaxPool2,
+                        VShape::Feat {
+                            h: h / 2,
+                            w: w / 2,
+                            c,
+                        },
+                    )
+                }
+                "avgpool3" => {
+                    arity(1)?;
+                    let (h, w, c) = feat_input(0)?;
+                    (OpKind::AvgPool3, VShape::Feat { h, w, c })
+                }
+                "gap" => {
+                    arity(1)?;
+                    let (_, _, c) = feat_input(0)?;
+                    (OpKind::GlobalAvgPool, VShape::Mat { rows: 1, cols: c })
+                }
+                "flatten" => {
+                    arity(1)?;
+                    let (h, w, c) = feat_input(0)?;
+                    (
+                        OpKind::Flatten,
+                        VShape::Mat {
+                            rows: 1,
+                            cols: h * w * c,
+                        },
+                    )
+                }
+                "tokens" => {
+                    arity(1)?;
+                    let (h, w, c) = feat_input(0)?;
+                    (
+                        OpKind::Tokens,
+                        VShape::Mat {
+                            rows: h * w,
+                            cols: c,
+                        },
+                    )
+                }
+                "concat" => {
+                    ensure!(
+                        def.inputs.len() >= 2,
+                        "op '{op_name}' (concat): takes >= 2 inputs, got {}",
+                        def.inputs.len()
+                    );
+                    let (h, w, mut c) = feat_input(0)?;
+                    for i in 1..def.inputs.len() {
+                        let (hi, wi, ci) = feat_input(i)?;
+                        ensure!(
+                            (hi, wi) == (h, w),
+                            "op '{op_name}' (concat): input edge '{}' is \
+                             {hi}x{wi}, but edge '{}' is {h}x{w}",
+                            def.inputs[i],
+                            def.inputs[0]
+                        );
+                        c += ci;
+                    }
+                    (OpKind::Concat, VShape::Feat { h, w, c })
+                }
+                "add" => {
+                    arity(2)?;
+                    ensure!(
+                        in_shapes[0] == in_shapes[1],
+                        "op '{op_name}' (add): input edge '{}' has shape \
+                         {}, but edge '{}' has shape {}",
+                        def.inputs[0],
+                        in_shapes[0],
+                        def.inputs[1],
+                        in_shapes[1]
+                    );
+                    (
+                        OpKind::Add {
+                            relu: def.relu.unwrap_or(false),
+                        },
+                        in_shapes[0],
+                    )
+                }
+                "relu" => {
+                    arity(1)?;
+                    (OpKind::Relu, in_shapes[0])
+                }
+                "layernorm" => {
+                    arity(1)?;
+                    let (rows, cols) = mat_input(0)?;
+                    let gamma = resolve_warg("gamma", &def.gamma)?;
+                    let beta = resolve_warg("beta", &def.beta)?;
+                    for (attr, wi) in [("gamma", gamma), ("beta", beta)] {
+                        let wa = &m.weight_args[wi];
+                        ensure!(
+                            wa.shape == vec![cols],
+                            "op '{op_name}': {attr} arg '{}' has shape \
+                             {:?}, want [{cols}] to match edge '{}'",
+                            wa.name,
+                            wa.shape,
+                            def.inputs[0]
+                        );
+                    }
+                    (
+                        OpKind::LayerNorm { gamma, beta },
+                        VShape::Mat { rows, cols },
+                    )
+                }
+                "attention" => {
+                    arity(3)?;
+                    let (t, d) = mat_input(0)?;
+                    for i in 1..3 {
+                        ensure!(
+                            in_shapes[i] == in_shapes[0],
+                            "op '{op_name}' (attention): input edge '{}' \
+                             has shape {}, but edge '{}' has shape {}",
+                            def.inputs[i],
+                            in_shapes[i],
+                            def.inputs[0],
+                            in_shapes[0]
+                        );
+                    }
+                    let heads = def.heads.ok_or_else(|| {
+                        anyhow!("op '{op_name}' (attention): missing `heads`")
+                    })?;
+                    ensure!(
+                        heads >= 1 && d % heads == 0,
+                        "op '{op_name}' (attention): d_model {d} is not \
+                         divisible by {heads} heads"
+                    );
+                    (
+                        OpKind::Attention { heads },
+                        VShape::Mat { rows: t, cols: d },
+                    )
+                }
+                "embed" => {
+                    arity(1)?;
+                    let (rows, t) = mat_input(0)?;
+                    ensure!(
+                        rows == 1,
+                        "op '{op_name}' (embed): input edge '{}' has shape \
+                         {}, want a [1, t] token-id row",
+                        def.inputs[0],
+                        in_shapes[0]
+                    );
+                    let table = resolve_warg("table", &def.table)?;
+                    let pos = resolve_warg("pos", &def.pos)?;
+                    let ts = &m.weight_args[table];
+                    ensure!(
+                        ts.shape.len() == 2 && ts.shape[0] >= 1,
+                        "op '{op_name}': table arg '{}' has shape {:?}, \
+                         want [vocab, d]",
+                        ts.name,
+                        ts.shape
+                    );
+                    let d = ts.shape[1];
+                    let ps = &m.weight_args[pos];
+                    ensure!(
+                        ps.shape == vec![t, d],
+                        "op '{op_name}': pos arg '{}' has shape {:?}, want \
+                         [{t}, {d}]",
+                        ps.name,
+                        ps.shape
+                    );
+                    (
+                        OpKind::Embed { table, pos },
+                        VShape::Mat { rows: t, cols: d },
+                    )
+                }
+                "meanseq" => {
+                    arity(1)?;
+                    let (t, d) = mat_input(0)?;
+                    ensure!(
+                        t >= 1,
+                        "op '{op_name}' (meanseq): empty sequence input"
+                    );
+                    (OpKind::MeanOverSeq, VShape::Mat { rows: 1, cols: d })
+                }
+                other => bail!(
+                    "op '{op_name}': unknown op kind '{other}' \
+                     (known: {KNOWN_OPS})"
+                ),
+            };
+
+            ensure!(
+                !by_name.contains_key(&def.output),
+                "op '{op_name}': output edge '{}' is already defined",
+                def.output
+            );
+            let vid = values.len();
+            values.push(ValueInfo {
+                name: def.output.clone(),
+                shape: out_shape,
+                slot: usize::MAX,
+            });
+            by_name.insert(def.output.clone(), vid);
+            nodes.push(Node {
+                name: def.name.clone(),
+                kind,
+                inputs: input_ids,
+                output: vid,
+            });
+        }
+
+        let output_vid = *by_name.get(&g.output).ok_or_else(|| {
+            anyhow!("graph output edge '{}' is produced by no op", g.output)
+        })?;
+        match values[output_vid].shape {
+            VShape::Mat { rows: 1, cols } if cols == m.num_classes => {}
+            s => bail!(
+                "graph output edge '{}' has per-sample shape {s}, want \
+                 [1, {}] logits",
+                g.output,
+                m.num_classes
+            ),
+        }
+        for (i, used) in q_used.iter().enumerate() {
+            ensure!(
+                used.is_some(),
+                "q-layer '{}' (index {i}) is referenced by no graph op — \
+                 its calibration stream would never be fed",
+                m.qlayers[i].name
+            );
+        }
+        // dangling-edge check: every produced value must be consumed
+        // (the logits edge is consumed by the caller)
+        let mut consumed = vec![false; values.len()];
+        for node in &nodes {
+            for &v in &node.inputs {
+                consumed[v] = true;
+            }
+        }
+        consumed[output_vid] = true;
+        for (vid, v) in values.iter().enumerate() {
+            if !consumed[vid] {
+                let producer = nodes
+                    .iter()
+                    .find(|n| n.output == vid)
+                    .map(|n| n.name.clone())
+                    .unwrap_or_else(|| "the graph input".to_string());
+                bail!(
+                    "value edge '{}' (produced by {producer}) is never \
+                     consumed (dangling edge)",
+                    v.name
+                );
+            }
+        }
+
+        // arena slot planning: liveness-based reuse — an edge's slot is
+        // recycled once its last consumer has run
+        let mut last_use = vec![0usize; values.len()];
+        for (i, node) in nodes.iter().enumerate() {
+            for &v in &node.inputs {
+                last_use[v] = i;
+            }
+        }
+        last_use[output_vid] = nodes.len(); // logits outlive the walk
+        let mut free: Vec<usize> = Vec::new();
+        let mut n_slots = 0usize;
+        values[0].slot = pop_or_new(&mut free, &mut n_slots);
+        for (i, node) in nodes.iter().enumerate() {
+            // flatten/tokens are NHWC reinterprets (identical bytes):
+            // when their input dies here, the output edge simply renames
+            // the input's buffer — no slot, no copy on the hot path
+            if matches!(node.kind, OpKind::Flatten | OpKind::Tokens)
+                && last_use[node.inputs[0]] == i
+            {
+                let s = values[node.inputs[0]].slot;
+                values[node.output].slot = s;
+                continue;
+            }
+            // allocate the output first: the inputs are still being read
+            let slot = pop_or_new(&mut free, &mut n_slots);
+            values[node.output].slot = slot;
+            for (j, &v) in node.inputs.iter().enumerate() {
+                if last_use[v] == i && !node.inputs[..j].contains(&v) {
+                    free.push(values[v].slot);
+                }
+            }
+        }
+
+        Ok(GraphProgram {
+            nodes,
+            values,
+            input_vid: 0,
+            output_vid,
+            n_slots,
+            nq: m.nq(),
+        })
+    }
+
+    /// Ops in execution order, with names resolved for display.
+    pub fn summary(&self, m: &Manifest) -> Vec<OpSummary> {
+        self.nodes
+            .iter()
+            .map(|n| OpSummary {
+                name: n.name.clone(),
+                kind: n.kind.name(),
+                inputs: n
+                    .inputs
+                    .iter()
+                    .map(|&v| self.values[v].name.clone())
+                    .collect(),
+                output: self.values[n.output].name.clone(),
+                out_shape: self.values[n.output].shape.to_string(),
+                qlayer: n.kind.qlayer().map(|q| m.qlayers[q].name.clone()),
+            })
+            .collect()
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_values(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Arena slots the liveness planner mapped the value edges onto.
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Interpret the graph over a `batch`-sample input.  `buf` is the
+    /// reusable arena (grown on first use, then allocation-free);
+    /// `profile` collects per-op wall-clock when provided.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute(
+        &self,
+        m: &Manifest,
+        weights: &[Tensor],
+        x: &[f32],
+        batch: usize,
+        mode: ExecMode,
+        buf: &mut ExecBuffers,
+        mut profile: Option<&mut Vec<OpTiming>>,
+    ) -> Result<ExecOut> {
+        ensure!(batch >= 1, "empty batch");
+        let in_elems = self.values[self.input_vid].shape.elems();
+        ensure!(
+            x.len() == batch * in_elems,
+            "input len {} != batch {batch} x {in_elems}",
+            x.len()
+        );
+        buf.slots.resize_with(self.n_slots, Vec::new);
+        {
+            let s = &mut buf.slots[self.values[self.input_vid].slot];
+            s.clear();
+            s.extend_from_slice(x);
+        }
+
+        let (mut samples, mut tile_max) = match mode {
+            ExecMode::Collect => {
+                (vec![Vec::new(); self.nq], vec![0f64; self.nq])
+            }
+            ExecMode::Quant { .. } => (Vec::new(), Vec::new()),
+        };
+
+        for node in &self.nodes {
+            let t0 = profile.as_ref().map(|_| Instant::now());
+            let out_elems =
+                batch * self.values[node.output].shape.elems();
+            let out_slot = self.values[node.output].slot;
+            // renamed reinterprets share their input's slot: the bytes
+            // are already in place, nothing to execute
+            if matches!(node.kind, OpKind::Flatten | OpKind::Tokens)
+                && self.values[node.inputs[0]].slot == out_slot
+            {
+                if let (Some(p), Some(t0)) = (profile.as_mut(), t0) {
+                    p.push(OpTiming {
+                        name: node.name.clone(),
+                        kind: node.kind.name(),
+                        out_elems,
+                        nanos: t0.elapsed().as_nanos(),
+                    });
+                }
+                continue;
+            }
+            let mut out = std::mem::take(&mut buf.slots[out_slot]);
+            out.clear();
+            out.resize(out_elems, 0.0);
+
+            // shorthand for an input's (slice, per-sample shape)
+            macro_rules! input {
+                ($i:expr) => {{
+                    let v = &self.values[node.inputs[$i]];
+                    (
+                        &buf.slots[v.slot][..batch * v.shape.elems()],
+                        v.shape,
+                    )
+                }};
+            }
+
+            match node.kind {
+                OpKind::Conv {
+                    q,
+                    kernel,
+                    stride,
+                    same,
+                } => {
+                    let (xdat, shape) = input!(0);
+                    let VShape::Feat { h, w, c } = shape else {
+                        unreachable!("validated at compile")
+                    };
+                    let (oh, ow, _, _) =
+                        conv_dims(h, w, kernel, kernel, stride, same);
+                    let rows = batch * oh * ow;
+                    let cols = kernel * kernel * c;
+                    let need = rows * cols;
+                    if buf.patch.len() < need {
+                        buf.patch.resize(need, 0.0);
+                    }
+                    im2col_into(
+                        xdat,
+                        batch,
+                        h,
+                        w,
+                        c,
+                        kernel,
+                        kernel,
+                        stride,
+                        same,
+                        &mut buf.patch[..need],
+                    );
+                    qmac(
+                        m,
+                        weights,
+                        q,
+                        &buf.patch[..need],
+                        rows,
+                        cols,
+                        mode,
+                        &mut samples,
+                        &mut tile_max,
+                        &mut out,
+                    );
+                }
+                OpKind::Dense { q } => {
+                    let (xdat, shape) = input!(0);
+                    let VShape::Mat { rows, cols } = shape else {
+                        unreachable!("validated at compile")
+                    };
+                    qmac(
+                        m,
+                        weights,
+                        q,
+                        xdat,
+                        batch * rows,
+                        cols,
+                        mode,
+                        &mut samples,
+                        &mut tile_max,
+                        &mut out,
+                    );
+                }
+                OpKind::MaxPool2 => {
+                    let (xdat, shape) = input!(0);
+                    let VShape::Feat { h, w, c } = shape else {
+                        unreachable!()
+                    };
+                    max_pool2_into(xdat, batch, h, w, c, &mut out);
+                }
+                OpKind::AvgPool3 => {
+                    let (xdat, shape) = input!(0);
+                    let VShape::Feat { h, w, c } = shape else {
+                        unreachable!()
+                    };
+                    avg_pool3_same_into(xdat, batch, h, w, c, &mut out);
+                }
+                OpKind::GlobalAvgPool => {
+                    let (xdat, shape) = input!(0);
+                    let VShape::Feat { h, w, c } = shape else {
+                        unreachable!()
+                    };
+                    global_avg_pool_into(xdat, batch, h, w, c, &mut out);
+                }
+                OpKind::Flatten | OpKind::Tokens => {
+                    // NHWC row-major reinterpretation: same bytes
+                    let (xdat, _) = input!(0);
+                    out.copy_from_slice(xdat);
+                }
+                OpKind::Concat => {
+                    let mut parts: Vec<(&[f32], usize)> =
+                        Vec::with_capacity(node.inputs.len());
+                    let mut pixels = 0;
+                    for &vi in &node.inputs {
+                        let v = &self.values[vi];
+                        let VShape::Feat { h, w, c } = v.shape else {
+                            unreachable!()
+                        };
+                        pixels = batch * h * w;
+                        parts.push((
+                            &buf.slots[v.slot][..batch * v.shape.elems()],
+                            c,
+                        ));
+                    }
+                    concat_c_into(&parts, pixels, &mut out);
+                }
+                OpKind::Add { relu } => {
+                    let (a, _) = input!(0);
+                    let (b, _) = input!(1);
+                    add_into(a, b, relu, &mut out);
+                }
+                OpKind::Relu => {
+                    let (xdat, _) = input!(0);
+                    for (o, &v) in out.iter_mut().zip(xdat) {
+                        *o = v.max(0.0);
+                    }
+                }
+                OpKind::LayerNorm { gamma, beta } => {
+                    let (xdat, shape) = input!(0);
+                    let VShape::Mat { cols, .. } = shape else {
+                        unreachable!()
+                    };
+                    layer_norm_into(
+                        xdat,
+                        cols,
+                        &weights[gamma].data,
+                        &weights[beta].data,
+                        &mut out,
+                    );
+                }
+                OpKind::Attention { heads } => {
+                    let (q, shape) = input!(0);
+                    let (k, _) = input!(1);
+                    let (v, _) = input!(2);
+                    let VShape::Mat { rows: t, cols: d } = shape else {
+                        unreachable!()
+                    };
+                    if buf.scores.len() < t * t {
+                        buf.scores.resize(t * t, 0.0);
+                    }
+                    attention_into(
+                        q,
+                        k,
+                        v,
+                        batch,
+                        t,
+                        d,
+                        heads,
+                        &mut buf.scores[..t * t],
+                        &mut out,
+                    );
+                }
+                OpKind::Embed { table, pos } => {
+                    let (xdat, shape) = input!(0);
+                    let VShape::Mat { cols: t, .. } = shape else {
+                        unreachable!()
+                    };
+                    let tbl = &weights[table];
+                    let pose = &weights[pos];
+                    let (vocab, d) = (tbl.shape[0], tbl.shape[1]);
+                    for bi in 0..batch {
+                        for ti in 0..t {
+                            let tok = (xdat[bi * t + ti].max(0.0) as usize)
+                                .min(vocab - 1);
+                            let erow = &tbl.data[tok * d..(tok + 1) * d];
+                            let prow = &pose.data[ti * d..(ti + 1) * d];
+                            let orow = &mut out
+                                [(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                            for dd in 0..d {
+                                orow[dd] = erow[dd] + prow[dd];
+                            }
+                        }
+                    }
+                }
+                OpKind::MeanOverSeq => {
+                    let (xdat, shape) = input!(0);
+                    let VShape::Mat { rows: t, cols: d } = shape else {
+                        unreachable!()
+                    };
+                    mean_over_seq_into(xdat, batch, t, d, &mut out);
+                }
+            }
+
+            buf.slots[out_slot] = out;
+            if let (Some(p), Some(t0)) = (profile.as_mut(), t0) {
+                p.push(OpTiming {
+                    name: node.name.clone(),
+                    kind: node.kind.name(),
+                    out_elems,
+                    nanos: t0.elapsed().as_nanos(),
+                });
+            }
+        }
+
+        let out_slot = self.values[self.output_vid].slot;
+        Ok(ExecOut {
+            logits: buf.slots[out_slot].clone(),
+            samples,
+            tile_max,
+        })
+    }
+}
+
+/// One quantized MAC layer on a 2-D `[rows, k]` operand: the shared
+/// conv/dense path of both modes — exactly the `qmatmul` the per-model
+/// forwards used, with `q` the q-layer index in manifest order.
+#[allow(clippy::too_many_arguments)]
+fn qmac(
+    m: &Manifest,
+    weights: &[Tensor],
+    q: usize,
+    x2d: &[f32],
+    rows: usize,
+    k: usize,
+    mode: ExecMode,
+    samples: &mut [Vec<f64>],
+    tile_max: &mut [f64],
+    out: &mut [f32],
+) {
+    let w = &weights[2 * q];
+    let bias = &weights[2 * q + 1];
+    let ql = &m.qlayers[q];
+    match mode {
+        ExecMode::Collect => {
+            let absmax = tiled_mac_into(x2d, rows, k, w, ROWS, None, out);
+            add_bias_relu_into(out, ql.n, &bias.data, ql.relu);
+            tile_max[q] = absmax;
+            samples[q] = collect_subsample(out, m.samples_per_layer);
+        }
+        ExecMode::Quant {
+            books,
+            noise_std,
+            seed,
+        } => {
+            let (n_refs, n_centers, t_refs, t_centers) = books.layer_rows(q);
+            let spec = QuantSpec {
+                refs: t_refs,
+                centers: t_centers,
+                sigma: noise_std * min_ref_step(t_refs),
+                seed: layer_seed(seed, q, 0),
+            };
+            tiled_mac_into(x2d, rows, k, w, ROWS, Some(&spec), out);
+            add_bias_relu_into(out, ql.n, &bias.data, ql.relu);
+            nl_convert_into(
+                out,
+                rows,
+                ql.n,
+                n_refs,
+                n_centers,
+                noise_std * min_ref_step(n_refs),
+                layer_seed(seed, q, NL_SEED_SALT),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::manifest::Manifest;
+    use crate::quant::codebook::Codebook;
+
+    /// A 2-dense-layer chain manifest with an inline graph.
+    fn chain_manifest() -> Manifest {
+        Manifest::from_json_str(
+            r#"{
+  "model": "chain",
+  "batch": 2,
+  "input_shape": [4],
+  "input_dtype": "f32",
+  "num_classes": 3,
+  "max_levels": 128,
+  "qlayers": [
+    {"name": "d0", "k": 4, "n": 5, "relu": true},
+    {"name": "d1", "k": 5, "n": 3, "relu": false}
+  ],
+  "weight_args": [
+    {"name": "q00_d0_w", "shape": [4, 5]},
+    {"name": "q00_d0_b", "shape": [5]},
+    {"name": "q01_d1_w", "shape": [5, 3]},
+    {"name": "q01_d1_b", "shape": [3]}
+  ],
+  "collect": {
+    "out_len": 0, "logits_len": 6,
+    "samples_per_layer": 8, "tilemax_offset": 0
+  },
+  "artifacts": {"collect": "none", "qfwd": "none"},
+  "graph": {
+    "input": "x",
+    "output": "logits",
+    "ops": [
+      {"op": "dense", "name": "d0", "in": ["x"], "out": "h",
+       "qlayer": "d0"},
+      {"op": "dense", "name": "d1", "in": ["h"], "out": "logits",
+       "qlayer": "d1"}
+    ]
+  }
+}"#,
+        )
+        .unwrap()
+    }
+
+    fn chain_weights() -> Vec<Tensor> {
+        vec![
+            Tensor::new(vec![4, 5], (0..20).map(|v| v as f32 * 0.1).collect())
+                .unwrap(),
+            Tensor::new(vec![5], vec![0.1; 5]).unwrap(),
+            Tensor::new(vec![5, 3], (0..15).map(|v| v as f32 * 0.05).collect())
+                .unwrap(),
+            Tensor::new(vec![3], vec![0.0; 3]).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn chain_compiles_and_reuses_slots() {
+        let m = chain_manifest();
+        let p = GraphProgram::compile(&m).unwrap();
+        assert_eq!(p.n_ops(), 2);
+        assert_eq!(p.n_values(), 3);
+        // x's slot is recycled for the logits after d0 consumes it
+        assert_eq!(p.n_slots(), 2);
+        let s = p.summary(&m);
+        assert_eq!(s[0].kind, "dense");
+        assert_eq!(s[0].qlayer.as_deref(), Some("d0"));
+        assert_eq!(s[1].out_shape, "mat[1, 3]");
+    }
+
+    #[test]
+    fn chain_executes_both_modes() {
+        let m = chain_manifest();
+        let p = GraphProgram::compile(&m).unwrap();
+        let weights = chain_weights();
+        let x = vec![0.5f32; 2 * 4];
+        let mut buf = ExecBuffers::default();
+        let out = p
+            .execute(&m, &weights, &x, 2, ExecMode::Collect, &mut buf, None)
+            .unwrap();
+        assert_eq!(out.logits.len(), 2 * 3);
+        assert_eq!(out.samples.len(), 2);
+        assert_eq!(out.samples[0].len(), m.samples_per_layer);
+        assert!(out.tile_max.iter().all(|&t| t > 0.0));
+        // relu'd first layer -> non-negative samples
+        assert!(out.samples[0].iter().all(|&v| v >= 0.0));
+
+        let nl = vec![
+            Codebook::linear(0.0, 8.0, 7),
+            Codebook::linear(-8.0, 8.0, 7),
+        ];
+        let tile = vec![
+            Codebook::linear(-8.0, 8.0, 7),
+            Codebook::linear(-8.0, 8.0, 7),
+        ];
+        let books = ProgrammedCodebooks::stack(&nl, &tile, 128).unwrap();
+        let mode = ExecMode::Quant {
+            books: &books,
+            noise_std: 0.0,
+            seed: 7,
+        };
+        let mut timings = Vec::new();
+        let q1 = p
+            .execute(&m, &weights, &x, 2, mode, &mut buf, Some(&mut timings))
+            .unwrap();
+        assert_eq!(q1.logits.len(), 2 * 3);
+        assert!(q1.samples.is_empty());
+        assert_eq!(timings.len(), 2);
+        assert_eq!(timings[0].name, "d0");
+        // arena reuse across calls is bit-stable
+        let q2 = p
+            .execute(&m, &weights, &x, 2, mode, &mut buf, None)
+            .unwrap();
+        assert_eq!(q1.logits, q2.logits);
+    }
+
+    #[test]
+    fn batch_one_matches_batch_row() {
+        let m = chain_manifest();
+        let p = GraphProgram::compile(&m).unwrap();
+        let weights = chain_weights();
+        let x: Vec<f32> = (0..8).map(|v| v as f32 * 0.25 - 1.0).collect();
+        let nl = vec![
+            Codebook::linear(0.0, 8.0, 7),
+            Codebook::linear(-8.0, 8.0, 7),
+        ];
+        let tile = nl.clone();
+        let books = ProgrammedCodebooks::stack(&nl, &tile, 128).unwrap();
+        let mode = ExecMode::Quant {
+            books: &books,
+            noise_std: 0.0,
+            seed: 3,
+        };
+        let mut buf = ExecBuffers::default();
+        let full = p
+            .execute(&m, &weights, &x, 2, mode, &mut buf, None)
+            .unwrap();
+        let one = p
+            .execute(&m, &weights, &x[..4], 1, mode, &mut buf, None)
+            .unwrap();
+        assert_eq!(one.logits, full.logits[..3].to_vec());
+    }
+}

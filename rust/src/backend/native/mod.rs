@@ -7,12 +7,17 @@
 //! codebook ladder, partials accumulate digitally, and the layer output
 //! goes through the layer's NL-ADC codebook with ReLU folded in.  Only
 //! the manifest + weights container (+ data splits) are needed on disk.
+//!
+//! There are no per-model forwards: the topology is data.  The manifest
+//! carries a layer-graph IR (`graph` section) that [`graph::GraphProgram`]
+//! validates at load time and interprets over a reusable scratch-buffer
+//! arena — serving a new workload means writing a manifest, not Rust.
 
-pub mod models;
+pub mod graph;
 pub mod ops;
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Context, Result};
 
@@ -21,17 +26,36 @@ use crate::io::manifest::Manifest;
 use crate::io::weights::load_tensors;
 use crate::tensor::Tensor;
 
-pub use models::ModelKind;
+use graph::{ExecBuffers, ExecMode, GraphProgram, OpTiming};
+
+/// Cap on pooled execution arenas (concurrent callers beyond this build
+/// a fresh arena and drop it afterwards).
+const SCRATCH_POOL_CAP: usize = 8;
 
 /// Immutable model state is behind `Arc`s, so [`Backend::replicate`]
 /// hands the replica pool additional instances that share one weight set
-/// instead of re-reading the container per worker.
-#[derive(Clone)]
+/// and one compiled graph instead of re-reading/re-validating per
+/// worker.  Each instance keeps its own pool of execution arenas.
 pub struct NativeBackend {
     manifest: Arc<Manifest>,
     /// weight tensors in graph argument order
     weights: Arc<Vec<Tensor>>,
-    kind: ModelKind,
+    program: Arc<GraphProgram>,
+    /// reusable [`ExecBuffers`] arenas — steady-state forwards allocate
+    /// no per-op tensors
+    scratch: Mutex<Vec<ExecBuffers>>,
+}
+
+impl Clone for NativeBackend {
+    fn clone(&self) -> NativeBackend {
+        NativeBackend {
+            manifest: Arc::clone(&self.manifest),
+            weights: Arc::clone(&self.weights),
+            program: Arc::clone(&self.program),
+            // arenas are working state, not model state
+            scratch: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl NativeBackend {
@@ -62,29 +86,90 @@ impl NativeBackend {
     }
 
     /// Build from an in-memory manifest + weight set (tests, weight
-    /// quantization clones).
+    /// quantization clones).  This is where the layer graph is compiled:
+    /// malformed graphs fail here, not mid-inference.
     pub fn from_parts(
         manifest: Manifest,
         weights: Vec<Tensor>,
     ) -> Result<NativeBackend> {
-        let kind = ModelKind::from_name(&manifest.model)?;
-        kind.check_manifest(&manifest)?;
+        let program = GraphProgram::compile(&manifest).with_context(|| {
+            format!("validating layer graph of model '{}'", manifest.model)
+        })?;
         ensure!(
             weights.len() == manifest.weight_args.len(),
             "weight count {} != manifest {}",
             weights.len(),
             manifest.weight_args.len()
         );
-        ensure!(
-            weights.len() >= 2 * manifest.nq(),
-            "weight table too short for {} q-layers",
-            manifest.nq()
-        );
         Ok(NativeBackend {
             manifest: Arc::new(manifest),
             weights: Arc::new(weights),
-            kind,
+            program: Arc::new(program),
+            scratch: Mutex::new(Vec::new()),
         })
+    }
+
+    /// The compiled layer graph (op dump, arena stats).
+    pub fn program(&self) -> &GraphProgram {
+        &self.program
+    }
+
+    /// Run `f` with a pooled execution arena (created on first use).
+    fn with_buffers<R>(&self, f: impl FnOnce(&mut ExecBuffers) -> R) -> R {
+        let mut buf = self
+            .scratch
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_default();
+        let r = f(&mut buf);
+        let mut pool = self.scratch.lock().unwrap();
+        if pool.len() < SCRATCH_POOL_CAP {
+            pool.push(buf);
+        }
+        r
+    }
+
+    /// [`Backend::run_qfwd`] with a per-op wall-clock breakdown (the
+    /// bench harness and `bskmq graph` use this; the trait path skips
+    /// the timestamping entirely).
+    pub fn run_qfwd_profiled(
+        &self,
+        x: &[f32],
+        books: &ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    ) -> Result<(Vec<f32>, Vec<OpTiming>)> {
+        let batch = self.qfwd_batch(x)?;
+        self.check_books(books)?;
+        let mut timings = Vec::with_capacity(self.program.n_ops());
+        let out = self.with_buffers(|buf| {
+            self.program.execute(
+                &self.manifest,
+                self.weights.as_slice(),
+                x,
+                batch,
+                ExecMode::Quant {
+                    books,
+                    noise_std,
+                    seed,
+                },
+                buf,
+                Some(&mut timings),
+            )
+        })?;
+        Ok((out.logits, timings))
+    }
+
+    fn qfwd_batch(&self, x: &[f32]) -> Result<usize> {
+        let elems = self.manifest.input_elems();
+        ensure!(
+            !x.is_empty() && x.len() % elems == 0,
+            "qfwd input len {} not a multiple of {:?}",
+            x.len(),
+            self.manifest.input_shape
+        );
+        Ok(x.len() / elems)
     }
 
     fn check_books(&self, books: &ProgrammedCodebooks) -> Result<()> {
@@ -121,23 +206,22 @@ impl Backend for NativeBackend {
             m.batch,
             m.input_shape
         );
-        let mut ctx = models::ForwardCtx::new(
-            m,
-            self.weights.as_slice(),
-            models::Mode::Collect {
-                samples: Vec::with_capacity(m.nq()),
-                tile_max: Vec::with_capacity(m.nq()),
-            },
-        );
-        let logits = models::forward(self.kind, &mut ctx, x, m.batch)?;
-        match ctx.mode {
-            models::Mode::Collect { samples, tile_max } => Ok(CollectOut {
-                logits: logits.data,
-                samples,
-                tile_max,
-            }),
-            _ => unreachable!("collect mode preserved across forward"),
-        }
+        let out = self.with_buffers(|buf| {
+            self.program.execute(
+                m,
+                self.weights.as_slice(),
+                x,
+                m.batch,
+                ExecMode::Collect,
+                buf,
+                None,
+            )
+        })?;
+        Ok(CollectOut {
+            logits: out.logits,
+            samples: out.samples,
+            tile_max: out.tile_max,
+        })
     }
 
     fn run_qfwd(
@@ -147,27 +231,24 @@ impl Backend for NativeBackend {
         noise_std: f32,
         seed: u32,
     ) -> Result<Vec<f32>> {
-        let m: &Manifest = &self.manifest;
+        let batch = self.qfwd_batch(x)?;
         self.check_books(books)?;
-        let elems = m.input_elems();
-        ensure!(
-            !x.is_empty() && x.len() % elems == 0,
-            "qfwd input len {} not a multiple of {:?}",
-            x.len(),
-            m.input_shape
-        );
-        let batch = x.len() / elems;
-        let mut ctx = models::ForwardCtx::new(
-            m,
-            self.weights.as_slice(),
-            models::Mode::Quant {
-                books,
-                noise_std,
-                seed,
-            },
-        );
-        let logits = models::forward(self.kind, &mut ctx, x, batch)?;
-        Ok(logits.data)
+        let out = self.with_buffers(|buf| {
+            self.program.execute(
+                &self.manifest,
+                self.weights.as_slice(),
+                x,
+                batch,
+                ExecMode::Quant {
+                    books,
+                    noise_std,
+                    seed,
+                },
+                buf,
+                None,
+            )
+        })?;
+        Ok(out.logits)
     }
 
     fn weights(&self) -> &[Tensor] {
@@ -182,7 +263,8 @@ impl Backend for NativeBackend {
     }
 
     fn replicate(&self) -> Result<Box<dyn Backend + Send>> {
-        // `Arc` clones of the shared weight/manifest set: O(1), no disk
+        // `Arc` clones of the shared weight/manifest/program set: O(1),
+        // no disk, no re-validation
         Ok(Box::new(self.clone()))
     }
 }

@@ -4,6 +4,11 @@
 //! threads (this build environment vendors no rayon; the row partition is
 //! deterministic and noise RNG is seeded per row, so results do not
 //! depend on the thread count).
+//!
+//! Every kernel comes in a `_into` form writing into a caller-provided
+//! slice — the graph executor (`super::graph`) routes all hot-path
+//! tensors through a reusable scratch arena, so no kernel allocates per
+//! op.  The [`Mat`]/[`Feat`] wrappers remain for unit tests and oracles.
 
 use std::sync::Mutex;
 
@@ -141,29 +146,33 @@ const ROW_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
 /// The crossbar dataflow of Fig. 2: the contraction dimension is split
 /// into `tile_k`-row tiles (one analog accumulation each); every tile's
 /// partial sum is digitized — through the per-tile codebook in quant mode
-/// — and digitally accumulated into the output block.
+/// — and digitally accumulated into `out` (`[m, n]`, fully overwritten).
 ///
-/// Returns `(acc [m, n], absmax)` where `absmax` is the largest |partial|
-/// observed across tiles (float mode only; 0.0 in quant mode).
-pub fn tiled_mac(
-    x: &Mat,
+/// Returns `absmax`, the largest |partial| observed across tiles (float
+/// mode only; 0.0 in quant mode).
+pub fn tiled_mac_into(
+    x: &[f32],
+    m: usize,
+    k: usize,
     w: &Tensor,
     tile_k: usize,
     quant: Option<&QuantSpec>,
-) -> (Mat, f64) {
+    out: &mut [f32],
+) -> f64 {
     assert_eq!(w.shape.len(), 2, "weight matrix must be 2-D");
-    let (k, n) = (w.shape[0], w.shape[1]);
-    assert_eq!(x.cols, k, "contraction mismatch {} vs {}", x.cols, k);
-    let m = x.rows;
+    assert_eq!(w.shape[0], k, "contraction mismatch {} vs {}", w.shape[0], k);
+    let n = w.shape[1];
+    assert_eq!(x.len(), m * k, "tiled_mac input shape mismatch");
+    assert_eq!(out.len(), m * n, "tiled_mac output shape mismatch");
     let kt = k.div_ceil(tile_k).max(1);
-    let mut out = vec![0f32; m * n];
+    out.fill(0.0);
     let absmax = Mutex::new(0f64);
-    par_row_blocks(m, n, &mut out, |row0, block| {
+    par_row_blocks(m, n, out, |row0, block| {
         let mut scratch = vec![0f32; n];
         let mut local_max = 0f64;
         for (ri, orow) in block.chunks_mut(n).enumerate() {
             let r = row0 + ri;
-            let xrow = &x.data[r * k..(r + 1) * k];
+            let xrow = &x[r * k..(r + 1) * k];
             let mut rng = quant.map(|q| {
                 Rng::new(q.seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX))
             });
@@ -206,13 +215,27 @@ pub fn tiled_mac(
             }
         }
     });
-    (Mat::new(m, n, out), absmax.into_inner().unwrap())
+    absmax.into_inner().unwrap()
 }
 
-/// `y += bias` (broadcast over rows), then optional ReLU.
-pub fn add_bias_relu(y: &mut Mat, bias: &[f32], relu: bool) {
-    assert_eq!(bias.len(), y.cols, "bias length mismatch");
-    for row in y.data.chunks_mut(y.cols) {
+/// [`tiled_mac_into`] on [`Mat`] operands, allocating the output.
+pub fn tiled_mac(
+    x: &Mat,
+    w: &Tensor,
+    tile_k: usize,
+    quant: Option<&QuantSpec>,
+) -> (Mat, f64) {
+    let n = w.shape[1];
+    let mut out = vec![0f32; x.rows * n];
+    let absmax =
+        tiled_mac_into(&x.data, x.rows, x.cols, w, tile_k, quant, &mut out);
+    (Mat::new(x.rows, n, out), absmax)
+}
+
+/// `y += bias` (broadcast over `cols`-wide rows), then optional ReLU.
+pub fn add_bias_relu_into(y: &mut [f32], cols: usize, bias: &[f32], relu: bool) {
+    assert_eq!(bias.len(), cols, "bias length mismatch");
+    for row in y.chunks_mut(cols) {
         for (v, &b) in row.iter_mut().zip(bias) {
             *v += b;
             if relu && *v < 0.0 {
@@ -222,10 +245,22 @@ pub fn add_bias_relu(y: &mut Mat, bias: &[f32], relu: bool) {
     }
 }
 
+/// [`add_bias_relu_into`] on a [`Mat`].
+pub fn add_bias_relu(y: &mut Mat, bias: &[f32], relu: bool) {
+    add_bias_relu_into(&mut y.data, y.cols, bias, relu);
+}
+
 /// Layer-output NL-ADC conversion (optionally with conversion noise).
-pub fn nl_convert(y: &mut Mat, refs: &[f32], centers: &[f32], sigma: f32, seed: u64) {
-    let cols = y.cols;
-    par_row_blocks(y.rows, cols, &mut y.data, |row0, block| {
+pub fn nl_convert_into(
+    y: &mut [f32],
+    rows: usize,
+    cols: usize,
+    refs: &[f32],
+    centers: &[f32],
+    sigma: f32,
+    seed: u64,
+) {
+    par_row_blocks(rows, cols, y, |row0, block| {
         for (ri, row) in block.chunks_mut(cols).enumerate() {
             let r = row0 + ri;
             let mut rng =
@@ -241,18 +276,23 @@ pub fn nl_convert(y: &mut Mat, refs: &[f32], centers: &[f32], sigma: f32, seed: 
     });
 }
 
-/// im2col with `(kh, kw, cin)` feature ordering — matches the export-time
-/// `w.reshape(kh*kw*cin, cout)` of HWIO conv weights.  `same` pads like
+/// [`nl_convert_into`] on a [`Mat`].
+pub fn nl_convert(y: &mut Mat, refs: &[f32], centers: &[f32], sigma: f32, seed: u64) {
+    nl_convert_into(&mut y.data, y.rows, y.cols, refs, centers, sigma, seed);
+}
+
+/// Convolution output geometry: `(oh, ow, pad_top, pad_left)` for a
+/// `kh x kw` kernel at `stride` over an `h x w` map.  `same` pads like
 /// XLA SAME (low pad = total/2); otherwise VALID.
-pub fn im2col(
-    x: &Feat,
+pub fn conv_dims(
+    h: usize,
+    w: usize,
     kh: usize,
     kw: usize,
     stride: usize,
     same: bool,
-) -> (Mat, usize, usize) {
-    let (b, h, w, c) = (x.b, x.h, x.w, x.c);
-    let (oh, ow, pt, pl) = if same {
+) -> (usize, usize, usize, usize) {
+    if same {
         let oh = h.div_ceil(stride);
         let ow = w.div_ceil(stride);
         let ph = ((oh - 1) * stride + kh).saturating_sub(h);
@@ -260,9 +300,31 @@ pub fn im2col(
         (oh, ow, ph / 2, pw / 2)
     } else {
         ((h - kh) / stride + 1, (w - kw) / stride + 1, 0, 0)
-    };
+    }
+}
+
+/// im2col with `(kh, kw, cin)` feature ordering — matches the export-time
+/// `w.reshape(kh*kw*cin, cout)` of HWIO conv weights.  `out` must hold
+/// `b*oh*ow * kh*kw*c` elements; it is fully overwritten (padding zeros
+/// included).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    same: bool,
+    out: &mut [f32],
+) -> (usize, usize) {
+    let (oh, ow, pt, pl) = conv_dims(h, w, kh, kw, stride, same);
     let cols = kh * kw * c;
-    let mut data = vec![0f32; b * oh * ow * cols];
+    assert_eq!(x.len(), b * h * w * c, "im2col input shape mismatch");
+    assert_eq!(out.len(), b * oh * ow * cols, "im2col output shape mismatch");
+    out.fill(0.0);
     for bi in 0..b {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -279,149 +341,246 @@ pub fn im2col(
                         }
                         let src = ((bi * h + iy as usize) * w + ix as usize) * c;
                         let dst = row + (i * kw + j) * c;
-                        data[dst..dst + c]
-                            .copy_from_slice(&x.data[src..src + c]);
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
                     }
                 }
             }
         }
     }
-    (Mat::new(b * oh * ow, cols, data), oh, ow)
+    (oh, ow)
 }
 
-/// 2x2 stride-2 VALID max pool.
-pub fn max_pool2(x: &Feat) -> Feat {
-    let (oh, ow) = (x.h / 2, x.w / 2);
-    let mut data = vec![0f32; x.b * oh * ow * x.c];
-    for bi in 0..x.b {
+/// [`im2col_into`] on a [`Feat`], allocating the patch matrix.
+pub fn im2col(
+    x: &Feat,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    same: bool,
+) -> (Mat, usize, usize) {
+    let (oh, ow, _, _) = conv_dims(x.h, x.w, kh, kw, stride, same);
+    let cols = kh * kw * x.c;
+    let mut out = vec![0f32; x.b * oh * ow * cols];
+    im2col_into(&x.data, x.b, x.h, x.w, x.c, kh, kw, stride, same, &mut out);
+    (Mat::new(x.b * oh * ow, cols, out), oh, ow)
+}
+
+/// 2x2 stride-2 VALID max pool into `out` (`b * (h/2) * (w/2) * c`).
+pub fn max_pool2_into(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    assert_eq!(x.len(), b * h * w * c, "max_pool2 input shape mismatch");
+    assert_eq!(out.len(), b * oh * ow * c, "max_pool2 output shape mismatch");
+    for bi in 0..b {
         for oy in 0..oh {
             for ox in 0..ow {
-                for ci in 0..x.c {
+                for ci in 0..c {
                     let mut m = f32::NEG_INFINITY;
                     for dy in 0..2 {
                         for dx in 0..2 {
-                            let src = ((bi * x.h + oy * 2 + dy) * x.w
+                            let src = ((bi * h + oy * 2 + dy) * w
                                 + ox * 2
                                 + dx)
-                                * x.c
+                                * c
                                 + ci;
-                            m = m.max(x.data[src]);
+                            m = m.max(x[src]);
                         }
                     }
-                    data[((bi * oh + oy) * ow + ox) * x.c + ci] = m;
+                    out[((bi * oh + oy) * ow + ox) * c + ci] = m;
                 }
             }
         }
     }
-    Feat::new(x.b, oh, ow, x.c, data)
+}
+
+/// [`max_pool2_into`] on a [`Feat`].
+pub fn max_pool2(x: &Feat) -> Feat {
+    let (oh, ow) = (x.h / 2, x.w / 2);
+    let mut out = vec![0f32; x.b * oh * ow * x.c];
+    max_pool2_into(&x.data, x.b, x.h, x.w, x.c, &mut out);
+    Feat::new(x.b, oh, ow, x.c, out)
 }
 
 /// 3x3 stride-1 SAME average pool with a fixed /9 divisor (the inception
-/// pool branch: `reduce_window` sum over SAME padding, then / 9).
-pub fn avg_pool3_same(x: &Feat) -> Feat {
-    let mut data = vec![0f32; x.data.len()];
-    for bi in 0..x.b {
-        for oy in 0..x.h {
-            for ox in 0..x.w {
-                for ci in 0..x.c {
+/// pool branch: `reduce_window` sum over SAME padding, then / 9), into
+/// `out` (same length as `x`).
+pub fn avg_pool3_same_into(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), b * h * w * c, "avg_pool3 input shape mismatch");
+    assert_eq!(out.len(), x.len(), "avg_pool3 output shape mismatch");
+    for bi in 0..b {
+        for oy in 0..h {
+            for ox in 0..w {
+                for ci in 0..c {
                     let mut s = 0f32;
                     for dy in -1isize..=1 {
                         let iy = oy as isize + dy;
-                        if iy < 0 || iy >= x.h as isize {
+                        if iy < 0 || iy >= h as isize {
                             continue;
                         }
                         for dx in -1isize..=1 {
                             let ix = ox as isize + dx;
-                            if ix < 0 || ix >= x.w as isize {
+                            if ix < 0 || ix >= w as isize {
                                 continue;
                             }
-                            s += x.data[((bi * x.h + iy as usize) * x.w
-                                + ix as usize)
-                                * x.c
+                            s += x[((bi * h + iy as usize) * w + ix as usize)
+                                * c
                                 + ci];
                         }
                     }
-                    data[((bi * x.h + oy) * x.w + ox) * x.c + ci] = s / 9.0;
+                    out[((bi * h + oy) * w + ox) * c + ci] = s / 9.0;
                 }
             }
         }
     }
-    Feat::new(x.b, x.h, x.w, x.c, data)
 }
 
-/// Global average pool to `[b, c]`.
-pub fn global_avg_pool(x: &Feat) -> Mat {
-    let hw = (x.h * x.w) as f32;
-    let mut data = vec![0f32; x.b * x.c];
-    for bi in 0..x.b {
-        let orow = bi * x.c;
-        for p in 0..x.h * x.w {
-            let src = (bi * x.h * x.w + p) * x.c;
-            for ci in 0..x.c {
-                data[orow + ci] += x.data[src + ci];
+/// [`avg_pool3_same_into`] on a [`Feat`].
+pub fn avg_pool3_same(x: &Feat) -> Feat {
+    let mut out = vec![0f32; x.data.len()];
+    avg_pool3_same_into(&x.data, x.b, x.h, x.w, x.c, &mut out);
+    Feat::new(x.b, x.h, x.w, x.c, out)
+}
+
+/// Global average pool into `out` (`[b, c]`; fully overwritten).
+pub fn global_avg_pool_into(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+) {
+    let hw = (h * w) as f32;
+    assert_eq!(x.len(), b * h * w * c, "gap input shape mismatch");
+    assert_eq!(out.len(), b * c, "gap output shape mismatch");
+    out.fill(0.0);
+    for bi in 0..b {
+        let orow = bi * c;
+        for p in 0..h * w {
+            let src = (bi * h * w + p) * c;
+            for ci in 0..c {
+                out[orow + ci] += x[src + ci];
             }
         }
-        for ci in 0..x.c {
-            data[orow + ci] /= hw;
+        for ci in 0..c {
+            out[orow + ci] /= hw;
         }
     }
-    Mat::new(x.b, x.c, data)
 }
 
-/// Digital residual connection: `relu(a + b)` elementwise.
+/// [`global_avg_pool_into`] on a [`Feat`], to `[b, c]`.
+pub fn global_avg_pool(x: &Feat) -> Mat {
+    let mut out = vec![0f32; x.b * x.c];
+    global_avg_pool_into(&x.data, x.b, x.h, x.w, x.c, &mut out);
+    Mat::new(x.b, x.c, out)
+}
+
+/// Digital residual connection: `a + b` elementwise, optionally ReLU'd.
+pub fn add_into(a: &[f32], b: &[f32], relu: bool, out: &mut [f32]) {
+    assert_eq!(a.len(), b.len(), "add shape mismatch");
+    assert_eq!(out.len(), a.len(), "add output shape mismatch");
+    if relu {
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = (x + y).max(0.0);
+        }
+    } else {
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = x + y;
+        }
+    }
+}
+
+/// `relu(a + b)` on [`Feat`] operands.
 pub fn add_relu(a: &Feat, b: &Feat) -> Feat {
-    assert_eq!(a.data.len(), b.data.len(), "residual shape mismatch");
-    let data = a
-        .data
-        .iter()
-        .zip(&b.data)
-        .map(|(&x, &y)| (x + y).max(0.0))
-        .collect();
-    Feat::new(a.b, a.h, a.w, a.c, data)
+    let mut out = vec![0f32; a.data.len()];
+    add_into(&a.data, &b.data, true, &mut out);
+    Feat::new(a.b, a.h, a.w, a.c, out)
 }
 
-/// Channel concatenation of equal-spatial feature maps.
+/// Channel concatenation of equal-spatial maps: each part is its flat
+/// data plus channel count; `pixels` is the shared `b*h*w`.
+pub fn concat_c_into(
+    parts: &[(&[f32], usize)],
+    pixels: usize,
+    out: &mut [f32],
+) {
+    let c: usize = parts.iter().map(|&(_, pc)| pc).sum();
+    assert_eq!(out.len(), pixels * c, "concat output shape mismatch");
+    for &(data, pc) in parts {
+        assert_eq!(data.len(), pixels * pc, "concat part shape mismatch");
+    }
+    for p_idx in 0..pixels {
+        let mut off = p_idx * c;
+        for &(data, pc) in parts {
+            let src = p_idx * pc;
+            out[off..off + pc].copy_from_slice(&data[src..src + pc]);
+            off += pc;
+        }
+    }
+}
+
+/// [`concat_c_into`] on [`Feat`] parts.
 pub fn concat_c(parts: &[&Feat]) -> Feat {
     let (b, h, w) = (parts[0].b, parts[0].h, parts[0].w);
-    let c: usize = parts.iter().map(|p| p.c).sum();
-    let mut data = vec![0f32; b * h * w * c];
-    for p_idx in 0..b * h * w {
-        let mut off = p_idx * c;
-        for p in parts {
-            assert_eq!((p.b, p.h, p.w), (b, h, w), "concat spatial mismatch");
-            let src = p_idx * p.c;
-            data[off..off + p.c].copy_from_slice(&p.data[src..src + p.c]);
-            off += p.c;
-        }
+    for p in parts {
+        assert_eq!((p.b, p.h, p.w), (b, h, w), "concat spatial mismatch");
     }
-    Feat::new(b, h, w, c, data)
+    let c: usize = parts.iter().map(|p| p.c).sum();
+    let mut out = vec![0f32; b * h * w * c];
+    let flat: Vec<(&[f32], usize)> =
+        parts.iter().map(|p| (p.data.as_slice(), p.c)).collect();
+    concat_c_into(&flat, b * h * w, &mut out);
+    Feat::new(b, h, w, c, out)
 }
 
-/// Row-wise layer norm (eps matches the export-side 1e-6).
-pub fn layer_norm(y: &Mat, gamma: &[f32], beta: &[f32]) -> Mat {
-    let n = y.cols;
-    assert_eq!(gamma.len(), n, "layernorm gamma mismatch");
-    let mut data = vec![0f32; y.data.len()];
-    for (orow, row) in data.chunks_mut(n).zip(y.data.chunks(n)) {
-        let mu = row.iter().sum::<f32>() / n as f32;
-        let var =
-            row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+/// Row-wise layer norm over `cols`-wide rows (eps matches the
+/// export-side 1e-6), into `out` (same length as `x`).
+pub fn layer_norm_into(
+    x: &[f32],
+    cols: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(gamma.len(), cols, "layernorm gamma mismatch");
+    assert_eq!(beta.len(), cols, "layernorm beta mismatch");
+    assert_eq!(out.len(), x.len(), "layernorm output shape mismatch");
+    for (orow, row) in out.chunks_mut(cols).zip(x.chunks(cols)) {
+        let mu = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>()
+            / cols as f32;
         let inv = 1.0 / (var + 1e-6).sqrt();
-        for j in 0..n {
+        for j in 0..cols {
             orow[j] = (row[j] - mu) * inv * gamma[j] + beta[j];
         }
     }
-    Mat::new(y.rows, n, data)
+}
+
+/// [`layer_norm_into`] on a [`Mat`].
+pub fn layer_norm(y: &Mat, gamma: &[f32], beta: &[f32]) -> Mat {
+    let mut out = vec![0f32; y.data.len()];
+    layer_norm_into(&y.data, y.cols, gamma, beta, &mut out);
+    Mat::new(y.rows, y.cols, out)
 }
 
 /// Elementwise sum of equal-shape matrices.
 pub fn add_mat(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.data.len(), b.data.len(), "add shape mismatch");
-    Mat::new(
-        a.rows,
-        a.cols,
-        a.data.iter().zip(&b.data).map(|(&x, &y)| x + y).collect(),
-    )
+    let mut out = vec![0f32; a.data.len()];
+    add_into(&a.data, &b.data, false, &mut out);
+    Mat::new(a.rows, a.cols, out)
 }
 
 fn softmax_inplace(row: &mut [f32]) {
@@ -437,21 +596,36 @@ fn softmax_inplace(row: &mut [f32]) {
 }
 
 /// Digital-domain multi-head attention over quantized Q/K/V `[b*t, d]`
-/// row matrices (the transformer's non-MAC stage).
-pub fn attention(q: &Mat, k: &Mat, v: &Mat, b: usize, t: usize, heads: usize) -> Mat {
-    let d = q.cols;
+/// row matrices (the transformer's non-MAC stage).  `scores` is a
+/// caller-provided `t*t` scratch (fully overwritten per head); `out`
+/// must be zeroed on entry (partials accumulate per head).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    heads: usize,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
     assert_eq!(d % heads, 0, "d_model not divisible by heads");
+    assert_eq!(q.len(), b * t * d, "attention q shape mismatch");
+    assert_eq!(k.len(), q.len(), "attention k shape mismatch");
+    assert_eq!(v.len(), q.len(), "attention v shape mismatch");
+    assert_eq!(scores.len(), t * t, "attention scores scratch mismatch");
+    assert_eq!(out.len(), q.len(), "attention output shape mismatch");
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = vec![0f32; b * t * d];
-    let mut scores = vec![0f32; t * t];
     for bi in 0..b {
         for h in 0..heads {
             let off = h * hd;
             for t1 in 0..t {
-                let qrow = &q.data[(bi * t + t1) * d + off..][..hd];
+                let qrow = &q[(bi * t + t1) * d + off..][..hd];
                 for t2 in 0..t {
-                    let krow = &k.data[(bi * t + t2) * d + off..][..hd];
+                    let krow = &k[(bi * t + t2) * d + off..][..hd];
                     let mut s = 0f32;
                     for dd in 0..hd {
                         s += qrow[dd] * krow[dd];
@@ -466,7 +640,7 @@ pub fn attention(q: &Mat, k: &Mat, v: &Mat, b: usize, t: usize, heads: usize) ->
                 let orow = &mut out[(bi * t + t1) * d + off..][..hd];
                 for t2 in 0..t {
                     let a = scores[t1 * t + t2];
-                    let vrow = &v.data[(bi * t + t2) * d + off..][..hd];
+                    let vrow = &v[(bi * t + t2) * d + off..][..hd];
                     for dd in 0..hd {
                         orow[dd] += a * vrow[dd];
                     }
@@ -474,25 +648,49 @@ pub fn attention(q: &Mat, k: &Mat, v: &Mat, b: usize, t: usize, heads: usize) ->
             }
         }
     }
+}
+
+/// [`attention_into`] on [`Mat`] operands, allocating output + scratch.
+pub fn attention(q: &Mat, k: &Mat, v: &Mat, b: usize, t: usize, heads: usize) -> Mat {
+    let d = q.cols;
+    let mut out = vec![0f32; b * t * d];
+    let mut scores = vec![0f32; t * t];
+    attention_into(
+        &q.data, &k.data, &v.data, b, t, d, heads, &mut scores, &mut out,
+    );
     Mat::new(b * t, d, out)
 }
 
-/// Mean over the sequence axis: `[b*t, d]` -> `[b, d]`.
-pub fn mean_over_seq(h: &Mat, b: usize, t: usize) -> Mat {
-    let d = h.cols;
-    let mut data = vec![0f32; b * d];
+/// Mean over the sequence axis: `[b*t, d]` -> `[b, d]` into `out`
+/// (fully overwritten).
+pub fn mean_over_seq_into(
+    x: &[f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), b * t * d, "mean_over_seq input shape mismatch");
+    assert_eq!(out.len(), b * d, "mean_over_seq output shape mismatch");
+    out.fill(0.0);
     for bi in 0..b {
         for ti in 0..t {
             let src = (bi * t + ti) * d;
             for dd in 0..d {
-                data[bi * d + dd] += h.data[src + dd];
+                out[bi * d + dd] += x[src + dd];
             }
         }
         for dd in 0..d {
-            data[bi * d + dd] /= t as f32;
+            out[bi * d + dd] /= t as f32;
         }
     }
-    Mat::new(b, d, data)
+}
+
+/// [`mean_over_seq_into`] on a [`Mat`].
+pub fn mean_over_seq(h: &Mat, b: usize, t: usize) -> Mat {
+    let mut out = vec![0f32; b * h.cols];
+    mean_over_seq_into(&h.data, b, t, h.cols, &mut out);
+    Mat::new(b, h.cols, out)
 }
 
 /// Deterministic strided activation subsample — mirrors the collect

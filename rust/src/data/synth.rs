@@ -1,17 +1,21 @@
 //! Pure-Rust synthetic artifact writer: a self-consistent manifest +
-//! weights container + data splits for every native model topology, with
+//! weights container + data splits for every synthetic topology, with
 //! no Python and no HLO lowering.  This is what the native-backend tests,
 //! the concurrency soak suite and the serving benches run on when the
-//! real `make artifacts` outputs are absent — the shapes are miniature
-//! but the layer sequence matches `backend::native::models` exactly, so
-//! the full pipeline (collect -> Algorithm 1 -> qfwd -> replica pool)
-//! exercises the same code paths as the trained artifacts.
+//! real `make artifacts` outputs are absent — the shapes are miniature,
+//! and every manifest carries the layer-graph IR (`graph` section built
+//! by `nn::graphs`) the native backend executes, so the full pipeline
+//! (collect -> Algorithm 1 -> qfwd -> replica pool) exercises the same
+//! code paths as the trained artifacts.  The `mixer` topology exists
+//! *only* as manifest data — no per-model Rust was ever written for it.
 
 use std::path::Path;
 
 use anyhow::{bail, Result};
 
+use crate::io::manifest::GraphDef;
 use crate::io::weights::save_tensors;
+use crate::nn::graphs;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -29,6 +33,12 @@ pub const N_TEST: usize = 4 * BATCH;
 pub const BERT_VOCAB: usize = 32;
 /// Sequence length of the synthetic distilbert task.
 pub const BERT_SEQ: usize = 6;
+/// Attention head count of the synthetic distilbert encoder.
+pub const BERT_HEADS: usize = 4;
+
+/// Every synthetic topology, in the order `write_all` emits them.
+pub const MODELS: [&str; 5] =
+    ["resnet", "vgg", "inception", "distilbert", "mixer"];
 
 /// The mixture input family used by the property/fuzz tests: zero spike +
 /// gaussian body + occasional far outliers, with random parameters per
@@ -59,7 +69,8 @@ pub fn mixture_samples(rng: &mut Rng, n: usize) -> Vec<f64> {
 /// One quantized MAC layer of a synthetic topology: (name, k, n, relu).
 type QSpec = (&'static str, usize, usize, bool);
 
-/// resnet-mini layer table (sequence consumed by `models::resnet`).
+/// resnet-mini layer table (manifest order = `nn::graphs::resnet_mini`
+/// consumption order).
 const RESNET: [QSpec; 7] = [
     ("conv0", 27, 16, true),
     ("b1c1", 144, 16, true),
@@ -70,8 +81,9 @@ const RESNET: [QSpec; 7] = [
     ("fc", 32, CLASSES, false),
 ];
 
-/// vgg-mini: five 3x3 conv-relu layers (pool after conv1/conv3/conv4 per
-/// `models::vgg::POOL_AFTER`), flatten at 2x2x16, two dense layers.
+/// vgg-mini: five 3x3 conv-relu layers (pool after conv1/conv3/conv4,
+/// the `nn::graphs::vgg_mini` pool pattern), flatten at 2x2x16, two
+/// dense layers.
 const VGG: [QSpec; 7] = [
     ("conv0", 27, 8, true),
     ("conv1", 72, 8, true),
@@ -83,7 +95,7 @@ const VGG: [QSpec; 7] = [
 ];
 
 /// inception-mini: stem + two 3-branch blocks (concat 4+8+4 -> 16 then
-/// 8+8+8 -> 24 channels) + classifier, consumed in `models::inception`
+/// 8+8+8 -> 24 channels) + classifier, in `nn::graphs::inception_mini`
 /// order (b0, b1a, b1b, pp per block).
 const INCEPTION: [QSpec; 10] = [
     ("stem", 27, 8, true),
@@ -111,6 +123,16 @@ const DISTILBERT: [QSpec; 7] = [
     ("cls", 8, CLASSES, false),
 ];
 
+/// mixer-mini: the never-hardcoded fifth topology — 2x2 stride-2 patch
+/// embed (12 = 2*2*3 inputs), a channel-mixing MLP with a residual over
+/// the 64 patch tokens, layernorm, mean pooling, classifier.
+const MIXER: [QSpec; 4] = [
+    ("patch", 12, 8, false),
+    ("mix1", 8, 16, true),
+    ("mix2", 16, 8, false),
+    ("cls", 8, CLASSES, false),
+];
+
 struct Topology {
     qlayers: &'static [QSpec],
     input_shape: &'static [usize],
@@ -118,6 +140,8 @@ struct Topology {
     digital: Vec<(String, Vec<usize>)>,
     /// inputs are token ids rather than images
     tokens: bool,
+    /// the layer-graph IR embedded in the manifest
+    graph: GraphDef,
 }
 
 fn topology(model: &str) -> Result<Topology> {
@@ -127,18 +151,21 @@ fn topology(model: &str) -> Result<Topology> {
             input_shape: &[16, 16, 3],
             digital: Vec::new(),
             tokens: false,
+            graph: graphs::resnet_mini(),
         },
         "vgg" => Topology {
             qlayers: &VGG,
             input_shape: &[16, 16, 3],
             digital: Vec::new(),
             tokens: false,
+            graph: graphs::vgg_mini(&[false, true, false, true, true]),
         },
         "inception" => Topology {
             qlayers: &INCEPTION,
             input_shape: &[16, 16, 3],
             digital: Vec::new(),
             tokens: false,
+            graph: graphs::inception_mini(2),
         },
         "distilbert" => {
             let d = DISTILBERT[0].2; // d_model = first projection width
@@ -154,6 +181,20 @@ fn topology(model: &str) -> Result<Topology> {
                     ("d_l0_ln2_beta".into(), vec![d]),
                 ],
                 tokens: true,
+                graph: graphs::distilbert_mini(1, BERT_HEADS),
+            }
+        }
+        "mixer" => {
+            let d = MIXER[0].2; // token width = patch-embed output
+            Topology {
+                qlayers: &MIXER,
+                input_shape: &[16, 16, 3],
+                digital: vec![
+                    ("d_ln_gamma".into(), vec![d]),
+                    ("d_ln_beta".into(), vec![d]),
+                ],
+                tokens: false,
+                graph: graphs::mixer_mini(),
             }
         }
         other => bail!("no synthetic topology for model '{other}'"),
@@ -241,13 +282,15 @@ pub fn write_model(dir: &Path, model: &str, seed: u64) -> Result<()> {
   "artifacts": {{
     "collect": "{model}_collect.hlo.txt",
     "qfwd": "{model}_qfwd.hlo.txt"
-  }}
+  }},
+  "graph": {}
 }}"#,
         shape_json.join(", "),
         qlayers_json.join(","),
         weight_args.join(","),
         logits_len + nq * SPL + nq,
         logits_len + nq * SPL,
+        topo.graph.to_json(),
     );
     std::fs::write(dir.join(format!("{model}_manifest.json")), manifest)?;
 
@@ -285,19 +328,32 @@ pub fn write_model(dir: &Path, model: &str, seed: u64) -> Result<()> {
 
 /// Write synthetic artifacts for every supported topology into `dir`.
 pub fn write_all(dir: &Path, seed: u64) -> Result<()> {
-    for model in ["resnet", "vgg", "inception", "distilbert"] {
+    for model in MODELS {
         write_model(dir, model, seed)?;
     }
     Ok(())
 }
 
-/// The trained artifacts directory when present, otherwise a synthetic
-/// set written under the system temp dir — the examples/benches
-/// fallback, so they run in any checkout without Python.
+/// The trained artifacts directory when present *and graph-bearing*,
+/// otherwise a synthetic set written under the system temp dir — the
+/// examples/benches fallback, so they run in any checkout without
+/// Python.  Pre-IR artifact sets (manifests without a `graph` section)
+/// fall back to synthetic too: the native backend executes only the
+/// layer-graph IR.
 pub fn ensure_artifacts() -> Result<std::path::PathBuf> {
     let dir = crate::artifacts_dir();
-    if dir.join("resnet_manifest.json").exists() {
-        return Ok(dir);
+    let manifest = dir.join("resnet_manifest.json");
+    if manifest.exists() {
+        // present but corrupt must fail loudly, not silently fall back
+        let m = crate::io::manifest::Manifest::load(&manifest)?;
+        if m.graph.is_some() {
+            return Ok(dir);
+        }
+        eprintln!(
+            "artifacts in {} predate the layer-graph IR (no `graph` \
+             section); using a synthetic set instead",
+            dir.display()
+        );
     }
     let dir = std::env::temp_dir().join("bskmq_synth_artifacts");
     write_all(&dir, 42)?;
@@ -316,7 +372,7 @@ mod tests {
             std::env::temp_dir().join("bskmq_synth_smoke");
         let _ = std::fs::remove_dir_all(&dir);
         write_all(&dir, 7).unwrap();
-        for model in ["resnet", "vgg", "inception", "distilbert"] {
+        for model in MODELS {
             let be = load(BackendKind::Native, &dir, model).unwrap();
             let data = ModelData::load(&dir, model).unwrap();
             let m = be.manifest();

@@ -1,4 +1,8 @@
-//! Typed view over the per-model AOT manifest JSON written by aot.py.
+//! Typed view over the per-model AOT manifest JSON written by aot.py and
+//! `data::synth` — including the declarative layer-graph IR (`graph`
+//! section) the native backend executes.  This module only *parses*; all
+//! semantic validation (acyclicity, shape inference, q-layer/weight
+//! cross-checks) lives in `backend::native::graph`.
 
 use std::path::Path;
 
@@ -25,6 +29,150 @@ pub struct WeightArg {
     pub shape: Vec<usize>,
 }
 
+/// One op of the layer-graph IR, as written in the manifest: a typed node
+/// with named value edges (`inputs` -> `output`) plus the attributes its
+/// kind needs.  Unknown kinds and inconsistent attributes are rejected at
+/// load time by `backend::native::graph::GraphProgram::compile`.
+#[derive(Clone, Debug)]
+pub struct GraphOpDef {
+    /// op kind ("conv", "dense", "add", "attention", ...)
+    pub op: String,
+    /// node name, used in error messages and timing breakdowns
+    pub name: String,
+    /// value edges consumed
+    pub inputs: Vec<String>,
+    /// value edge produced
+    pub output: String,
+    /// q-layer consumed (conv/dense)
+    pub qlayer: Option<String>,
+    /// square kernel size (conv)
+    pub kernel: Option<usize>,
+    /// spatial stride (conv)
+    pub stride: Option<usize>,
+    /// "same" or "valid" padding (conv)
+    pub pad: Option<String>,
+    /// fold a ReLU into the op (add)
+    pub relu: Option<bool>,
+    /// head count (attention)
+    pub heads: Option<usize>,
+    /// scale / shift weight-arg names (layernorm)
+    pub gamma: Option<String>,
+    pub beta: Option<String>,
+    /// embedding-table / positional weight-arg names (embed)
+    pub table: Option<String>,
+    pub pos: Option<String>,
+}
+
+/// The manifest's `graph` section: a topologically-ordered op list over
+/// named value edges, rooted at `input` and read out at `output`.
+#[derive(Clone, Debug)]
+pub struct GraphDef {
+    /// name of the model-input value edge
+    pub input: String,
+    /// name of the logits value edge
+    pub output: String,
+    pub ops: Vec<GraphOpDef>,
+}
+
+impl GraphOpDef {
+    /// An op with only the universal fields set; builders fill in the
+    /// kind-specific attributes.
+    pub fn new(op: &str, name: &str, inputs: &[&str], output: &str) -> Self {
+        GraphOpDef {
+            op: op.to_string(),
+            name: name.to_string(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            output: output.to_string(),
+            qlayer: None,
+            kernel: None,
+            stride: None,
+            pad: None,
+            relu: None,
+            heads: None,
+            gamma: None,
+            beta: None,
+            table: None,
+            pos: None,
+        }
+    }
+
+    fn to_json(&self) -> String {
+        let mut fields = vec![
+            format!(r#""op": {}"#, json_str(&self.op)),
+            format!(r#""name": {}"#, json_str(&self.name)),
+            format!(
+                r#""in": [{}]"#,
+                self.inputs
+                    .iter()
+                    .map(|s| json_str(s))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+            format!(r#""out": {}"#, json_str(&self.output)),
+        ];
+        let mut push_str = |key: &str, v: &Option<String>| {
+            if let Some(s) = v {
+                fields.push(format!(r#""{key}": {}"#, json_str(s)));
+            }
+        };
+        push_str("qlayer", &self.qlayer);
+        push_str("pad", &self.pad);
+        push_str("gamma", &self.gamma);
+        push_str("beta", &self.beta);
+        push_str("table", &self.table);
+        push_str("pos", &self.pos);
+        if let Some(k) = self.kernel {
+            fields.push(format!(r#""kernel": {k}"#));
+        }
+        if let Some(s) = self.stride {
+            fields.push(format!(r#""stride": {s}"#));
+        }
+        if let Some(h) = self.heads {
+            fields.push(format!(r#""heads": {h}"#));
+        }
+        if let Some(r) = self.relu {
+            fields.push(format!(r#""relu": {r}"#));
+        }
+        format!("{{{}}}", fields.join(", "))
+    }
+}
+
+/// A JSON string literal (quoted, with `"`/`\`/control escapes).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+impl GraphDef {
+    /// Serialize back to the manifest's `graph` JSON object (the inverse
+    /// of the `parse_graph` path; `data::synth` embeds this text).
+    pub fn to_json(&self) -> String {
+        let ops: Vec<String> =
+            self.ops.iter().map(|o| format!("    {}", o.to_json())).collect();
+        format!(
+            "{{\n  \"input\": {},\n  \"output\": {},\n  \"ops\": [\n{}\n  ]\n}}",
+            json_str(&self.input),
+            json_str(&self.output),
+            ops.join(",\n")
+        )
+    }
+}
+
 /// Parsed `<model>_manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
@@ -43,6 +191,8 @@ pub struct Manifest {
     pub collect_hlo: String,
     pub qfwd_hlo: String,
     pub qfwd_b1_hlo: Option<String>,
+    /// layer-graph IR; required by the native backend, ignored by XLA
+    pub graph: Option<GraphDef>,
 }
 
 impl Manifest {
@@ -50,8 +200,13 @@ impl Manifest {
         let path = path.as_ref();
         let src = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&src)
-            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json_str(&src)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse a manifest from its JSON text (tests, the `graph` CLI).
+    pub fn from_json_str(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src)?;
 
         let qlayers = j
             .get("qlayers")?
@@ -109,6 +264,12 @@ impl Manifest {
                 .ok()
                 .map(|s| s.as_str().map(str::to_string))
                 .transpose()?,
+            graph: j
+                .get("graph")
+                .ok()
+                .map(parse_graph)
+                .transpose()
+                .context("parsing `graph` section")?,
         })
     }
 
@@ -120,5 +281,109 @@ impl Manifest {
     /// Per-sample input element count.
     pub fn input_elems(&self) -> usize {
         self.input_shape.iter().product()
+    }
+}
+
+fn opt_str(o: &Json, key: &str) -> Result<Option<String>> {
+    match o.get(key) {
+        Ok(v) => Ok(Some(v.as_str()?.to_string())),
+        Err(_) => Ok(None),
+    }
+}
+
+fn opt_usize(o: &Json, key: &str) -> Result<Option<usize>> {
+    match o.get(key) {
+        Ok(v) => Ok(Some(v.as_usize()?)),
+        Err(_) => Ok(None),
+    }
+}
+
+fn opt_bool(o: &Json, key: &str) -> Result<Option<bool>> {
+    match o.get(key) {
+        Ok(v) => Ok(Some(v.as_bool()?)),
+        Err(_) => Ok(None),
+    }
+}
+
+/// Parse a standalone `graph` JSON object (tests, round-trip checks).
+pub fn parse_graph_str(src: &str) -> Result<GraphDef> {
+    parse_graph(&Json::parse(src)?)
+}
+
+fn parse_graph(g: &Json) -> Result<GraphDef> {
+    let ops = g
+        .get("ops")?
+        .as_arr()?
+        .iter()
+        .enumerate()
+        .map(|(i, o)| {
+            let parse = || -> Result<GraphOpDef> {
+                Ok(GraphOpDef {
+                    op: o.get("op")?.as_str()?.to_string(),
+                    name: o.get("name")?.as_str()?.to_string(),
+                    inputs: o
+                        .get("in")?
+                        .as_arr()?
+                        .iter()
+                        .map(|s| Ok(s.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                    output: o.get("out")?.as_str()?.to_string(),
+                    qlayer: opt_str(o, "qlayer")?,
+                    kernel: opt_usize(o, "kernel")?,
+                    stride: opt_usize(o, "stride")?,
+                    pad: opt_str(o, "pad")?,
+                    relu: opt_bool(o, "relu")?,
+                    heads: opt_usize(o, "heads")?,
+                    gamma: opt_str(o, "gamma")?,
+                    beta: opt_str(o, "beta")?,
+                    table: opt_str(o, "table")?,
+                    pos: opt_str(o, "pos")?,
+                })
+            };
+            parse().with_context(|| {
+                // name the op when it has a name, its index otherwise
+                match o.get("name").ok().and_then(|n| n.as_str().ok()) {
+                    Some(n) => format!("graph op #{i} ('{n}')"),
+                    None => format!("graph op #{i}"),
+                }
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(GraphDef {
+        input: g.get("input")?.as_str()?.to_string(),
+        output: g.get("output")?.as_str()?.to_string(),
+        ops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_roundtrips_through_json() {
+        let mut conv = GraphOpDef::new("conv", "conv0", &["x"], "y0");
+        conv.qlayer = Some("conv0".into());
+        conv.kernel = Some(3);
+        conv.stride = Some(1);
+        conv.pad = Some("same".into());
+        let mut add = GraphOpDef::new("add", "res", &["y0", "y1"], "y2");
+        add.relu = Some(true);
+        let g = GraphDef {
+            input: "x".into(),
+            output: "y2".into(),
+            ops: vec![conv, add],
+        };
+        let back = parse_graph_str(&g.to_json()).unwrap();
+        assert_eq!(back.input, "x");
+        assert_eq!(back.output, "y2");
+        assert_eq!(back.ops.len(), 2);
+        assert_eq!(back.ops[0].op, "conv");
+        assert_eq!(back.ops[0].qlayer.as_deref(), Some("conv0"));
+        assert_eq!(back.ops[0].kernel, Some(3));
+        assert_eq!(back.ops[0].pad.as_deref(), Some("same"));
+        assert_eq!(back.ops[1].inputs, vec!["y0", "y1"]);
+        assert_eq!(back.ops[1].relu, Some(true));
+        assert_eq!(back.ops[1].heads, None);
     }
 }

@@ -7,7 +7,8 @@
 //!   bskmq serve [--addr 127.0.0.1:7878] [--models resnet,vgg] [--bits 3]
 //!               [--backend auto|native|xla] [--replicas N]
 //!               [--queue-depth N] [--calib-batches N]
-//!   bskmq synth <dir>                 # write synthetic artifacts (4 models)
+//!   bskmq synth <dir> [--seed N]      # write synthetic artifacts (5 models)
+//!   bskmq graph <manifest.json>       # validate + dump a layer graph
 //!   bskmq info                        # artifacts + backend summary
 //!
 //! The execution backend defaults to `auto` (XLA when compiled in and
@@ -55,32 +56,99 @@ fn dispatch(args: &[String]) -> Result<()> {
             calibrate(model, bits, parse_backend_flag(args)?)
         }
         Some("serve") => serve(args),
-        Some("synth") => {
-            let dir = args.get(1).context(
-                "usage: bskmq synth <dir> (refuses to guess where to write)",
+        Some("synth") => synth(args),
+        Some("graph") => {
+            let path = args.get(1).context(
+                "usage: bskmq graph <manifest.json>",
             )?;
-            bskmq::data::synth::write_all(std::path::Path::new(dir), 42)?;
-            println!(
-                "wrote synthetic artifacts for resnet/vgg/inception/distilbert \
-                 into {dir}"
-            );
-            println!("serve them with: BSKMQ_ARTIFACTS={dir} bskmq serve ...");
-            Ok(())
+            graph_dump(std::path::Path::new(path))
         }
         Some("info") => info(),
         _ => {
             eprintln!(
-                "usage: bskmq <exp|calibrate|serve|synth|info> [...]\n\
+                "usage: bskmq <exp|calibrate|serve|synth|graph|info> [...]\n\
                  \x20 exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|backends|all>\n\
                  \x20 calibrate <model> <bits> [--backend B]\n\
                  \x20 serve [--addr A] [--models M1,M2] [--bits B] [--backend B]\n\
                  \x20       [--replicas N] [--queue-depth N] [--calib-batches N]\n\
-                 \x20 synth <dir>\n\
+                 \x20 synth <dir> [--seed N]\n\
+                 \x20 graph <manifest.json>\n\
                  \x20 info"
             );
             Ok(())
         }
     }
+}
+
+/// `bskmq synth <dir> [--seed N]`: write the synthetic artifact set;
+/// the seed threads into every generator, so identical invocations
+/// produce bit-identical artifacts (reproducible test fixtures).
+fn synth(args: &[String]) -> Result<()> {
+    let dir = args.get(1).filter(|s| !s.starts_with("--")).context(
+        "usage: bskmq synth <dir> [--seed N] (refuses to guess where to write)",
+    )?;
+    let mut seed = 42u64;
+    let mut i = 2;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--seed" => {
+                seed = args
+                    .get(i + 1)
+                    .context("--seed value")?
+                    .parse()
+                    .context("--seed must be an unsigned integer")?;
+                i += 2;
+            }
+            other => anyhow::bail!("unknown synth flag '{other}'"),
+        }
+    }
+    bskmq::data::synth::write_all(std::path::Path::new(dir), seed)?;
+    println!(
+        "wrote synthetic artifacts (seed {seed}) for {} into {dir}",
+        bskmq::data::synth::MODELS.join("/")
+    );
+    println!("serve them with: BSKMQ_ARTIFACTS={dir} bskmq serve ...");
+    Ok(())
+}
+
+/// `bskmq graph <manifest.json>`: compile (validate) the manifest's
+/// layer graph and dump the resolved op list — the smoke test for
+/// hand-written manifests before anything is served.
+fn graph_dump(path: &std::path::Path) -> Result<()> {
+    use bskmq::backend::native::graph::GraphProgram;
+    let manifest = bskmq::io::manifest::Manifest::load(path)?;
+    let program = GraphProgram::compile(&manifest).with_context(|| {
+        format!("validating layer graph of model '{}'", manifest.model)
+    })?;
+    println!(
+        "model {}: input {:?} -> {} classes, {} q-layers",
+        manifest.model,
+        manifest.input_shape,
+        manifest.num_classes,
+        manifest.nq()
+    );
+    for (i, op) in program.summary(&manifest).iter().enumerate() {
+        let q = op
+            .qlayer
+            .as_ref()
+            .map(|q| format!("  qlayer {q}"))
+            .unwrap_or_default();
+        println!(
+            "  {i:>3} {:<10} {:<12} [{}] -> {} : {}{q}",
+            op.kind,
+            op.name,
+            op.inputs.join(", "),
+            op.output,
+            op.out_shape,
+        );
+    }
+    println!(
+        "graph OK: {} ops, {} value edges on {} arena slots",
+        program.n_ops(),
+        program.n_values(),
+        program.n_slots()
+    );
+    Ok(())
 }
 
 /// `--backend <kind>` anywhere in the args, else the env/auto default.
@@ -305,7 +373,7 @@ fn info() -> Result<()> {
         "compiled backends: native{}",
         if cfg!(feature = "xla") { " + xla" } else { "" }
     );
-    for model in ["resnet", "vgg", "inception", "distilbert"] {
+    for model in bskmq::data::synth::MODELS {
         print!("  {model:<11}");
         match bskmq::backend::load(BackendKind::Native, &artifacts, model) {
             Ok(b) => {

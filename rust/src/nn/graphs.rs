@@ -1,0 +1,362 @@
+//! Layer-graph IR builders: programmatic construction of the manifest
+//! `graph` section the native backend executes.
+//!
+//! `data::synth` embeds these graphs (via [`GraphDef::to_json`]) in the
+//! synthetic manifests; nothing here fixes tensor sizes — a graph only
+//! names q-layers, weight args and value edges, and the shape/k-n
+//! consistency against a concrete manifest is checked at load time by
+//! `backend::native::graph::GraphProgram::compile`.  The five mini
+//! topologies below mirror the q-layer tables in `data::synth`; new
+//! workloads need only a manifest, not new Rust.
+
+use crate::io::manifest::{GraphDef, GraphOpDef};
+
+/// Incremental [`GraphDef`] construction; one method per op kind.
+pub struct GraphBuilder {
+    input: String,
+    ops: Vec<GraphOpDef>,
+}
+
+impl GraphBuilder {
+    pub fn new(input: &str) -> GraphBuilder {
+        GraphBuilder {
+            input: input.to_string(),
+            ops: Vec::new(),
+        }
+    }
+
+    /// Quantized conv (im2col + tiled MAC); node name = q-layer name.
+    pub fn conv(
+        &mut self,
+        qlayer: &str,
+        input: &str,
+        output: &str,
+        kernel: usize,
+        stride: usize,
+        pad: &str,
+    ) -> &mut Self {
+        let mut op = GraphOpDef::new("conv", qlayer, &[input], output);
+        op.qlayer = Some(qlayer.to_string());
+        op.kernel = Some(kernel);
+        op.stride = Some(stride);
+        op.pad = Some(pad.to_string());
+        self.ops.push(op);
+        self
+    }
+
+    /// Quantized dense MAC; node name = q-layer name.
+    pub fn dense(&mut self, qlayer: &str, input: &str, output: &str) -> &mut Self {
+        let mut op = GraphOpDef::new("dense", qlayer, &[input], output);
+        op.qlayer = Some(qlayer.to_string());
+        self.ops.push(op);
+        self
+    }
+
+    pub fn maxpool2(&mut self, name: &str, input: &str, output: &str) -> &mut Self {
+        self.ops
+            .push(GraphOpDef::new("maxpool2", name, &[input], output));
+        self
+    }
+
+    pub fn avgpool3(&mut self, name: &str, input: &str, output: &str) -> &mut Self {
+        self.ops
+            .push(GraphOpDef::new("avgpool3", name, &[input], output));
+        self
+    }
+
+    /// Global average pool: NHWC -> `[1, c]` per sample.
+    pub fn gap(&mut self, name: &str, input: &str, output: &str) -> &mut Self {
+        self.ops.push(GraphOpDef::new("gap", name, &[input], output));
+        self
+    }
+
+    /// NHWC -> `[1, h*w*c]` per sample (the CNN classifier-head layout).
+    pub fn flatten(&mut self, name: &str, input: &str, output: &str) -> &mut Self {
+        self.ops
+            .push(GraphOpDef::new("flatten", name, &[input], output));
+        self
+    }
+
+    /// NHWC -> `[h*w, c]` per sample (patches-as-tokens reinterpret).
+    pub fn tokens(&mut self, name: &str, input: &str, output: &str) -> &mut Self {
+        self.ops
+            .push(GraphOpDef::new("tokens", name, &[input], output));
+        self
+    }
+
+    /// Channel concatenation of equal-spatial feature maps.
+    pub fn concat(&mut self, name: &str, inputs: &[&str], output: &str) -> &mut Self {
+        self.ops
+            .push(GraphOpDef::new("concat", name, inputs, output));
+        self
+    }
+
+    /// Residual add, optionally with a folded ReLU.
+    pub fn add(
+        &mut self,
+        name: &str,
+        a: &str,
+        b: &str,
+        output: &str,
+        relu: bool,
+    ) -> &mut Self {
+        let mut op = GraphOpDef::new("add", name, &[a, b], output);
+        op.relu = Some(relu);
+        self.ops.push(op);
+        self
+    }
+
+    /// Standalone elementwise ReLU fold.
+    pub fn relu(&mut self, name: &str, input: &str, output: &str) -> &mut Self {
+        self.ops.push(GraphOpDef::new("relu", name, &[input], output));
+        self
+    }
+
+    /// Row-wise layer norm with named scale/shift weight args.
+    pub fn layernorm(
+        &mut self,
+        name: &str,
+        input: &str,
+        output: &str,
+        gamma: &str,
+        beta: &str,
+    ) -> &mut Self {
+        let mut op = GraphOpDef::new("layernorm", name, &[input], output);
+        op.gamma = Some(gamma.to_string());
+        op.beta = Some(beta.to_string());
+        self.ops.push(op);
+        self
+    }
+
+    /// Digital multi-head attention over Q/K/V value edges.
+    pub fn attention(
+        &mut self,
+        name: &str,
+        q: &str,
+        k: &str,
+        v: &str,
+        output: &str,
+        heads: usize,
+    ) -> &mut Self {
+        let mut op = GraphOpDef::new("attention", name, &[q, k, v], output);
+        op.heads = Some(heads);
+        self.ops.push(op);
+        self
+    }
+
+    /// Token-id embedding + positional add from named weight args.
+    pub fn embed(
+        &mut self,
+        name: &str,
+        input: &str,
+        output: &str,
+        table: &str,
+        pos: &str,
+    ) -> &mut Self {
+        let mut op = GraphOpDef::new("embed", name, &[input], output);
+        op.table = Some(table.to_string());
+        op.pos = Some(pos.to_string());
+        self.ops.push(op);
+        self
+    }
+
+    /// Mean over the sequence axis: `[t, d]` -> `[1, d]` per sample.
+    pub fn meanseq(&mut self, name: &str, input: &str, output: &str) -> &mut Self {
+        self.ops
+            .push(GraphOpDef::new("meanseq", name, &[input], output));
+        self
+    }
+
+    pub fn finish(self, output: &str) -> GraphDef {
+        GraphDef {
+            input: self.input,
+            output: output.to_string(),
+            ops: self.ops,
+        }
+    }
+}
+
+/// resnet-mini: stem, one identity block, one strided projection block,
+/// GAP, linear classifier.  Residual adds + ReLUs are digital.
+pub fn resnet_mini() -> GraphDef {
+    let mut g = GraphBuilder::new("x");
+    g.conv("conv0", "x", "y0", 3, 1, "same")
+        .conv("b1c1", "y0", "h1", 3, 1, "same")
+        .conv("b1c2", "h1", "h2", 3, 1, "same")
+        .add("res1", "y0", "h2", "y1", true)
+        .conv("b2c1", "y1", "h3", 3, 2, "same")
+        .conv("b2c2", "h3", "h4", 3, 1, "same")
+        .conv("b2sc", "y1", "h5", 1, 2, "same")
+        .add("res2", "h4", "h5", "y2", true)
+        .gap("gap", "y2", "p")
+        .dense("fc", "p", "logits");
+    g.finish("logits")
+}
+
+/// vgg-mini: conv-relu stack with max pools after the layers flagged in
+/// `pool_after`, flatten, two dense classifier layers.
+pub fn vgg_mini(pool_after: &[bool]) -> GraphDef {
+    let mut g = GraphBuilder::new("x");
+    let mut cur = "x".to_string();
+    for (i, &pool) in pool_after.iter().enumerate() {
+        let conv_out = format!("c{i}");
+        g.conv(&format!("conv{i}"), &cur, &conv_out, 3, 1, "same");
+        cur = conv_out;
+        if pool {
+            let pool_out = format!("m{i}");
+            g.maxpool2(&format!("pool{i}"), &cur, &pool_out);
+            cur = pool_out;
+        }
+    }
+    g.flatten("flat", &cur, "f")
+        .dense("fc1", "f", "d1")
+        .dense("fc2", "d1", "logits");
+    g.finish("logits")
+}
+
+/// inception-mini: stem + max-pool, `blocks` three-branch modules
+/// (1x1 | 1x1->3x3 | avg-pool->1x1, channel-concatenated), GAP, fc.
+pub fn inception_mini(blocks: usize) -> GraphDef {
+    let mut g = GraphBuilder::new("x");
+    g.conv("stem", "x", "s0", 3, 1, "same").maxpool2("pool", "s0", "y0");
+    let mut cur = "y0".to_string();
+    for b in 1..=blocks {
+        let (b0, t, b1, pp, b2, cat) = (
+            format!("i{b}e0"),
+            format!("i{b}t"),
+            format!("i{b}e1"),
+            format!("i{b}pool"),
+            format!("i{b}e2"),
+            format!("y{b}"),
+        );
+        g.conv(&format!("i{b}b0"), &cur, &b0, 1, 1, "same")
+            .conv(&format!("i{b}b1a"), &cur, &t, 1, 1, "same")
+            .conv(&format!("i{b}b1b"), &t, &b1, 3, 1, "same")
+            .avgpool3(&format!("i{b}avg"), &cur, &pp)
+            .conv(&format!("i{b}pp"), &pp, &b2, 1, 1, "same")
+            .concat(&format!("i{b}cat"), &[&b0, &b1, &b2], &cat);
+        cur = cat;
+    }
+    g.gap("gap", &cur, "p").dense("fc", "p", "logits");
+    g.finish("logits")
+}
+
+/// distilbert-mini: embedding + position add, `n_layers` post-LN encoder
+/// layers (quantized Q/K/V/O/FF projections, digital attention +
+/// layernorm), mean pooling, classifier.
+pub fn distilbert_mini(n_layers: usize, heads: usize) -> GraphDef {
+    let mut g = GraphBuilder::new("x");
+    g.embed("embed", "x", "h0", "d_embed", "d_pos");
+    let mut cur = "h0".to_string();
+    for l in 0..n_layers {
+        let pre = format!("l{l}");
+        g.dense(&format!("{pre}_q"), &cur, &format!("{pre}.q"))
+            .dense(&format!("{pre}_k"), &cur, &format!("{pre}.k"))
+            .dense(&format!("{pre}_v"), &cur, &format!("{pre}.v"))
+            .attention(
+                &format!("{pre}_att"),
+                &format!("{pre}.q"),
+                &format!("{pre}.k"),
+                &format!("{pre}.v"),
+                &format!("{pre}.a"),
+                heads,
+            )
+            .dense(&format!("{pre}_o"), &format!("{pre}.a"), &format!("{pre}.o"))
+            .add(
+                &format!("{pre}_res1"),
+                &cur,
+                &format!("{pre}.o"),
+                &format!("{pre}.s1"),
+                false,
+            )
+            .layernorm(
+                &format!("{pre}_ln1"),
+                &format!("{pre}.s1"),
+                &format!("{pre}.h1"),
+                &format!("d_{pre}_ln1_gamma"),
+                &format!("d_{pre}_ln1_beta"),
+            )
+            .dense(&format!("{pre}_ff1"), &format!("{pre}.h1"), &format!("{pre}.f1"))
+            .dense(&format!("{pre}_ff2"), &format!("{pre}.f1"), &format!("{pre}.f2"))
+            .add(
+                &format!("{pre}_res2"),
+                &format!("{pre}.h1"),
+                &format!("{pre}.f2"),
+                &format!("{pre}.s2"),
+                false,
+            )
+            .layernorm(
+                &format!("{pre}_ln2"),
+                &format!("{pre}.s2"),
+                &format!("h{}", l + 1),
+                &format!("d_{pre}_ln2_gamma"),
+                &format!("d_{pre}_ln2_beta"),
+            );
+        cur = format!("h{}", l + 1);
+    }
+    g.meanseq("pool", &cur, "pooled").dense("cls", "pooled", "logits");
+    g.finish("logits")
+}
+
+/// mixer-mini: the fifth, never-hardcoded topology — a small
+/// MLP-Mixer-style graph (patch-embed conv, patches-as-tokens, per-token
+/// channel-mixing MLP with a residual, layernorm, mean pooling,
+/// classifier).  It exists only as manifest data; no per-model Rust ever
+/// existed for it.
+pub fn mixer_mini() -> GraphDef {
+    let mut g = GraphBuilder::new("x");
+    g.conv("patch", "x", "pe", 2, 2, "valid")
+        .tokens("tok", "pe", "t0")
+        .dense("mix1", "t0", "m1")
+        .dense("mix2", "m1", "m2")
+        .add("res", "t0", "m2", "r", false)
+        .relu("act", "r", "ra")
+        .layernorm("ln", "ra", "n", "d_ln_gamma", "d_ln_beta")
+        .meanseq("pool", "n", "pooled")
+        .dense("cls", "pooled", "logits");
+    g.finish("logits")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::manifest::parse_graph_str;
+
+    #[test]
+    fn builders_roundtrip_and_cover_the_vocabulary() {
+        for (g, n_ops) in [
+            (resnet_mini(), 10),
+            (vgg_mini(&[false, true, false, true, true]), 11),
+            (inception_mini(2), 16),
+            (distilbert_mini(1, 4), 14),
+            (mixer_mini(), 9),
+        ] {
+            assert_eq!(g.ops.len(), n_ops);
+            assert_eq!(g.input, "x");
+            assert_eq!(g.output, "logits");
+            let back = parse_graph_str(&g.to_json()).unwrap();
+            assert_eq!(back.ops.len(), g.ops.len());
+            for (a, b) in g.ops.iter().zip(&back.ops) {
+                assert_eq!(a.op, b.op);
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.inputs, b.inputs);
+                assert_eq!(a.output, b.output);
+                assert_eq!(a.qlayer, b.qlayer);
+            }
+        }
+    }
+
+    #[test]
+    fn distilbert_graph_consumes_qlayers_in_manifest_order() {
+        let g = distilbert_mini(2, 4);
+        let used: Vec<String> =
+            g.ops.iter().filter_map(|o| o.qlayer.clone()).collect();
+        assert_eq!(
+            used,
+            vec![
+                "l0_q", "l0_k", "l0_v", "l0_o", "l0_ff1", "l0_ff2", "l1_q",
+                "l1_k", "l1_v", "l1_o", "l1_ff1", "l1_ff2", "cls"
+            ]
+        );
+    }
+}

@@ -1,8 +1,10 @@
 //! Network descriptors: layer shapes of the paper's four evaluation
 //! models at *paper scale* (for the system-level cost simulation of
-//! Table 1) and of the mini models (for cross-checks against the AOT
-//! manifests).
+//! Table 1), and the layer-graph IR builders that emit the manifest
+//! `graph` sections the native backend executes.
 
+pub mod graphs;
 pub mod zoo;
 
+pub use graphs::GraphBuilder;
 pub use zoo::{distilbert, inception_v3, resnet18_cifar, vgg16_cifar, Layer, Network};

@@ -165,10 +165,7 @@ fn high_resolution_qfwd_tracks_float_forward() {
 /// observed quantization drift) — and such samples must actually occur.
 #[test]
 fn fuzz_argmax_agreement_all_topologies() {
-    for (mi, model) in ["resnet", "vgg", "inception", "distilbert"]
-        .iter()
-        .enumerate()
-    {
+    for (mi, model) in synth::MODELS.iter().enumerate() {
         let dir = fresh_dir(&format!("fuzz_{model}"), model);
         let be = load(BackendKind::Native, &dir, model).unwrap();
         let data = ModelData::load(&dir, model).unwrap();

@@ -1,0 +1,337 @@
+//! Golden-equivalence tests for the layer-graph executor.
+//!
+//! The `oracle` module below is the **pre-refactor hardcoded forward**,
+//! captured verbatim from `backend/native/models.rs` before that file
+//! was deleted (PR "manifest-driven layer-graph IR").  It consumes the
+//! same public `ops` kernels and the same per-(layer, salt) noise
+//! seeding, so it reproduces the old per-model `forward_infer` paths
+//! bit-for-bit — and every test here asserts that the generic graph
+//! executor's logits (and, in collect mode, activation subsamples and
+//! tile absmax) are **bit-identical** to it, in both execution modes,
+//! with and without conversion noise, across all four paper topologies.
+
+use bskmq::backend::native::graph::{layer_seed, NL_SEED_SALT};
+use bskmq::backend::native::ops::{
+    add_bias_relu, add_mat, add_relu, attention, avg_pool3_same,
+    collect_subsample, concat_c, global_avg_pool, im2col, layer_norm,
+    max_pool2, mean_over_seq, min_ref_step, nl_convert, tiled_mac, Feat, Mat,
+    QuantSpec,
+};
+use bskmq::backend::{load, Backend, BackendKind, ProgrammedCodebooks};
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::data::dataset::ModelData;
+use bskmq::data::synth;
+use bskmq::io::manifest::Manifest;
+use bskmq::macro_model::ROWS;
+use bskmq::quant::Method;
+use bskmq::tensor::Tensor;
+
+/// The four pre-refactor hand-written forwards, preserved as the golden
+/// reference.  Do not "modernize" this code: its value is that it is the
+/// exact computation the deleted `models.rs` performed.
+mod oracle {
+    use super::*;
+
+    /// Transformer head count of the mini DistilBERT (export-side
+    /// constant of the old native backend).
+    const BERT_HEADS: usize = 4;
+
+    pub enum Mode<'a> {
+        Collect {
+            samples: Vec<Vec<f64>>,
+            tile_max: Vec<f64>,
+        },
+        Quant {
+            books: &'a ProgrammedCodebooks,
+            noise_std: f32,
+            seed: u32,
+        },
+    }
+
+    pub struct ForwardCtx<'a> {
+        pub manifest: &'a Manifest,
+        pub weights: &'a [Tensor],
+        pub mode: Mode<'a>,
+        qi: usize,
+    }
+
+    impl<'a> ForwardCtx<'a> {
+        pub fn new(
+            manifest: &'a Manifest,
+            weights: &'a [Tensor],
+            mode: Mode<'a>,
+        ) -> ForwardCtx<'a> {
+            ForwardCtx {
+                manifest,
+                weights,
+                mode,
+                qi: 0,
+            }
+        }
+
+        fn digital(&self, name: &str) -> &'a Tensor {
+            let idx = self
+                .manifest
+                .weight_args
+                .iter()
+                .position(|wa| wa.name == name)
+                .unwrap_or_else(|| panic!("digital param '{name}' missing"));
+            &self.weights[idx]
+        }
+
+        fn qmatmul(&mut self, x: &Mat, relu: bool) -> Mat {
+            let wi = self.qi;
+            self.qi += 1;
+            let w = &self.weights[2 * wi];
+            let bias = &self.weights[2 * wi + 1];
+            assert_eq!(
+                self.manifest.qlayers[wi].relu, relu,
+                "oracle relu flag out of sync at layer {wi}"
+            );
+            match &mut self.mode {
+                Mode::Collect { samples, tile_max } => {
+                    let (mut y, absmax) = tiled_mac(x, w, ROWS, None);
+                    add_bias_relu(&mut y, &bias.data, relu);
+                    tile_max.push(absmax);
+                    samples.push(collect_subsample(
+                        &y.data,
+                        self.manifest.samples_per_layer,
+                    ));
+                    y
+                }
+                Mode::Quant {
+                    books,
+                    noise_std,
+                    seed,
+                } => {
+                    let (n_refs, n_centers, t_refs, t_centers) =
+                        books.layer_rows(wi);
+                    let spec = QuantSpec {
+                        refs: t_refs,
+                        centers: t_centers,
+                        sigma: *noise_std * min_ref_step(t_refs),
+                        seed: layer_seed(*seed, wi, 0),
+                    };
+                    let (mut y, _) = tiled_mac(x, w, ROWS, Some(&spec));
+                    add_bias_relu(&mut y, &bias.data, relu);
+                    nl_convert(
+                        &mut y,
+                        n_refs,
+                        n_centers,
+                        *noise_std * min_ref_step(n_refs),
+                        layer_seed(*seed, wi, NL_SEED_SALT),
+                    );
+                    y
+                }
+            }
+        }
+
+        fn qconv(
+            &mut self,
+            x: &Feat,
+            k: usize,
+            stride: usize,
+            relu: bool,
+        ) -> Feat {
+            let (x2d, oh, ow) = im2col(x, k, k, stride, true);
+            let y = self.qmatmul(&x2d, relu);
+            Feat::from_mat(y, x.b, oh, ow)
+        }
+    }
+
+    pub fn forward(
+        model: &str,
+        ctx: &mut ForwardCtx,
+        x: &[f32],
+        batch: usize,
+    ) -> Mat {
+        let logits = if model == "distilbert" {
+            distilbert(ctx, x, batch)
+        } else {
+            let m = ctx.manifest;
+            let (h, w, c) =
+                (m.input_shape[0], m.input_shape[1], m.input_shape[2]);
+            let feat = Feat::new(batch, h, w, c, x.to_vec());
+            match model {
+                "resnet" => resnet(ctx, feat),
+                "vgg" => vgg(ctx, feat),
+                "inception" => inception(ctx, feat),
+                other => panic!("oracle has no forward for '{other}'"),
+            }
+        };
+        assert_eq!(ctx.qi, ctx.manifest.nq(), "oracle q-layer count");
+        logits
+    }
+
+    fn resnet(ctx: &mut ForwardCtx, x: Feat) -> Mat {
+        let y = ctx.qconv(&x, 3, 1, true); // conv0
+        let h = ctx.qconv(&y, 3, 1, true); // b1c1
+        let h = ctx.qconv(&h, 3, 1, false); // b1c2
+        let y = add_relu(&y, &h);
+        let h = ctx.qconv(&y, 3, 2, true); // b2c1
+        let h = ctx.qconv(&h, 3, 1, false); // b2c2
+        let sc = ctx.qconv(&y, 1, 2, false); // b2sc
+        let y = add_relu(&h, &sc);
+        let p = global_avg_pool(&y);
+        ctx.qmatmul(&p, false) // fc
+    }
+
+    fn vgg(ctx: &mut ForwardCtx, x: Feat) -> Mat {
+        const POOL_AFTER: [bool; 5] = [false, true, false, true, true];
+        let mut y = x;
+        for pool in POOL_AFTER {
+            y = ctx.qconv(&y, 3, 1, true);
+            if pool {
+                y = max_pool2(&y);
+            }
+        }
+        let m = y.flatten();
+        let m = ctx.qmatmul(&m, true); // fc1
+        ctx.qmatmul(&m, false) // fc2
+    }
+
+    fn inception(ctx: &mut ForwardCtx, x: Feat) -> Mat {
+        let mut y = max_pool2(&ctx.qconv(&x, 3, 1, true)); // stem
+        for _ in 0..2 {
+            let br0 = ctx.qconv(&y, 1, 1, true); // b0
+            let t = ctx.qconv(&y, 1, 1, true); // b1a
+            let br1 = ctx.qconv(&t, 3, 1, true); // b1b
+            let pooled = avg_pool3_same(&y);
+            let br2 = ctx.qconv(&pooled, 1, 1, true); // pp
+            y = concat_c(&[&br0, &br1, &br2]);
+        }
+        let p = global_avg_pool(&y);
+        ctx.qmatmul(&p, false) // fc
+    }
+
+    fn distilbert(ctx: &mut ForwardCtx, x: &[f32], batch: usize) -> Mat {
+        let manifest = ctx.manifest;
+        let t = manifest.input_shape[0];
+        let d = manifest.qlayers[0].n;
+        let embed = ctx.digital("d_embed");
+        let pos = ctx.digital("d_pos");
+        let vocab = embed.shape[0];
+
+        let mut h = Mat::zeros(batch * t, d);
+        for bi in 0..batch {
+            for ti in 0..t {
+                let tok =
+                    (x[bi * t + ti].max(0.0) as usize).min(vocab - 1);
+                let erow = &embed.data[tok * d..(tok + 1) * d];
+                let prow = &pos.data[ti * d..(ti + 1) * d];
+                let orow = &mut h.data
+                    [(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                for dd in 0..d {
+                    orow[dd] = erow[dd] + prow[dd];
+                }
+            }
+        }
+
+        let n_layers = (manifest.nq() - 1) / 6;
+        for l in 0..n_layers {
+            let q = ctx.qmatmul(&h, false);
+            let k = ctx.qmatmul(&h, false);
+            let v = ctx.qmatmul(&h, false);
+            let a = attention(&q, &k, &v, batch, t, BERT_HEADS);
+            let o = ctx.qmatmul(&a, false);
+            let ln1g = ctx.digital(&format!("d_l{l}_ln1_gamma"));
+            let ln1b = ctx.digital(&format!("d_l{l}_ln1_beta"));
+            h = layer_norm(&add_mat(&h, &o), &ln1g.data, &ln1b.data);
+            let f = ctx.qmatmul(&h, true); // ff1
+            let f = ctx.qmatmul(&f, false); // ff2
+            let ln2g = ctx.digital(&format!("d_l{l}_ln2_gamma"));
+            let ln2b = ctx.digital(&format!("d_l{l}_ln2_beta"));
+            h = layer_norm(&add_mat(&h, &f), &ln2g.data, &ln2b.data);
+        }
+        let pooled = mean_over_seq(&h, batch, t);
+        ctx.qmatmul(&pooled, false) // cls
+    }
+}
+
+/// The four paper topologies the old backend hardcoded.
+const GOLDEN_MODELS: [&str; 4] = ["resnet", "vgg", "inception", "distilbert"];
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bskmq_golden_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// collect mode: logits, per-layer subsamples and tile absmax all
+/// bit/value-identical to the pre-refactor forward.
+#[test]
+fn graph_collect_matches_hardcoded_forwards_bitwise() {
+    for model in GOLDEN_MODELS {
+        let dir = fresh_dir(&format!("collect_{model}"));
+        synth::write_model(&dir, model, 42).unwrap();
+        let be = load(BackendKind::Native, &dir, model).unwrap();
+        let data = ModelData::load(&dir, model).unwrap();
+        let m = be.manifest();
+        let xb = ModelData::batch(&data.x_calib, 0, m.batch);
+
+        let got = be.run_collect(xb).unwrap();
+
+        let mut ctx = oracle::ForwardCtx::new(
+            m,
+            be.weights(),
+            oracle::Mode::Collect {
+                samples: Vec::new(),
+                tile_max: Vec::new(),
+            },
+        );
+        let want = oracle::forward(model, &mut ctx, xb, m.batch);
+        assert_eq!(
+            bits(&got.logits),
+            bits(&want.data),
+            "{model}: collect logits diverged from the pre-refactor forward"
+        );
+        let oracle::Mode::Collect { samples, tile_max } = ctx.mode else {
+            unreachable!()
+        };
+        assert_eq!(got.samples, samples, "{model}: collect subsamples");
+        assert_eq!(got.tile_max, tile_max, "{model}: collect tile absmax");
+    }
+}
+
+/// quant mode: calibrated qfwd logits bit-identical, with zero noise and
+/// with conversion noise (same per-(layer, row) seeding).
+#[test]
+fn graph_qfwd_matches_hardcoded_forwards_bitwise() {
+    for model in GOLDEN_MODELS {
+        let dir = fresh_dir(&format!("qfwd_{model}"));
+        synth::write_model(&dir, model, 42).unwrap();
+        let be = load(BackendKind::Native, &dir, model).unwrap();
+        let data = ModelData::load(&dir, model).unwrap();
+        let m = be.manifest();
+        let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
+            .calibrate(&data, 3)
+            .unwrap();
+        let xt = ModelData::batch(&data.x_test, 0, m.batch);
+
+        for (noise_std, seed) in [(0.0f32, 7u32), (0.5, 9)] {
+            let got = be
+                .run_qfwd(xt, &calib.programmed, noise_std, seed)
+                .unwrap();
+            let mut ctx = oracle::ForwardCtx::new(
+                m,
+                be.weights(),
+                oracle::Mode::Quant {
+                    books: &calib.programmed,
+                    noise_std,
+                    seed,
+                },
+            );
+            let want = oracle::forward(model, &mut ctx, xt, m.batch);
+            assert_eq!(
+                bits(&got),
+                bits(&want.data),
+                "{model} (noise {noise_std}, seed {seed}): qfwd logits \
+                 diverged from the pre-refactor forward"
+            );
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Layer-graph IR acceptance tests: every class of malformed graph must
+//! fail at *load* time (GraphProgram::compile) with an error naming the
+//! offending op/edge — never panic mid-inference — and a topology that
+//! was never hardcoded in Rust (the MLP-Mixer-style `mixer`) must run
+//! the full pipeline from its manifest alone.  Also pins `bskmq synth`
+//! seed reproducibility: same seed -> byte-identical artifacts.
+
+use bskmq::backend::native::graph::GraphProgram;
+use bskmq::backend::native::NativeBackend;
+use bskmq::backend::{load, Backend, BackendKind};
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::coordinator::ptq::PtqEvaluator;
+use bskmq::coordinator::server::InferenceServer;
+use bskmq::data::dataset::ModelData;
+use bskmq::data::synth;
+use bskmq::io::manifest::Manifest;
+use bskmq::quant::Method;
+
+/// A minimal two-dense-layer manifest with a caller-supplied `ops`
+/// array (the shared fixture of the failure tests).
+fn manifest_with_ops(ops_json: &str) -> Manifest {
+    let src = format!(
+        r#"{{
+  "model": "fixture",
+  "batch": 2,
+  "input_shape": [4],
+  "input_dtype": "f32",
+  "num_classes": 3,
+  "max_levels": 128,
+  "qlayers": [
+    {{"name": "d0", "k": 4, "n": 5, "relu": true}},
+    {{"name": "d1", "k": 5, "n": 3, "relu": false}}
+  ],
+  "weight_args": [
+    {{"name": "q00_d0_w", "shape": [4, 5]}},
+    {{"name": "q00_d0_b", "shape": [5]}},
+    {{"name": "q01_d1_w", "shape": [5, 3]}},
+    {{"name": "q01_d1_b", "shape": [3]}}
+  ],
+  "collect": {{
+    "out_len": 0, "logits_len": 6,
+    "samples_per_layer": 8, "tilemax_offset": 0
+  }},
+  "artifacts": {{"collect": "none", "qfwd": "none"}},
+  "graph": {{
+    "input": "x",
+    "output": "logits",
+    "ops": [{ops_json}]
+  }}
+}}"#
+    );
+    Manifest::from_json_str(&src).unwrap()
+}
+
+fn compile_err(ops_json: &str) -> String {
+    let m = manifest_with_ops(ops_json);
+    let err = GraphProgram::compile(&m)
+        .expect_err("malformed graph must fail at load");
+    format!("{err:#}")
+}
+
+#[test]
+fn cyclic_graph_fails_at_load_naming_op_and_edge() {
+    // d0 consumes d1's output while d1 consumes d0's: a 2-cycle.  The
+    // topological-order contract makes this a forward reference.
+    let e = compile_err(
+        r#"{"op": "dense", "name": "d0", "in": ["loop"], "out": "h",
+            "qlayer": "d0"},
+           {"op": "dense", "name": "d1", "in": ["h"], "out": "loop",
+            "qlayer": "d1"}"#,
+    );
+    assert!(e.contains("d0"), "error must name the op: {e}");
+    assert!(e.contains("loop"), "error must name the edge: {e}");
+    assert!(e.contains("cyclic"), "error must diagnose the cycle: {e}");
+}
+
+#[test]
+fn unknown_op_kind_fails_at_load() {
+    let e = compile_err(
+        r#"{"op": "convolution", "name": "c0", "in": ["x"],
+            "out": "logits", "qlayer": "d0"}"#,
+    );
+    assert!(e.contains("unknown op kind"), "{e}");
+    assert!(e.contains("convolution"), "{e}");
+    assert!(e.contains("c0"), "error must name the op: {e}");
+}
+
+#[test]
+fn edge_consumer_shape_mismatch_fails_at_load() {
+    // d1 (k = 5) applied straight to the 4-feature input edge
+    let e = compile_err(
+        r#"{"op": "dense", "name": "bad", "in": ["x"], "out": "logits",
+            "qlayer": "d1"}"#,
+    );
+    assert!(e.contains("bad"), "error must name the op: {e}");
+    assert!(e.contains("4 features"), "{e}");
+    assert!(e.contains("k = 5"), "{e}");
+}
+
+#[test]
+fn unreferenced_qlayer_fails_at_load() {
+    // a graph that is complete and shape-consistent (d0 straight to a
+    // 5-class output) but leaves q-layer d1 with no consumer — its
+    // calibration stream would silently never be fed
+    let src = r#"{
+  "model": "fixture",
+  "batch": 2,
+  "input_shape": [4],
+  "input_dtype": "f32",
+  "num_classes": 5,
+  "max_levels": 128,
+  "qlayers": [
+    {"name": "d0", "k": 4, "n": 5, "relu": true},
+    {"name": "d1", "k": 5, "n": 3, "relu": false}
+  ],
+  "weight_args": [
+    {"name": "q00_d0_w", "shape": [4, 5]},
+    {"name": "q00_d0_b", "shape": [5]},
+    {"name": "q01_d1_w", "shape": [5, 3]},
+    {"name": "q01_d1_b", "shape": [3]}
+  ],
+  "collect": {
+    "out_len": 0, "logits_len": 10,
+    "samples_per_layer": 8, "tilemax_offset": 0
+  },
+  "artifacts": {"collect": "none", "qfwd": "none"},
+  "graph": {
+    "input": "x",
+    "output": "logits",
+    "ops": [
+      {"op": "dense", "name": "d0", "in": ["x"], "out": "logits",
+       "qlayer": "d0"}
+    ]
+  }
+}"#;
+    let m = Manifest::from_json_str(src).unwrap();
+    let e = format!(
+        "{:#}",
+        GraphProgram::compile(&m).expect_err("unused q-layer must fail")
+    );
+    assert!(e.contains("d1"), "error must name the q-layer: {e}");
+    assert!(e.contains("referenced by no graph op"), "{e}");
+}
+
+#[test]
+fn dangling_edge_fails_at_load() {
+    // a fully-wired chain plus one relu whose output nothing consumes
+    let e = compile_err(
+        r#"{"op": "dense", "name": "d0", "in": ["x"], "out": "h",
+            "qlayer": "d0"},
+           {"op": "relu", "name": "orphan", "in": ["h"], "out": "dead"},
+           {"op": "dense", "name": "d1", "in": ["h"], "out": "logits",
+            "qlayer": "d1"}"#,
+    );
+    assert!(e.contains("dead"), "error must name the edge: {e}");
+    assert!(e.contains("never consumed"), "{e}");
+    assert!(e.contains("orphan"), "error must name the producer: {e}");
+}
+
+#[test]
+fn double_consumed_qlayer_fails_at_load() {
+    let e = compile_err(
+        r#"{"op": "dense", "name": "first", "in": ["x"], "out": "h",
+            "qlayer": "d0"},
+           {"op": "dense", "name": "second", "in": ["x"], "out": "h2",
+            "qlayer": "d0"},
+           {"op": "add", "name": "merge", "in": ["h", "h2"],
+            "out": "logits"}"#,
+    );
+    assert!(e.contains("second"), "error must name the op: {e}");
+    assert!(e.contains("already consumed"), "{e}");
+    assert!(e.contains("first"), "error must name the first user: {e}");
+}
+
+#[test]
+fn graphless_manifest_fails_at_load_not_inference() {
+    let mut m = manifest_with_ops(
+        r#"{"op": "dense", "name": "d0", "in": ["x"], "out": "h",
+            "qlayer": "d0"},
+           {"op": "dense", "name": "d1", "in": ["h"], "out": "logits",
+            "qlayer": "d1"}"#,
+    );
+    m.graph = None;
+    let e = format!(
+        "{:#}",
+        GraphProgram::compile(&m).expect_err("graphless must fail")
+    );
+    assert!(e.contains("no `graph` section"), "{e}");
+    // and the backend constructor surfaces it at build time
+    let e2 = NativeBackend::from_parts(m, Vec::new())
+        .err()
+        .map(|e| format!("{e:#}"))
+        .expect("from_parts must fail without a graph");
+    assert!(e2.contains("no `graph` section"), "{e2}");
+}
+
+#[test]
+fn valid_fixture_compiles_and_reports_arena() {
+    let m = manifest_with_ops(
+        r#"{"op": "dense", "name": "d0", "in": ["x"], "out": "h",
+            "qlayer": "d0"},
+           {"op": "dense", "name": "d1", "in": ["h"], "out": "logits",
+            "qlayer": "d1"}"#,
+    );
+    let p = GraphProgram::compile(&m).unwrap();
+    assert_eq!(p.n_ops(), 2);
+    assert_eq!(p.n_values(), 3);
+    assert!(p.n_slots() <= 2, "liveness planner failed to reuse slots");
+}
+
+/// Acceptance: the fifth topology — never hardcoded anywhere in Rust —
+/// runs collect -> Algorithm 1 -> qfwd -> PTQ -> serving purely from its
+/// manifest.
+#[test]
+fn mixer_runs_end_to_end_from_manifest_alone() {
+    let dir = std::env::temp_dir().join("bskmq_graph_mixer");
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_model(&dir, "mixer", 42).unwrap();
+
+    let be = load(BackendKind::Native, &dir, "mixer").unwrap();
+    let m = be.manifest();
+    assert_eq!(m.nq(), 4);
+    let data = ModelData::load(&dir, "mixer").unwrap();
+
+    // collect layout + relu discipline
+    let out = be
+        .run_collect(ModelData::batch(&data.x_calib, 0, m.batch))
+        .unwrap();
+    assert_eq!(out.logits.len(), m.batch * m.num_classes);
+    assert_eq!(out.samples.len(), 4);
+    for (i, q) in m.qlayers.iter().enumerate() {
+        assert_eq!(out.samples[i].len(), synth::SPL, "layer {}", q.name);
+        if q.relu {
+            assert!(out.samples[i].iter().all(|&v| v >= 0.0), "{}", q.name);
+        }
+        assert!(out.tile_max[i] > 0.0, "layer {}", q.name);
+    }
+
+    // Algorithm 1 -> deployed quantized forward -> PTQ accuracy
+    let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
+        .calibrate(&data, 3)
+        .unwrap();
+    let xb = ModelData::batch(&data.x_test, 0, m.batch);
+    let a = be.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap();
+    let b = be.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap();
+    assert_eq!(a, b, "mixer qfwd must be deterministic");
+    assert!(a.iter().all(|v| v.is_finite()));
+    let r = PtqEvaluator::new(be.as_ref())
+        .evaluate(&data, &calib.programmed, 0.0, 2, 3)
+        .unwrap();
+    assert_eq!(r.samples, 2 * m.batch);
+    assert!(r.accuracy.is_finite());
+
+    // and the serving stack hosts it like any paper topology
+    let server = InferenceServer::start(
+        dir.clone(),
+        "mixer".into(),
+        BackendKind::Native,
+        Method::BsKmq,
+        3,
+        0.0,
+        2,
+    )
+    .unwrap();
+    let elems: usize = data.x_test.shape[1..].iter().product();
+    for i in 0..3 {
+        let x = data.x_test.data[i * elems..(i + 1) * elems].to_vec();
+        let logits = server.infer(x).unwrap();
+        assert_eq!(logits.len(), synth::CLASSES);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}
+
+/// `bskmq synth --seed`: same seed -> byte-identical artifacts; a
+/// different seed actually changes them.
+#[test]
+fn synth_seed_reproducibility() {
+    let base = std::env::temp_dir().join("bskmq_graph_seed");
+    let (a, b, c) = (base.join("a"), base.join("b"), base.join("c"));
+    for d in [&a, &b, &c] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    synth::write_model(&a, "resnet", 1234).unwrap();
+    synth::write_model(&b, "resnet", 1234).unwrap();
+    synth::write_model(&c, "resnet", 99).unwrap();
+    for f in [
+        "resnet_manifest.json",
+        "resnet_weights.bin",
+        "resnet_data.bin",
+    ] {
+        let fa = std::fs::read(a.join(f)).unwrap();
+        let fb = std::fs::read(b.join(f)).unwrap();
+        assert_eq!(fa, fb, "{f}: same seed must be byte-identical");
+    }
+    assert_ne!(
+        std::fs::read(a.join("resnet_weights.bin")).unwrap(),
+        std::fs::read(c.join("resnet_weights.bin")).unwrap(),
+        "different seeds must produce different weights"
+    );
+}
