@@ -22,7 +22,7 @@ use bskmq::backend::native::NativeBackend;
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::data::dataset::ModelData;
-use bskmq::quant::Method;
+use bskmq::quant::{Method, QuantSpec};
 use bskmq::util::bench::{bench, black_box};
 
 fn main() -> anyhow::Result<()> {
@@ -44,7 +44,8 @@ fn main() -> anyhow::Result<()> {
         let name = be.name();
         println!("=== {name} backend (resnet) ===");
         let calib =
-            Calibrator::new(be.as_ref(), Method::BsKmq, 3).calibrate(&data, 8)?;
+            Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
+                .calibrate(&data, 8)?;
         let batch = be.manifest().batch;
         let in_elems = be.manifest().input_elems();
         let xb = &data.x_test.data[..batch * in_elems];
@@ -86,7 +87,7 @@ fn main() -> anyhow::Result<()> {
         };
         let data = ModelData::load(&artifacts, model)?;
         let calib =
-            Calibrator::new(&be, Method::BsKmq, 3).calibrate(&data, 8)?;
+            Calibrator::with_uniform(&be, QuantSpec::new(Method::BsKmq, 3)).calibrate(&data, 8)?;
         let batch = be.manifest().batch;
         let xb = &data.x_test.data[..batch * be.manifest().input_elems()];
 

@@ -1,0 +1,58 @@
+//! Bench: sharded vs serial calibration throughput.
+//!
+//! Streams the same calibration batches through 1/2/4/8 shards (each
+//! shard a `Backend::replicate` clone on its own scoped thread) and
+//! reports wall-clock per calibration — asserting along the way that
+//! every shard count reproduces the serial codebooks bit for bit, which
+//! is the whole point of the mergeable estimator design.
+//!
+//!   cargo bench --bench calibration
+
+use std::time::Instant;
+
+use bskmq::backend::{load, Backend, BackendKind};
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::data::dataset::ModelData;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bskmq::data::synth::ensure_artifacts()?;
+    println!("artifacts: {}", artifacts.display());
+    for model in ["resnet", "vgg"] {
+        let be = load(BackendKind::Native, &artifacts, model)?;
+        let data = ModelData::load(&artifacts, model)?;
+        let calib = Calibrator::from_manifest(be.as_ref());
+        let n_batches = 8;
+        let iters = 5;
+        println!(
+            "=== {model}: {n_batches} batches, {} q-layers, spec {} ===",
+            be.manifest().nq(),
+            calib.specs()[0].summary()
+        );
+        let mut reference: Option<Vec<u64>> = None;
+        for shards in [1usize, 2, 4, 8] {
+            let t0 = Instant::now();
+            let mut last = None;
+            for _ in 0..iters {
+                last = Some(calib.calibrate_sharded(&data, n_batches, shards)?);
+            }
+            let dt_ms = t0.elapsed().as_secs_f64() / iters as f64 * 1e3;
+            let r = last.unwrap();
+            let sig: Vec<u64> = r
+                .nl_books
+                .iter()
+                .chain(r.tile_books.iter())
+                .flat_map(|b| b.centers.iter().map(|c| c.to_bits()))
+                .collect();
+            match &reference {
+                None => reference = Some(sig),
+                Some(want) => assert_eq!(
+                    want, &sig,
+                    "{shards}-shard codebooks diverged from serial"
+                ),
+            }
+            println!("  shards {shards}: {dt_ms:8.2} ms/calibration");
+        }
+    }
+    println!("codebooks bit-identical across all shard counts");
+    Ok(())
+}

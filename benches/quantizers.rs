@@ -13,11 +13,11 @@ fn main() {
     let xs = ActivationProfile::ReluConv.sample(50_000, 3);
     for m in Method::ALL {
         let r = bench(&format!("fit {} @3b", m.name()), || {
-            black_box(m.fit(&xs, 3));
+            black_box(m.fit(&xs, 3, 0));
         });
         r.print();
     }
-    let cb = Method::BsKmq.fit_hw(&xs, 3);
+    let cb = Method::BsKmq.fit_hw(&xs, 3, 0);
     let r = bench("quantize 50k through codebook", || {
         black_box(cb.mse(&xs));
     });
@@ -31,10 +31,10 @@ fn main() {
     ] {
         for bits in [3u32, 4] {
             let xs = profile.sample(60_000, 11);
-            let bs = Method::BsKmq.fit_hw(&xs, bits).mse(&xs);
+            let bs = Method::BsKmq.fit_hw(&xs, bits, 0).mse(&xs);
             print!("{:<17} {bits}b  ", profile.name());
             for m in Method::ALL {
-                let mse = m.fit_hw(&xs, bits).mse(&xs);
+                let mse = m.fit_hw(&xs, bits, 0).mse(&xs);
                 print!("{}={:.4} ({:.1}x)  ", m.name(), mse, mse / bs);
             }
             println!();

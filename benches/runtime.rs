@@ -9,7 +9,7 @@
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::data::dataset::ModelData;
-use bskmq::quant::Method;
+use bskmq::quant::{Method, QuantSpec};
 use bskmq::util::bench::{bench, black_box};
 
 fn main() -> anyhow::Result<()> {
@@ -19,7 +19,8 @@ fn main() -> anyhow::Result<()> {
     println!("=== qfwd request path (resnet, {} backend) ===", backend.name());
     let data = ModelData::load(&artifacts, "resnet")?;
     let calib =
-        Calibrator::new(backend.as_ref(), Method::BsKmq, 3).calibrate(&data, 8)?;
+        Calibrator::with_uniform(backend.as_ref(), QuantSpec::new(Method::BsKmq, 3))
+            .calibrate(&data, 8)?;
     let batch = backend.manifest().batch;
     let in_elems = backend.manifest().input_elems();
     let xb = &data.x_test.data[..batch * in_elems];

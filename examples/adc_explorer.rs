@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     let xs = ActivationProfile::ReluConv.sample(40_000, 9);
     println!("\nbitcell accounting per resolution (NL vs linear ramp):");
     for bits in 1..=7u32 {
-        let cb = Method::BsKmq.fit_hw(&xs, bits);
+        let cb = Method::BsKmq.fit_hw(&xs, bits, 0);
         let cfg = NlAdcConfig::from_codebook(&cb, bits)?;
         let (nl, lin) = nl_vs_linear_cells(bits);
         println!(
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 2. convert a sweep through the 4-bit ADC
-    let cb = Method::BsKmq.fit_hw(&xs, 4);
+    let cb = Method::BsKmq.fit_hw(&xs, 4, 0);
     let adc = NlAdc::new(NlAdcConfig::from_codebook(&cb, 4)?);
     println!("\n4-bit transfer function (input -> code -> center):");
     let lo = cb.centers[0];

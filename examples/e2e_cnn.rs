@@ -27,7 +27,7 @@ use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::coordinator::ptq::PtqEvaluator;
 use bskmq::data::dataset::ModelData;
 use bskmq::nn::zoo::resnet18_cifar;
-use bskmq::quant::Method;
+use bskmq::quant::{Method, QuantSpec};
 
 fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
@@ -39,10 +39,13 @@ fn main() -> anyhow::Result<()> {
     println!("[2/4] calibrating (Algorithm 1, 8 batches x 32)");
     let bits = 3;
     let be = backend.as_ref();
-    let bs = Calibrator::new(be, Method::BsKmq, bits).calibrate(&data, 8)?;
-    let lin = Calibrator::new(be, Method::Linear, bits).calibrate(&data, 8)?;
+    let bs = Calibrator::with_uniform(be, QuantSpec::new(Method::BsKmq, bits))
+        .calibrate(&data, 8)?;
+    let lin = Calibrator::with_uniform(be, QuantSpec::new(Method::Linear, bits))
+        .calibrate(&data, 8)?;
     // float reference: 7-bit linear codebooks ~ no activation quantization
-    let float_ref = Calibrator::new(be, Method::Linear, 7).calibrate(&data, 8)?;
+    let float_ref = Calibrator::with_uniform(be, QuantSpec::new(Method::Linear, 7))
+        .calibrate(&data, 8)?;
     for (i, q) in be.manifest().qlayers.iter().enumerate() {
         println!(
             "    layer {:<6} range [{:.3}, {:.3}] min-step {:.4}",
@@ -74,7 +77,8 @@ fn main() -> anyhow::Result<()> {
     let sigma_lsb = (tt.sigma / MAC_UNITS_PER_CELL) as f32;
     let wq = ev.quantize_weights(4)?;
     let wq_books =
-        Calibrator::new(wq.as_ref(), Method::BsKmq, bits).calibrate(&data, 8)?;
+        Calibrator::with_uniform(wq.as_ref(), QuantSpec::new(Method::BsKmq, bits))
+            .calibrate(&data, 8)?;
     let evw = PtqEvaluator::new(wq.as_ref());
     let acc_deploy = evw
         .evaluate(&data, &wq_books.programmed, sigma_lsb, n, 1)?

@@ -8,7 +8,7 @@
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::data::dataset::ModelData;
-use bskmq::quant::Method;
+use bskmq::quant::{Method, QuantSpec};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = bskmq::artifacts_dir();
@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // stream calibration batches through the collect entry point
-    let calib = Calibrator::new(backend.as_ref(), Method::BsKmq, 3);
+    let calib = Calibrator::with_uniform(backend.as_ref(), QuantSpec::new(Method::BsKmq, 3));
     let samples = calib.collect_samples(&data, 8)?;
     let layer0 = &samples[0];
     println!(
@@ -36,9 +36,9 @@ fn main() -> anyhow::Result<()> {
     // fit every quantizer at 3 bits and compare deployed MSE
     let bits = 3;
     println!("3-bit quantizer MSE (after §2.3 hardware projection):");
-    let bs = Method::BsKmq.fit_hw(layer0, bits).mse(layer0);
+    let bs = Method::BsKmq.fit_hw(layer0, bits, 0).mse(layer0);
     for m in Method::ALL {
-        let mse = m.fit_hw(layer0, bits).mse(layer0);
+        let mse = m.fit_hw(layer0, bits, 0).mse(layer0);
         println!(
             "  {:<10} {:>10.6}  ({:.2}x vs BS-KMQ)",
             m.name(),
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // the BS-KMQ codebook, as the IM NL-ADC would be programmed
-    let cb = Method::BsKmq.fit_hw(layer0, bits);
+    let cb = Method::BsKmq.fit_hw(layer0, bits, 0);
     println!("BS-KMQ centers: {:?}", round3(&cb.centers));
     println!("floor-ADC refs: {:?}", round3(&cb.refs));
     Ok(())

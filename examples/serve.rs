@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let models: Vec<String> =
         vec!["resnet".to_string(), "vgg".to_string()];
     println!(
-        "starting registry: {} x {replicas} replica(s), 3-bit BS-KMQ, {} backend",
+        "starting registry: {} x {replicas} replica(s), manifest quant specs, {} backend",
         models.join("+"),
         cfg.backend.name()
     );

@@ -163,7 +163,7 @@ mod tests {
     #[test]
     fn convert_matches_codebook_quantize() {
         let xs = relu_samples(20_000);
-        let cb = Method::BsKmq.fit_hw(&xs, 4);
+        let cb = Method::BsKmq.fit_hw(&xs, 4, 0);
         let adc = NlAdc::new(NlAdcConfig::from_codebook(&cb, 4).unwrap());
         let mut rng = Rng::new(6);
         for _ in 0..2000 {
@@ -184,7 +184,7 @@ mod tests {
         assert_eq!(max_resolution(), 7);
         let xs = relu_samples(5_000);
         for bits in 1..=7 {
-            let cb = Method::BsKmq.fit_hw(&xs, bits);
+            let cb = Method::BsKmq.fit_hw(&xs, bits, 0);
             let cfg = NlAdcConfig::from_codebook(&cb, bits).unwrap();
             assert!(cfg.cells_used() <= USABLE_CELLS, "bits={bits}");
             assert_eq!(cfg.ladder().len(), 1 << bits);
@@ -202,7 +202,7 @@ mod tests {
     #[test]
     fn column_conversion_shares_ramp() {
         let xs = relu_samples(5_000);
-        let cb = Method::Linear.fit_hw(&xs, 3);
+        let cb = Method::Linear.fit_hw(&xs, 3, 0);
         let adc = NlAdc::new(NlAdcConfig::from_codebook(&cb, 3).unwrap());
         let vs = [0.0, 5.0, 10.0, 40.0];
         let codes = adc.convert_column(&vs);

@@ -20,13 +20,13 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::ops::{
     add_bias_relu_into, add_into, attention_into, avg_pool3_same_into,
     collect_subsample, concat_c_into, conv_dims, global_avg_pool_into,
     im2col_into, layer_norm_into, max_pool2_into, mean_over_seq_into,
-    min_ref_step, nl_convert_into, tiled_mac_into, QuantSpec,
+    min_ref_step, nl_convert_into, tiled_mac_into, ConvertSpec,
 };
 use crate::backend::ProgrammedCodebooks;
 use crate::io::manifest::Manifest;
@@ -301,6 +301,14 @@ impl GraphProgram {
                 b.shape,
                 ql.n
             );
+            // per-layer QuantSpec vs the manifest's codebook capacity:
+            // an unprogrammable precision must fail at load, not after
+            // calibration has already burned the compute
+            if let Some(spec) = &ql.spec {
+                spec.validate(m.max_levels).with_context(|| {
+                    format!("q-layer '{}': invalid quant spec", ql.name)
+                })?;
+            }
         }
 
         ensure!(
@@ -1134,7 +1142,7 @@ fn qmac(
             seed,
         } => {
             let (n_refs, n_centers, t_refs, t_centers) = books.layer_rows(q);
-            let spec = QuantSpec {
+            let spec = ConvertSpec {
                 refs: t_refs,
                 centers: t_centers,
                 sigma: noise_std * min_ref_step(t_refs),

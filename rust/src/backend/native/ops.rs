@@ -132,7 +132,7 @@ pub fn min_ref_step(refs: &[f32]) -> f32 {
 }
 
 /// Per-tile conversion programmed into the MAC loop (quant mode).
-pub struct QuantSpec<'a> {
+pub struct ConvertSpec<'a> {
     pub refs: &'a [f32],
     pub centers: &'a [f32],
     /// pre-scaled conversion noise sigma in MAC units (noise_std * LSB)
@@ -156,7 +156,7 @@ pub fn tiled_mac_into(
     k: usize,
     w: &Tensor,
     tile_k: usize,
-    quant: Option<&QuantSpec>,
+    quant: Option<&ConvertSpec>,
     out: &mut [f32],
 ) -> f64 {
     assert_eq!(w.shape.len(), 2, "weight matrix must be 2-D");
@@ -223,7 +223,7 @@ pub fn tiled_mac(
     x: &Mat,
     w: &Tensor,
     tile_k: usize,
-    quant: Option<&QuantSpec>,
+    quant: Option<&ConvertSpec>,
 ) -> (Mat, f64) {
     let n = w.shape[1];
     let mut out = vec![0f32; x.rows * n];
@@ -760,7 +760,7 @@ mod tests {
         let w = Tensor::new(vec![4, 1], vec![1.0; 4]).unwrap();
         let cb = crate::quant::codebook::Codebook::linear(-128.0, 128.0, 7);
         let (refs, centers) = cb.padded(128);
-        let spec = QuantSpec {
+        let spec = ConvertSpec {
             refs: &refs,
             centers: &centers,
             sigma: 0.0,

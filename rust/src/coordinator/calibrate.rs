@@ -1,108 +1,259 @@
 //! Calibration orchestration: streams batches through the model's
 //! `collect` entry point (any [`Backend`]), feeds every quantized layer's
-//! activation subsample to its own Algorithm 1 calibrator (or a baseline
-//! fitter), and programs the resulting codebooks — the per-layer,
-//! data-dependent quantization the prior NL-ADC hardware (fixed profiles)
-//! could not do.
+//! activation subsample into its own streaming [`QuantEstimator`] (the
+//! fitter its per-layer [`QuantSpec`] names), and programs the resulting
+//! codebooks — the per-layer, data-dependent, *mixed-precision*
+//! quantization the prior NL-ADC hardware (fixed profiles) could not do.
+//!
+//! Because the estimators are mergeable, calibration shards: with
+//! `shards > 1`, [`Calibrator::calibrate_sharded`] spawns one scoped
+//! thread per shard, each streaming a contiguous slice of the
+//! calibration batches through its own [`Backend::replicate`] clone and
+//! estimator set, then merges the shard states associatively.  The
+//! merged codebooks are **bit-identical** to the serial run — pinned by
+//! `rust/tests/quant_spec.rs` — so sharding is purely a wall-clock knob.
 
-use anyhow::{ensure, Result};
+use std::ops::Range;
+
+use anyhow::{ensure, Context, Result};
 
 use crate::backend::{Backend, ProgrammedCodebooks};
 use crate::data::dataset::ModelData;
-use crate::quant::bs_kmq::BsKmqCalibrator;
-use crate::quant::codebook::{Codebook, MAX_LEVELS};
-use crate::quant::Method;
-
-/// Per-tile conversion resolution: the reconfigurable ADC's maximum (7
-/// bit linear) — intermediate partial sums keep full hardware precision
-/// while the layer output uses the low-bit NL codebook.
-pub const TILE_BITS: u32 = 7;
+use crate::quant::codebook::Codebook;
+use crate::quant::estimator::{estimator_for, QuantEstimator};
+use crate::quant::QuantSpec;
 
 pub struct CalibrationResult {
     /// per-layer NL codebooks (hardware-projected)
     pub nl_books: Vec<Codebook>,
-    /// per-layer 7-bit linear tile codebooks
+    /// per-layer linear tile codebooks (each layer's `tile_bits`)
     pub tile_books: Vec<Codebook>,
     /// stacked tensors ready for the deployed forward
     pub programmed: ProgrammedCodebooks,
     /// calibration batches consumed
     pub batches: usize,
+    /// shards the batches were streamed over
+    pub shards: usize,
     /// per-layer sample counts observed
     pub samples_seen: Vec<usize>,
+    /// the per-layer specs this calibration ran with
+    pub specs: Vec<QuantSpec>,
+}
+
+/// Per-shard accumulation state: one estimator per q-layer plus the
+/// exactly-associative side statistics.
+struct ShardState {
+    estimators: Vec<Box<dyn QuantEstimator>>,
+    tile_max: Vec<f64>,
+    samples_seen: Vec<usize>,
+}
+
+impl ShardState {
+    fn absorb(&mut self, other: ShardState) -> Result<()> {
+        for (mine, theirs) in
+            self.estimators.iter_mut().zip(&other.estimators)
+        {
+            mine.merge(theirs.as_ref())?;
+        }
+        for (a, b) in self.tile_max.iter_mut().zip(&other.tile_max) {
+            if *b > *a {
+                *a = *b;
+            }
+        }
+        for (a, b) in self.samples_seen.iter_mut().zip(&other.samples_seen) {
+            *a += *b;
+        }
+        Ok(())
+    }
+}
+
+/// Stream one contiguous batch range through a backend into a fresh
+/// estimator set (the per-shard worker body).
+fn run_shard(
+    backend: &dyn Backend,
+    specs: &[QuantSpec],
+    data: &ModelData,
+    range: Range<usize>,
+) -> Result<ShardState> {
+    let m = backend.manifest();
+    let nq = m.nq();
+    let mut estimators: Vec<Box<dyn QuantEstimator>> =
+        specs.iter().map(estimator_for).collect();
+    for e in &mut estimators {
+        e.seek(range.start as u64);
+    }
+    let mut tile_max = vec![0f64; nq];
+    let mut samples_seen = vec![0usize; nq];
+    for b in range {
+        let xb = ModelData::batch(&data.x_calib, b, m.batch);
+        let out = backend.run_collect(xb)?;
+        for i in 0..nq {
+            samples_seen[i] += out.samples[i].len();
+            estimators[i].observe(&out.samples[i]);
+            tile_max[i] = tile_max[i].max(out.tile_max[i]);
+        }
+    }
+    Ok(ShardState {
+        estimators,
+        tile_max,
+        samples_seen,
+    })
+}
+
+/// Split `n` batches into `shards` contiguous, near-even ranges.
+fn split_ranges(n: usize, shards: usize) -> Vec<Range<usize>> {
+    let per = n / shards;
+    let rem = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for s in 0..shards {
+        let len = per + usize::from(s < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
 }
 
 pub struct Calibrator<'a> {
     backend: &'a dyn Backend,
-    pub method: Method,
-    pub bits: u32,
+    specs: Vec<QuantSpec>,
 }
 
 impl<'a> Calibrator<'a> {
-    pub fn new(backend: &'a dyn Backend, method: Method, bits: u32) -> Self {
-        Calibrator {
-            backend,
-            method,
-            bits,
-        }
+    /// Calibrate with the manifest's per-layer specs (absent entries
+    /// resolve to the historical defaults) — the deployment path.
+    pub fn from_manifest(backend: &'a dyn Backend) -> Calibrator<'a> {
+        let specs = backend.manifest().layer_specs();
+        Calibrator { backend, specs }
     }
 
-    /// Stream `n_batches` of calibration data (Algorithm 1 stage 1), then
-    /// fit + hardware-project every layer's codebook (stage 2).
+    /// One spec applied uniformly, re-seeded per layer
+    /// ([`QuantSpec::per_layer`]) — the sweep/CLI-override path.
+    pub fn with_uniform(
+        backend: &'a dyn Backend,
+        spec: QuantSpec,
+    ) -> Calibrator<'a> {
+        let specs = spec.per_layer(backend.manifest().nq());
+        Calibrator { backend, specs }
+    }
+
+    /// Explicit per-layer specs (length is checked at `calibrate`).
+    pub fn with_specs(
+        backend: &'a dyn Backend,
+        specs: Vec<QuantSpec>,
+    ) -> Calibrator<'a> {
+        Calibrator { backend, specs }
+    }
+
+    /// The resolved per-layer specs this calibrator will run with.
+    pub fn specs(&self) -> &[QuantSpec] {
+        &self.specs
+    }
+
+    /// Serial calibration: stream `n_batches`, then fit + hardware-
+    /// project every layer's codebook.
     pub fn calibrate(
         &self,
         data: &ModelData,
         n_batches: usize,
     ) -> Result<CalibrationResult> {
+        self.calibrate_sharded(data, n_batches, 1)
+    }
+
+    /// Shard-parallel calibration: `shards` scoped threads each stream a
+    /// contiguous slice of the batches through a [`Backend::replicate`]
+    /// clone; estimator states merge associatively, so the codebooks are
+    /// bit-identical to `shards = 1`.
+    pub fn calibrate_sharded(
+        &self,
+        data: &ModelData,
+        n_batches: usize,
+        shards: usize,
+    ) -> Result<CalibrationResult> {
         let m = self.backend.manifest();
         let nq = m.nq();
-        let batch = m.batch;
         ensure!(
-            n_batches * batch <= data.n_calib(),
+            self.specs.len() == nq,
+            "{} quant specs for {} q-layers",
+            self.specs.len(),
+            nq
+        );
+        for (i, spec) in self.specs.iter().enumerate() {
+            spec.validate(m.max_levels).with_context(|| {
+                format!("q-layer '{}' quant spec", m.qlayers[i].name)
+            })?;
+        }
+        ensure!(n_batches >= 1, "calibration needs at least one batch");
+        ensure!(
+            n_batches * m.batch <= data.n_calib(),
             "need {} calib samples, have {}",
-            n_batches * batch,
+            n_batches * m.batch,
             data.n_calib()
         );
-        let mut bs_calibs: Vec<BsKmqCalibrator> =
-            (0..nq).map(|i| BsKmqCalibrator::new(0.005, 200_000, i as u64)).collect();
-        let mut pooled: Vec<Vec<f64>> = vec![Vec::new(); nq];
-        let mut tile_max = vec![0f64; nq];
-        let mut samples_seen = vec![0usize; nq];
+        let shards = shards.clamp(1, n_batches);
 
-        for b in 0..n_batches {
-            let xb = ModelData::batch(&data.x_calib, b, batch);
-            let out = self.backend.run_collect(xb)?;
-            for i in 0..nq {
-                samples_seen[i] += out.samples[i].len();
-                match self.method {
-                    Method::BsKmq => bs_calibs[i].observe(&out.samples[i]),
-                    _ => pooled[i].extend(&out.samples[i]),
-                }
-                tile_max[i] = tile_max[i].max(out.tile_max[i]);
+        let mut states: Vec<ShardState> = if shards == 1 {
+            vec![run_shard(self.backend, &self.specs, data, 0..n_batches)?]
+        } else {
+            let mut replicas = Vec::with_capacity(shards);
+            for _ in 0..shards {
+                replicas.push(self.backend.replicate().context(
+                    "sharded calibration needs a replicable backend \
+                     (run with shards = 1 instead)",
+                )?);
             }
+            let ranges = split_ranges(n_batches, shards);
+            let specs = &self.specs;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = replicas
+                    .into_iter()
+                    .zip(ranges)
+                    .map(|(be, range)| {
+                        scope.spawn(move || {
+                            run_shard(be.as_ref(), specs, data, range)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("calibration shard panicked"))
+                    .collect::<Result<Vec<_>>>()
+            })?
+        };
+
+        let mut root = states.remove(0);
+        for st in states {
+            root.absorb(st)?;
         }
 
         let mut nl_books = Vec::with_capacity(nq);
         let mut tile_books = Vec::with_capacity(nq);
         for i in 0..nq {
-            let centers = match self.method {
-                Method::BsKmq => bs_calibs[i].finish(self.bits, i as u64)?,
-                m => m.fit(&pooled[i], self.bits),
-            };
-            nl_books.push(
-                Codebook::from_centers(&centers).project_to_hardware(self.bits),
-            );
+            let spec = &self.specs[i];
+            let ideal = root.estimators[i]
+                .finish(spec.act_bits)
+                .with_context(|| {
+                    format!(
+                        "fitting the {} codebook of q-layer '{}'",
+                        spec.method.name(),
+                        m.qlayers[i].name
+                    )
+                })?;
+            nl_books.push(ideal.project_to_hardware(spec.act_bits));
             // per-tile linear conversion over the observed partial range
-            let r = tile_max[i].max(1e-6);
-            tile_books.push(Codebook::linear(-r, r, TILE_BITS));
+            let r = root.tile_max[i].max(1e-6);
+            tile_books.push(Codebook::linear(-r, r, spec.tile_bits));
         }
         let programmed =
-            ProgrammedCodebooks::stack(&nl_books, &tile_books, MAX_LEVELS)?;
+            ProgrammedCodebooks::stack(&nl_books, &tile_books, m.max_levels)?;
         Ok(CalibrationResult {
             nl_books,
             tile_books,
             programmed,
             batches: n_batches,
-            samples_seen,
+            shards,
+            samples_seen: root.samples_seen,
+            specs: self.specs.clone(),
         })
     }
 
@@ -123,5 +274,22 @@ impl<'a> Calibrator<'a> {
             }
         }
         Ok(pooled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_contiguously() {
+        for (n, shards) in [(8usize, 3usize), (16, 4), (5, 8), (1, 1)] {
+            let ranges = split_ranges(n, shards.min(n));
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "gap between shards");
+            }
+        }
     }
 }

@@ -4,11 +4,12 @@
 //! quantization (Fig. 6), and reports accuracy against the exported
 //! labels.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::backend::{Backend, ProgrammedCodebooks};
 use crate::data::dataset::ModelData;
 use crate::quant::weights::quantize_tensor;
+use crate::quant::QuantSpec;
 
 #[derive(Clone, Debug)]
 pub struct PtqResult {
@@ -67,6 +68,38 @@ impl<'a> PtqEvaluator<'a> {
         let mut weights = self.backend.weights().to_vec();
         for i in self.backend.qweight_indices() {
             weights[i] = quantize_tensor(&weights[i], w_bits);
+        }
+        self.backend.with_weights(weights)
+    }
+
+    /// A backend clone with *per-layer* weight quantization: each
+    /// q-layer whose spec carries `weight_bits` gets its matrix
+    /// quantized to that width, the rest keep the trained floats — the
+    /// mixed-precision deployments (the paper's 6/2/3b system point) as
+    /// one artifact.
+    pub fn quantize_weights_spec(
+        &self,
+        specs: &[QuantSpec],
+    ) -> Result<Box<dyn Backend>> {
+        let m = self.backend.manifest();
+        ensure!(
+            specs.len() == m.nq(),
+            "{} quant specs for {} q-layers",
+            specs.len(),
+            m.nq()
+        );
+        let qidx = self.backend.qweight_indices();
+        ensure!(
+            qidx.len() == m.nq(),
+            "backend exposes {} q-weight tensors for {} q-layers",
+            qidx.len(),
+            m.nq()
+        );
+        let mut weights = self.backend.weights().to_vec();
+        for (i, spec) in specs.iter().enumerate() {
+            if let Some(w_bits) = spec.weight_bits {
+                weights[qidx[i]] = quantize_tensor(&weights[qidx[i]], w_bits);
+            }
         }
         self.backend.with_weights(weights)
     }

@@ -34,8 +34,9 @@ use anyhow::{bail, ensure, Result};
 
 use crate::backend::{Backend, BackendKind, ProgrammedCodebooks};
 use crate::coordinator::calibrate::{CalibrationResult, Calibrator};
+use crate::coordinator::ptq::PtqEvaluator;
 use crate::data::dataset::ModelData;
-use crate::quant::Method;
+use crate::quant::QuantSpec;
 
 /// Outcome of one request: logits, or a serving-side error message.
 pub type Reply = std::result::Result<Vec<f32>, String>;
@@ -286,10 +287,14 @@ impl JobQueue {
 #[derive(Clone, Copy, Debug)]
 pub struct PoolConfig {
     pub backend: BackendKind,
-    pub method: Method,
-    pub bits: u32,
+    /// uniform calibration-spec override; `None` serves the manifest's
+    /// per-layer specs (the mixed-precision deployment default)
+    pub spec: Option<QuantSpec>,
     pub noise_std: f32,
     pub calib_batches: usize,
+    /// parallel calibration shards (merged codebooks are bit-identical
+    /// to serial, so this is purely a startup-latency knob)
+    pub calib_shards: usize,
     /// worker replicas, each owning its own `Backend` instance
     pub replicas: usize,
     /// bounded intake queue depth (admission control threshold)
@@ -302,10 +307,10 @@ impl Default for PoolConfig {
     fn default() -> Self {
         PoolConfig {
             backend: BackendKind::Auto,
-            method: Method::BsKmq,
-            bits: 3,
+            spec: None,
             noise_std: 0.0,
             calib_batches: 8,
+            calib_shards: 1,
             replicas: 1,
             queue_depth: 256,
             batch_window: Duration::from_millis(2),
@@ -395,7 +400,7 @@ pub struct ModelPool {
 
 impl ModelPool {
     /// Start the pool: a coordinator thread loads the backend, calibrates
-    /// `cfg.bits`-bit codebooks on `cfg.calib_batches` batches, spawns
+    /// the per-layer spec'd codebooks on `cfg.calib_batches` batches, spawns
     /// `cfg.replicas - 1` additional workers over [`Backend::replicate`]
     /// clones, then serves as worker 0 until the pool is dropped.
     pub fn start(
@@ -581,7 +586,11 @@ impl Drop for ModelPool {
 }
 
 /// Load + calibrate one model for a pool (runs on the coordinator
-/// thread so PJRT-style engines never cross threads).
+/// thread so PJRT-style engines never cross threads).  Per-layer specs
+/// come from the manifest unless `cfg.spec` overrides them uniformly;
+/// specs carrying `weight_bits` quantize the weights *first* and then
+/// calibrate on the quantized-weight backend (Algorithm 1 runs on the
+/// deployed macro, not a float simulator).
 fn pool_setup(
     cfg: &PoolConfig,
     artifacts: &std::path::Path,
@@ -589,8 +598,18 @@ fn pool_setup(
 ) -> Result<(Box<dyn Backend>, CalibrationResult)> {
     let be = crate::backend::load(cfg.backend, artifacts, model)?;
     let data = ModelData::load(artifacts, model)?;
-    let calib = Calibrator::new(be.as_ref(), cfg.method, cfg.bits)
-        .calibrate(&data, cfg.calib_batches)?;
+    let specs = match cfg.spec {
+        Some(s) => s.per_layer(be.manifest().nq()),
+        None => be.manifest().layer_specs(),
+    };
+    let be: Box<dyn Backend> =
+        if specs.iter().any(|s| s.weight_bits.is_some()) {
+            PtqEvaluator::new(be.as_ref()).quantize_weights_spec(&specs)?
+        } else {
+            be
+        };
+    let calib = Calibrator::with_specs(be.as_ref(), specs)
+        .calibrate_sharded(&data, cfg.calib_batches, cfg.calib_shards)?;
     Ok((be, calib))
 }
 
@@ -724,22 +743,21 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start a one-model, default-config pool: load the selected backend,
-    /// calibrate `bits`-bit codebooks on `calib_batches`, then serve
-    /// until dropped.
+    /// Start a one-model, default-config pool: load the selected
+    /// backend, calibrate on `calib_batches` batches — with `spec` as a
+    /// uniform per-layer override, or the manifest's specs when `None` —
+    /// then serve until dropped.
     pub fn start(
         artifacts: std::path::PathBuf,
         model: String,
         backend: BackendKind,
-        method: Method,
-        bits: u32,
+        spec: Option<QuantSpec>,
         noise_std: f32,
         calib_batches: usize,
     ) -> Result<InferenceServer> {
         let cfg = PoolConfig {
             backend,
-            method,
-            bits,
+            spec,
             noise_std,
             calib_batches,
             ..PoolConfig::default()

@@ -13,9 +13,10 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use crate::io::manifest::GraphDef;
+use crate::io::manifest::{quant_spec_json, GraphDef};
 use crate::io::weights::save_tensors;
 use crate::nn::graphs;
+use crate::quant::QuantSpec;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -252,12 +253,22 @@ pub fn write_model(dir: &Path, model: &str, seed: u64) -> Result<()> {
     // --- manifest (same JSON layout aot.py writes)
     let nq = topo.qlayers.len();
     let logits_len = BATCH * CLASSES;
+    // per-layer QuantSpec entries: the paper's fine-tuned NL-ADC levels
+    // are per-network (3/3/4/4b for resnet/vgg/inception/distilbert), so
+    // the manifest — not the CLI — carries each layer's precision
+    let act_bits = paper_act_bits(model);
     let qlayers_json: Vec<String> = topo
         .qlayers
         .iter()
-        .map(|(name, k, n, relu)| {
+        .enumerate()
+        .map(|(i, (name, k, n, relu))| {
+            let spec = QuantSpec {
+                act_bits,
+                ..QuantSpec::default_for_layer(i)
+            };
             format!(
-                r#"{{"name": "{name}", "k": {k}, "n": {n}, "relu": {relu}}}"#
+                r#"{{"name": "{name}", "k": {k}, "n": {n}, "relu": {relu}, "quant": {}}}"#,
+                quant_spec_json(&spec)
             )
         })
         .collect();
@@ -324,6 +335,15 @@ pub fn write_model(dir: &Path, model: &str, seed: u64) -> Result<()> {
         ],
     )?;
     Ok(())
+}
+
+/// The paper's fine-tuned NL-ADC resolution per network (3/3/4/4b for
+/// the four paper topologies; the mixer rides at the default 3).
+pub fn paper_act_bits(model: &str) -> u32 {
+    match model {
+        "inception" | "distilbert" => 4,
+        _ => 3,
+    }
 }
 
 /// Write synthetic artifacts for every supported topology into `dir`.

@@ -12,7 +12,7 @@ use crate::coordinator::calibrate::Calibrator;
 use crate::coordinator::ptq::argmax;
 use crate::data::dataset::ModelData;
 use crate::experiments::ExpContext;
-use crate::quant::Method;
+use crate::quant::{Method, QuantSpec};
 
 pub const MODELS: [&str; 4] = ["resnet", "vgg", "inception", "distilbert"];
 
@@ -40,8 +40,11 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<AgreeRow>> {
                 }
             };
         let data = ModelData::load(&ctx.artifacts, model)?;
-        let calib = Calibrator::new(native.as_ref(), Method::BsKmq, 3)
-            .calibrate(&data, 4)?;
+        let calib = Calibrator::with_uniform(
+            native.as_ref(),
+            QuantSpec::new(Method::BsKmq, 3),
+        )
+        .calibrate(&data, 4)?;
         let m = native.manifest();
         let xb = ModelData::batch(&data.x_test, 0, m.batch);
         let nat = native.run_qfwd(xb, &calib.programmed, 0.0, 7)?;

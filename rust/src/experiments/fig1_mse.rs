@@ -22,7 +22,7 @@ pub fn run(ctx: &ExpContext, model: &str, bits: u32) -> Result<Vec<MseRow>> {
     println!("== {fig}: {bits}-bit quantizer MSE on {model} layer-0 activations ==");
     let backend = ctx.backend(model)?;
     let data = ModelData::load(&ctx.artifacts, model)?;
-    let calib = Calibrator::new(backend.as_ref(), Method::BsKmq, bits);
+    let calib = Calibrator::from_manifest(backend.as_ref());
     let samples = calib.collect_samples(&data, 8)?;
     let layer0 = &samples[0];
     println!(
@@ -43,7 +43,7 @@ pub fn mse_rows(samples: &[f64], bits: u32) -> Vec<MseRow> {
         .iter()
         .map(|m| MseRow {
             method: m.name(),
-            mse: m.fit_hw(samples, bits).mse(samples),
+            mse: m.fit_hw(samples, bits, 0).mse(samples),
         })
         .collect()
 }

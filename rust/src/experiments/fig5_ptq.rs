@@ -8,7 +8,7 @@ use crate::coordinator::calibrate::Calibrator;
 use crate::coordinator::ptq::PtqEvaluator;
 use crate::data::dataset::ModelData;
 use crate::experiments::ExpContext;
-use crate::quant::Method;
+use crate::quant::{Method, QuantSpec};
 use crate::util::json::Json;
 
 pub const MODELS: [&str; 4] = ["resnet", "vgg", "inception", "distilbert"];
@@ -40,8 +40,11 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<Fig5Row>> {
         for bits in BIT_SWEEP {
             let mut accs = [0.0f64; 2];
             for (i, method) in [Method::Linear, Method::BsKmq].iter().enumerate() {
-                let calib = Calibrator::new(backend.as_ref(), *method, bits)
-                    .calibrate(&data, CALIB_BATCHES)?;
+                let calib = Calibrator::with_uniform(
+                    backend.as_ref(),
+                    QuantSpec::new(*method, bits),
+                )
+                .calibrate(&data, CALIB_BATCHES)?;
                 let r = ev.evaluate(&data, &calib.programmed, 0.0,
                                     EVAL_BATCHES, 7)?;
                 accs[i] = r.accuracy;
@@ -59,6 +62,14 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<Fig5Row>> {
                 acc_bskmq: accs[1],
             });
         }
+        // the paper's fine-tuned mixed-precision point (3/3/4/4b across
+        // the networks) lives in the manifest's per-layer specs — drive
+        // it through the same API instead of a re-implemented loop
+        let paper = Calibrator::from_manifest(backend.as_ref());
+        let spec_desc = paper.specs()[0].summary();
+        let calib = paper.calibrate(&data, CALIB_BATCHES)?;
+        let r = ev.evaluate(&data, &calib.programmed, 0.0, EVAL_BATCHES, 7)?;
+        println!("   manifest spec ({spec_desc}): acc {:.3}", r.accuracy);
         if let Some(m) = train_results.get(model) {
             let g = |k: &str| {
                 m.get(k)

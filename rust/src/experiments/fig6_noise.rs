@@ -7,13 +7,14 @@
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::circuit::montecarlo::{default_4bit_steps, MonteCarlo, MonteCarloConfig};
 use crate::circuit::{Corner, MAC_UNITS_PER_CELL};
 use crate::coordinator::calibrate::Calibrator;
 use crate::coordinator::ptq::PtqEvaluator;
 use crate::data::dataset::ModelData;
 use crate::experiments::ExpContext;
-use crate::quant::Method;
+use crate::quant::{Method, QuantSpec};
 
 /// (model, activation bits, weight bits) — the paper's Fig. 6 settings.
 /// The paper uses 2/3/4/4-bit weights on 10M+-param models; the minis
@@ -50,8 +51,17 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<Fig6Row>> {
     for (model, bits, wbits) in SETTINGS {
         let backend = ctx.backend(model)?;
         let data = ModelData::load(&ctx.artifacts, model)?;
-        let calib = Calibrator::new(backend.as_ref(), Method::BsKmq, bits)
-            .calibrate(&data, 8)?;
+        // one per-layer spec set expresses the whole Fig. 6 deployment
+        // point: NL-ADC act bits + linear weight bits
+        let spec = QuantSpec {
+            weight_bits: Some(wbits),
+            ..QuantSpec::new(Method::BsKmq, bits)
+        };
+        let act_only = Calibrator::with_uniform(
+            backend.as_ref(),
+            QuantSpec::new(Method::BsKmq, bits),
+        );
+        let calib = act_only.calibrate(&data, 8)?;
 
         let ev = PtqEvaluator::new(backend.as_ref());
         let a0 = ev
@@ -60,8 +70,9 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<Fig6Row>> {
         // + weight quantization; deployment order: recalibrate the NL-ADC
         // codebooks on the quantized-weight hardware (Algorithm 1 runs on
         // the deployed macro, not on a float simulator)
-        let wq_backend = ev.quantize_weights(wbits)?;
-        let wq_books = Calibrator::new(wq_backend.as_ref(), Method::BsKmq, bits)
+        let wq_specs = spec.per_layer(backend.manifest().nq());
+        let wq_backend = ev.quantize_weights_spec(&wq_specs)?;
+        let wq_books = Calibrator::with_specs(wq_backend.as_ref(), wq_specs)
             .calibrate(&data, 8)?;
         let evw = PtqEvaluator::new(wq_backend.as_ref());
         let a1 = evw

@@ -61,7 +61,10 @@ pub fn run(id: &str) -> Result<()> {
             fig7_corners::run()?;
         }
         "fig8" => fig8_macro::run()?,
-        "table1" => table1_system::run()?,
+        "table1" => {
+            let ctx = ExpContext::new()?;
+            table1_system::run(&ctx)?;
+        }
         "backends" => {
             let ctx = ExpContext::new()?;
             backends_agree::run(&ctx)?;
@@ -74,7 +77,7 @@ pub fn run(id: &str) -> Result<()> {
             fig6_noise::run(&ctx)?;
             fig7_corners::run()?;
             fig8_macro::run()?;
-            table1_system::run()?;
+            table1_system::run(&ctx)?;
             backends_agree::run(&ctx)?;
         }
         other => anyhow::bail!(

@@ -8,6 +8,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::quant::{Method, QuantSpec};
 use crate::util::json::Json;
 
 /// One quantized MAC layer (conv im2col'd or dense) of a model.
@@ -20,6 +21,9 @@ pub struct QLayer {
     pub n: usize,
     /// ReLU'd activations (non-negative codebook) vs signed
     pub relu: bool,
+    /// per-layer quantization spec (`quant` entry); `None` resolves to
+    /// [`QuantSpec::default_for_layer`] via [`Manifest::layer_specs`]
+    pub spec: Option<QuantSpec>,
 }
 
 /// One weight argument of the AOT graphs, in call order.
@@ -213,11 +217,19 @@ impl Manifest {
             .as_arr()?
             .iter()
             .map(|q| {
+                let name = q.get("name")?.as_str()?.to_string();
+                let spec = match q.get("quant") {
+                    Ok(qs) => Some(parse_quant_spec(qs).with_context(
+                        || format!("q-layer '{name}': `quant` entry"),
+                    )?),
+                    Err(_) => None,
+                };
                 Ok(QLayer {
-                    name: q.get("name")?.as_str()?.to_string(),
+                    name,
                     k: q.get("k")?.as_usize()?,
                     n: q.get("n")?.as_usize()?,
                     relu: q.get("relu")?.as_bool()?,
+                    spec,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -282,6 +294,62 @@ impl Manifest {
     pub fn input_elems(&self) -> usize {
         self.input_shape.iter().product()
     }
+
+    /// The resolved per-layer quantization specs: each q-layer's `quant`
+    /// entry when present, [`QuantSpec::default_for_layer`] otherwise —
+    /// so manifests predating the QuantSpec schema calibrate exactly as
+    /// the historical uniform pipeline did.
+    pub fn layer_specs(&self) -> Vec<QuantSpec> {
+        self.qlayers
+            .iter()
+            .enumerate()
+            .map(|(i, q)| q.spec.unwrap_or_else(|| QuantSpec::default_for_layer(i)))
+            .collect()
+    }
+}
+
+/// Parse a q-layer's `quant` JSON object into a [`QuantSpec`].
+/// `method`, `act_bits` and `tile_bits` are required; `weight_bits`,
+/// `alpha` and `seed` are optional (defaulting to float weights,
+/// Algorithm 1's trim fraction, and seed 0).  Out-of-range integers are
+/// rejected loudly, never wrapped.
+fn parse_quant_spec(o: &Json) -> Result<QuantSpec> {
+    let bits = |key: &str, v: usize| -> Result<u32> {
+        u32::try_from(v)
+            .map_err(|_| anyhow::anyhow!("`{key}` {v} does not fit in u32"))
+    };
+    let mut spec = QuantSpec {
+        method: Method::parse(o.get("method")?.as_str()?)?,
+        act_bits: bits("act_bits", o.get("act_bits")?.as_usize()?)?,
+        tile_bits: bits("tile_bits", o.get("tile_bits")?.as_usize()?)?,
+        ..QuantSpec::default()
+    };
+    if let Some(a) = opt_f64(o, "alpha")? {
+        spec.alpha = a;
+    }
+    if let Some(s) = opt_usize(o, "seed")? {
+        spec.seed = s as u64;
+    }
+    spec.weight_bits = opt_usize(o, "weight_bits")?
+        .map(|w| bits("weight_bits", w))
+        .transpose()?;
+    Ok(spec)
+}
+
+/// Serialize a [`QuantSpec`] as a q-layer `quant` JSON object (the
+/// inverse of the parse above; `data::synth` embeds this text).
+pub fn quant_spec_json(s: &QuantSpec) -> String {
+    let mut fields = vec![
+        format!(r#""method": "{}""#, s.method.name()),
+        format!(r#""act_bits": {}"#, s.act_bits),
+        format!(r#""tile_bits": {}"#, s.tile_bits),
+        format!(r#""alpha": {}"#, s.alpha),
+        format!(r#""seed": {}"#, s.seed),
+    ];
+    if let Some(w) = s.weight_bits {
+        fields.push(format!(r#""weight_bits": {w}"#));
+    }
+    format!("{{{}}}", fields.join(", "))
 }
 
 fn opt_str(o: &Json, key: &str) -> Result<Option<String>> {
@@ -301,6 +369,13 @@ fn opt_usize(o: &Json, key: &str) -> Result<Option<usize>> {
 fn opt_bool(o: &Json, key: &str) -> Result<Option<bool>> {
     match o.get(key) {
         Ok(v) => Ok(Some(v.as_bool()?)),
+        Err(_) => Ok(None),
+    }
+}
+
+fn opt_f64(o: &Json, key: &str) -> Result<Option<f64>> {
+    match o.get(key) {
+        Ok(v) => Ok(Some(v.as_f64()?)),
         Err(_) => Ok(None),
     }
 }
@@ -359,6 +434,79 @@ fn parse_graph(g: &Json) -> Result<GraphDef> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn quant_spec_roundtrips_and_defaults() {
+        let spec = QuantSpec {
+            method: Method::KMeans,
+            act_bits: 4,
+            weight_bits: Some(2),
+            tile_bits: 6,
+            alpha: 0.01,
+            seed: 9,
+        };
+        let json = format!(
+            r#"{{"name": "d0", "k": 4, "n": 5, "relu": true,
+                 "quant": {}}}"#,
+            quant_spec_json(&spec)
+        );
+        let parsed = Json::parse(&json).unwrap();
+        let back = parse_quant_spec(parsed.get("quant").unwrap()).unwrap();
+        assert_eq!(back, spec);
+
+        // optional fields default: float weights, default alpha, seed 0
+        let minimal = Json::parse(
+            r#"{"method": "bs_kmq", "act_bits": 3, "tile_bits": 7}"#,
+        )
+        .unwrap();
+        let spec = parse_quant_spec(&minimal).unwrap();
+        assert_eq!(spec, QuantSpec::default());
+        // unknown method is a parse error, not a silent default
+        let bad = Json::parse(
+            r#"{"method": "median", "act_bits": 3, "tile_bits": 7}"#,
+        )
+        .unwrap();
+        assert!(parse_quant_spec(&bad).is_err());
+        // out-of-range integers are rejected, never wrapped (4294967299
+        // would silently truncate to 3 under an `as u32` cast)
+        let wrap = Json::parse(
+            r#"{"method": "bs_kmq", "act_bits": 4294967299, "tile_bits": 7}"#,
+        )
+        .unwrap();
+        assert!(parse_quant_spec(&wrap).is_err());
+    }
+
+    #[test]
+    fn manifest_without_quant_entries_resolves_defaults() {
+        let m = Manifest::from_json_str(
+            r#"{
+  "model": "chain",
+  "batch": 2,
+  "input_shape": [4],
+  "input_dtype": "f32",
+  "num_classes": 3,
+  "max_levels": 128,
+  "qlayers": [
+    {"name": "d0", "k": 4, "n": 5, "relu": true},
+    {"name": "d1", "k": 5, "n": 3, "relu": false,
+     "quant": {"method": "linear", "act_bits": 5, "tile_bits": 6}}
+  ],
+  "weight_args": [],
+  "collect": {
+    "out_len": 0, "logits_len": 6,
+    "samples_per_layer": 8, "tilemax_offset": 0
+  },
+  "artifacts": {"collect": "none", "qfwd": "none"}
+}"#,
+        )
+        .unwrap();
+        assert_eq!(m.qlayers[0].spec, None);
+        let specs = m.layer_specs();
+        assert_eq!(specs[0], QuantSpec::default_for_layer(0));
+        assert_eq!(specs[1].method, Method::Linear);
+        assert_eq!(specs[1].act_bits, 5);
+        assert_eq!(specs[1].tile_bits, 6);
+    }
 
     #[test]
     fn graph_roundtrips_through_json() {

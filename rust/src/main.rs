@@ -3,10 +3,16 @@
 //!
 //! Usage:
 //!   bskmq exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|backends|all>
-//!   bskmq calibrate <model> <bits> [--backend B]   # print per-layer codebooks
-//!   bskmq serve [--addr 127.0.0.1:7878] [--models resnet,vgg] [--bits 3]
-//!               [--backend auto|native|xla] [--replicas N]
-//!               [--queue-depth N] [--calib-batches N]
+//!   bskmq calibrate <model> [--spec [model=]S] [--layer name=S]
+//!                   [--shards N] [--eval-batches N] [--backend B]
+//!       # calibrate (optionally shard-parallel), print per-layer
+//!       # codebooks, then run the PTQ evaluation end-to-end.  Spec
+//!       # strings are `[method:]TILE/WEIGHT/ACT` or `[method:]ACT`
+//!       # (weight `-` = float), e.g. `--spec resnet=6/2/3`; layers
+//!       # without overrides keep the manifest's per-layer specs.
+//!   bskmq serve [--addr 127.0.0.1:7878] [--models resnet,vgg]
+//!               [--spec S] [--backend auto|native|xla] [--replicas N]
+//!               [--shards N] [--queue-depth N] [--calib-batches N]
 //!   bskmq synth <dir> [--seed N]      # write synthetic artifacts (5 models)
 //!   bskmq graph <manifest.json>       # validate + dump a layer graph
 //!   bskmq info                        # artifacts + backend summary
@@ -17,18 +23,21 @@
 //! replicas per model (native backends share one weight set via `Arc`);
 //! `--queue-depth` bounds each model's intake queue — a full queue
 //! rejects requests with an error line instead of buffering them.
+//! `--shards` streams calibration batches over that many threads
+//! (codebooks stay bit-identical to serial).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
 use std::sync::atomic::Ordering;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use bskmq::backend::{Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::coordinator::ptq::PtqEvaluator;
 use bskmq::coordinator::server::{ModelRegistry, PoolConfig};
 use bskmq::data::dataset::ModelData;
-use bskmq::quant::Method;
+use bskmq::quant::QuantSpec;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -44,17 +53,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             let id = args.get(1).map(String::as_str).unwrap_or("all");
             bskmq::experiments::run(id)
         }
-        Some("calibrate") => {
-            let model = args.get(1).map(String::as_str).unwrap_or("resnet");
-            let bits: u32 = args
-                .get(2)
-                .filter(|s| !s.starts_with("--"))
-                .map(|s| s.parse())
-                .transpose()
-                .context("bits must be an integer")?
-                .unwrap_or(3);
-            calibrate(model, bits, parse_backend_flag(args)?)
-        }
+        Some("calibrate") => calibrate(args),
         Some("serve") => serve(args),
         Some("synth") => synth(args),
         Some("graph") => {
@@ -68,9 +67,12 @@ fn dispatch(args: &[String]) -> Result<()> {
             eprintln!(
                 "usage: bskmq <exp|calibrate|serve|synth|graph|info> [...]\n\
                  \x20 exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|backends|all>\n\
-                 \x20 calibrate <model> <bits> [--backend B]\n\
-                 \x20 serve [--addr A] [--models M1,M2] [--bits B] [--backend B]\n\
-                 \x20       [--replicas N] [--queue-depth N] [--calib-batches N]\n\
+                 \x20 calibrate <model> [--spec [model=]S] [--layer name=S]\n\
+                 \x20           [--shards N] [--eval-batches N] [--backend B]\n\
+                 \x20           (S = [method:]TILE/WEIGHT/ACT or ACT, e.g. 6/2/3)\n\
+                 \x20 serve [--addr A] [--models M1,M2] [--spec S] [--backend B]\n\
+                 \x20       [--replicas N] [--shards N] [--queue-depth N]\n\
+                 \x20       [--calib-batches N]\n\
                  \x20 synth <dir> [--seed N]\n\
                  \x20 graph <manifest.json>\n\
                  \x20 info"
@@ -151,42 +153,133 @@ fn graph_dump(path: &std::path::Path) -> Result<()> {
     Ok(())
 }
 
-/// `--backend <kind>` anywhere in the args, else the env/auto default.
-fn parse_backend_flag(args: &[String]) -> Result<BackendKind> {
-    for i in 0..args.len() {
-        if args[i] == "--backend" {
-            let v = args.get(i + 1).context("--backend value")?;
-            return BackendKind::parse(v);
+/// `bskmq calibrate`: resolve per-layer specs (manifest + overrides),
+/// calibrate (optionally shard-parallel), print the programmed
+/// codebooks, then run the PTQ evaluation — the calibrate → PTQ half of
+/// the pipeline; `bskmq serve --spec` is the serving half.
+fn calibrate(args: &[String]) -> Result<()> {
+    let model = args
+        .get(1)
+        .filter(|s| !s.starts_with("--"))
+        .map(String::as_str)
+        .unwrap_or("resnet")
+        .to_string();
+    let mut kind = BackendKind::from_env();
+    let mut spec_arg: Option<String> = None;
+    let mut layer_args: Vec<String> = Vec::new();
+    let mut shards = 1usize;
+    let mut eval_batches = 4usize;
+    let mut i = if args.len() > 1 && !args[1].starts_with("--") { 2 } else { 1 };
+    while i < args.len() {
+        match args[i].as_str() {
+            "--spec" => {
+                spec_arg = Some(args.get(i + 1).context("--spec value")?.clone());
+                i += 2;
+            }
+            "--layer" => {
+                layer_args
+                    .push(args.get(i + 1).context("--layer value")?.clone());
+                i += 2;
+            }
+            "--shards" => {
+                shards = args.get(i + 1).context("--shards value")?.parse()?;
+                i += 2;
+            }
+            "--eval-batches" => {
+                eval_batches =
+                    args.get(i + 1).context("--eval-batches value")?.parse()?;
+                i += 2;
+            }
+            "--backend" => {
+                kind = BackendKind::parse(
+                    args.get(i + 1).context("--backend value")?,
+                )?;
+                i += 2;
+            }
+            // pre-QuantSpec compatibility: a bare bit count = uniform ACT
+            bits if bits.parse::<u32>().is_ok() => {
+                spec_arg = Some(bits.to_string());
+                i += 1;
+            }
+            other => anyhow::bail!("unknown calibrate flag '{other}'"),
         }
     }
-    Ok(BackendKind::from_env())
-}
 
-fn calibrate(model: &str, bits: u32, kind: BackendKind) -> Result<()> {
     let artifacts = bskmq::artifacts_dir();
-    let backend = bskmq::backend::load(kind, &artifacts, model)?;
-    let data = ModelData::load(&artifacts, model)?;
-    let calib = Calibrator::new(backend.as_ref(), Method::BsKmq, bits)
-        .calibrate(&data, 8)?;
+    let backend = bskmq::backend::load(kind, &artifacts, &model)?;
+    let m = backend.manifest();
+
+    // specs: manifest defaults, then the uniform --spec override, then
+    // per-layer --layer overrides
+    let mut specs = m.layer_specs();
+    if let Some(sarg) = &spec_arg {
+        let body = match sarg.split_once('=') {
+            Some((named, rest)) => {
+                ensure!(
+                    named == model,
+                    "--spec names model '{named}' but calibrating '{model}'"
+                );
+                rest
+            }
+            None => sarg.as_str(),
+        };
+        for spec in &mut specs {
+            *spec = QuantSpec::parse(body, spec)?;
+        }
+    }
+    for larg in &layer_args {
+        let (lname, body) = larg
+            .split_once('=')
+            .context("--layer wants name=SPEC")?;
+        let li = m
+            .qlayers
+            .iter()
+            .position(|q| q.name == lname)
+            .with_context(|| format!("no q-layer '{lname}' in {model}"))?;
+        specs[li] = QuantSpec::parse(body, &specs[li])?;
+    }
+
+    let data = ModelData::load(&artifacts, &model)?;
+    // deployment order: program the weights the specs ask for FIRST,
+    // then run Algorithm 1 once on the deployed macro — the printed
+    // codebooks are exactly the ones the PTQ number below used
+    let has_wq = specs.iter().any(|s| s.weight_bits.is_some());
+    let qlayers = m.qlayers.clone();
+    let engine = backend.name();
+    let deployed: Box<dyn Backend> = if has_wq {
+        PtqEvaluator::new(backend.as_ref()).quantize_weights_spec(&specs)?
+    } else {
+        backend
+    };
+    let calib = Calibrator::with_specs(deployed.as_ref(), specs.clone())
+        .calibrate_sharded(&data, 8, shards)?;
     println!(
-        "calibrated {model} at {bits}b over {} batches ({} backend)",
+        "calibrated {model}{} over {} batches x {} shard(s) ({engine} backend)",
+        if has_wq { " (weight-quantized)" } else { "" },
         calib.batches,
-        backend.name()
+        calib.shards,
     );
-    for (i, (book, q)) in calib
-        .nl_books
-        .iter()
-        .zip(&backend.manifest().qlayers)
-        .enumerate()
-    {
+    for (i, (book, q)) in calib.nl_books.iter().zip(&qlayers).enumerate() {
         println!(
-            "  layer {:>2} {:<10} K={:<4} centers[0..4] = {:?}",
+            "  layer {:>2} {:<10} K={:<4} [{}] centers[0..4] = {:?}",
             i,
             q.name,
             q.k,
+            specs[i].summary(),
             &book.centers[..4.min(book.centers.len())]
         );
     }
+    let r = PtqEvaluator::new(deployed.as_ref()).evaluate(
+        &data,
+        &calib.programmed,
+        0.0,
+        eval_batches,
+        7,
+    )?;
+    println!(
+        "PTQ accuracy: {:.3} over {} test samples",
+        r.accuracy, r.samples
+    );
     Ok(())
 }
 
@@ -214,8 +307,31 @@ fn serve(args: &[String]) -> Result<()> {
                     .collect();
                 i += 2;
             }
+            "--spec" => {
+                let base = cfg.spec.unwrap_or_default();
+                cfg.spec = Some(QuantSpec::parse(
+                    args.get(i + 1).context("--spec value")?,
+                    &base,
+                )?);
+                i += 2;
+            }
+            // pre-QuantSpec compatibility: uniform ACT bit override
             "--bits" => {
-                cfg.bits = args.get(i + 1).context("--bits value")?.parse()?;
+                let base = cfg.spec.unwrap_or_default();
+                cfg.spec = Some(QuantSpec {
+                    act_bits: args
+                        .get(i + 1)
+                        .context("--bits value")?
+                        .parse()?,
+                    ..base
+                });
+                i += 2;
+            }
+            "--shards" => {
+                cfg.calib_shards = args
+                    .get(i + 1)
+                    .context("--shards value")?
+                    .parse()?;
                 i += 2;
             }
             "--backend" => {
@@ -251,11 +367,13 @@ fn serve(args: &[String]) -> Result<()> {
     let registry =
         ModelRegistry::start(&bskmq::artifacts_dir(), &models, &cfg)?;
     let listener = TcpListener::bind(&addr)?;
+    let spec_desc = match &cfg.spec {
+        Some(s) => s.summary(),
+        None => "manifest per-layer specs".to_string(),
+    };
     println!(
-        "serving {} ({}b {}, {} replica(s)/model, queue depth {}) on {addr}",
+        "serving {} ({spec_desc}, {} replica(s)/model, queue depth {}) on {addr}",
         registry.models().join("+"),
-        cfg.bits,
-        cfg.method.name(),
         cfg.replicas,
         cfg.queue_depth,
     );

@@ -1,37 +1,71 @@
-//! Boundary Suppressed K-Means Quantization — paper Algorithm 1.
+//! Boundary Suppressed K-Means Quantization — paper Algorithm 1, as a
+//! streaming **mergeable** calibrator.
 //!
-//! Streaming calibrator: per batch, trim the extreme `alpha` tails, EMA
-//! the trimmed min/max into the global range (Eq. 1), buffer the interior
-//! samples; at finish, clamp to [g_min, g_max], *remove* samples
-//! saturating at either bound (ReLU zero spike / clamp pile-up), k-means
-//! the interior into 2^b - 2 centers, and re-attach g_min/g_max as the
-//! outermost centers.  This is the L3 coordinator's counterpart of
+//! Per observed batch (Algorithm 1 lines 5-17): trim the extreme `alpha`
+//! tails, record the trimmed min/max, keep the interior samples.  At
+//! `finish` (lines 18-23): replay the per-batch records in global stream
+//! order — EMA the trimmed ranges into [g_min, g_max] (Eq. 1), fill the
+//! bounded sample buffer — then clamp to [g_min, g_max], *remove*
+//! samples saturating at either bound (ReLU zero spike / clamp pile-up),
+//! k-means the interior into 2^b - 2 centers, and re-attach g_min/g_max
+//! as the outermost centers.
+//!
+//! Deferring the order-sensitive EMA/buffer accumulation to a replay
+//! over *indexed* batch records is what makes the calibrator mergeable
+//! (the [`crate::quant::QuantEstimator`] contract): shards record
+//! disjoint batch-index slices ([`BsKmqCalibrator::seek`]), `merge`
+//! unions the records, and the replay is a pure function of the union —
+//! so 1, 4 or 16 shards produce bit-identical codebooks, each identical
+//! to the historical sequential calibrator (exactly so for batches
+//! within the [`DEFAULT_MAX_BUFFER`] fit bound; larger batches are
+//! deterministically thinned at `observe`, where the old code sampled
+//! once from its live reservoir).  The L3 coordinator's counterpart of
 //! `python/compile/quantlib/bs_kmq.py`.
+
+use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
 use crate::quant::kmeans::kmeans_1d;
 use crate::util::rng::Rng;
 
-
 pub const DEFAULT_ALPHA: f64 = 0.005;
 pub const EMA_KEEP: f64 = 0.9;
 pub const EMA_NEW: f64 = 0.1;
+/// Fit-buffer bound (samples): the replayed buffer that feeds k-means
+/// is capped here, and any single batch retaining more than this is
+/// deterministically thinned at `observe`.  NOTE: unlike the
+/// pre-mergeable calibrator, the cap does NOT bound total retention —
+/// exact EMA replay needs every batch's record until `finish`, so
+/// memory grows with the number of observed batches (~`max_buffer`
+/// worst case per batch, `samples_per_layer` in practice).  Calibration
+/// runs are tens of batches; for unbounded streams, calibrate in
+/// bounded rounds.
+pub const DEFAULT_MAX_BUFFER: usize = 200_000;
 
-/// Streaming implementation of Algorithm 1.
+/// One observed batch's Algorithm-1 summary (trimmed range + interior).
+#[derive(Clone, Debug)]
+struct ObservedBatch {
+    b_min: f64,
+    b_max: f64,
+    interior: Vec<f64>,
+    /// raw batch length (before trimming), for diagnostics
+    seen: usize,
+}
+
+/// Streaming mergeable implementation of Algorithm 1.
 pub struct BsKmqCalibrator {
     alpha: f64,
-    pub g_min: Option<f64>,
-    pub g_max: Option<f64>,
-    buffer: Vec<f64>,
     max_buffer: usize,
-    rng: Rng,
-    pub batches_seen: usize,
+    seed: u64,
+    /// per-batch records keyed by global stream index
+    batches: BTreeMap<u64, ObservedBatch>,
+    next_index: u64,
 }
 
 impl Default for BsKmqCalibrator {
     fn default() -> Self {
-        Self::new(DEFAULT_ALPHA, 200_000, 0)
+        Self::new(DEFAULT_ALPHA, DEFAULT_MAX_BUFFER, 0)
     }
 }
 
@@ -40,16 +74,15 @@ impl BsKmqCalibrator {
         assert!((0.0..0.5).contains(&alpha), "alpha in [0, 0.5)");
         BsKmqCalibrator {
             alpha,
-            g_min: None,
-            g_max: None,
-            buffer: Vec::new(),
             max_buffer,
-            rng: Rng::new(seed),
-            batches_seen: 0,
+            seed,
+            batches: BTreeMap::new(),
+            next_index: 0,
         }
     }
 
-    /// Algorithm 1 lines 5-17: trim tails, EMA the range, buffer interior.
+    /// Algorithm 1 lines 5-17: trim tails, record the batch summary at
+    /// the current stream index.
     pub fn observe(&mut self, batch: &[f64]) {
         if batch.is_empty() {
             return;
@@ -61,53 +94,127 @@ impl BsKmqCalibrator {
         let p_low = crate::util::stats::quantile_sorted(&sorted, self.alpha);
         let p_high =
             crate::util::stats::quantile_sorted(&sorted, 1.0 - self.alpha);
-        let mut cent: Vec<f64> = batch
+        let mut interior: Vec<f64> = batch
             .iter()
             .copied()
             .filter(|&a| a >= p_low && a <= p_high)
             .collect();
-        if cent.is_empty() {
-            cent = batch.to_vec();
+        if interior.is_empty() {
+            interior = batch.to_vec();
         }
-        let b_min = cent.iter().copied().fold(f64::INFINITY, f64::min);
-        let b_max = cent.iter().copied().fold(f64::NEG_INFINITY, f64::max);
-        match (self.g_min, self.g_max) {
-            (None, _) | (_, None) => {
-                self.g_min = Some(b_min);
-                self.g_max = Some(b_max);
-            }
-            (Some(gmin), Some(gmax)) => {
-                self.g_min = Some(EMA_KEEP * gmin + EMA_NEW * b_min);
-                self.g_max = Some(EMA_KEEP * gmax + EMA_NEW * b_max);
-            }
+        let b_min = interior.iter().copied().fold(f64::INFINITY, f64::min);
+        let b_max = interior.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let idx = self.next_index;
+        self.next_index += 1;
+        // a single batch larger than the fit buffer is thinned here,
+        // deterministically in (seed, index) — a pure function of the
+        // record, so shard/order invariance is preserved
+        if interior.len() > self.max_buffer {
+            let mut rng =
+                Rng::new(self.seed ^ crate::util::rng::mix64(idx));
+            interior = rng.sample(&interior, self.max_buffer);
         }
-        self.batches_seen += 1;
-        // bounded buffering (reservoir-ish, matches the python side)
-        if self.buffer.len() + cent.len() > self.max_buffer {
-            let keep = self.max_buffer.saturating_sub(self.buffer.len());
-            if keep == 0 {
-                return;
-            }
-            cent = self.rng.sample(&cent, keep);
-        }
-        self.buffer.extend_from_slice(&cent);
+        let clash = self.batches.insert(
+            idx,
+            ObservedBatch {
+                b_min,
+                b_max,
+                interior,
+                seen: batch.len(),
+            },
+        );
+        assert!(
+            clash.is_none(),
+            "stream index {idx} observed twice (seek/merge misuse)"
+        );
     }
 
-    /// Algorithm 1 lines 18-23: boundary-suppressed clustering.
-    pub fn finish(&self, bits: u32, seed: u64) -> Result<Vec<f64>> {
-        ensure!((1..=7).contains(&bits), "bits in [1,7], got {bits}");
-        let (g_min, g_max) = match (self.g_min, self.g_max) {
-            (Some(a), Some(b)) => (a, b),
+    /// Position the stream cursor at a global batch index (shard drivers
+    /// call this once before streaming their contiguous batch slice).
+    pub fn seek(&mut self, batch_index: u64) {
+        self.next_index = batch_index;
+    }
+
+    /// Fold another shard's records into this calibrator.  The shards
+    /// must have been configured identically and observed disjoint
+    /// stream indices.
+    pub fn merge(&mut self, other: &BsKmqCalibrator) -> Result<()> {
+        ensure!(
+            self.alpha == other.alpha
+                && self.max_buffer == other.max_buffer
+                && self.seed == other.seed,
+            "merging incompatible BS-KMQ calibrators \
+             (alpha/buffer/seed differ)"
+        );
+        for (idx, ob) in &other.batches {
+            ensure!(
+                !self.batches.contains_key(idx),
+                "merge collision: batch index {idx} observed by both shards"
+            );
+            self.batches.insert(*idx, ob.clone());
+        }
+        self.next_index = self.next_index.max(other.next_index);
+        Ok(())
+    }
+
+    /// Batches recorded so far (across all merged shards).
+    pub fn batches_seen(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Raw samples observed so far (before trimming).
+    pub fn n_observed(&self) -> usize {
+        self.batches.values().map(|b| b.seen).sum()
+    }
+
+    /// Replay the indexed batch records in stream order: EMA the trimmed
+    /// ranges (Eq. 1) and fill the bounded buffer exactly as the
+    /// sequential algorithm did.
+    fn replay(&self) -> Result<(f64, f64, Vec<f64>)> {
+        let mut g_min: Option<f64> = None;
+        let mut g_max: Option<f64> = None;
+        let mut buffer: Vec<f64> = Vec::new();
+        let mut rng = Rng::new(self.seed);
+        for ob in self.batches.values() {
+            match (g_min, g_max) {
+                (None, _) | (_, None) => {
+                    g_min = Some(ob.b_min);
+                    g_max = Some(ob.b_max);
+                }
+                (Some(lo), Some(hi)) => {
+                    g_min = Some(EMA_KEEP * lo + EMA_NEW * ob.b_min);
+                    g_max = Some(EMA_KEEP * hi + EMA_NEW * ob.b_max);
+                }
+            }
+            // bounded buffering (reservoir-ish, matches the python side)
+            if buffer.len() + ob.interior.len() > self.max_buffer {
+                let keep = self.max_buffer.saturating_sub(buffer.len());
+                if keep == 0 {
+                    continue;
+                }
+                buffer.extend(rng.sample(&ob.interior, keep));
+            } else {
+                buffer.extend_from_slice(&ob.interior);
+            }
+        }
+        match (g_min, g_max) {
+            (Some(a), Some(b)) => Ok((a, b, buffer)),
             _ => anyhow::bail!("finish() before any observe()"),
-        };
+        }
+    }
+
+    /// Algorithm 1 lines 18-23: boundary-suppressed clustering on the
+    /// replayed state; sorted `2^bits` centers.
+    pub fn finish_centers(&self, bits: u32) -> Result<Vec<f64>> {
+        ensure!((1..=7).contains(&bits), "bits in [1,7], got {bits}");
+        let (g_min, g_max, buffer) = self.replay()?;
         let g_max = if g_max > g_min { g_max } else { g_min + 1e-8 };
         let k_interior = (1usize << bits) - 2;
         if k_interior == 0 {
             return Ok(vec![g_min, g_max]); // 1-bit: just the bounds
         }
         // clamp, then REMOVE boundary-saturating samples
-        let interior: Vec<f64> = self
-            .buffer
+        let interior: Vec<f64> = buffer
             .iter()
             .map(|&s| s.clamp(g_min, g_max))
             .filter(|&s| s > g_min && s < g_max)
@@ -115,7 +222,7 @@ impl BsKmqCalibrator {
         let mut cq = if interior.len() < k_interior {
             even_interior(g_min, g_max, k_interior)
         } else {
-            let mut c = kmeans_1d(&interior, k_interior, 50, seed);
+            let mut c = kmeans_1d(&interior, k_interior, 50, self.seed);
             if c.len() < k_interior {
                 let pad = even_interior(g_min, g_max, k_interior - c.len());
                 c.extend(pad);
@@ -150,13 +257,13 @@ pub fn fit_bs_kmq_cfg(
     seed: u64,
 ) -> Vec<f64> {
     assert!(!samples.is_empty(), "empty sample set");
-    let mut calib = BsKmqCalibrator::new(alpha, 200_000, seed);
+    let mut calib = BsKmqCalibrator::new(alpha, DEFAULT_MAX_BUFFER, seed);
     let bs = batches.clamp(1, samples.len());
     let chunk = samples.len().div_ceil(bs);
     for c in samples.chunks(chunk) {
         calib.observe(c);
     }
-    calib.finish(bits, seed).expect("observed at least one batch")
+    calib.finish_centers(bits).expect("observed at least one batch")
 }
 
 #[cfg(test)]
@@ -203,9 +310,10 @@ mod tests {
         for c in xs.chunks(1000) {
             calib.observe(c);
         }
-        let centers = calib.finish(3, 0).unwrap();
+        let centers = calib.finish_centers(3).unwrap();
         assert_eq!(centers.len(), 8);
-        assert_eq!(calib.batches_seen, 8);
+        assert_eq!(calib.batches_seen(), 8);
+        assert_eq!(calib.n_observed(), 8_000);
     }
 
     #[test]
@@ -218,7 +326,62 @@ mod tests {
     #[test]
     fn finish_before_observe_errors() {
         let calib = BsKmqCalibrator::default();
-        assert!(calib.finish(3, 0).is_err());
+        assert!(calib.finish_centers(3).is_err());
+    }
+
+    /// The mergeable contract: splitting the same batch stream over
+    /// shards (with seeked indices) and merging in any order reproduces
+    /// the sequential calibrator bit for bit.
+    #[test]
+    fn sharded_merge_is_bit_identical_to_sequential() {
+        let xs = relu_gaussian(16_000, 5);
+        let batches: Vec<&[f64]> = xs.chunks(1000).collect(); // 16 batches
+
+        let mut seq = BsKmqCalibrator::default();
+        for b in &batches {
+            seq.observe(b);
+        }
+        let want = seq.finish_centers(3).unwrap();
+
+        for shards in [2usize, 4, 8] {
+            let per = batches.len() / shards;
+            let mut parts: Vec<BsKmqCalibrator> = (0..shards)
+                .map(|s| {
+                    let mut c = BsKmqCalibrator::default();
+                    c.seek((s * per) as u64);
+                    for b in &batches[s * per..(s + 1) * per] {
+                        c.observe(b);
+                    }
+                    c
+                })
+                .collect();
+            // merge in a scrambled order: root is the *last* shard
+            let mut root = parts.pop().unwrap();
+            while let Some(p) = parts.pop() {
+                root.merge(&p).unwrap();
+            }
+            let got = root.finish_centers(3).unwrap();
+            let as_bits = |v: &[f64]| -> Vec<u64> {
+                v.iter().map(|x| x.to_bits()).collect()
+            };
+            assert_eq!(
+                as_bits(&got),
+                as_bits(&want),
+                "{shards} shards diverged from sequential"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_rejects_index_collisions_and_mismatched_params() {
+        let xs = relu_gaussian(2_000, 6);
+        let mut a = BsKmqCalibrator::default();
+        a.observe(&xs[..1000]);
+        let mut b = BsKmqCalibrator::default();
+        b.observe(&xs[1000..]); // same index 0 as `a`
+        assert!(a.merge(&b).is_err(), "overlapping stream indices");
+        let c = BsKmqCalibrator::new(0.01, DEFAULT_MAX_BUFFER, 0);
+        assert!(a.merge(&c).is_err(), "alpha mismatch");
     }
 
     /// The headline property (Fig. 1 mechanism): under the hardware
@@ -240,7 +403,8 @@ mod tests {
                 let i = rng.below(xs.len());
                 xs[i] = rng.normal(1.5, 0.9).exp();
             }
-            let bs = crate::quant::Method::BsKmq.fit_hw(&xs, bits).mse(&xs);
+            let bs =
+                crate::quant::Method::BsKmq.fit_hw(&xs, bits, 0).mse(&xs);
             let all_beat = [
                 crate::quant::Method::Linear,
                 crate::quant::Method::Cdf,
@@ -248,7 +412,7 @@ mod tests {
                 crate::quant::Method::LloydMax,
             ]
             .iter()
-            .all(|m| bs < m.fit_hw(&xs, bits).mse(&xs));
+            .all(|m| bs < m.fit_hw(&xs, bits, 0).mse(&xs));
             if all_beat {
                 wins += 1;
             }

@@ -255,7 +255,7 @@ mod tests {
         let xs = vec![3.7f64; 5_000];
         for m in crate::quant::Method::ALL {
             for bits in [1u32, 3] {
-                let cb = m.fit_hw(&xs, bits);
+                let cb = m.fit_hw(&xs, bits, 0);
                 assert_eq!(cb.levels(), 1 << bits, "{} {bits}b", m.name());
                 assert!(
                     cb.centers.iter().all(|c| c.is_finite()),

@@ -1,0 +1,322 @@
+//! The streaming, mergeable quantizer trait behind the calibration
+//! pipeline.
+//!
+//! A [`QuantEstimator`] accumulates activation statistics batch by batch
+//! (`observe`), folds in another shard's state (`merge`), and fits the
+//! final codebook (`finish`) — the object-safe replacement for the old
+//! buffer-everything-then-dispatch-on-`Method` calibration path.  All
+//! five methods implement it, which is what makes shard-parallel
+//! calibration possible: N threads each stream a contiguous slice of the
+//! calibration batches through their own estimator, and the states merge
+//! associatively.
+//!
+//! ## Contract (the merge laws)
+//!
+//! 1. **Chunking invariance** — observing a sample multiset in any batch
+//!    chunking yields the same `finish` result as observing it in one
+//!    call (for [`crate::quant::BsKmqCalibrator`], whose Algorithm 1 is
+//!    defined *per batch*, the per-batch chunking is part of the input:
+//!    the law holds per identical batch sequences).
+//! 2. **Merge = union** — `a.merge(&b)` makes `a` equivalent to a single
+//!    estimator that observed both shards' streams.  Merging is
+//!    order-insensitive and shard-count-invariant: 1, 4 or 16 shards
+//!    over the same batches produce **bit-identical** codebooks.
+//! 3. **Seeded determinism** — all randomness derives from the spec's
+//!    seed; same spec + same data ⇒ same codebook, always.
+//!
+//! Order-sensitive state (BS-KMQ's per-batch EMA range) satisfies law 2
+//! by recording *indexed* per-batch summaries and replaying them in
+//! global stream order at `finish`; shard drivers position their
+//! estimators with [`QuantEstimator::seek`] before observing.
+
+use std::any::Any;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::quant::bs_kmq::BsKmqCalibrator;
+use crate::quant::cdf::fit_cdf;
+use crate::quant::codebook::Codebook;
+use crate::quant::kmeans::fit_kmeans;
+use crate::quant::linear::fit_linear_range;
+use crate::quant::lloyd_max::fit_lloyd_max;
+use crate::quant::sketch::{DEFAULT_SKETCH_CAP, ValueSketch};
+use crate::quant::spec::{Method, QuantSpec};
+
+/// Streaming mergeable codebook estimator (see module docs for the
+/// observe/merge/finish laws).  Object-safe: the calibrator holds one
+/// `Box<dyn QuantEstimator>` per q-layer and never names a method.
+pub trait QuantEstimator: Send {
+    /// Which method this estimator fits.
+    fn method(&self) -> Method;
+
+    /// Stream one calibration batch into the running state.
+    fn observe(&mut self, batch: &[f64]);
+
+    /// Position the stream cursor at a global batch index (shard
+    /// drivers call this once with their slice's first index, so merged
+    /// states replay in true stream order).  Estimators whose fit is
+    /// order-free ignore it.
+    fn seek(&mut self, _batch_index: u64) {}
+
+    /// Fold another shard's state into this one.  Fails on mismatched
+    /// estimator types or fitting parameters.
+    fn merge(&mut self, other: &dyn QuantEstimator) -> Result<()>;
+
+    /// Fit the `2^bits`-level codebook from the accumulated state (the
+    /// ideal codebook; callers apply the §2.3 hardware projection).
+    fn finish(&self, bits: u32) -> Result<Codebook>;
+
+    /// Total samples observed so far (diagnostics).
+    fn n_observed(&self) -> usize;
+
+    /// Downcast hook for [`QuantEstimator::merge`].
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// Build the estimator a [`QuantSpec`] asks for.
+pub fn estimator_for(spec: &QuantSpec) -> Box<dyn QuantEstimator> {
+    match spec.method {
+        Method::Linear => Box::new(LinearEstimator::new()),
+        Method::BsKmq => Box::new(BsKmqCalibrator::new(
+            spec.alpha,
+            crate::quant::bs_kmq::DEFAULT_MAX_BUFFER,
+            spec.seed,
+        )),
+        Method::Cdf | Method::LloydMax | Method::KMeans => {
+            Box::new(SketchEstimator::new(spec.method, spec.seed))
+        }
+    }
+}
+
+fn downcast<'a, T: 'static>(
+    other: &'a dyn QuantEstimator,
+    into: Method,
+) -> Result<&'a T> {
+    other.as_any().downcast_ref::<T>().ok_or_else(|| {
+        anyhow!(
+            "cannot merge a {} estimator into a {} estimator",
+            other.method().name(),
+            into.name()
+        )
+    })
+}
+
+/// Linear (uniform min-max) estimator: exact O(1) moment state — the
+/// observed min/max are associative, so merging is trivially exact.
+#[derive(Clone, Debug)]
+pub struct LinearEstimator {
+    lo: f64,
+    hi: f64,
+    seen: usize,
+}
+
+impl LinearEstimator {
+    pub fn new() -> LinearEstimator {
+        LinearEstimator {
+            lo: f64::INFINITY,
+            hi: f64::NEG_INFINITY,
+            seen: 0,
+        }
+    }
+}
+
+impl Default for LinearEstimator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuantEstimator for LinearEstimator {
+    fn method(&self) -> Method {
+        Method::Linear
+    }
+
+    fn observe(&mut self, batch: &[f64]) {
+        for &x in batch {
+            self.lo = self.lo.min(x);
+            self.hi = self.hi.max(x);
+        }
+        self.seen += batch.len();
+    }
+
+    fn merge(&mut self, other: &dyn QuantEstimator) -> Result<()> {
+        let other: &LinearEstimator = downcast(other, self.method())?;
+        self.lo = self.lo.min(other.lo);
+        self.hi = self.hi.max(other.hi);
+        self.seen += other.seen;
+        Ok(())
+    }
+
+    fn finish(&self, bits: u32) -> Result<Codebook> {
+        ensure!((1..=7).contains(&bits), "bits in [1,7], got {bits}");
+        ensure!(self.seen > 0, "finish() before any observe()");
+        Ok(Codebook::from_centers(&fit_linear_range(
+            self.lo, self.hi, bits,
+        )))
+    }
+
+    fn n_observed(&self) -> usize {
+        self.seen
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// Sketch-backed estimator for the CDF / Lloyd-Max / k-means baselines:
+/// a mergeable bottom-k [`ValueSketch`] retains a bounded, deterministic
+/// subsample of the activation multiset; `finish` expands it in
+/// canonical (value-sorted) order and runs the one-shot fitter.  While
+/// the stream stays within the sketch capacity this is bit-equal to
+/// fitting the full buffered sample set.
+pub struct SketchEstimator {
+    method: Method,
+    seed: u64,
+    sketch: ValueSketch,
+}
+
+impl SketchEstimator {
+    pub fn new(method: Method, seed: u64) -> SketchEstimator {
+        assert!(
+            matches!(method, Method::Cdf | Method::LloydMax | Method::KMeans),
+            "SketchEstimator serves cdf/lloyd_max/kmeans, not {}",
+            method.name()
+        );
+        SketchEstimator {
+            method,
+            seed,
+            sketch: ValueSketch::new(DEFAULT_SKETCH_CAP, seed),
+        }
+    }
+}
+
+impl QuantEstimator for SketchEstimator {
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    fn observe(&mut self, batch: &[f64]) {
+        for &x in batch {
+            self.sketch.insert(x);
+        }
+    }
+
+    fn merge(&mut self, other: &dyn QuantEstimator) -> Result<()> {
+        let other: &SketchEstimator = downcast(other, self.method)?;
+        ensure!(
+            self.method == other.method,
+            "cannot merge a {} estimator into a {} estimator",
+            other.method.name(),
+            self.method.name()
+        );
+        ensure!(
+            self.seed == other.seed,
+            "merging {} estimators with different seeds ({} vs {})",
+            self.method.name(),
+            self.seed,
+            other.seed
+        );
+        self.sketch.merge(&other.sketch)
+    }
+
+    fn finish(&self, bits: u32) -> Result<Codebook> {
+        ensure!((1..=7).contains(&bits), "bits in [1,7], got {bits}");
+        let xs = self.sketch.expand();
+        ensure!(!xs.is_empty(), "finish() before any observe()");
+        let centers = match self.method {
+            Method::Cdf => fit_cdf(&xs, bits),
+            Method::LloydMax => fit_lloyd_max(&xs, bits),
+            Method::KMeans => fit_kmeans(&xs, bits, self.seed),
+            _ => unreachable!("constructor rejects other methods"),
+        };
+        Ok(Codebook::from_centers(&centers))
+    }
+
+    fn n_observed(&self) -> usize {
+        self.sketch.n_seen() as usize
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+impl QuantEstimator for BsKmqCalibrator {
+    fn method(&self) -> Method {
+        Method::BsKmq
+    }
+
+    fn observe(&mut self, batch: &[f64]) {
+        BsKmqCalibrator::observe(self, batch)
+    }
+
+    fn seek(&mut self, batch_index: u64) {
+        BsKmqCalibrator::seek(self, batch_index)
+    }
+
+    fn merge(&mut self, other: &dyn QuantEstimator) -> Result<()> {
+        let other: &BsKmqCalibrator = downcast(other, Method::BsKmq)?;
+        BsKmqCalibrator::merge(self, other)
+    }
+
+    fn finish(&self, bits: u32) -> Result<Codebook> {
+        Ok(Codebook::from_centers(&self.finish_centers(bits)?))
+    }
+
+    fn n_observed(&self) -> usize {
+        BsKmqCalibrator::n_observed(self)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimator_for_dispatches_every_method() {
+        for m in Method::ALL {
+            let spec = QuantSpec::new(m, 3);
+            let est = estimator_for(&spec);
+            assert_eq!(est.method(), m);
+        }
+    }
+
+    #[test]
+    fn linear_streaming_equals_buffered() {
+        let xs: Vec<f64> = (0..3000).map(|i| (i as f64).sin() * 4.0).collect();
+        let mut est = LinearEstimator::new();
+        for c in xs.chunks(137) {
+            est.observe(c);
+        }
+        let want = Codebook::from_centers(&crate::quant::linear::fit_linear(
+            &xs, 3,
+        ));
+        assert_eq!(est.finish(3).unwrap(), want);
+    }
+
+    #[test]
+    fn merge_rejects_cross_method() {
+        let mut lin = LinearEstimator::new();
+        lin.observe(&[1.0]);
+        let mut cdf = SketchEstimator::new(Method::Cdf, 0);
+        cdf.observe(&[1.0]);
+        assert!(lin.merge(&cdf).is_err());
+        assert!(cdf.merge(&lin).is_err());
+        let km0 = SketchEstimator::new(Method::KMeans, 0);
+        let mut km1 = SketchEstimator::new(Method::KMeans, 1);
+        assert!(km1.merge(&km0).is_err(), "seed mismatch must fail");
+    }
+
+    #[test]
+    fn finish_before_observe_errors() {
+        for m in Method::ALL {
+            let est = estimator_for(&QuantSpec::new(m, 3));
+            assert!(est.finish(3).is_err(), "{}", m.name());
+        }
+    }
+}

@@ -1,67 +1,30 @@
 //! Quantizer suite: BS-KMQ (paper Algorithm 1) + the four baselines of
 //! Fig. 1, the floor-ADC codebook machinery (Eq. 2) and the §2.3 hardware
-//! projection.  Mirrors `python/compile/quantlib/`; golden-vector tests in
-//! `rust/tests/quant_parity.rs` pin the two implementations together.
+//! projection — behind the streaming mergeable [`QuantEstimator`] trait
+//! the calibration pipeline consumes, configured per layer by
+//! [`QuantSpec`].  Mirrors `python/compile/quantlib/`; the invariants are
+//! pinned by `rust/tests/quant_properties.rs` (codebook/fitter
+//! properties) and `rust/tests/quant_spec.rs` (estimator merge laws,
+//! spec plumbing, sharded-calibration equivalence).
 
 pub mod bs_kmq;
 pub mod cdf;
 pub mod codebook;
+pub mod estimator;
 pub mod kmeans;
 pub mod linear;
 pub mod lloyd_max;
+pub mod sketch;
+pub mod spec;
 pub mod weights;
 
 pub use bs_kmq::{fit_bs_kmq, BsKmqCalibrator};
 pub use cdf::fit_cdf;
 pub use codebook::{Codebook, MAX_LEVELS};
+pub use estimator::{estimator_for, QuantEstimator};
 pub use kmeans::{fit_kmeans, kmeans_1d};
 pub use linear::fit_linear;
 pub use lloyd_max::fit_lloyd_max;
+pub use sketch::ValueSketch;
+pub use spec::{Method, QuantSpec};
 pub use weights::quantize_weights_linear;
-
-/// The five quantization methods evaluated in Fig. 1 / Fig. 4.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Method {
-    Linear,
-    LloydMax,
-    Cdf,
-    KMeans,
-    BsKmq,
-}
-
-impl Method {
-    pub const ALL: [Method; 5] = [
-        Method::Linear,
-        Method::LloydMax,
-        Method::Cdf,
-        Method::KMeans,
-        Method::BsKmq,
-    ];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::Linear => "linear",
-            Method::LloydMax => "lloyd_max",
-            Method::Cdf => "cdf",
-            Method::KMeans => "kmeans",
-            Method::BsKmq => "bs_kmq",
-        }
-    }
-
-    /// Fit `2^bits` centers on `samples` (sorted ascending output).
-    pub fn fit(&self, samples: &[f64], bits: u32) -> Vec<f64> {
-        match self {
-            Method::Linear => fit_linear(samples, bits),
-            Method::LloydMax => fit_lloyd_max(samples, bits),
-            Method::Cdf => fit_cdf(samples, bits),
-            Method::KMeans => fit_kmeans(samples, bits, 0),
-            Method::BsKmq => fit_bs_kmq(samples, bits),
-        }
-    }
-
-    /// Fit and project onto the IM NL-ADC grid — the deployed codebook.
-    pub fn fit_hw(&self, samples: &[f64], bits: u32) -> Codebook {
-        let centers = self.fit(samples, bits);
-        Codebook::from_centers(&centers).project_to_hardware(bits)
-    }
-}

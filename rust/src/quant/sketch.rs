@@ -1,0 +1,204 @@
+//! Mergeable bounded-memory sample sketch for the streaming baseline
+//! estimators.
+//!
+//! A [`ValueSketch`] retains the `cap` distinct sample values with the
+//! smallest deterministic hash keys (`mix64(value_bits ^ salt)`),
+//! together with their exact multiplicities — a bottom-k sketch over the
+//! *distinct-value* set.  Because the key is a pure function of the
+//! value, the retained state is a pure function of the observed
+//! **multiset**: feeding the same samples in any order, in any chunking,
+//! across any number of merged shards, produces bit-identical sketches.
+//! (Once a value's key exceeds the bottom-k threshold anywhere it
+//! exceeds it globally — thresholds only tighten as more distinct values
+//! arrive — so survivors' counts are never corrupted by eviction.)
+//!
+//! Memory is `O(cap)` entries regardless of stream length; while the
+//! stream has at most `cap` distinct values the sketch is lossless and
+//! [`ValueSketch::expand`] reproduces the exact sorted multiset — the
+//! regime where the streaming estimators are bit-equal to their
+//! buffer-everything ancestors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::mix64;
+
+/// Default retained distinct-value capacity (matches the old BS-KMQ
+/// buffer bound).
+pub const DEFAULT_SKETCH_CAP: usize = 200_000;
+
+/// Expansion bound: [`ValueSketch::expand`] emits at most this many
+/// samples, proportionally downscaling counts beyond it.
+pub const EXPAND_CAP: usize = 1 << 20;
+
+/// Order- and shard-invariant bounded multiset sketch.
+#[derive(Clone, Debug)]
+pub struct ValueSketch {
+    cap: usize,
+    salt: u64,
+    /// (hash key, value bits) -> exact multiplicity
+    entries: BTreeMap<(u64, u64), u64>,
+    /// total samples observed (including evicted ones)
+    seen: u64,
+    /// whether any entry was ever evicted (sketch no longer lossless)
+    evicted: bool,
+}
+
+impl ValueSketch {
+    pub fn new(cap: usize, salt: u64) -> ValueSketch {
+        assert!(cap >= 1, "sketch capacity must be >= 1");
+        ValueSketch {
+            cap,
+            salt,
+            entries: BTreeMap::new(),
+            seen: 0,
+            evicted: false,
+        }
+    }
+
+    /// Observe one sample.
+    pub fn insert(&mut self, v: f64) {
+        self.seen += 1;
+        let bits = v.to_bits();
+        let key = (mix64(bits ^ self.salt), bits);
+        *self.entries.entry(key).or_insert(0) += 1;
+        if self.entries.len() > self.cap {
+            let last = *self.entries.keys().next_back().unwrap();
+            self.entries.remove(&last);
+            self.evicted = true;
+        }
+    }
+
+    /// Fold another shard's sketch into this one (associative and
+    /// commutative: the result depends only on the union multiset).
+    pub fn merge(&mut self, other: &ValueSketch) -> Result<()> {
+        ensure!(
+            self.cap == other.cap && self.salt == other.salt,
+            "merging incompatible sketches (cap {} vs {}, salt {:#x} vs \
+             {:#x})",
+            self.cap,
+            other.cap,
+            self.salt,
+            other.salt
+        );
+        for (k, c) in &other.entries {
+            *self.entries.entry(*k).or_insert(0) += c;
+        }
+        while self.entries.len() > self.cap {
+            let last = *self.entries.keys().next_back().unwrap();
+            self.entries.remove(&last);
+            self.evicted = true;
+        }
+        self.seen += other.seen;
+        self.evicted |= other.evicted;
+        Ok(())
+    }
+
+    /// Distinct values currently retained.
+    pub fn n_distinct(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total samples observed (including any evicted).
+    pub fn n_seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// `true` while the sketch still holds the exact observed multiset.
+    pub fn lossless(&self) -> bool {
+        !self.evicted
+    }
+
+    /// The retained multiset, expanded value-sorted (canonical order, so
+    /// downstream fitters see a deterministic sequence).  Beyond
+    /// [`EXPAND_CAP`] total retained samples, counts are proportionally
+    /// downscaled (each surviving value keeps at least one sample).
+    pub fn expand(&self) -> Vec<f64> {
+        let mut pairs: Vec<(f64, u64)> = self
+            .entries
+            .iter()
+            .map(|(&(_, bits), &c)| (f64::from_bits(bits), c))
+            .collect();
+        pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let total: u64 = pairs.iter().map(|p| p.1).sum();
+        let mut out = Vec::with_capacity((total as usize).min(EXPAND_CAP));
+        for (v, c) in pairs {
+            let k = if total as usize <= EXPAND_CAP {
+                c
+            } else {
+                ((c as u128 * EXPAND_CAP as u128) / total as u128).max(1)
+                    as u64
+            };
+            out.resize(out.len() + k as usize, v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_under_cap_and_order_invariant() {
+        let xs: Vec<f64> =
+            (0..500).map(|i| ((i * 7) % 97) as f64 * 0.25).collect();
+        let mut fwd = ValueSketch::new(1000, 9);
+        let mut rev = ValueSketch::new(1000, 9);
+        for &v in &xs {
+            fwd.insert(v);
+        }
+        for &v in xs.iter().rev() {
+            rev.insert(v);
+        }
+        assert!(fwd.lossless());
+        let mut want = xs.clone();
+        want.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(fwd.expand(), want);
+        assert_eq!(rev.expand(), want, "expansion must be order-invariant");
+    }
+
+    #[test]
+    fn merge_equals_single_stream() {
+        let xs: Vec<f64> = (0..4000).map(|i| (i % 331) as f64 * 0.5).collect();
+        let mut whole = ValueSketch::new(100, 3);
+        for &v in &xs {
+            whole.insert(v);
+        }
+        // 4 shards, merged in a scrambled order
+        let mut shards: Vec<ValueSketch> =
+            (0..4).map(|_| ValueSketch::new(100, 3)).collect();
+        for (i, &v) in xs.iter().enumerate() {
+            shards[i % 4].insert(v);
+        }
+        let mut merged = shards.pop().unwrap();
+        for s in [shards.pop().unwrap(), shards.remove(0), shards.remove(0)] {
+            merged.merge(&s).unwrap();
+        }
+        assert!(!whole.lossless(), "331 distinct > cap 100 must evict");
+        assert_eq!(whole.expand(), merged.expand());
+        assert_eq!(whole.n_seen(), merged.n_seen());
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_params() {
+        let mut a = ValueSketch::new(10, 1);
+        let b = ValueSketch::new(10, 2);
+        assert!(a.merge(&b).is_err());
+        let c = ValueSketch::new(11, 1);
+        assert!(a.merge(&c).is_err());
+    }
+
+    #[test]
+    fn expand_caps_giant_multiplicities() {
+        let mut s = ValueSketch::new(8, 0);
+        for _ in 0..(EXPAND_CAP as u64 + 10_000) {
+            s.insert(1.5);
+        }
+        s.insert(2.5);
+        let xs = s.expand();
+        assert!(xs.len() <= EXPAND_CAP + 8);
+        assert!(xs.contains(&2.5), "rare value must keep >= 1 sample");
+    }
+}

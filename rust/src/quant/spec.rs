@@ -1,0 +1,322 @@
+//! Per-layer quantization configuration: the [`QuantSpec`] every q-layer
+//! carries (in the manifest's `qlayers` entries, on the CLI, and through
+//! the calibration/PTQ/serving pipeline) plus the [`Method`] identifier
+//! naming one of the five fitters.
+//!
+//! The paper's headline configurations are *mixed precision* — 3/3/4/4b
+//! NL-ADC levels across the four networks after fine-tuning, and the
+//! 6/2/3b (tile/weight/activation) ResNet-18 system point of Table 1 —
+//! so precision is a per-layer artifact here, not a CLI global.  The CLI
+//! spelling is `[method:]TILE/WEIGHT/ACT` (weight `-` = keep float) or a
+//! bare `ACT` bit count, e.g. `6/2/3` or `bs_kmq:6/-/3` or `4`.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::quant::bs_kmq::{fit_bs_kmq_cfg, DEFAULT_ALPHA};
+use crate::quant::cdf::fit_cdf;
+use crate::quant::codebook::Codebook;
+use crate::quant::kmeans::fit_kmeans;
+use crate::quant::linear::fit_linear;
+use crate::quant::lloyd_max::fit_lloyd_max;
+
+/// Identifier of one of the five quantization methods evaluated in
+/// Fig. 1 / Fig. 4.  This is a *name*: fitting goes through the
+/// streaming [`crate::quant::QuantEstimator`] trait (calibration) or the
+/// one-shot wrappers below (figures, benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Linear,
+    LloydMax,
+    Cdf,
+    KMeans,
+    BsKmq,
+}
+
+impl Method {
+    pub const ALL: [Method; 5] = [
+        Method::Linear,
+        Method::LloydMax,
+        Method::Cdf,
+        Method::KMeans,
+        Method::BsKmq,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Linear => "linear",
+            Method::LloydMax => "lloyd_max",
+            Method::Cdf => "cdf",
+            Method::KMeans => "kmeans",
+            Method::BsKmq => "bs_kmq",
+        }
+    }
+
+    /// Inverse of [`Method::name`] (manifest `quant.method`, CLI specs).
+    pub fn parse(s: &str) -> Result<Method> {
+        match s {
+            "linear" => Ok(Method::Linear),
+            "lloyd_max" => Ok(Method::LloydMax),
+            "cdf" => Ok(Method::Cdf),
+            "kmeans" => Ok(Method::KMeans),
+            "bs_kmq" => Ok(Method::BsKmq),
+            other => bail!(
+                "unknown quantization method '{other}' \
+                 (linear|lloyd_max|cdf|kmeans|bs_kmq)"
+            ),
+        }
+    }
+
+    /// One-shot fit of `2^bits` centers (sorted ascending).  `seed`
+    /// drives every stochastic stage (k-means++ init, BS-KMQ reservoir),
+    /// so results are reproducible by configuration, never by accident.
+    pub fn fit(&self, samples: &[f64], bits: u32, seed: u64) -> Vec<f64> {
+        match self {
+            Method::Linear => fit_linear(samples, bits),
+            Method::LloydMax => fit_lloyd_max(samples, bits),
+            Method::Cdf => fit_cdf(samples, bits),
+            Method::KMeans => fit_kmeans(samples, bits, seed),
+            Method::BsKmq => {
+                fit_bs_kmq_cfg(samples, bits, DEFAULT_ALPHA, 8, seed)
+            }
+        }
+    }
+
+    /// Fit and project onto the IM NL-ADC grid — the deployed codebook.
+    pub fn fit_hw(&self, samples: &[f64], bits: u32, seed: u64) -> Codebook {
+        let centers = self.fit(samples, bits, seed);
+        Codebook::from_centers(&centers).project_to_hardware(bits)
+    }
+}
+
+/// Per-layer quantization configuration.
+///
+/// Carried in the manifest's `qlayers[i].quant` entries, resolved by
+/// [`crate::io::manifest::Manifest::layer_specs`] (absent entries get
+/// [`QuantSpec::default_for_layer`], which reproduces the historical
+/// uniform BS-KMQ/3-bit behavior), validated against the manifest's
+/// `max_levels` by `GraphProgram::compile`, and consumed by the
+/// calibrator, the PTQ evaluator and the serving pools.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantSpec {
+    /// which fitter programs this layer's NL-ADC codebook
+    pub method: Method,
+    /// layer-output NL-ADC resolution (the paper's per-network 3/3/4/4b)
+    pub act_bits: u32,
+    /// linear weight quantization; `None` keeps the trained float weights
+    pub weight_bits: Option<u32>,
+    /// per-tile partial-sum conversion resolution (linear codebook)
+    pub tile_bits: u32,
+    /// Algorithm 1 tail-trim fraction
+    pub alpha: f64,
+    /// seed of every stochastic fitting stage for this layer
+    pub seed: u64,
+}
+
+impl Default for QuantSpec {
+    fn default() -> QuantSpec {
+        QuantSpec {
+            method: Method::BsKmq,
+            act_bits: 3,
+            weight_bits: None,
+            tile_bits: 7,
+            alpha: DEFAULT_ALPHA,
+            seed: 0,
+        }
+    }
+}
+
+impl QuantSpec {
+    /// A default spec with the given method and NL-ADC resolution.
+    pub fn new(method: Method, act_bits: u32) -> QuantSpec {
+        QuantSpec {
+            method,
+            act_bits,
+            ..QuantSpec::default()
+        }
+    }
+
+    /// This spec re-seeded for q-layer `layer`: uniform configurations
+    /// still give every layer its own fitting seed (`seed + layer`),
+    /// matching the historical per-layer seeding of the calibrator.
+    pub fn for_layer(&self, layer: usize) -> QuantSpec {
+        QuantSpec {
+            seed: self.seed.wrapping_add(layer as u64),
+            ..*self
+        }
+    }
+
+    /// The spec a manifest without per-layer entries resolves to for
+    /// q-layer `layer` — exactly the pre-QuantSpec pipeline defaults.
+    pub fn default_for_layer(layer: usize) -> QuantSpec {
+        QuantSpec::default().for_layer(layer)
+    }
+
+    /// Expand a uniform spec into the per-layer vector an `nq`-layer
+    /// model consumes (each layer re-seeded via [`QuantSpec::for_layer`]).
+    pub fn per_layer(&self, nq: usize) -> Vec<QuantSpec> {
+        (0..nq).map(|i| self.for_layer(i)).collect()
+    }
+
+    /// Range/consistency checks against a manifest's `max_levels`.
+    pub fn validate(&self, max_levels: usize) -> Result<()> {
+        ensure!(
+            (1..=7).contains(&self.act_bits),
+            "act_bits must be in [1, 7], got {}",
+            self.act_bits
+        );
+        ensure!(
+            (1..=7).contains(&self.tile_bits),
+            "tile_bits must be in [1, 7], got {}",
+            self.tile_bits
+        );
+        ensure!(
+            (1usize << self.act_bits) <= max_levels,
+            "act_bits {} needs {} levels but the manifest caps max_levels \
+             at {max_levels}",
+            self.act_bits,
+            1usize << self.act_bits
+        );
+        ensure!(
+            (1usize << self.tile_bits) <= max_levels,
+            "tile_bits {} needs {} levels but the manifest caps max_levels \
+             at {max_levels}",
+            self.tile_bits,
+            1usize << self.tile_bits
+        );
+        if let Some(w) = self.weight_bits {
+            ensure!(
+                (2..=8).contains(&w),
+                "weight_bits must be in [2, 8], got {w}"
+            );
+        }
+        ensure!(
+            (0.0..0.5).contains(&self.alpha),
+            "alpha must be in [0, 0.5), got {}",
+            self.alpha
+        );
+        Ok(())
+    }
+
+    /// Parse a CLI spec string over `base` (unmentioned fields keep the
+    /// base's values): `[method:]TILE/WEIGHT/ACT` or `[method:]ACT`,
+    /// with weight `-`/`none`/`float` meaning "keep float weights".
+    pub fn parse(s: &str, base: &QuantSpec) -> Result<QuantSpec> {
+        let mut spec = *base;
+        let body = match s.split_once(':') {
+            Some((m, rest)) => {
+                spec.method = Method::parse(m)?;
+                rest
+            }
+            None => s,
+        };
+        let parse_bits = |part: &str, what: &str| -> Result<u32> {
+            part.parse::<u32>()
+                .with_context(|| format!("spec '{s}': {what} bits '{part}'"))
+        };
+        let parts: Vec<&str> = body.split('/').collect();
+        match parts.as_slice() {
+            [a] => spec.act_bits = parse_bits(a, "activation")?,
+            [t, w, a] => {
+                spec.tile_bits = parse_bits(t, "tile")?;
+                spec.weight_bits = match *w {
+                    "-" | "none" | "float" => None,
+                    w => Some(parse_bits(w, "weight")?),
+                };
+                spec.act_bits = parse_bits(a, "activation")?;
+            }
+            _ => bail!(
+                "spec '{s}' is neither ACT nor TILE/WEIGHT/ACT \
+                 (e.g. '3', '6/2/3', 'bs_kmq:6/-/3')"
+            ),
+        }
+        Ok(spec)
+    }
+
+    /// Compact human-readable form, `method tT/wW/aA`.
+    pub fn summary(&self) -> String {
+        let w = match self.weight_bits {
+            Some(w) => w.to_string(),
+            None => "-".to_string(),
+        };
+        format!(
+            "{} t{}/w{}/a{}",
+            self.method.name(),
+            self.tile_bits,
+            w,
+            self.act_bits
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("median").is_err());
+    }
+
+    #[test]
+    fn default_matches_historical_pipeline() {
+        let d = QuantSpec::default();
+        assert_eq!(d.method, Method::BsKmq);
+        assert_eq!(d.act_bits, 3);
+        assert_eq!(d.tile_bits, 7);
+        assert_eq!(d.weight_bits, None);
+        assert_eq!(d.alpha, DEFAULT_ALPHA);
+        // per-layer seeding = layer index, like the old calibrator
+        assert_eq!(QuantSpec::default_for_layer(5).seed, 5);
+    }
+
+    #[test]
+    fn parse_full_and_short_forms() {
+        let base = QuantSpec::default();
+        let s = QuantSpec::parse("6/2/3", &base).unwrap();
+        assert_eq!((s.tile_bits, s.weight_bits, s.act_bits), (6, Some(2), 3));
+        assert_eq!(s.method, Method::BsKmq);
+
+        let s = QuantSpec::parse("linear:6/-/4", &base).unwrap();
+        assert_eq!(s.method, Method::Linear);
+        assert_eq!((s.tile_bits, s.weight_bits, s.act_bits), (6, None, 4));
+
+        let s = QuantSpec::parse("5", &base).unwrap();
+        assert_eq!(s.act_bits, 5);
+        assert_eq!(s.tile_bits, base.tile_bits);
+
+        assert!(QuantSpec::parse("6/2", &base).is_err());
+        assert!(QuantSpec::parse("median:3", &base).is_err());
+        assert!(QuantSpec::parse("a/b/c", &base).is_err());
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let mut s = QuantSpec::default();
+        assert!(s.validate(128).is_ok());
+        s.act_bits = 8;
+        assert!(s.validate(128).is_err());
+        s.act_bits = 7;
+        assert!(s.validate(64).is_err(), "2^7 levels > max_levels 64");
+        s.act_bits = 3;
+        s.weight_bits = Some(1);
+        assert!(s.validate(128).is_err());
+        s.weight_bits = Some(2);
+        s.alpha = 0.5;
+        assert!(s.validate(128).is_err());
+    }
+
+    #[test]
+    fn fit_seed_flows_into_kmeans() {
+        // two seeds must be *able* to differ (k-means++ init) while the
+        // same seed is reproducible — the old API hardcoded seed 0
+        let xs: Vec<f64> = (0..5000)
+            .map(|i| ((i * 37) % 101) as f64 / 7.0)
+            .collect();
+        let a = Method::KMeans.fit(&xs, 4, 1);
+        let b = Method::KMeans.fit(&xs, 4, 1);
+        assert_eq!(a, b, "same seed must reproduce");
+    }
+}

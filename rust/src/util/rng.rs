@@ -19,6 +19,15 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Stateless SplitMix64 finalizer: a high-quality 64-bit mixing function.
+/// Used as the deterministic sampling key of the mergeable value sketch
+/// (`quant::sketch`) — the same input always maps to the same key, which
+/// is what makes bottom-k selection order- and shard-invariant.
+pub fn mix64(x: u64) -> u64 {
+    let mut state = x;
+    splitmix64(&mut state)
+}
+
 impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;

@@ -12,7 +12,7 @@ use bskmq::coordinator::ptq::{argmax, PtqEvaluator};
 use bskmq::coordinator::server::InferenceServer;
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
-use bskmq::quant::Method;
+use bskmq::quant::{Method, QuantSpec};
 use bskmq::util::rng::Rng;
 
 fn fresh_dir(tag: &str, model: &str) -> std::path::PathBuf {
@@ -55,7 +55,7 @@ fn qfwd_batches_determinism_and_noise() {
     let dir = fresh_dir("qfwd", "resnet");
     let be = load(BackendKind::Native, &dir, "resnet").unwrap();
     let data = ModelData::load(&dir, "resnet").unwrap();
-    let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
+    let calib = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
         .calibrate(&data, 3)
         .unwrap();
     let m = be.manifest();
@@ -90,7 +90,7 @@ fn qfwd_batches_determinism_and_noise() {
     let ev = PtqEvaluator::new(be.as_ref());
     let wq = ev.quantize_weights(4).unwrap();
     assert_eq!(wq.name(), "native");
-    let books = Calibrator::new(wq.as_ref(), Method::BsKmq, 3)
+    let books = Calibrator::with_uniform(wq.as_ref(), QuantSpec::new(Method::BsKmq, 3))
         .calibrate(&data, 3)
         .unwrap();
     let r = PtqEvaluator::new(wq.as_ref())
@@ -107,7 +107,7 @@ fn replicate_shares_weights_and_agrees() {
     let dir = fresh_dir("replicate", "resnet");
     let be = load(BackendKind::Native, &dir, "resnet").unwrap();
     let data = ModelData::load(&dir, "resnet").unwrap();
-    let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
+    let calib = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
         .calibrate(&data, 3)
         .unwrap();
     let rep = be.replicate().unwrap();
@@ -136,7 +136,7 @@ fn high_resolution_qfwd_tracks_float_forward() {
     let m = be.manifest();
     // calibrate on the same batch we evaluate: tile ranges then cover the
     // evaluated partial sums exactly
-    let calib = Calibrator::new(be.as_ref(), Method::Linear, 7)
+    let calib = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::Linear, 7))
         .calibrate(&data, 3)
         .unwrap();
     let xb = ModelData::batch(&data.x_calib, 0, m.batch);
@@ -172,7 +172,7 @@ fn fuzz_argmax_agreement_all_topologies() {
         let m = be.manifest();
         let classes = m.num_classes;
         let elems = m.input_elems();
-        let calib = Calibrator::new(be.as_ref(), Method::Linear, 7)
+        let calib = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::Linear, 7))
             .calibrate(&data, 8)
             .unwrap();
         let mut rng = Rng::new(900 + mi as u64);
@@ -252,8 +252,7 @@ fn server_serves_natively_without_hlo_artifacts() {
         dir.clone(),
         "resnet".into(),
         BackendKind::Native,
-        Method::BsKmq,
-        3,
+        Some(QuantSpec::new(Method::BsKmq, 3)),
         0.0,
         2,
     )

@@ -14,16 +14,18 @@ use bskmq::backend::native::graph::{layer_seed, NL_SEED_SALT};
 use bskmq::backend::native::ops::{
     add_bias_relu, add_mat, add_relu, attention, avg_pool3_same,
     collect_subsample, concat_c, global_avg_pool, im2col, layer_norm,
-    max_pool2, mean_over_seq, min_ref_step, nl_convert, tiled_mac, Feat, Mat,
-    QuantSpec,
+    max_pool2, mean_over_seq, min_ref_step, nl_convert, tiled_mac,
+    ConvertSpec, Feat, Mat,
 };
+use bskmq::backend::native::NativeBackend;
 use bskmq::backend::{load, Backend, BackendKind, ProgrammedCodebooks};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
 use bskmq::io::manifest::Manifest;
 use bskmq::macro_model::ROWS;
-use bskmq::quant::Method;
+use bskmq::quant::codebook::Codebook;
+use bskmq::quant::{Method, QuantSpec};
 use bskmq::tensor::Tensor;
 
 /// The four pre-refactor hand-written forwards, preserved as the golden
@@ -106,7 +108,7 @@ mod oracle {
                 } => {
                     let (n_refs, n_centers, t_refs, t_centers) =
                         books.layer_rows(wi);
-                    let spec = QuantSpec {
+                    let spec = ConvertSpec {
                         refs: t_refs,
                         centers: t_centers,
                         sigma: *noise_std * min_ref_step(t_refs),
@@ -307,7 +309,7 @@ fn graph_qfwd_matches_hardcoded_forwards_bitwise() {
         let be = load(BackendKind::Native, &dir, model).unwrap();
         let data = ModelData::load(&dir, model).unwrap();
         let m = be.manifest();
-        let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
+        let calib = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
             .calibrate(&data, 3)
             .unwrap();
         let xt = ModelData::batch(&data.x_test, 0, m.batch);
@@ -333,5 +335,232 @@ fn graph_qfwd_matches_hardcoded_forwards_bitwise() {
                  diverged from the pre-refactor forward"
             );
         }
+    }
+}
+
+/// The **pre-refactor calibration pipeline**, captured verbatim from
+/// `coordinator/calibrate.rs` + `quant/bs_kmq.rs` before the streaming
+/// mergeable `QuantEstimator` redesign: the sequential EMA-range BS-KMQ
+/// calibrator (incremental `observe`, capped buffer with a live
+/// reservoir RNG) and the old `Calibrator::calibrate` BS-KMQ path with
+/// its crate-wide `TILE_BITS = 7`.  Do not "modernize" this code: its
+/// value is that it is the exact computation the old API performed.
+mod oracle_calib {
+    use super::*;
+    use bskmq::quant::kmeans_1d;
+    use bskmq::util::rng::Rng;
+    use bskmq::util::stats::quantile_sorted;
+
+    const EMA_KEEP: f64 = 0.9;
+    const EMA_NEW: f64 = 0.1;
+    const TILE_BITS: u32 = 7;
+
+    pub struct OldBsKmq {
+        alpha: f64,
+        g_min: Option<f64>,
+        g_max: Option<f64>,
+        buffer: Vec<f64>,
+        max_buffer: usize,
+        rng: Rng,
+    }
+
+    impl OldBsKmq {
+        fn new(alpha: f64, max_buffer: usize, seed: u64) -> OldBsKmq {
+            OldBsKmq {
+                alpha,
+                g_min: None,
+                g_max: None,
+                buffer: Vec::new(),
+                max_buffer,
+                rng: Rng::new(seed),
+            }
+        }
+
+        fn observe(&mut self, batch: &[f64]) {
+            if batch.is_empty() {
+                return;
+            }
+            let mut sorted = batch.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let p_low = quantile_sorted(&sorted, self.alpha);
+            let p_high = quantile_sorted(&sorted, 1.0 - self.alpha);
+            let mut cent: Vec<f64> = batch
+                .iter()
+                .copied()
+                .filter(|&a| a >= p_low && a <= p_high)
+                .collect();
+            if cent.is_empty() {
+                cent = batch.to_vec();
+            }
+            let b_min = cent.iter().copied().fold(f64::INFINITY, f64::min);
+            let b_max =
+                cent.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            match (self.g_min, self.g_max) {
+                (None, _) | (_, None) => {
+                    self.g_min = Some(b_min);
+                    self.g_max = Some(b_max);
+                }
+                (Some(gmin), Some(gmax)) => {
+                    self.g_min = Some(EMA_KEEP * gmin + EMA_NEW * b_min);
+                    self.g_max = Some(EMA_KEEP * gmax + EMA_NEW * b_max);
+                }
+            }
+            if self.buffer.len() + cent.len() > self.max_buffer {
+                let keep = self.max_buffer.saturating_sub(self.buffer.len());
+                if keep == 0 {
+                    return;
+                }
+                cent = self.rng.sample(&cent, keep);
+            }
+            self.buffer.extend_from_slice(&cent);
+        }
+
+        fn finish(&self, bits: u32, seed: u64) -> Vec<f64> {
+            let (g_min, g_max) = (self.g_min.unwrap(), self.g_max.unwrap());
+            let g_max = if g_max > g_min { g_max } else { g_min + 1e-8 };
+            let k_interior = (1usize << bits) - 2;
+            if k_interior == 0 {
+                return vec![g_min, g_max];
+            }
+            let interior: Vec<f64> = self
+                .buffer
+                .iter()
+                .map(|&s| s.clamp(g_min, g_max))
+                .filter(|&s| s > g_min && s < g_max)
+                .collect();
+            let mut cq = if interior.len() < k_interior {
+                even_interior(g_min, g_max, k_interior)
+            } else {
+                let mut c = kmeans_1d(&interior, k_interior, 50, seed);
+                if c.len() < k_interior {
+                    let pad =
+                        even_interior(g_min, g_max, k_interior - c.len());
+                    c.extend(pad);
+                    c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                }
+                c
+            };
+            let mut centers = Vec::with_capacity(k_interior + 2);
+            centers.push(g_min);
+            centers.append(&mut cq);
+            centers.push(g_max);
+            centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            centers
+        }
+    }
+
+    fn even_interior(lo: f64, hi: f64, k: usize) -> Vec<f64> {
+        let step = (hi - lo) / (k + 1) as f64;
+        (1..=k).map(|i| lo + step * i as f64).collect()
+    }
+
+    /// The old `Calibrator::new(backend, Method::BsKmq, bits)
+    /// .calibrate(data, n_batches)` — per-layer NL + 7-bit tile books.
+    pub fn calibrate(
+        backend: &dyn Backend,
+        data: &ModelData,
+        n_batches: usize,
+        bits: u32,
+    ) -> (Vec<Codebook>, Vec<Codebook>) {
+        let m = backend.manifest();
+        let nq = m.nq();
+        let mut calibs: Vec<OldBsKmq> = (0..nq)
+            .map(|i| OldBsKmq::new(0.005, 200_000, i as u64))
+            .collect();
+        let mut tile_max = vec![0f64; nq];
+        for b in 0..n_batches {
+            let xb = ModelData::batch(&data.x_calib, b, m.batch);
+            let out = backend.run_collect(xb).unwrap();
+            for i in 0..nq {
+                calibs[i].observe(&out.samples[i]);
+                tile_max[i] = tile_max[i].max(out.tile_max[i]);
+            }
+        }
+        let mut nl = Vec::with_capacity(nq);
+        let mut tile = Vec::with_capacity(nq);
+        for i in 0..nq {
+            let centers = calibs[i].finish(bits, i as u64);
+            nl.push(
+                Codebook::from_centers(&centers).project_to_hardware(bits),
+            );
+            let r = tile_max[i].max(1e-6);
+            tile.push(Codebook::linear(-r, r, TILE_BITS));
+        }
+        (nl, tile)
+    }
+}
+
+/// Backward-compat shim: a manifest **without** per-layer quant specs
+/// (the pre-QuantSpec schema) must resolve to defaults that reproduce
+/// the old uniform BS-KMQ/3-bit calibration *bit for bit* — codebooks
+/// and end-to-end logits both — against the pre-refactor pipeline
+/// captured in `oracle_calib`.
+#[test]
+fn default_spec_calibration_matches_pre_refactor_pipeline() {
+    let dir = fresh_dir("compat");
+    synth::write_model(&dir, "resnet", 42).unwrap();
+    let be = load(BackendKind::Native, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+
+    // strip the emitted per-layer specs: this is what a pre-refactor
+    // manifest looks like to the new loader
+    let mut stripped_manifest = be.manifest().clone();
+    for q in &mut stripped_manifest.qlayers {
+        q.spec = None;
+    }
+    let stripped =
+        NativeBackend::from_parts(stripped_manifest, be.weights().to_vec())
+            .unwrap();
+
+    let calib = Calibrator::from_manifest(&stripped)
+        .calibrate(&data, 3)
+        .unwrap();
+    let (nl_want, tile_want) = oracle_calib::calibrate(&stripped, &data, 3, 3);
+
+    let book_bits = |b: &Codebook| -> (Vec<u64>, Vec<u64>) {
+        (
+            b.centers.iter().map(|c| c.to_bits()).collect(),
+            b.refs.iter().map(|r| r.to_bits()).collect(),
+        )
+    };
+    for i in 0..stripped.manifest().nq() {
+        assert_eq!(
+            book_bits(&calib.nl_books[i]),
+            book_bits(&nl_want[i]),
+            "layer {i}: default-spec NL codebook diverged from the \
+             pre-refactor calibrator"
+        );
+        assert_eq!(
+            book_bits(&calib.tile_books[i]),
+            book_bits(&tile_want[i]),
+            "layer {i}: default-spec tile codebook diverged"
+        );
+    }
+
+    // end-to-end: logits through both book sets are bit-identical
+    let m = stripped.manifest();
+    let xt = ModelData::batch(&data.x_test, 0, m.batch);
+    let got = stripped.run_qfwd(xt, &calib.programmed, 0.0, 7).unwrap();
+    let want_books =
+        ProgrammedCodebooks::stack(&nl_want, &tile_want, m.max_levels)
+            .unwrap();
+    let want = stripped.run_qfwd(xt, &want_books, 0.0, 7).unwrap();
+    assert_eq!(
+        bits(&got),
+        bits(&want),
+        "default-spec logits diverged from the pre-refactor artifact"
+    );
+
+    // the synth-emitted resnet specs ARE the historical defaults, so the
+    // unstripped manifest must produce the same books
+    let emitted = Calibrator::from_manifest(be.as_ref())
+        .calibrate(&data, 3)
+        .unwrap();
+    for i in 0..m.nq() {
+        assert_eq!(
+            book_bits(&emitted.nl_books[i]),
+            book_bits(&calib.nl_books[i]),
+            "layer {i}: emitted resnet specs differ from defaults"
+        );
     }
 }

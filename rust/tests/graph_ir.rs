@@ -14,7 +14,7 @@ use bskmq::coordinator::server::InferenceServer;
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
 use bskmq::io::manifest::Manifest;
-use bskmq::quant::Method;
+use bskmq::quant::{Method, QuantSpec};
 
 /// A minimal two-dense-layer manifest with a caller-supplied `ops`
 /// array (the shared fixture of the failure tests).
@@ -237,7 +237,7 @@ fn mixer_runs_end_to_end_from_manifest_alone() {
     }
 
     // Algorithm 1 -> deployed quantized forward -> PTQ accuracy
-    let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
+    let calib = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
         .calibrate(&data, 3)
         .unwrap();
     let xb = ModelData::batch(&data.x_test, 0, m.batch);
@@ -256,8 +256,7 @@ fn mixer_runs_end_to_end_from_manifest_alone() {
         dir.clone(),
         "mixer".into(),
         BackendKind::Native,
-        Method::BsKmq,
-        3,
+        Some(QuantSpec::new(Method::BsKmq, 3)),
         0.0,
         2,
     )

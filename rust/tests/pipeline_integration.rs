@@ -12,7 +12,7 @@ use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::coordinator::ptq::PtqEvaluator;
 use bskmq::coordinator::server::InferenceServer;
 use bskmq::data::dataset::ModelData;
-use bskmq::quant::Method;
+use bskmq::quant::{Method, QuantSpec};
 
 fn artifacts_ready() -> Option<std::path::PathBuf> {
     let dir = bskmq::artifacts_dir();
@@ -59,10 +59,10 @@ fn calibrate_then_ptq_beats_linear_at_3_bits() {
     let be = backend_for(&dir, "resnet");
     let data = ModelData::load(&dir, "resnet").unwrap();
     let ev = PtqEvaluator::new(be.as_ref());
-    let bs = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
+    let bs = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
         .calibrate(&data, 8)
         .unwrap();
-    let lin = Calibrator::new(be.as_ref(), Method::Linear, 3)
+    let lin = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::Linear, 3))
         .calibrate(&data, 8)
         .unwrap();
     let acc_bs = ev
@@ -87,7 +87,7 @@ fn noise_injection_degrades_gracefully() {
     let be = backend_for(&dir, "resnet");
     let data = ModelData::load(&dir, "resnet").unwrap();
     let ev = PtqEvaluator::new(be.as_ref());
-    let bs = Calibrator::new(be.as_ref(), Method::BsKmq, 4)
+    let bs = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 4))
         .calibrate(&data, 8)
         .unwrap();
     let clean = ev
@@ -114,7 +114,7 @@ fn weight_quantization_small_loss_at_2bit() {
     let Some(dir) = artifacts_ready() else { return };
     let be = backend_for(&dir, "resnet");
     let data = ModelData::load(&dir, "resnet").unwrap();
-    let bs = Calibrator::new(be.as_ref(), Method::BsKmq, 3)
+    let bs = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
         .calibrate(&data, 8)
         .unwrap();
     let ev = PtqEvaluator::new(be.as_ref());
@@ -129,7 +129,7 @@ fn weight_quantization_small_loss_at_2bit() {
     for (bits, floor) in [(4u32, base - 0.05), (3, 0.45), (2, 0.15)] {
         let wq = ev.quantize_weights(bits).unwrap();
         // deployment order: calibrate ON the quantized-weight hardware
-        let books = Calibrator::new(wq.as_ref(), Method::BsKmq, 3)
+        let books = Calibrator::with_uniform(wq.as_ref(), QuantSpec::new(Method::BsKmq, 3))
             .calibrate(&data, 8)
             .unwrap();
         let evw = PtqEvaluator::new(wq.as_ref());
@@ -151,8 +151,7 @@ fn server_batches_and_answers() {
         dir.clone(),
         "resnet".into(),
         BackendKind::from_env(),
-        Method::BsKmq,
-        3,
+        Some(QuantSpec::new(Method::BsKmq, 3)),
         0.0,
         4,
     )
@@ -177,7 +176,7 @@ fn all_four_models_run_qfwd() {
     for model in ["resnet", "vgg", "inception", "distilbert"] {
         let be = backend_for(&dir, model);
         let data = ModelData::load(&dir, model).unwrap();
-        let calib = Calibrator::new(be.as_ref(), Method::BsKmq, 4)
+        let calib = Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 4))
             .calibrate(&data, 2)
             .unwrap();
         let ev = PtqEvaluator::new(be.as_ref());
@@ -205,7 +204,7 @@ fn native_agrees_with_xla_qfwd() {
         }
     };
     let data = ModelData::load(&dir, "resnet").unwrap();
-    let calib = Calibrator::new(native.as_ref(), Method::BsKmq, 3)
+    let calib = Calibrator::with_uniform(native.as_ref(), QuantSpec::new(Method::BsKmq, 3))
         .calibrate(&data, 8)
         .unwrap();
     let m = native.manifest();

@@ -17,7 +17,7 @@ fn prop_output_is_a_center() {
         let xs = random_samples(&mut rng, 2_000);
         let bits = 1 + (trial % 5) as u32;
         for m in Method::ALL {
-            let cb = m.fit_hw(&xs, bits);
+            let cb = m.fit_hw(&xs, bits, 0);
             for &x in xs.iter().step_by(37) {
                 let q = cb.quantize(x);
                 assert!(
@@ -36,7 +36,7 @@ fn prop_quantize_monotone() {
     let mut rng = Rng::new(202);
     for _ in 0..20 {
         let xs = random_samples(&mut rng, 3_000);
-        let cb = Method::BsKmq.fit_hw(&xs, 4);
+        let cb = Method::BsKmq.fit_hw(&xs, 4, 0);
         let mut sorted = xs.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mut prev = f64::NEG_INFINITY;
@@ -99,7 +99,7 @@ fn prop_mse_monotone_in_bits() {
         for m in [Method::Cdf, Method::BsKmq] {
             let mut prev = f64::INFINITY;
             for bits in [2u32, 3, 4, 5, 6] {
-                let mse = Codebook::from_centers(&m.fit(&xs, bits)).mse(&xs);
+                let mse = Codebook::from_centers(&m.fit(&xs, bits, 0)).mse(&xs);
                 assert!(
                     mse <= prev * 1.10 + 1e-9,
                     "{} ideal mse grew {prev} -> {mse} at {bits}b",
@@ -107,7 +107,7 @@ fn prop_mse_monotone_in_bits() {
                 );
                 prev = prev.min(mse);
                 // projected form: loose sanity bound only
-                let hw = m.fit_hw(&xs, bits).mse(&xs);
+                let hw = m.fit_hw(&xs, bits, 0).mse(&xs);
                 assert!(hw.is_finite() && hw >= 0.0);
             }
         }
@@ -120,7 +120,7 @@ fn prop_bs_kmq_spans_range() {
     let mut rng = Rng::new(505);
     for _ in 0..30 {
         let xs = random_samples(&mut rng, 4_000);
-        let centers = Method::BsKmq.fit(&xs, 3);
+        let centers = Method::BsKmq.fit(&xs, 3, 0);
         assert_eq!(centers.len(), 8);
         assert!(centers.windows(2).all(|w| w[0] <= w[1]));
         let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
@@ -137,7 +137,7 @@ fn prop_hw_projection_budget() {
     for trial in 0..40 {
         let xs = random_samples(&mut rng, 3_000);
         let bits = 2 + (trial % 4) as u32;
-        let cb = Method::KMeans.fit_hw(&xs, bits);
+        let cb = Method::KMeans.fit_hw(&xs, bits, 0);
         let budget = Codebook::cell_budget(bits).unwrap();
         let dv = cb.min_step();
         if dv <= 0.0 {

@@ -1,0 +1,374 @@
+//! Property suite for the per-layer QuantSpec plumbing and the
+//! streaming mergeable estimator contract (`quant::estimator`):
+//!
+//! * `merge` is order-insensitive and shard-count-invariant — 1 vs 4 vs
+//!   16 shards over the same batch stream produce **bit-identical**
+//!   codebooks for all five methods;
+//! * streaming (chunked) observation equals buffered (one-shot)
+//!   observation, and for the linear/CDF/Lloyd-Max baselines equals the
+//!   legacy buffer-everything fitters exactly;
+//! * specs parse/serialize through the manifest and are validated at
+//!   graph compile time;
+//! * the paper's 6/2/3b mixed-precision system point runs end-to-end
+//!   (calibrate → PTQ → serve) on the synthetic resnet artifact, with
+//!   4-shard parallel calibration bit-identical to serial.
+
+use std::time::Duration;
+
+use bskmq::backend::native::graph::GraphProgram;
+use bskmq::backend::{load, Backend, BackendKind};
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::coordinator::ptq::PtqEvaluator;
+use bskmq::coordinator::server::{ModelPool, PoolConfig};
+use bskmq::data::dataset::ModelData;
+use bskmq::data::synth::{self, mixture_samples};
+use bskmq::io::manifest::Manifest;
+use bskmq::quant::codebook::Codebook;
+use bskmq::quant::{
+    estimator_for, fit_cdf, fit_linear, fit_lloyd_max, Method,
+    QuantEstimator, QuantSpec,
+};
+use bskmq::util::rng::Rng;
+
+fn book_bits(b: &Codebook) -> (Vec<u64>, Vec<u64>) {
+    (
+        b.centers.iter().map(|c| c.to_bits()).collect(),
+        b.refs.iter().map(|r| r.to_bits()).collect(),
+    )
+}
+
+/// Stream `batches` through `shards` estimators (contiguous slices,
+/// seeked to their global offsets), merge, finish.
+fn shard_fit(
+    spec: &QuantSpec,
+    batches: &[Vec<f64>],
+    shards: usize,
+    bits: u32,
+) -> Codebook {
+    assert_eq!(batches.len() % shards, 0, "test uses even splits");
+    let per = batches.len() / shards;
+    let mut parts: Vec<Box<dyn QuantEstimator>> = (0..shards)
+        .map(|s| {
+            let mut est = estimator_for(spec);
+            est.seek((s * per) as u64);
+            for b in &batches[s * per..(s + 1) * per] {
+                est.observe(b);
+            }
+            est
+        })
+        .collect();
+    let mut root = parts.remove(0);
+    for p in parts {
+        root.merge(p.as_ref()).unwrap();
+    }
+    root.finish(bits).unwrap()
+}
+
+/// 1 vs 4 vs 16 shards -> bit-identical codebooks, all five methods.
+#[test]
+fn shard_count_invariance_all_methods() {
+    let mut rng = Rng::new(41);
+    let batches: Vec<Vec<f64>> =
+        (0..16).map(|_| mixture_samples(&mut rng, 2_000)).collect();
+    for method in Method::ALL {
+        for bits in [2u32, 4] {
+            let spec = QuantSpec::new(method, bits);
+            let serial = shard_fit(&spec, &batches, 1, bits);
+            for shards in [4usize, 16] {
+                let sharded = shard_fit(&spec, &batches, shards, bits);
+                assert_eq!(
+                    book_bits(&sharded),
+                    book_bits(&serial),
+                    "{} @{bits}b: {shards} shards diverged from serial",
+                    method.name()
+                );
+            }
+        }
+    }
+}
+
+/// Merge order must not matter: folding the shard states in scrambled
+/// orders (and into different roots) gives identical codebooks.
+#[test]
+fn merge_is_order_insensitive() {
+    let mut rng = Rng::new(43);
+    let batches: Vec<Vec<f64>> =
+        (0..8).map(|_| mixture_samples(&mut rng, 1_500)).collect();
+    for method in Method::ALL {
+        let spec = QuantSpec::new(method, 3);
+        let mk_parts = || -> Vec<Box<dyn QuantEstimator>> {
+            (0..4)
+                .map(|s| {
+                    let mut est = estimator_for(&spec);
+                    est.seek((s * 2) as u64);
+                    for b in &batches[s * 2..(s + 1) * 2] {
+                        est.observe(b);
+                    }
+                    est
+                })
+                .collect()
+        };
+
+        // order A: fold 1,2,3 into 0
+        let mut a = mk_parts();
+        let mut root_a = a.remove(0);
+        for p in a {
+            root_a.merge(p.as_ref()).unwrap();
+        }
+        // order B: fold 3,0,1 into 2
+        let mut b = mk_parts();
+        let root2 = b.remove(2);
+        let mut root_b = root2;
+        for idx in [2usize, 0, 0] {
+            let p = b.remove(idx.min(b.len() - 1));
+            root_b.merge(p.as_ref()).unwrap();
+        }
+        assert_eq!(
+            book_bits(&root_a.finish(3).unwrap()),
+            book_bits(&root_b.finish(3).unwrap()),
+            "{}: merge order changed the codebook",
+            method.name()
+        );
+    }
+}
+
+/// Streaming (chunked observes) equals buffered (single observe) for
+/// the order-free estimators, and equals the legacy pool-everything
+/// fitters exactly for linear / CDF / Lloyd-Max.
+#[test]
+fn streaming_equals_buffered_baselines() {
+    let mut rng = Rng::new(47);
+    for trial in 0..5 {
+        let xs = mixture_samples(&mut rng, 12_000);
+        let bits = 2 + (trial % 4) as u32;
+        for method in [Method::Linear, Method::Cdf, Method::LloydMax, Method::KMeans] {
+            let spec = QuantSpec::new(method, bits);
+            let mut chunked = estimator_for(&spec);
+            for c in xs.chunks(997) {
+                chunked.observe(c);
+            }
+            let mut oneshot = estimator_for(&spec);
+            oneshot.observe(&xs);
+            let a = chunked.finish(bits).unwrap();
+            let b = oneshot.finish(bits).unwrap();
+            assert_eq!(
+                book_bits(&a),
+                book_bits(&b),
+                "{} @{bits}b: chunking changed the codebook",
+                method.name()
+            );
+            // legacy buffer-everything fitters (k-means excluded: its
+            // reservoir subsample is order-dependent by construction,
+            // which is exactly what the canonicalizing sketch fixes)
+            let legacy = match method {
+                Method::Linear => Some(fit_linear(&xs, bits)),
+                Method::Cdf => Some(fit_cdf(&xs, bits)),
+                Method::LloydMax => Some(fit_lloyd_max(&xs, bits)),
+                _ => None,
+            };
+            if let Some(centers) = legacy {
+                assert_eq!(
+                    book_bits(&a),
+                    book_bits(&Codebook::from_centers(&centers)),
+                    "{} @{bits}b: streaming estimator diverged from the \
+                     legacy buffered fitter",
+                    method.name()
+                );
+            }
+        }
+    }
+}
+
+/// BS-KMQ: identical *batch sequences* produce identical codebooks
+/// regardless of how the batches are distributed over shards (its
+/// Algorithm 1 is defined per batch, so the batch structure is input).
+#[test]
+fn bs_kmq_shard_invariance_over_batches() {
+    let mut rng = Rng::new(53);
+    let batches: Vec<Vec<f64>> =
+        (0..16).map(|_| mixture_samples(&mut rng, 3_000)).collect();
+    let spec = QuantSpec::new(Method::BsKmq, 3);
+    let serial = shard_fit(&spec, &batches, 1, 3);
+    for shards in [2usize, 4, 8, 16] {
+        let sharded = shard_fit(&spec, &batches, shards, 3);
+        assert_eq!(
+            book_bits(&sharded),
+            book_bits(&serial),
+            "bs_kmq: {shards} shards diverged"
+        );
+    }
+}
+
+/// Cross-method and cross-seed merges must fail loudly.
+#[test]
+fn merge_rejects_incompatible_states() {
+    let mut a = estimator_for(&QuantSpec::new(Method::Cdf, 3));
+    a.observe(&[1.0, 2.0]);
+    let mut b = estimator_for(&QuantSpec::new(Method::KMeans, 3));
+    b.observe(&[1.0, 2.0]);
+    assert!(a.merge(b.as_ref()).is_err(), "cdf <- kmeans must fail");
+
+    let s0 = QuantSpec::new(Method::BsKmq, 3);
+    let s9 = QuantSpec {
+        seed: 9,
+        ..QuantSpec::new(Method::BsKmq, 3)
+    };
+    let mut e0 = estimator_for(&s0);
+    e0.observe(&[1.0, 2.0]);
+    let mut e9 = estimator_for(&s9);
+    e9.seek(1);
+    e9.observe(&[3.0, 4.0]);
+    assert!(e0.merge(e9.as_ref()).is_err(), "seed mismatch must fail");
+}
+
+/// Manifest round trip: specs written by synth parse back; a spec the
+/// hardware cannot program is rejected at graph compile time.
+#[test]
+fn manifest_specs_roundtrip_and_validate() {
+    let dir = std::env::temp_dir().join("bskmq_spec_roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_model(&dir, "inception", 7).unwrap();
+    let m = Manifest::load(dir.join("inception_manifest.json")).unwrap();
+    let specs = m.layer_specs();
+    assert_eq!(specs.len(), m.nq());
+    for (i, s) in specs.iter().enumerate() {
+        assert_eq!(s.method, Method::BsKmq);
+        assert_eq!(s.act_bits, synth::paper_act_bits("inception"));
+        assert_eq!(s.tile_bits, 7);
+        assert_eq!(s.seed, i as u64, "per-layer seed must be the index");
+    }
+
+    // sabotage one spec beyond the manifest's level capacity
+    let src =
+        std::fs::read_to_string(dir.join("inception_manifest.json")).unwrap();
+    let bad_src = src.replacen(r#""max_levels": 128"#, r#""max_levels": 8"#, 1);
+    let bad = Manifest::from_json_str(&bad_src).unwrap();
+    let err = GraphProgram::compile(&bad).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("quant spec") && msg.contains("max_levels"),
+        "compile error must name the spec violation, got: {msg}"
+    );
+}
+
+/// Acceptance: the paper's 6/2/3b (tile/weight/act) ResNet config runs
+/// end-to-end — calibrate (4-shard ≡ serial, bitwise) → per-layer
+/// weight quantization → PTQ → replica-pool serving.
+#[test]
+fn paper_6_2_3_config_end_to_end() {
+    let dir = std::env::temp_dir().join("bskmq_spec_e2e");
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_model(&dir, "resnet", 42).unwrap();
+    let be = load(BackendKind::Native, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+
+    let spec = QuantSpec::parse("6/2/3", &QuantSpec::default()).unwrap();
+    assert_eq!((spec.tile_bits, spec.weight_bits, spec.act_bits), (6, Some(2), 3));
+
+    // 1-shard vs 4-shard calibration: programmed codebooks bit-identical
+    let calib = Calibrator::with_uniform(be.as_ref(), spec);
+    let serial = calib.calibrate_sharded(&data, 8, 1).unwrap();
+    let sharded = calib.calibrate_sharded(&data, 8, 4).unwrap();
+    assert_eq!(serial.shards, 1);
+    assert_eq!(sharded.shards, 4);
+    assert_eq!(serial.samples_seen, sharded.samples_seen);
+    for i in 0..be.manifest().nq() {
+        assert_eq!(
+            book_bits(&serial.nl_books[i]),
+            book_bits(&sharded.nl_books[i]),
+            "layer {i}: sharded NL codebook diverged"
+        );
+        assert_eq!(
+            book_bits(&serial.tile_books[i]),
+            book_bits(&sharded.tile_books[i]),
+            "layer {i}: sharded tile codebook diverged"
+        );
+        assert_eq!(serial.nl_books[i].levels(), 8, "3-bit NL codebook");
+        assert_eq!(serial.tile_books[i].levels(), 64, "6-bit tile codebook");
+    }
+
+    // per-layer weight quantization + deployment-order recalibration
+    let specs = serial.specs.clone();
+    let deployed = PtqEvaluator::new(be.as_ref())
+        .quantize_weights_spec(&specs)
+        .unwrap();
+    // 2-bit columns: every weight is ternary per column scale
+    for (&wi, w0) in deployed
+        .qweight_indices()
+        .iter()
+        .zip(be.weights().iter().step_by(2))
+    {
+        let wq = &deployed.weights()[wi];
+        assert_eq!(wq.shape, w0.shape);
+        let n = wq.shape[1];
+        for col in 0..n {
+            let col_vals: Vec<f32> = (0..wq.shape[0])
+                .map(|r| wq.data[r * n + col])
+                .collect();
+            let mut distinct: Vec<u32> =
+                col_vals.iter().map(|v| v.to_bits()).collect();
+            distinct.sort_unstable();
+            distinct.dedup();
+            assert!(
+                distinct.len() <= 3,
+                "2-bit column has {} distinct levels",
+                distinct.len()
+            );
+        }
+    }
+    let books = Calibrator::with_specs(deployed.as_ref(), specs)
+        .calibrate_sharded(&data, 8, 4)
+        .unwrap();
+    let r = PtqEvaluator::new(deployed.as_ref())
+        .evaluate(&data, &books.programmed, 0.0, 2, 3)
+        .unwrap();
+    assert!(r.accuracy.is_finite());
+    assert_eq!(r.samples, 2 * be.manifest().batch);
+
+    // serve the same spec through a replica pool (weights quantized and
+    // codebooks calibrated inside pool_setup, 2 shards)
+    let pool = ModelPool::start(
+        dir.clone(),
+        "resnet".into(),
+        &PoolConfig {
+            backend: BackendKind::Native,
+            spec: Some(spec),
+            calib_batches: 4,
+            calib_shards: 2,
+            replicas: 2,
+            queue_depth: 64,
+            batch_window: Duration::from_millis(1),
+            ..PoolConfig::default()
+        },
+    )
+    .unwrap();
+    let elems: usize = data.x_test.shape[1..].iter().product();
+    for i in 0..3 {
+        let x = data.x_test.data[i * elems..(i + 1) * elems].to_vec();
+        let logits = pool.infer(x).unwrap();
+        assert_eq!(logits.len(), synth::CLASSES);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}
+
+/// Manifests without per-layer specs resolve to defaults equal to the
+/// synth-emitted resnet specs (which encode the historical behavior).
+#[test]
+fn specless_manifest_defaults_match_emitted_resnet() {
+    let dir = std::env::temp_dir().join("bskmq_spec_defaults");
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_model(&dir, "resnet", 42).unwrap();
+    let m = Manifest::load(dir.join("resnet_manifest.json")).unwrap();
+    let mut stripped = m.clone();
+    for q in &mut stripped.qlayers {
+        q.spec = None;
+    }
+    assert_eq!(
+        stripped.layer_specs(),
+        m.layer_specs(),
+        "resnet's emitted specs must equal the backward-compat defaults"
+    );
+    for (i, s) in stripped.layer_specs().iter().enumerate() {
+        assert_eq!(*s, QuantSpec::default_for_layer(i));
+    }
+}

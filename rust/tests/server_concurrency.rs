@@ -28,7 +28,7 @@ use bskmq::coordinator::server::{
 };
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
-use bskmq::quant::Method;
+use bskmq::quant::{Method, QuantSpec};
 
 const CLIENT_THREADS: usize = 16;
 const REQS_PER_THREAD: usize = 8;
@@ -46,13 +46,13 @@ fn fresh_dir(tag: &str, models: &[&str]) -> std::path::PathBuf {
 fn native_cfg(replicas: usize, queue_depth: usize) -> PoolConfig {
     PoolConfig {
         backend: BackendKind::Native,
-        method: Method::BsKmq,
-        bits: 3,
+        spec: Some(QuantSpec::new(Method::BsKmq, 3)),
         noise_std: 0.0,
         calib_batches: 2,
         replicas,
         queue_depth,
         batch_window: Duration::from_millis(1),
+        ..PoolConfig::default()
     }
 }
 
@@ -236,8 +236,7 @@ fn drop_with_live_clients_does_not_hang() {
         dir.clone(),
         "resnet".into(),
         BackendKind::Native,
-        Method::BsKmq,
-        3,
+        Some(QuantSpec::new(Method::BsKmq, 3)),
         0.0,
         2,
     )
