@@ -9,6 +9,11 @@
 //! Uses `make artifacts` outputs when present, the synthetic set
 //! otherwise.
 //!
+//! The per-op rows printed here are the same `run_qfwd_profiled`
+//! breakdown the serving path samples behind `ObsConfig::profile_every`
+//! (spans carry them) and `bskmq bench` persists into BENCH_*.json —
+//! one instrumentation source, three consumers.
+//!
 //! Baseline note: the graph executor replaced the hardcoded per-model
 //! forwards of commit 695adc0 ("PR 2").  Both paths run the identical
 //! kernel sequence (the golden suite pins logits bit-identical), so any

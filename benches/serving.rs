@@ -1,17 +1,24 @@
 //! Bench: replica-pool serving throughput vs replica count (the scaling
-//! the pool architecture buys on one box).  Runs on the trained
-//! artifacts when present, otherwise on the library's synthetic ones —
-//! no Python, no HLO needed.
+//! the pool architecture buys on one box), plus the observability
+//! surfaces: rejection rate under a saturating burst, queue-wait
+//! percentiles, and a BENCH-schema json written through the shared
+//! report writer.  Runs on the trained artifacts when present,
+//! otherwise on the library's synthetic ones — no Python, no HLO
+//! needed.
 //!
 //!   cargo bench --bench serving
 //!   BSKMQ_THREADS=1 cargo bench --bench serving   # per-replica 1 thread
+//!   BSKMQ_BENCH_OUT=/tmp cargo bench --bench serving  # also write json
 
+use std::sync::atomic::Ordering;
 use std::time::Instant;
 
 use bskmq::backend::BackendKind;
 use bskmq::coordinator::server::{ModelPool, PoolConfig};
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
+use bskmq::obs::bench_report::{short_rev, BenchReport, ModelBench};
+use bskmq::util::stats::rate;
 
 fn main() -> anyhow::Result<()> {
     // trained artifacts when present, synthetic fallback otherwise
@@ -22,6 +29,7 @@ fn main() -> anyhow::Result<()> {
     let n_clients = 8usize;
     let reqs_per_client = 64usize;
 
+    let mut best: Option<ModelBench> = None;
     for replicas in [1usize, 2, 4] {
         let cfg = PoolConfig {
             backend: BackendKind::Native,
@@ -57,6 +65,74 @@ fn main() -> anyhow::Result<()> {
             total / wall
         );
         println!("  {}", pool.stats.summary());
+        let qw = pool.stats.queue_percentiles_ms(&[0.5, 0.95, 0.99]);
+        println!(
+            "  queue wait: p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+            qw[0], qw[1], qw[2]
+        );
+        let lat = pool.stats.percentiles_ms(&[0.5, 0.99, 0.999]);
+        best = Some(ModelBench {
+            model: "resnet".to_string(),
+            batch: pool.batch(),
+            forwards_per_sec: rate(
+                pool.stats.batches.load(Ordering::Relaxed) as f64,
+                wall,
+            ),
+            qfwd_batch_ns: 0, // serving bench: no isolated forward timing
+            calib_samples_per_sec: 0.0,
+            serve_p50_ms: lat[0],
+            serve_p99_ms: lat[1],
+            serve_p999_ms: lat[2],
+            serve_requests: pool.stats.requests.load(Ordering::Relaxed),
+            serve_rejected: pool.rejected(),
+            queue_p50_ms: qw[0],
+            queue_p99_ms: qw[2],
+            per_op_ns: Vec::new(),
+        });
+    }
+
+    // rejection rate under a saturating burst: a depth-8 queue with one
+    // replica cannot absorb 512 back-to-back submits
+    let cfg = PoolConfig {
+        backend: BackendKind::Native,
+        replicas: 1,
+        queue_depth: 8,
+        calib_batches: 2,
+        ..PoolConfig::default()
+    };
+    let pool =
+        ModelPool::start(artifacts.clone(), "resnet".to_string(), &cfg)?;
+    let client = pool.client();
+    let burst = 512usize;
+    let mut kept = Vec::new();
+    for _ in 0..burst {
+        if let Ok(rx) = client.submit(data.x_test.data[..in_elems].to_vec()) {
+            kept.push(rx);
+        }
+    }
+    for rx in &kept {
+        let _ = rx.recv();
+    }
+    let rejected = pool.rejected();
+    println!(
+        "burst {burst} vs queue depth 8: {} accepted, {} rejected \
+         (rejection rate {:.1}%)",
+        kept.len(),
+        rejected,
+        100.0 * rate(rejected as f64, burst as f64),
+    );
+
+    // emit the serving numbers through the shared BENCH writer so this
+    // bench and `bskmq bench` agree on the schema (opt-in: set
+    // BSKMQ_BENCH_OUT to a directory)
+    if let Ok(dir) = std::env::var("BSKMQ_BENCH_OUT") {
+        let mut report = BenchReport::new(&short_rev(), false);
+        report.note =
+            "benches/serving.rs: serving-only pass (no qfwd/calib timing)"
+                .to_string();
+        report.models.extend(best);
+        let path = report.write(std::path::Path::new(&dir))?;
+        println!("wrote {}", path.display());
     }
     Ok(())
 }

@@ -1,9 +1,10 @@
 //! Serving example: start a two-model replica-pool registry in-process,
 //! fire concurrent client threads at both models, and report latency /
-//! throughput, the per-replica batching behaviour, and admission
-//! control rejecting a burst against a tiny queue.  Falls back to
-//! synthetic artifacts when the trained ones are absent, so it runs in
-//! any checkout:
+//! throughput, the per-replica batching behaviour, the observability
+//! surfaces (JSON stats, request-lifecycle spans, quantization-health
+//! Prometheus series), and admission control rejecting a burst against
+//! a tiny queue.  Falls back to synthetic artifacts when the trained
+//! ones are absent, so it runs in any checkout:
 //!
 //!   cargo run --release --example serve
 //!   BSKMQ_REPLICAS=4 cargo run --release --example serve
@@ -12,8 +13,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use bskmq::backend::BackendKind;
-use bskmq::coordinator::server::{ModelPool, ModelRegistry, PoolConfig};
+use bskmq::coordinator::server::{
+    ModelPool, ModelRegistry, ObsConfig, PoolConfig,
+};
 use bskmq::data::dataset::ModelData;
+use bskmq::obs::TraceSink;
 
 fn main() -> anyhow::Result<()> {
     // trained artifacts when present, synthetic fallback otherwise
@@ -23,10 +27,19 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(2);
+    // observability: sample every 8th request span into a memory sink,
+    // profile every 4th batch for the per-op breakdown
+    let sink = TraceSink::memory();
     let mut cfg = PoolConfig {
         backend: BackendKind::from_env(),
         replicas,
         queue_depth: 512,
+        obs: ObsConfig {
+            trace_sample_every: 8,
+            trace_sink: Some(sink.clone()),
+            profile_every: 4,
+            ..ObsConfig::default()
+        },
         ..PoolConfig::default()
     };
     let models: Vec<String> =
@@ -99,6 +112,32 @@ fn main() -> anyhow::Result<()> {
         mean_lat_ms
     );
     println!("{}", registry.summary());
+
+    // the `stats` protocol command serves exactly this JSON
+    println!("\nstats (JSON): {}", registry.stats_json());
+    for pool in registry.pools() {
+        let tr = pool.tracer();
+        println!(
+            "{}: spans opened={} closed={} emitted={} (sampled 1/8)",
+            pool.model,
+            tr.opened(),
+            tr.closed(),
+            tr.emitted()
+        );
+    }
+    if let Some(line) = sink.lines().first() {
+        println!("sample span: {line}");
+    }
+    // quantization-health series from the `metrics` Prometheus page
+    let page = registry.prometheus();
+    println!("\nquant-health series (from `metrics`):");
+    for line in page
+        .lines()
+        .filter(|l| l.starts_with("bskmq_saturation_rate"))
+        .take(6)
+    {
+        println!("  {line}");
+    }
 
     // admission control: a depth-2 queue under a 64-burst rejects loudly
     println!("\nadmission-control demo (queue depth 2, replicas 1):");

@@ -21,12 +21,16 @@ pub mod native;
 pub mod xla;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
 use crate::io::manifest::Manifest;
+use crate::obs::quant_health::QuantHealth;
 use crate::quant::codebook::Codebook;
 use crate::tensor::Tensor;
+
+pub use native::graph::OpTiming;
 
 /// Output of one `collect` batch, sliced per the manifest layout.
 pub struct CollectOut {
@@ -134,6 +138,33 @@ pub trait Backend {
         noise_std: f32,
         seed: u32,
     ) -> Result<Vec<f32>>;
+
+    /// Like [`Backend::run_qfwd`] but also returns a per-op wall-time
+    /// breakdown.  Engines without instrumentation fall back to an
+    /// unprofiled run with an empty breakdown, so callers can always
+    /// request a profile and simply get no rows.
+    fn run_qfwd_profiled(
+        &self,
+        x: &[f32],
+        books: &ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    ) -> Result<(Vec<f32>, Vec<OpTiming>)> {
+        Ok((self.run_qfwd(x, books, noise_std, seed)?, Vec::new()))
+    }
+
+    /// Attach quantization-health telemetry; subsequent quantized
+    /// forwards feed it per-layer pre-conversion activations.  Returns
+    /// `false` for engines without digitization hooks (telemetry is then
+    /// silently absent, never an error).
+    fn attach_quant_health(&mut self, _health: Arc<QuantHealth>) -> bool {
+        false
+    }
+
+    /// The telemetry attached via [`Backend::attach_quant_health`].
+    fn quant_health(&self) -> Option<Arc<QuantHealth>> {
+        None
+    }
 
     /// Weight tensors in graph argument order.
     fn weights(&self) -> &[Tensor];

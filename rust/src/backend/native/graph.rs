@@ -31,6 +31,7 @@ use super::ops::{
 use crate::backend::ProgrammedCodebooks;
 use crate::io::manifest::Manifest;
 use crate::macro_model::ROWS;
+use crate::obs::quant_health::QuantHealth;
 use crate::tensor::Tensor;
 
 /// Per-sample shape of a value edge.
@@ -840,7 +841,9 @@ impl GraphProgram {
 
     /// Interpret the graph over a `batch`-sample input.  `buf` is the
     /// reusable arena (grown on first use, then allocation-free);
-    /// `profile` collects per-op wall-clock when provided.
+    /// `profile` collects per-op wall-clock when provided; `taps`, when
+    /// attached, observes each q-layer's pre-conversion activations
+    /// (quant mode only).
     #[allow(clippy::too_many_arguments)]
     pub fn execute(
         &self,
@@ -851,6 +854,7 @@ impl GraphProgram {
         mode: ExecMode,
         buf: &mut ExecBuffers,
         mut profile: Option<&mut Vec<OpTiming>>,
+        taps: Option<&QuantHealth>,
     ) -> Result<ExecOut> {
         ensure!(batch >= 1, "empty batch");
         let in_elems = self.values[self.input_vid].shape.elems();
@@ -950,6 +954,7 @@ impl GraphProgram {
                         &mut samples,
                         &mut tile_max,
                         &mut out,
+                        taps,
                     );
                 }
                 OpKind::Dense { q } => {
@@ -968,6 +973,7 @@ impl GraphProgram {
                         &mut samples,
                         &mut tile_max,
                         &mut out,
+                        taps,
                     );
                 }
                 OpKind::MaxPool2 => {
@@ -1125,6 +1131,7 @@ fn qmac(
     samples: &mut [Vec<f64>],
     tile_max: &mut [f64],
     out: &mut [f32],
+    taps: Option<&QuantHealth>,
 ) {
     let w = &weights[2 * q];
     let bias = &weights[2 * q + 1];
@@ -1150,6 +1157,11 @@ fn qmac(
             };
             tiled_mac_into(x2d, rows, k, w, ROWS, Some(&spec), out);
             add_bias_relu_into(out, ql.n, &bias.data, ql.relu);
+            // health telemetry sees exactly what the NL-ADC is about to
+            // digitize: post-bias/ReLU, pre-conversion
+            if let Some(h) = taps {
+                h.observe(q, out);
+            }
             nl_convert_into(
                 out,
                 rows,
@@ -1242,7 +1254,7 @@ mod tests {
         let x = vec![0.5f32; 2 * 4];
         let mut buf = ExecBuffers::default();
         let out = p
-            .execute(&m, &weights, &x, 2, ExecMode::Collect, &mut buf, None)
+            .execute(&m, &weights, &x, 2, ExecMode::Collect, &mut buf, None, None)
             .unwrap();
         assert_eq!(out.logits.len(), 2 * 3);
         assert_eq!(out.samples.len(), 2);
@@ -1267,7 +1279,7 @@ mod tests {
         };
         let mut timings = Vec::new();
         let q1 = p
-            .execute(&m, &weights, &x, 2, mode, &mut buf, Some(&mut timings))
+            .execute(&m, &weights, &x, 2, mode, &mut buf, Some(&mut timings), None)
             .unwrap();
         assert_eq!(q1.logits.len(), 2 * 3);
         assert!(q1.samples.is_empty());
@@ -1275,7 +1287,7 @@ mod tests {
         assert_eq!(timings[0].name, "d0");
         // arena reuse across calls is bit-stable
         let q2 = p
-            .execute(&m, &weights, &x, 2, mode, &mut buf, None)
+            .execute(&m, &weights, &x, 2, mode, &mut buf, None, None)
             .unwrap();
         assert_eq!(q1.logits, q2.logits);
     }
@@ -1299,10 +1311,10 @@ mod tests {
         };
         let mut buf = ExecBuffers::default();
         let full = p
-            .execute(&m, &weights, &x, 2, mode, &mut buf, None)
+            .execute(&m, &weights, &x, 2, mode, &mut buf, None, None)
             .unwrap();
         let one = p
-            .execute(&m, &weights, &x[..4], 1, mode, &mut buf, None)
+            .execute(&m, &weights, &x[..4], 1, mode, &mut buf, None, None)
             .unwrap();
         assert_eq!(one.logits, full.logits[..3].to_vec());
     }

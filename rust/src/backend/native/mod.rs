@@ -24,6 +24,7 @@ use anyhow::{ensure, Context, Result};
 use crate::backend::{Backend, CollectOut, ProgrammedCodebooks};
 use crate::io::manifest::Manifest;
 use crate::io::weights::load_tensors;
+use crate::obs::quant_health::QuantHealth;
 use crate::tensor::Tensor;
 
 use graph::{ExecBuffers, ExecMode, GraphProgram, OpTiming};
@@ -44,6 +45,9 @@ pub struct NativeBackend {
     /// reusable [`ExecBuffers`] arenas — steady-state forwards allocate
     /// no per-op tensors
     scratch: Mutex<Vec<ExecBuffers>>,
+    /// optional quantization-health telemetry; shared across replica
+    /// clones, so occupancy aggregates pool-wide
+    health: Option<Arc<QuantHealth>>,
 }
 
 impl Clone for NativeBackend {
@@ -54,6 +58,7 @@ impl Clone for NativeBackend {
             program: Arc::clone(&self.program),
             // arenas are working state, not model state
             scratch: Mutex::new(Vec::new()),
+            health: self.health.clone(),
         }
     }
 }
@@ -106,6 +111,7 @@ impl NativeBackend {
             weights: Arc::new(weights),
             program: Arc::new(program),
             scratch: Mutex::new(Vec::new()),
+            health: None,
         })
     }
 
@@ -128,37 +134,6 @@ impl NativeBackend {
             pool.push(buf);
         }
         r
-    }
-
-    /// [`Backend::run_qfwd`] with a per-op wall-clock breakdown (the
-    /// bench harness and `bskmq graph` use this; the trait path skips
-    /// the timestamping entirely).
-    pub fn run_qfwd_profiled(
-        &self,
-        x: &[f32],
-        books: &ProgrammedCodebooks,
-        noise_std: f32,
-        seed: u32,
-    ) -> Result<(Vec<f32>, Vec<OpTiming>)> {
-        let batch = self.qfwd_batch(x)?;
-        self.check_books(books)?;
-        let mut timings = Vec::with_capacity(self.program.n_ops());
-        let out = self.with_buffers(|buf| {
-            self.program.execute(
-                &self.manifest,
-                self.weights.as_slice(),
-                x,
-                batch,
-                ExecMode::Quant {
-                    books,
-                    noise_std,
-                    seed,
-                },
-                buf,
-                Some(&mut timings),
-            )
-        })?;
-        Ok((out.logits, timings))
     }
 
     fn qfwd_batch(&self, x: &[f32]) -> Result<usize> {
@@ -215,6 +190,7 @@ impl Backend for NativeBackend {
                 ExecMode::Collect,
                 buf,
                 None,
+                None,
             )
         })?;
         Ok(CollectOut {
@@ -246,9 +222,51 @@ impl Backend for NativeBackend {
                 },
                 buf,
                 None,
+                self.health.as_deref(),
             )
         })?;
         Ok(out.logits)
+    }
+
+    /// [`Backend::run_qfwd`] with a per-op wall-clock breakdown (the
+    /// bench harness, `bskmq graph` and the serving path's sampled
+    /// profiling use this; plain `run_qfwd` skips the timestamping).
+    fn run_qfwd_profiled(
+        &self,
+        x: &[f32],
+        books: &ProgrammedCodebooks,
+        noise_std: f32,
+        seed: u32,
+    ) -> Result<(Vec<f32>, Vec<OpTiming>)> {
+        let batch = self.qfwd_batch(x)?;
+        self.check_books(books)?;
+        let mut timings = Vec::with_capacity(self.program.n_ops());
+        let out = self.with_buffers(|buf| {
+            self.program.execute(
+                &self.manifest,
+                self.weights.as_slice(),
+                x,
+                batch,
+                ExecMode::Quant {
+                    books,
+                    noise_std,
+                    seed,
+                },
+                buf,
+                Some(&mut timings),
+                self.health.as_deref(),
+            )
+        })?;
+        Ok((out.logits, timings))
+    }
+
+    fn attach_quant_health(&mut self, health: Arc<QuantHealth>) -> bool {
+        self.health = Some(health);
+        true
+    }
+
+    fn quant_health(&self) -> Option<Arc<QuantHealth>> {
+        self.health.clone()
     }
 
     fn weights(&self) -> &[Tensor] {

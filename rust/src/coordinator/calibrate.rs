@@ -19,8 +19,10 @@ use anyhow::{ensure, Context, Result};
 
 use crate::backend::{Backend, ProgrammedCodebooks};
 use crate::data::dataset::ModelData;
+use crate::obs::quant_health::health_sketch;
 use crate::quant::codebook::Codebook;
 use crate::quant::estimator::{estimator_for, QuantEstimator};
+use crate::quant::sketch::ValueSketch;
 use crate::quant::QuantSpec;
 
 pub struct CalibrationResult {
@@ -38,6 +40,9 @@ pub struct CalibrationResult {
     pub samples_seen: Vec<usize>,
     /// the per-layer specs this calibration ran with
     pub specs: Vec<QuantSpec>,
+    /// per-layer bounded sketches of the calibration activations — the
+    /// baseline the obs layer diffs live traffic against
+    pub sketches: Vec<ValueSketch>,
 }
 
 /// Per-shard accumulation state: one estimator per q-layer plus the
@@ -46,6 +51,7 @@ struct ShardState {
     estimators: Vec<Box<dyn QuantEstimator>>,
     tile_max: Vec<f64>,
     samples_seen: Vec<usize>,
+    sketches: Vec<ValueSketch>,
 }
 
 impl ShardState {
@@ -62,6 +68,9 @@ impl ShardState {
         }
         for (a, b) in self.samples_seen.iter_mut().zip(&other.samples_seen) {
             *a += *b;
+        }
+        for (a, b) in self.sketches.iter_mut().zip(&other.sketches) {
+            a.merge(b)?;
         }
         Ok(())
     }
@@ -84,6 +93,8 @@ fn run_shard(
     }
     let mut tile_max = vec![0f64; nq];
     let mut samples_seen = vec![0usize; nq];
+    let mut sketches: Vec<ValueSketch> =
+        (0..nq).map(|_| health_sketch()).collect();
     for b in range {
         let xb = ModelData::batch(&data.x_calib, b, m.batch);
         let out = backend.run_collect(xb)?;
@@ -91,12 +102,16 @@ fn run_shard(
             samples_seen[i] += out.samples[i].len();
             estimators[i].observe(&out.samples[i]);
             tile_max[i] = tile_max[i].max(out.tile_max[i]);
+            for &v in &out.samples[i] {
+                sketches[i].insert(v);
+            }
         }
     }
     Ok(ShardState {
         estimators,
         tile_max,
         samples_seen,
+        sketches,
     })
 }
 
@@ -254,6 +269,7 @@ impl<'a> Calibrator<'a> {
             shards,
             samples_seen: root.samples_seen,
             specs: self.specs.clone(),
+            sketches: root.sketches,
         })
     }
 

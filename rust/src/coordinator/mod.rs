@@ -12,6 +12,6 @@ pub mod server;
 pub use calibrate::{CalibrationResult, Calibrator};
 pub use ptq::{PtqEvaluator, PtqResult};
 pub use server::{
-    AdmissionError, InferenceServer, ModelPool, ModelRegistry, PoolClient,
-    PoolConfig, ServerStats,
+    AdmissionError, InferenceServer, ModelPool, ModelRegistry, ObsConfig,
+    PoolClient, PoolConfig, ServerStats,
 };

@@ -25,6 +25,7 @@
 //! concurrency suite (`rust/tests/server_concurrency.rs`) pins.
 
 use std::collections::VecDeque;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -36,6 +37,10 @@ use crate::backend::{Backend, BackendKind, ProgrammedCodebooks};
 use crate::coordinator::calibrate::{CalibrationResult, Calibrator};
 use crate::coordinator::ptq::PtqEvaluator;
 use crate::data::dataset::ModelData;
+use crate::obs::prometheus::{escape_label, PromWriter};
+use crate::obs::quant_health::QuantHealth;
+use crate::obs::registry::{Histogram, MetricsRegistry};
+use crate::obs::trace::{escape_json, RequestTracer, Span, TraceSink};
 use crate::quant::QuantSpec;
 
 /// Outcome of one request: logits, or a serving-side error message.
@@ -44,6 +49,10 @@ pub type Reply = std::result::Result<Vec<f32>, String>;
 /// One queued inference request.  Internal: the only producer is
 /// [`PoolClient::submit`], which has already validated the input size.
 struct Request {
+    /// span id handed out by the pool's tracer at admission
+    id: u64,
+    /// when admission accepted the request (queue-wait clock)
+    submitted: Instant,
     x: Vec<f32>,
     reply: mpsc::Sender<Reply>,
 }
@@ -54,6 +63,7 @@ pub const MAX_LATENCY_SAMPLES: usize = 1 << 20;
 /// Latency sample store: a ring over the most recent `capacity` service
 /// times, so percentiles keep tracking a long-running server instead of
 /// freezing on the warm-up era.
+#[derive(Clone)]
 struct LatencyRing {
     samples: Vec<u64>,
     capacity: usize,
@@ -84,6 +94,17 @@ impl LatencyRing {
             self.head = (self.head + 1) % self.capacity;
         }
     }
+
+    /// Append another ring's retained samples, oldest first, as if they
+    /// had been pushed here (cross-replica aggregation).  `head` is 0
+    /// until a ring fills, so `(head + i) % len` is oldest-first in both
+    /// regimes.
+    fn merge(&mut self, other: &LatencyRing) {
+        let n = other.samples.len();
+        for i in 0..n {
+            self.push(other.samples[(other.head + i) % n]);
+        }
+    }
 }
 
 #[derive(Default)]
@@ -97,6 +118,25 @@ pub struct ServerStats {
     pub rejected: AtomicU64,
     /// per-request service latency samples (us)
     lat_us: Mutex<LatencyRing>,
+    /// per-request queue-wait samples (us), recorded at batch assembly
+    queue_us: Mutex<LatencyRing>,
+}
+
+/// One lock (copy only) + one sort outside the lock, so the serving
+/// threads never stall on a reader.
+fn ring_percentiles_ms(ring: &Mutex<LatencyRing>, qs: &[f64]) -> Vec<f64> {
+    let raw = ring.lock().unwrap().samples.clone(); // memcpy only
+    let mut sorted: Vec<f64> = raw.into_iter().map(|u| u as f64).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qs.iter()
+        .map(|&q| {
+            if sorted.is_empty() {
+                0.0
+            } else {
+                crate::util::stats::quantile_sorted(&sorted, q) / 1e3
+            }
+        })
+        .collect()
 }
 
 impl ServerStats {
@@ -122,22 +162,40 @@ impl ServerStats {
         self.record_latency(us, n);
     }
 
+    /// Record how long one request sat queued before batch assembly.
+    pub fn record_queue_wait(&self, us: u64) {
+        self.queue_us.lock().unwrap().push(us);
+    }
+
     /// Latency percentiles in milliseconds, one per requested quantile
-    /// (all 0.0 when no samples yet).  One lock (copy only) + one sort
-    /// outside the lock, so the serving threads never stall on a reader.
+    /// (all 0.0 when no samples yet).
     pub fn percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
-        let raw = self.lat_us.lock().unwrap().samples.clone(); // memcpy only
-        let mut sorted: Vec<f64> = raw.into_iter().map(|u| u as f64).collect();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        qs.iter()
-            .map(|&q| {
-                if sorted.is_empty() {
-                    0.0
-                } else {
-                    crate::util::stats::quantile_sorted(&sorted, q) / 1e3
-                }
-            })
-            .collect()
+        ring_percentiles_ms(&self.lat_us, qs)
+    }
+
+    /// Queue-wait percentiles in milliseconds.
+    pub fn queue_percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
+        ring_percentiles_ms(&self.queue_us, qs)
+    }
+
+    /// Fold another stats instance into this one: counters add, latency
+    /// rings append oldest-first — the cross-replica aggregation path
+    /// (`other` must not be `self`).
+    pub fn merge_from(&self, other: &ServerStats) {
+        for (a, b) in [
+            (&self.requests, &other.requests),
+            (&self.batches, &other.batches),
+            (&self.full_batches, &other.full_batches),
+            (&self.singles, &other.singles),
+            (&self.busy_us, &other.busy_us),
+            (&self.rejected, &other.rejected),
+        ] {
+            a.fetch_add(b.load(Ordering::SeqCst), Ordering::Relaxed);
+        }
+        let theirs = other.lat_us.lock().unwrap().clone();
+        self.lat_us.lock().unwrap().merge(&theirs);
+        let theirs = other.queue_us.lock().unwrap().clone();
+        self.queue_us.lock().unwrap().merge(&theirs);
     }
 
     /// Latency percentile in milliseconds (0.0 when no samples yet).
@@ -146,10 +204,10 @@ impl ServerStats {
     }
 
     pub fn summary(&self) -> String {
-        let p = self.percentiles_ms(&[0.50, 0.95, 0.99]);
+        let p = self.percentiles_ms(&[0.50, 0.95, 0.99, 0.999]);
         format!(
             "requests={} batches={} full={} singles={} rejected={} \
-             busy={:.1}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+             busy={:.1}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms p999={:.2}ms",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.full_batches.load(Ordering::Relaxed),
@@ -159,6 +217,7 @@ impl ServerStats {
             p[0],
             p[1],
             p[2],
+            p[3],
         )
     }
 }
@@ -282,9 +341,58 @@ impl JobQueue {
     }
 }
 
+/// Observability knobs for one pool (DESIGN.md §11).  All sampling
+/// rates use `0 = off` so the defaults cost nothing on the hot path.
+#[derive(Clone)]
+pub struct ObsConfig {
+    /// run every Nth batch through `run_qfwd_profiled` for a per-op
+    /// wall-time breakdown (0 = never; steady state stays allocation
+    /// free because unprofiled batches collect no rows)
+    pub profile_every: u64,
+    /// emit every Nth request span to the trace sink (0 = never; span
+    /// open/close accounting runs regardless)
+    pub trace_sample_every: u64,
+    /// JSONL span sink on disk (ignored when `trace_sink` is set)
+    pub trace_path: Option<PathBuf>,
+    /// explicit span sink (tests hand in memory sinks)
+    pub trace_sink: Option<Arc<TraceSink>>,
+    /// attach quantization-health telemetry to the backend's
+    /// digitization step (engines without hooks silently skip it)
+    pub quant_health: bool,
+    /// live-sketch stride: every Nth observed activation feeds the
+    /// per-layer bottom-k sketch (0 disables live sketching)
+    pub sketch_sample_every: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            profile_every: 0,
+            trace_sample_every: 0,
+            trace_path: None,
+            trace_sink: None,
+            quant_health: true,
+            sketch_sample_every: 31,
+        }
+    }
+}
+
+impl std::fmt::Debug for ObsConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsConfig")
+            .field("profile_every", &self.profile_every)
+            .field("trace_sample_every", &self.trace_sample_every)
+            .field("trace_path", &self.trace_path)
+            .field("trace_sink", &self.trace_sink.is_some())
+            .field("quant_health", &self.quant_health)
+            .field("sketch_sample_every", &self.sketch_sample_every)
+            .finish()
+    }
+}
+
 /// Per-pool serving configuration.  `replicas` and `queue_depth` are the
 /// scaling knobs; the rest mirrors the calibration pipeline.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct PoolConfig {
     pub backend: BackendKind,
     /// uniform calibration-spec override; `None` serves the manifest's
@@ -301,6 +409,8 @@ pub struct PoolConfig {
     pub queue_depth: usize,
     /// how long a worker waits to top up a partial batch
     pub batch_window: Duration,
+    /// observability: tracing, profiling, quantization health
+    pub obs: ObsConfig,
 }
 
 impl Default for PoolConfig {
@@ -314,6 +424,7 @@ impl Default for PoolConfig {
             replicas: 1,
             queue_depth: 256,
             batch_window: Duration::from_millis(2),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -326,6 +437,7 @@ impl Default for PoolConfig {
 pub struct PoolClient {
     queue: Arc<JobQueue>,
     stats: Arc<ServerStats>,
+    tracer: Arc<RequestTracer>,
     in_elems: usize,
     num_classes: usize,
 }
@@ -343,9 +455,19 @@ impl PoolClient {
             self.in_elems
         );
         let (tx, rx) = mpsc::channel();
-        match self.queue.push(Request { x, reply: tx }) {
+        // span opens at admission; a refused push rolls it back so
+        // rejected requests never count as open spans
+        let id = self.tracer.open();
+        let req = Request {
+            id,
+            submitted: Instant::now(),
+            x,
+            reply: tx,
+        };
+        match self.queue.push(req) {
             Ok(()) => Ok(rx),
             Err(e) => {
+                self.tracer.cancel(id);
                 if matches!(e, AdmissionError::Full { .. }) {
                     self.stats.rejected.fetch_add(1, Ordering::Relaxed);
                 }
@@ -381,6 +503,7 @@ struct PoolReady {
     in_elems: usize,
     num_classes: usize,
     batch: usize,
+    health: Option<Arc<QuantHealth>>,
 }
 
 /// One model's serving pool: N replica workers behind a bounded queue.
@@ -395,6 +518,12 @@ pub struct ModelPool {
     in_elems: usize,
     num_classes: usize,
     batch: usize,
+    /// request-lifecycle tracer (span accounting + sampled JSONL)
+    tracer: Arc<RequestTracer>,
+    /// pool-local metrics registry (latency/queue-wait histograms)
+    metrics: Arc<MetricsRegistry>,
+    /// quantization-health telemetry, when the engine supports hooks
+    health: Option<Arc<QuantHealth>>,
     handle: Option<std::thread::JoinHandle<Result<()>>>,
 }
 
@@ -408,30 +537,59 @@ impl ModelPool {
         model: String,
         cfg: &PoolConfig,
     ) -> Result<ModelPool> {
-        let cfg = *cfg;
+        let cfg = cfg.clone();
         ensure!(cfg.replicas >= 1, "pool needs at least one replica");
         let queue = Arc::new(JobQueue::with_depth(cfg.queue_depth));
         let stats = Arc::new(ServerStats::default());
         let replica_stats: Vec<Arc<ServerStats>> = (0..cfg.replicas)
             .map(|_| Arc::new(ServerStats::default()))
             .collect();
+        let sink = match (&cfg.obs.trace_sink, &cfg.obs.trace_path) {
+            (Some(s), _) => Some(s.clone()),
+            (None, Some(p)) => Some(TraceSink::file(p)?),
+            (None, None) => None,
+        };
+        let tracer =
+            RequestTracer::new(&model, cfg.obs.trace_sample_every, sink);
+        let metrics = Arc::new(MetricsRegistry::new());
+        // pool-level histograms carry the model label in their
+        // registered name so the registry renders them route-scoped
+        let ml = escape_label(&model);
+        let forward_hist = metrics.histogram(
+            &format!("bskmq_forward_latency_ms{{model=\"{ml}\"}}"),
+            &Histogram::latency_ms_bounds(),
+        );
+        let queue_hist = metrics.histogram(
+            &format!("bskmq_queue_wait_ms{{model=\"{ml}\"}}"),
+            &Histogram::latency_ms_bounds(),
+        );
         let (ready_tx, ready_rx) = mpsc::channel::<Result<PoolReady>>();
 
         let m_name = model.clone();
         let q = queue.clone();
         let st = stats.clone();
         let rst = replica_stats.clone();
+        let tracer_w = tracer.clone();
         let handle = std::thread::spawn(move || -> Result<()> {
             // setup: load + calibrate, reporting failure instead of
             // leaving the caller blocked
-            let (be, calib) = match pool_setup(&cfg, &artifacts, &m_name) {
-                Ok(v) => v,
-                Err(e) => {
-                    let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
-                    return Err(e);
-                }
-            };
-            let books = Arc::new(calib.programmed);
+            let (be, calib, health) =
+                match pool_setup(&cfg, &artifacts, &m_name) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                        return Err(e);
+                    }
+                };
+            let shared = Arc::new(WorkerShared {
+                books: calib.programmed,
+                noise_std: cfg.noise_std,
+                window: cfg.batch_window,
+                profile_every: cfg.obs.profile_every,
+                tracer: tracer_w,
+                forward_hist,
+                queue_hist,
+            });
             // replicas 1..N each own a cheap clone of the engine
             let mut workers = Vec::new();
             for (i, mine) in rst.iter().enumerate().skip(1) {
@@ -453,18 +611,9 @@ impl ModelPool {
                 let q = q.clone();
                 let st = st.clone();
                 let mine = mine.clone();
-                let books = books.clone();
+                let shared = shared.clone();
                 workers.push(std::thread::spawn(move || {
-                    worker_loop(
-                        rep.as_ref(),
-                        &books,
-                        cfg.noise_std,
-                        &q,
-                        cfg.batch_window,
-                        i as u32,
-                        &mine,
-                        &st,
-                    );
+                    worker_loop(rep.as_ref(), &shared, &q, i as u32, &mine, &st);
                 }));
             }
             let m = be.manifest();
@@ -473,20 +622,12 @@ impl ModelPool {
                 in_elems: m.input_elems(),
                 num_classes: m.num_classes,
                 batch: m.batch,
+                health,
             }));
             // worker 0 serves on the coordinator thread (PJRT handles
             // never cross threads; the native replicas simply live where
             // their work is)
-            worker_loop(
-                be.as_ref(),
-                &books,
-                cfg.noise_std,
-                &q,
-                cfg.batch_window,
-                0,
-                &rst[0],
-                &st,
-            );
+            worker_loop(be.as_ref(), &shared, &q, 0, &rst[0], &st);
             for w in workers {
                 let _ = w.join();
             }
@@ -513,6 +654,9 @@ impl ModelPool {
             in_elems: ready.in_elems,
             num_classes: ready.num_classes,
             batch: ready.batch,
+            tracer,
+            metrics,
+            health: ready.health,
             handle: Some(handle),
         })
     }
@@ -522,6 +666,7 @@ impl ModelPool {
         PoolClient {
             queue: self.queue.clone(),
             stats: self.stats.clone(),
+            tracer: self.tracer.clone(),
             in_elems: self.in_elems,
             num_classes: self.num_classes,
         }
@@ -562,6 +707,147 @@ impl ModelPool {
         }
     }
 
+    /// Request-lifecycle tracer (span accounting, sampled JSONL sink).
+    pub fn tracer(&self) -> &Arc<RequestTracer> {
+        &self.tracer
+    }
+
+    /// Pool-local metrics registry.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// Quantization-health telemetry (None when the engine has no
+    /// digitization hooks or `obs.quant_health` is off).
+    pub fn quant_health(&self) -> Option<&Arc<QuantHealth>> {
+        self.health.as_ref()
+    }
+
+    /// Machine-readable pool stats (the `stats` protocol command).
+    pub fn stats_json(&self) -> String {
+        let lat = self.stats.percentiles_ms(&[0.5, 0.95, 0.99, 0.999]);
+        let qw = self.stats.queue_percentiles_ms(&[0.5, 0.99]);
+        let mut s = format!(
+            "{{\"model\":\"{}\",\"engine\":\"{}\",\"replicas\":{},\
+             \"queue_depth\":{},\"requests\":{},\"batches\":{},\
+             \"full_batches\":{},\"singles\":{},\"rejected\":{},\
+             \"busy_ms\":{:.3},\
+             \"latency_ms\":{{\"p50\":{:.3},\"p95\":{:.3},\"p99\":{:.3},\
+             \"p999\":{:.3}}},\
+             \"queue_wait_ms\":{{\"p50\":{:.3},\"p99\":{:.3}}},\
+             \"spans\":{{\"opened\":{},\"closed\":{},\"emitted\":{}}},\
+             \"per_replica_requests\":[",
+            escape_json(&self.model),
+            escape_json(&self.engine),
+            self.replicas(),
+            self.queue.depth,
+            self.stats.requests.load(Ordering::SeqCst),
+            self.stats.batches.load(Ordering::SeqCst),
+            self.stats.full_batches.load(Ordering::SeqCst),
+            self.stats.singles.load(Ordering::SeqCst),
+            self.stats.rejected.load(Ordering::SeqCst),
+            self.stats.busy_us.load(Ordering::SeqCst) as f64 / 1e3,
+            lat[0],
+            lat[1],
+            lat[2],
+            lat[3],
+            qw[0],
+            qw[1],
+            self.tracer.opened(),
+            self.tracer.closed(),
+            self.tracer.emitted(),
+        );
+        for (i, r) in self.replica_stats.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&r.requests.load(Ordering::SeqCst).to_string());
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Render this pool's Prometheus series into `w` (the `metrics`
+    /// protocol command aggregates every pool through one writer).
+    pub fn render_prometheus(&self, w: &mut PromWriter) {
+        let l = format!("model=\"{}\"", escape_label(&self.model));
+        w.family("bskmq_requests_total", "counter", "requests served");
+        w.raw_sample(
+            "bskmq_requests_total",
+            &l,
+            self.stats.requests.load(Ordering::SeqCst) as f64,
+        );
+        w.family(
+            "bskmq_rejected_total",
+            "counter",
+            "requests refused by admission control",
+        );
+        w.raw_sample(
+            "bskmq_rejected_total",
+            &l,
+            self.stats.rejected.load(Ordering::SeqCst) as f64,
+        );
+        w.family("bskmq_batches_total", "counter", "executed batches");
+        w.raw_sample(
+            "bskmq_batches_total",
+            &l,
+            self.stats.batches.load(Ordering::SeqCst) as f64,
+        );
+        let qs = [0.5, 0.95, 0.99, 0.999];
+        let lat = self.stats.percentiles_ms(&qs);
+        let qw = self.stats.queue_percentiles_ms(&qs);
+        w.family(
+            "bskmq_latency_ms",
+            "gauge",
+            "service latency quantiles (ms)",
+        );
+        w.family(
+            "bskmq_queue_wait_quantile_ms",
+            "gauge",
+            "queue-wait quantiles (ms)",
+        );
+        for (i, q) in qs.iter().enumerate() {
+            w.raw_sample(
+                "bskmq_latency_ms",
+                &format!("{l},quantile=\"{q}\""),
+                lat[i],
+            );
+            w.raw_sample(
+                "bskmq_queue_wait_quantile_ms",
+                &format!("{l},quantile=\"{q}\""),
+                qw[i],
+            );
+        }
+        w.family(
+            "bskmq_replica_requests_total",
+            "counter",
+            "requests per replica",
+        );
+        for (i, r) in self.replica_stats.iter().enumerate() {
+            w.raw_sample(
+                "bskmq_replica_requests_total",
+                &format!("{l},replica=\"{i}\""),
+                r.requests.load(Ordering::SeqCst) as f64,
+            );
+        }
+        w.family(
+            "bskmq_spans_opened_total",
+            "counter",
+            "request spans opened at admission",
+        );
+        w.raw_sample("bskmq_spans_opened_total", &l, self.tracer.opened() as f64);
+        w.family(
+            "bskmq_spans_closed_total",
+            "counter",
+            "request spans closed after reply",
+        );
+        w.raw_sample("bskmq_spans_closed_total", &l, self.tracer.closed() as f64);
+        self.metrics.render(w);
+        if let Some(h) = &self.health {
+            h.render(w, &self.model);
+        }
+    }
+
     /// Pool summary: aggregate line plus one line per replica.
     pub fn summary(&self) -> String {
         let mut s = format!(
@@ -595,14 +881,14 @@ fn pool_setup(
     cfg: &PoolConfig,
     artifacts: &std::path::Path,
     model: &str,
-) -> Result<(Box<dyn Backend>, CalibrationResult)> {
+) -> Result<(Box<dyn Backend>, CalibrationResult, Option<Arc<QuantHealth>>)> {
     let be = crate::backend::load(cfg.backend, artifacts, model)?;
     let data = ModelData::load(artifacts, model)?;
     let specs = match cfg.spec {
         Some(s) => s.per_layer(be.manifest().nq()),
         None => be.manifest().layer_specs(),
     };
-    let be: Box<dyn Backend> =
+    let mut be: Box<dyn Backend> =
         if specs.iter().any(|s| s.weight_bits.is_some()) {
             PtqEvaluator::new(be.as_ref()).quantize_weights_spec(&specs)?
         } else {
@@ -610,19 +896,52 @@ fn pool_setup(
         };
     let calib = Calibrator::with_specs(be.as_ref(), specs)
         .calibrate_sharded(&data, cfg.calib_batches, cfg.calib_shards)?;
-    Ok((be, calib))
+    // attach quant-health BEFORE replicate(): replicas clone the engine
+    // and share the telemetry Arc, so the pool aggregates one view
+    let health = if cfg.obs.quant_health {
+        let names: Vec<String> = be
+            .manifest()
+            .qlayers
+            .iter()
+            .map(|ql| ql.name.clone())
+            .collect();
+        let h = Arc::new(QuantHealth::new(
+            &names,
+            &calib.nl_books,
+            Some(&calib.sketches),
+            cfg.obs.sketch_sample_every,
+        ));
+        if be.attach_quant_health(h.clone()) {
+            Some(h)
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+    Ok((be, calib, health))
+}
+
+/// Immutable state every worker replica shares: the programmed
+/// codebooks plus the pool's observability handles.
+struct WorkerShared {
+    books: ProgrammedCodebooks,
+    noise_std: f32,
+    window: Duration,
+    /// profile every Nth batch through `run_qfwd_profiled` (0 = never)
+    profile_every: u64,
+    tracer: Arc<RequestTracer>,
+    forward_hist: Arc<Histogram>,
+    queue_hist: Arc<Histogram>,
 }
 
 /// One worker replica: pop a batch, execute, reply, repeat until the
 /// queue closes and drains.  Backend failures answer the affected batch
 /// with errors and keep the worker alive.
-#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     backend: &dyn Backend,
-    books: &ProgrammedCodebooks,
-    noise_std: f32,
+    sh: &WorkerShared,
     queue: &JobQueue,
-    window: Duration,
     replica: u32,
     mine: &ServerStats,
     global: &ServerStats,
@@ -632,14 +951,24 @@ fn worker_loop(
     let classes = m.num_classes;
     let in_elems = m.input_elems();
     let mut seed = replica.wrapping_mul(0x9E37);
+    let mut batches_done: u64 = 0;
     loop {
-        let pending = queue.pop_batch(batch, window);
+        let pending = queue.pop_batch(batch, sh.window);
         if pending.is_empty() {
             return; // shutdown signal observed, queue drained
         }
         let t0 = Instant::now();
         seed = seed.wrapping_add(1);
         let n = pending.len();
+        // queue wait is measured at batch assembly, per request
+        let mut queue_waits: Vec<u64> = Vec::with_capacity(n);
+        for r in &pending {
+            let us = r.submitted.elapsed().as_micros() as u64;
+            sh.queue_hist.observe(us as f64 / 1e3);
+            mine.record_queue_wait(us);
+            global.record_queue_wait(us);
+            queue_waits.push(us);
+        }
         // exact-size execution when the backend can (native: always;
         // xla: full batch or the batch-1 graph); otherwise pad up to the
         // compiled batch
@@ -651,12 +980,35 @@ fn worker_loop(
         for _ in n..run_n {
             x.extend_from_slice(&pending[0].x);
         }
-        let result = backend.run_qfwd(&x, books, noise_std, seed);
+        batches_done += 1;
+        // sampled per-op profiling: unprofiled batches collect no rows,
+        // so the steady state allocates nothing for tracing
+        let profiled =
+            sh.profile_every > 0 && batches_done % sh.profile_every == 0;
+        let (result, ops) = if profiled {
+            match backend.run_qfwd_profiled(&x, &sh.books, sh.noise_std, seed)
+            {
+                Ok((logits, timings)) => (
+                    Ok(logits),
+                    timings
+                        .into_iter()
+                        .map(|t| (t.name, t.nanos as u64))
+                        .collect::<Vec<(String, u64)>>(),
+                ),
+                Err(e) => (Err(e), Vec::new()),
+            }
+        } else {
+            (
+                backend.run_qfwd(&x, &sh.books, sh.noise_std, seed),
+                Vec::new(),
+            )
+        };
         // record BEFORE replying: a client that just received its answer
         // must already see itself in the counters
-        let elapsed_us = t0.elapsed().as_micros() as u64;
-        mine.record_batch(n, batch, elapsed_us);
-        global.record_batch(n, batch, elapsed_us);
+        let forward_us = t0.elapsed().as_micros() as u64;
+        mine.record_batch(n, batch, forward_us);
+        global.record_batch(n, batch, forward_us);
+        sh.forward_hist.observe(forward_us as f64 / 1e3);
         match result {
             Ok(logits) => {
                 for (i, r) in pending.iter().enumerate() {
@@ -672,6 +1024,21 @@ fn worker_loop(
                     let _ = r.reply.send(Err(msg.clone()));
                 }
             }
+        }
+        // close spans AFTER the replies: reply_us covers the send
+        let reply_us =
+            (t0.elapsed().as_micros() as u64).saturating_sub(forward_us);
+        for (i, r) in pending.iter().enumerate() {
+            sh.tracer.close(r.id, || Span {
+                id: 0,
+                model: String::new(),
+                replica,
+                batch_n: n,
+                queue_us: queue_waits[i],
+                forward_us,
+                reply_us,
+                ops: ops.clone(),
+            });
         }
     }
 }
@@ -730,6 +1097,23 @@ impl ModelRegistry {
         let lines: Vec<String> =
             self.pools.iter().map(|p| p.summary()).collect();
         lines.join("\n")
+    }
+
+    /// Machine-readable stats over every pool (the `stats` command).
+    pub fn stats_json(&self) -> String {
+        let items: Vec<String> =
+            self.pools.iter().map(|p| p.stats_json()).collect();
+        format!("{{\"pools\":[{}]}}", items.join(","))
+    }
+
+    /// Prometheus text exposition over every pool (the `metrics`
+    /// command).
+    pub fn prometheus(&self) -> String {
+        let mut w = PromWriter::new();
+        for p in &self.pools {
+            p.render_prometheus(&mut w);
+        }
+        w.finish()
     }
 }
 
@@ -870,7 +1254,15 @@ mod tests {
         let q = JobQueue::with_depth(2);
         let mk = || {
             let (tx, rx) = mpsc::channel();
-            (Request { x: vec![0.0], reply: tx }, rx)
+            (
+                Request {
+                    id: 0,
+                    submitted: Instant::now(),
+                    x: vec![0.0],
+                    reply: tx,
+                },
+                rx,
+            )
         };
         let (r1, _k1) = mk();
         let (r2, _k2) = mk();

@@ -21,6 +21,9 @@
 //! * [`coordinator`] — calibration orchestration (streaming Algorithm 1
 //!   over the `collect` graphs), PTQ evaluation, noise injection, and a
 //!   multi-model replica-pool inference server with admission control.
+//! * [`obs`] — observability: metrics registry, request-lifecycle
+//!   tracing, quantization-health telemetry, Prometheus exposition and
+//!   the committed BENCH_*.json perf trajectory.
 //! * [`experiments`] — one harness per paper table/figure.
 
 pub mod adc;
@@ -33,6 +36,7 @@ pub mod experiments;
 pub mod io;
 pub mod macro_model;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

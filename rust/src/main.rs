@@ -13,6 +13,11 @@
 //!   bskmq serve [--addr 127.0.0.1:7878] [--models resnet,vgg]
 //!               [--spec S] [--backend auto|native|xla] [--replicas N]
 //!               [--shards N] [--queue-depth N] [--calib-batches N]
+//!               [--trace FILE] [--trace-sample N] [--profile-every N]
+//!               [--no-quant-health]
+//!   bskmq bench [--quick] [--models M1,M2] [--out DIR]
+//!       # run the standard perf workload per model and write
+//!       # BENCH_<shortrev>.json (schema: src/obs/bench_report.rs)
 //!   bskmq synth <dir> [--seed N]      # write synthetic artifacts (5 models)
 //!   bskmq graph <manifest.json>       # validate + dump a layer graph
 //!   bskmq info                        # artifacts + backend summary
@@ -35,9 +40,11 @@ use anyhow::{ensure, Context, Result};
 use bskmq::backend::{Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::coordinator::ptq::PtqEvaluator;
-use bskmq::coordinator::server::{ModelRegistry, PoolConfig};
+use bskmq::coordinator::server::{ModelPool, ModelRegistry, PoolConfig};
 use bskmq::data::dataset::ModelData;
+use bskmq::obs::bench_report::{short_rev, BenchReport, ModelBench};
 use bskmq::quant::QuantSpec;
+use bskmq::util::stats::rate;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -55,6 +62,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         Some("calibrate") => calibrate(args),
         Some("serve") => serve(args),
+        Some("bench") => bench(args),
         Some("synth") => synth(args),
         Some("graph") => {
             let path = args.get(1).context(
@@ -65,14 +73,16 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("info") => info(),
         _ => {
             eprintln!(
-                "usage: bskmq <exp|calibrate|serve|synth|graph|info> [...]\n\
+                "usage: bskmq <exp|calibrate|serve|bench|synth|graph|info> [...]\n\
                  \x20 exp <fig1|fig4|fig5|fig6|fig7|fig8|table1|backends|all>\n\
                  \x20 calibrate <model> [--spec [model=]S] [--layer name=S]\n\
                  \x20           [--shards N] [--eval-batches N] [--backend B]\n\
                  \x20           (S = [method:]TILE/WEIGHT/ACT or ACT, e.g. 6/2/3)\n\
                  \x20 serve [--addr A] [--models M1,M2] [--spec S] [--backend B]\n\
                  \x20       [--replicas N] [--shards N] [--queue-depth N]\n\
-                 \x20       [--calib-batches N]\n\
+                 \x20       [--calib-batches N] [--trace FILE] [--trace-sample N]\n\
+                 \x20       [--profile-every N] [--no-quant-health]\n\
+                 \x20 bench [--quick] [--models M1,M2] [--out DIR]\n\
                  \x20 synth <dir> [--seed N]\n\
                  \x20 graph <manifest.json>\n\
                  \x20 info"
@@ -361,6 +371,33 @@ fn serve(args: &[String]) -> Result<()> {
                     .parse()?;
                 i += 2;
             }
+            "--trace" => {
+                cfg.obs.trace_path = Some(std::path::PathBuf::from(
+                    args.get(i + 1).context("--trace value")?,
+                ));
+                if cfg.obs.trace_sample_every == 0 {
+                    cfg.obs.trace_sample_every = 1;
+                }
+                i += 2;
+            }
+            "--trace-sample" => {
+                cfg.obs.trace_sample_every = args
+                    .get(i + 1)
+                    .context("--trace-sample value")?
+                    .parse()?;
+                i += 2;
+            }
+            "--profile-every" => {
+                cfg.obs.profile_every = args
+                    .get(i + 1)
+                    .context("--profile-every value")?
+                    .parse()?;
+                i += 2;
+            }
+            "--no-quant-health" => {
+                cfg.obs.quant_health = false;
+                i += 1;
+            }
             other => anyhow::bail!("unknown serve flag '{other}'"),
         }
     }
@@ -379,7 +416,8 @@ fn serve(args: &[String]) -> Result<()> {
     );
     println!(
         "protocol: one line `[model:]f1,f2,...` -> one line of logits; \
-         `stats` -> pool summary; default model is {}",
+         `stats` -> pool stats as JSON (`stats --text` for the human \
+         summary); `metrics` -> Prometheus text; default model is {}",
         registry.default_pool().model
     );
     // one thread per connection: the replica pool is the concurrency
@@ -442,7 +480,18 @@ fn handle_client(
             continue;
         }
         if t == "stats" {
+            writeln!(out, "{}", registry.stats_json())?;
+            continue;
+        }
+        if t == "stats --text" {
             writeln!(out, "{}", registry.summary().replace('\n', " | "))?;
+            continue;
+        }
+        if t == "metrics" {
+            // Prometheus text exposition 0.0.4, terminated by a blank
+            // line so line-oriented clients know where the page ends
+            out.write_all(registry.prometheus().as_bytes())?;
+            writeln!(out)?;
             continue;
         }
         // route by `model:` prefix; bare lines go to the default pool
@@ -482,6 +531,193 @@ fn handle_client(
         }
     }
     Ok(())
+}
+
+/// `bskmq bench [--quick] [--models M1,M2] [--out DIR]`: run the
+/// standard perf workload per model — calibration throughput, quantized
+/// forward latency with a per-op breakdown, and a short closed-loop
+/// serving run — then write `BENCH_<shortrev>.json` into `--out`
+/// (default: current directory).  `--quick` shrinks every phase for CI
+/// smoke runs.
+fn bench(args: &[String]) -> Result<()> {
+    let mut quick = false;
+    let mut out_dir = std::path::PathBuf::from(".");
+    let mut models: Option<Vec<String>> = None;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => {
+                quick = true;
+                i += 1;
+            }
+            "--models" => {
+                models = Some(
+                    args.get(i + 1)
+                        .context("--models value")?
+                        .split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(str::to_string)
+                        .collect(),
+                );
+                i += 2;
+            }
+            "--out" => {
+                out_dir = std::path::PathBuf::from(
+                    args.get(i + 1).context("--out value")?,
+                );
+                i += 2;
+            }
+            other => anyhow::bail!("unknown bench flag '{other}'"),
+        }
+    }
+    let artifacts = bskmq::data::synth::ensure_artifacts()?;
+    let models = models.unwrap_or_else(|| {
+        if quick {
+            vec!["resnet".to_string()]
+        } else {
+            bskmq::data::synth::MODELS
+                .iter()
+                .map(|s| s.to_string())
+                .collect()
+        }
+    });
+    let mut report = BenchReport::new(&short_rev(), quick);
+    for model in &models {
+        println!("benchmarking {model} ...");
+        report.models.push(bench_model(&artifacts, model, quick)?);
+    }
+    let path = report.write(&out_dir)?;
+    for m in &report.models {
+        println!(
+            "  {:<11} qfwd {:>9} ns/batch ({:>8.1} fwd/s)  calib {:>8.0} \
+             samples/s  serve p50 {:.2}ms p99 {:.2}ms p999 {:.2}ms \
+             ({} requests, {} rejected)",
+            m.model,
+            m.qfwd_batch_ns,
+            m.forwards_per_sec,
+            m.calib_samples_per_sec,
+            m.serve_p50_ms,
+            m.serve_p99_ms,
+            m.serve_p999_ms,
+            m.serve_requests,
+            m.serve_rejected,
+        );
+    }
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// One model's bench pass (native backend: the measured engine must not
+/// depend on optional features).
+fn bench_model(
+    artifacts: &std::path::Path,
+    model: &str,
+    quick: bool,
+) -> Result<ModelBench> {
+    use bskmq::util::bench::{bench_cfg, black_box};
+    use std::time::{Duration, Instant};
+
+    let be = bskmq::backend::load(BackendKind::Native, artifacts, model)?;
+    let (batch, in_elems) = {
+        let m = be.manifest();
+        (m.batch, m.input_elems())
+    };
+    let data = ModelData::load(artifacts, model)?;
+
+    // calibration throughput (samples absorbed per second, end to end)
+    let calib_batches = if quick { 2 } else { 8 };
+    let t0 = Instant::now();
+    let calib = Calibrator::with_specs(
+        be.as_ref(),
+        be.manifest().layer_specs(),
+    )
+    .calibrate_sharded(&data, calib_batches, 1)?;
+    let calib_samples_per_sec =
+        rate((calib.batches * batch) as f64, t0.elapsed().as_secs_f64());
+
+    // quantized forward latency (one compiled batch per iteration)
+    let x = ModelData::batch(&data.x_test, 0, batch).to_vec();
+    let (warmup, budget, min_iters) = if quick {
+        (Duration::from_millis(20), Duration::from_millis(80), 3)
+    } else {
+        (Duration::from_millis(150), Duration::from_millis(600), 10)
+    };
+    let r = bench_cfg(
+        &format!("{model}:qfwd"),
+        warmup,
+        budget,
+        min_iters,
+        &mut || {
+            black_box(be.run_qfwd(&x, &calib.programmed, 0.0, 7).unwrap());
+        },
+    );
+    let qfwd_batch_ns = r.mean_ns();
+    let forwards_per_sec = r.per_sec();
+
+    // per-op breakdown: mean nanoseconds over a few profiled runs
+    let prof_iters: u64 = if quick { 2 } else { 8 };
+    let mut per_op: Vec<(String, u64)> = Vec::new();
+    for _ in 0..prof_iters {
+        let (_, timings) =
+            be.run_qfwd_profiled(&x, &calib.programmed, 0.0, 7)?;
+        for t in timings {
+            let ns = t.nanos as u64;
+            match per_op.iter_mut().find(|(n, _)| *n == t.name) {
+                Some((_, acc)) => *acc += ns,
+                None => per_op.push((t.name, ns)),
+            }
+        }
+    }
+    for (_, ns) in &mut per_op {
+        *ns /= prof_iters;
+    }
+
+    // short closed-loop serving run against a 2-replica pool
+    let cfg = PoolConfig {
+        backend: BackendKind::Native,
+        calib_batches,
+        replicas: 2,
+        ..PoolConfig::default()
+    };
+    let mut pool =
+        ModelPool::start(artifacts.to_path_buf(), model.to_string(), &cfg)?;
+    let client = pool.client();
+    let total: usize = if quick { 64 } else { 512 };
+    let wave = 16usize;
+    let mut sent = 0usize;
+    while sent < total {
+        let n = wave.min(total - sent);
+        let mut rxs = Vec::with_capacity(n);
+        for k in 0..n {
+            let mut xi = x[..in_elems].to_vec();
+            // vary inputs slightly so waves are not byte-identical
+            xi[0] += (sent + k) as f32 * 1e-6;
+            rxs.push(client.submit(xi)?);
+        }
+        for rx in rxs {
+            let _ = rx.recv_timeout(Duration::from_secs(30));
+        }
+        sent += n;
+    }
+    let lat = pool.stats.percentiles_ms(&[0.5, 0.99, 0.999]);
+    let qw = pool.stats.queue_percentiles_ms(&[0.5, 0.99]);
+    let mb = ModelBench {
+        model: model.to_string(),
+        batch,
+        forwards_per_sec,
+        qfwd_batch_ns,
+        calib_samples_per_sec,
+        serve_p50_ms: lat[0],
+        serve_p99_ms: lat[1],
+        serve_p999_ms: lat[2],
+        serve_requests: pool.stats.requests.load(Ordering::Relaxed),
+        serve_rejected: pool.rejected(),
+        queue_p50_ms: qw[0],
+        queue_p99_ms: qw[1],
+        per_op_ns: per_op,
+    };
+    pool.shutdown();
+    Ok(mb)
 }
 
 fn info() -> Result<()> {

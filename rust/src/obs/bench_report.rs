@@ -1,0 +1,339 @@
+//! BENCH_*.json: the committed perf-trajectory artifact.
+//!
+//! `bskmq bench` runs a standard workload per topology and writes
+//! `BENCH_<shortrev>.json` at the repo root so performance is tracked
+//! in-repo alongside the code (ROADMAP item 1).  This module owns the
+//! schema — the struct, its hand-written serializer (no serde offline),
+//! and a validator the CI smoke runs against freshly emitted files.
+//! The workload orchestration itself lives in `main.rs`.
+
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Bump when the BENCH json layout changes.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Per-topology measurements.
+#[derive(Clone, Debug, Default)]
+pub struct ModelBench {
+    pub model: String,
+    pub batch: usize,
+    /// Quantized forwards per second (one forward = one batch).
+    pub forwards_per_sec: f64,
+    /// Mean wall time of one quantized batch forward.
+    pub qfwd_batch_ns: u64,
+    /// Calibration throughput: samples absorbed per second.
+    pub calib_samples_per_sec: f64,
+    pub serve_p50_ms: f64,
+    pub serve_p99_ms: f64,
+    pub serve_p999_ms: f64,
+    pub serve_requests: u64,
+    pub serve_rejected: u64,
+    /// Queue-wait percentiles from the same serving run.
+    pub queue_p50_ms: f64,
+    pub queue_p99_ms: f64,
+    /// Mean nanoseconds per op from `run_qfwd_profiled`.
+    pub per_op_ns: Vec<(String, u64)>,
+}
+
+/// The whole report.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub schema: u64,
+    pub shortrev: String,
+    pub generated_unix: u64,
+    pub quick: bool,
+    /// `false` marks hand-seeded placeholder numbers (no benchmark run
+    /// backs them); CI regenerates with `measured: true`.
+    pub measured: bool,
+    pub host_threads: usize,
+    pub note: String,
+    pub models: Vec<ModelBench>,
+}
+
+impl BenchReport {
+    pub fn new(shortrev: &str, quick: bool) -> BenchReport {
+        BenchReport {
+            schema: BENCH_SCHEMA_VERSION,
+            shortrev: shortrev.to_string(),
+            generated_unix: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            quick,
+            measured: true,
+            host_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            note: String::new(),
+            models: Vec::new(),
+        }
+    }
+
+    /// `BENCH_<shortrev>.json`.
+    pub fn filename(&self) -> String {
+        format!("BENCH_{}.json", self.shortrev)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": {},\n", self.schema));
+        s.push_str(&format!(
+            "  \"shortrev\": \"{}\",\n",
+            esc(&self.shortrev)
+        ));
+        s.push_str(&format!(
+            "  \"generated_unix\": {},\n",
+            self.generated_unix
+        ));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"measured\": {},\n", self.measured));
+        s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
+        s.push_str(&format!("  \"note\": \"{}\",\n", esc(&self.note)));
+        s.push_str("  \"models\": [\n");
+        for (i, m) in self.models.iter().enumerate() {
+            s.push_str("    {\n");
+            s.push_str(&format!("      \"model\": \"{}\",\n", esc(&m.model)));
+            s.push_str(&format!("      \"batch\": {},\n", m.batch));
+            s.push_str(&format!(
+                "      \"forwards_per_sec\": {},\n",
+                num(m.forwards_per_sec)
+            ));
+            s.push_str(&format!(
+                "      \"qfwd_batch_ns\": {},\n",
+                m.qfwd_batch_ns
+            ));
+            s.push_str(&format!(
+                "      \"calib_samples_per_sec\": {},\n",
+                num(m.calib_samples_per_sec)
+            ));
+            s.push_str(&format!(
+                "      \"serve_p50_ms\": {},\n",
+                num(m.serve_p50_ms)
+            ));
+            s.push_str(&format!(
+                "      \"serve_p99_ms\": {},\n",
+                num(m.serve_p99_ms)
+            ));
+            s.push_str(&format!(
+                "      \"serve_p999_ms\": {},\n",
+                num(m.serve_p999_ms)
+            ));
+            s.push_str(&format!(
+                "      \"serve_requests\": {},\n",
+                m.serve_requests
+            ));
+            s.push_str(&format!(
+                "      \"serve_rejected\": {},\n",
+                m.serve_rejected
+            ));
+            s.push_str(&format!(
+                "      \"queue_p50_ms\": {},\n",
+                num(m.queue_p50_ms)
+            ));
+            s.push_str(&format!(
+                "      \"queue_p99_ms\": {},\n",
+                num(m.queue_p99_ms)
+            ));
+            s.push_str("      \"per_op_ns\": [");
+            for (j, (op, ns)) in m.per_op_ns.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!(
+                    "{{\"op\": \"{}\", \"ns\": {}}}",
+                    esc(op),
+                    ns
+                ));
+            }
+            s.push_str("]\n");
+            s.push_str("    }");
+            s.push_str(if i + 1 < self.models.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Serialize, write to `dir`, re-parse and validate the bytes on
+    /// disk.  Returns the written path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(self.filename());
+        let text = self.to_json();
+        std::fs::write(&path, &text)
+            .with_context(|| format!("write {}", path.display()))?;
+        let parsed = Json::parse(&text).context("BENCH json does not parse")?;
+        validate(&parsed).context("BENCH json fails its own schema")?;
+        Ok(path)
+    }
+}
+
+fn esc(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            _ => s.push(c),
+        }
+    }
+    s
+}
+
+/// JSON has no NaN/Inf; clamp them to 0 rather than emit garbage.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Schema check for a parsed BENCH report.
+pub fn validate(j: &Json) -> Result<()> {
+    let schema = j.get("schema")?.as_f64()? as u64;
+    ensure!(
+        schema == BENCH_SCHEMA_VERSION,
+        "unknown BENCH schema {schema} (expected {BENCH_SCHEMA_VERSION})"
+    );
+    let rev = j.get("shortrev")?.as_str()?;
+    ensure!(!rev.is_empty(), "empty shortrev");
+    j.get("generated_unix")?.as_f64()?;
+    j.get("quick")?.as_bool()?;
+    j.get("measured")?.as_bool()?;
+    j.get("host_threads")?.as_f64()?;
+    j.get("note")?.as_str()?;
+    let models = j.get("models")?.as_arr()?;
+    for m in models {
+        let name = m.get("model")?.as_str()?;
+        ensure!(!name.is_empty(), "model entry without a name");
+        for key in [
+            "batch",
+            "forwards_per_sec",
+            "qfwd_batch_ns",
+            "calib_samples_per_sec",
+            "serve_p50_ms",
+            "serve_p99_ms",
+            "serve_p999_ms",
+            "serve_requests",
+            "serve_rejected",
+            "queue_p50_ms",
+            "queue_p99_ms",
+        ] {
+            let v = m.get(key)?.as_f64()?;
+            ensure!(
+                v.is_finite() && v >= 0.0,
+                "{name}.{key} is not a non-negative number"
+            );
+        }
+        for op in m.get("per_op_ns")?.as_arr()? {
+            ensure!(!op.get("op")?.as_str()?.is_empty(), "unnamed op");
+            op.get("ns")?.as_f64()?;
+        }
+    }
+    Ok(())
+}
+
+/// Short git revision of HEAD, or "local" when git is unavailable (the
+/// artifact must still be writable from an exported tree).
+pub fn short_rev() -> String {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output();
+    match out {
+        Ok(o) if o.status.success() => {
+            let s = String::from_utf8_lossy(&o.stdout).trim().to_string();
+            if s.is_empty() {
+                "local".to_string()
+            } else {
+                s
+            }
+        }
+        _ => "local".to_string(),
+    }
+}
+
+/// Find committed BENCH_*.json files under `dir` (for trajectory tools).
+pub fn list_reports(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                out.push(e.path());
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> BenchReport {
+        let mut r = BenchReport::new("abc1234", true);
+        r.models.push(ModelBench {
+            model: "resnet".into(),
+            batch: 4,
+            forwards_per_sec: 1234.5,
+            qfwd_batch_ns: 810_000,
+            calib_samples_per_sec: 9000.0,
+            serve_p50_ms: 1.2,
+            serve_p99_ms: 4.5,
+            serve_p999_ms: 9.0,
+            serve_requests: 512,
+            serve_rejected: 3,
+            queue_p50_ms: 0.2,
+            queue_p99_ms: 1.1,
+            per_op_ns: vec![("conv0:conv".into(), 400_000)],
+        });
+        r
+    }
+
+    #[test]
+    fn roundtrip_and_validate() {
+        let r = sample_report();
+        let j = Json::parse(&r.to_json()).unwrap();
+        validate(&j).unwrap();
+        let models = j.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(
+            models[0].get("model").unwrap().as_str().unwrap(),
+            "resnet"
+        );
+        assert_eq!(
+            models[0].get("qfwd_batch_ns").unwrap().as_usize().unwrap(),
+            810_000
+        );
+        assert_eq!(r.filename(), "BENCH_abc1234.json");
+    }
+
+    #[test]
+    fn validate_rejects_corruption() {
+        let r = sample_report();
+        let good = r.to_json();
+        let bad = good.replace("\"schema\": 1", "\"schema\": 99");
+        assert!(validate(&Json::parse(&bad).unwrap()).is_err());
+        let bad = good.replace("\"serve_p50_ms\": 1.2", "\"serve_p50_ms\": -1");
+        assert!(validate(&Json::parse(&bad).unwrap()).is_err());
+        let bad = good.replace("\"shortrev\": \"abc1234\",", "");
+        assert!(validate(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn write_and_list() {
+        let dir = std::env::temp_dir().join("bskmq_bench_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = sample_report().write(&dir).unwrap();
+        assert!(path.exists());
+        let found = list_reports(&dir);
+        assert_eq!(found, vec![path]);
+    }
+}

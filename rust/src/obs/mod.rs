@@ -1,0 +1,31 @@
+//! End-to-end observability for the BS-KMQ runtime.
+//!
+//! Four pieces, layered from generic to paper-specific:
+//!
+//! * [`registry`] — lock-free counters/gauges/fixed-bucket histograms
+//!   with snapshot-and-merge semantics, shared via `Arc` across replica
+//!   workers;
+//! * [`trace`] — one span per admitted request (intake → queue wait →
+//!   batch assembly → forward with per-op breakdown → reply), emitted
+//!   sampled to a JSONL sink;
+//! * [`quant_health`] — per-qlayer codebook level occupancy, boundary
+//!   saturation rates, and a live-vs-calibration activation sketch
+//!   diff: the boundary-accumulation signal BS-KMQ is built around,
+//!   observed on live traffic;
+//! * [`prometheus`] + [`bench_report`] — exposition: the `metrics` TCP
+//!   command renders Prometheus text, and `bskmq bench` writes the
+//!   committed `BENCH_<shortrev>.json` perf trajectory.
+//!
+//! See DESIGN.md §11 for the architecture.
+
+pub mod bench_report;
+pub mod prometheus;
+pub mod quant_health;
+pub mod registry;
+pub mod trace;
+
+pub use bench_report::{BenchReport, ModelBench};
+pub use prometheus::PromWriter;
+pub use quant_health::QuantHealth;
+pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry};
+pub use trace::{RequestTracer, Span, TraceSink};

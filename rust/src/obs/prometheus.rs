@@ -1,0 +1,101 @@
+//! Prometheus text exposition (format version 0.0.4).
+//!
+//! No client library is vendored, so this is a minimal writer: one
+//! `# HELP` / `# TYPE` header per family (emitted once even when many
+//! label combinations sample into it), then plain `name{labels} value`
+//! lines.  Consumers are the `metrics` protocol command on the serving
+//! TCP front and the obs tests.
+
+use std::collections::BTreeSet;
+
+/// Accumulates exposition text.
+#[derive(Default)]
+pub struct PromWriter {
+    buf: String,
+    seen: BTreeSet<String>,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    /// Emit the `# HELP`/`# TYPE` header for `name` once.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        if self.seen.insert(name.to_string()) {
+            if !help.is_empty() {
+                self.buf.push_str(&format!("# HELP {name} {help}\n"));
+            }
+            self.buf.push_str(&format!("# TYPE {name} {kind}\n"));
+        }
+    }
+
+    /// Emit one sample, declaring the family as a gauge if it has not
+    /// been declared yet.
+    pub fn sample(&mut self, name: &str, labels: &str, value: f64) {
+        self.family(name, "gauge", "");
+        self.raw_sample(name, labels, value);
+    }
+
+    /// Emit one sample line without touching family headers (for series
+    /// like `_bucket` that live under an already-declared family).
+    pub fn raw_sample(&mut self, name: &str, labels: &str, value: f64) {
+        if labels.is_empty() {
+            self.buf.push_str(&format!("{name} {}\n", format_value(value)));
+        } else {
+            self.buf.push_str(&format!(
+                "{name}{{{labels}}} {}\n",
+                format_value(value)
+            ));
+        }
+    }
+
+    pub fn finish(self) -> String {
+        self.buf
+    }
+}
+
+/// Escape a label *value* per the exposition format.
+pub fn escape_label(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            _ => s.push(c),
+        }
+    }
+    s
+}
+
+fn format_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_once_per_family() {
+        let mut w = PromWriter::new();
+        w.family("x_total", "counter", "things");
+        w.raw_sample("x_total", "m=\"a\"", 1.0);
+        w.family("x_total", "counter", "things");
+        w.raw_sample("x_total", "m=\"b\"", 2.5);
+        let out = w.finish();
+        assert_eq!(out.matches("# TYPE x_total counter").count(), 1);
+        assert!(out.contains("x_total{m=\"a\"} 1\n"));
+        assert!(out.contains("x_total{m=\"b\"} 2.5\n"));
+    }
+
+    #[test]
+    fn escaping() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

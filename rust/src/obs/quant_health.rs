@@ -1,0 +1,335 @@
+//! Quantization-health telemetry for the digitization step.
+//!
+//! BS-KMQ's whole premise is distribution shape: ReLU/clamping piles
+//! activation mass onto boundary values, and the fitted NL codebook
+//! leans its levels into that mass.  This module watches the same
+//! signal on *live* traffic, per quantized layer:
+//!
+//! * **level occupancy** — how many activations landed in each codebook
+//!   level (the noiseless floor-ADC mapping of the pre-conversion
+//!   value);
+//! * **saturation rate** — the share of mass in the boundary bins
+//!   (level 0 and level `L-1`), i.e. clipping pressure at either end of
+//!   the reference ladder;
+//! * a **live [`ValueSketch`]** fed by strided sampling of
+//!   pre-conversion activations, diffable against the sketch captured
+//!   at calibration time — the drift signal online recalibration
+//!   (ROADMAP item 3) will act on.
+//!
+//! Hooked into the graph executor between `add_bias_relu_into` and
+//! `nl_convert_into`, so it sees exactly the values the NL-ADC is about
+//! to digitize.  Counters are atomics (occupancy is bucketed locally
+//! then added once per level), and sketch inserts take one lock per
+//! observed slice — cheap enough to leave on in serving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::obs::prometheus::{escape_label, PromWriter};
+use crate::quant::codebook::Codebook;
+use crate::quant::sketch::ValueSketch;
+use crate::util::stats::quantile_sorted;
+
+/// Calibration-time sketch capacity: small enough to clone per replica,
+/// big enough that decile estimates are stable.
+pub const CALIB_SKETCH_CAP: usize = 2048;
+/// Shared salt so live and calibration sketches hash identically.
+pub const CALIB_SKETCH_SALT: u64 = 0x51ac_ba5e;
+
+/// Fresh sketch with the health-telemetry parameters (used by the
+/// calibrator so its sketches stay merge-compatible with live ones).
+pub fn health_sketch() -> ValueSketch {
+    ValueSketch::new(CALIB_SKETCH_CAP, CALIB_SKETCH_SALT)
+}
+
+struct LayerHealth {
+    name: String,
+    levels: usize,
+    /// Unpadded NL reference ladder in f32 — the same precision the
+    /// executor compares against, so the noiseless level mapping here
+    /// agrees bit-for-bit with a zero-noise forward.
+    refs: Vec<f32>,
+    occupancy: Vec<AtomicU64>,
+    observed: AtomicU64,
+    live: Mutex<ValueSketch>,
+    /// Position of the next value in this layer's activation stream
+    /// (drives strided sketch sampling).
+    cursor: AtomicU64,
+    calib: Option<ValueSketch>,
+}
+
+/// Pool-wide telemetry over every quantized layer.  Shared via `Arc`
+/// across replicas (cloning a `NativeBackend` keeps the same
+/// `QuantHealth`), so occupancy aggregates across the whole pool.
+pub struct QuantHealth {
+    layers: Vec<LayerHealth>,
+    sample_every: u64,
+}
+
+impl QuantHealth {
+    /// `names`/`nl_books` run parallel over the quantized layers;
+    /// `calib_sketches`, when given, must be the calibration-time
+    /// sketches in the same order.  `sample_every == 0` disables live
+    /// sketching (occupancy stays on).
+    pub fn new(
+        names: &[String],
+        nl_books: &[Codebook],
+        calib_sketches: Option<&[ValueSketch]>,
+        sample_every: u64,
+    ) -> QuantHealth {
+        assert_eq!(names.len(), nl_books.len());
+        if let Some(cs) = calib_sketches {
+            assert_eq!(cs.len(), nl_books.len());
+        }
+        let layers = names
+            .iter()
+            .zip(nl_books)
+            .enumerate()
+            .map(|(i, (name, cb))| LayerHealth {
+                name: name.clone(),
+                levels: cb.levels(),
+                refs: cb.refs.iter().map(|&r| r as f32).collect(),
+                occupancy: (0..cb.levels()).map(|_| AtomicU64::new(0)).collect(),
+                observed: AtomicU64::new(0),
+                live: Mutex::new(health_sketch()),
+                cursor: AtomicU64::new(0),
+                calib: calib_sketches.map(|cs| cs[i].clone()),
+            })
+            .collect();
+        QuantHealth { layers, sample_every }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layer_name(&self, q: usize) -> &str {
+        &self.layers[q].name
+    }
+
+    /// Record one slice of pre-conversion activations for layer `q`.
+    pub fn observe(&self, q: usize, pre: &[f32]) {
+        let layer = &self.layers[q];
+        if pre.is_empty() {
+            return;
+        }
+        // noiseless floor-ADC level per value, bucketed locally so the
+        // shared counters see one add per level, not one per element
+        let mut local = vec![0u64; layer.levels];
+        for &v in pre {
+            let cnt = layer.refs.partition_point(|&r| r <= v);
+            let idx = cnt.saturating_sub(1).min(layer.levels - 1);
+            local[idx] += 1;
+        }
+        for (slot, &c) in layer.occupancy.iter().zip(&local) {
+            if c > 0 {
+                slot.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        layer.observed.fetch_add(pre.len() as u64, Ordering::Relaxed);
+
+        if self.sample_every > 0 {
+            let start =
+                layer.cursor.fetch_add(pre.len() as u64, Ordering::Relaxed);
+            let k = self.sample_every;
+            let mut idx = (k - start % k) % k;
+            if idx < pre.len() as u64 {
+                let mut sk = layer.live.lock().unwrap();
+                while (idx as usize) < pre.len() {
+                    sk.insert(pre[idx as usize] as f64);
+                    idx += k;
+                }
+            }
+        }
+    }
+
+    /// Per-level hit counts for layer `q`.
+    pub fn occupancy(&self, q: usize) -> Vec<u64> {
+        self.layers[q]
+            .occupancy
+            .iter()
+            .map(|c| c.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Total activations observed for layer `q`.
+    pub fn observed(&self, q: usize) -> u64 {
+        self.layers[q].observed.load(Ordering::SeqCst)
+    }
+
+    /// (low, high) boundary-bin rates for layer `q`; zeros before any
+    /// traffic.
+    pub fn saturation(&self, q: usize) -> (f64, f64) {
+        let occ = self.occupancy(q);
+        let total: u64 = occ.iter().sum();
+        if total == 0 {
+            return (0.0, 0.0);
+        }
+        let low = occ[0] as f64 / total as f64;
+        let high = occ[occ.len() - 1] as f64 / total as f64;
+        (low, high)
+    }
+
+    /// Copy of the live sketch for layer `q`.
+    pub fn live_sketch(&self, q: usize) -> ValueSketch {
+        self.layers[q].live.lock().unwrap().clone()
+    }
+
+    /// Live-vs-calibration drift for layer `q`: mean absolute decile
+    /// displacement, normalized by the calibration distribution's
+    /// q10–q90 spread.  `None` until both sketches hold samples (or when
+    /// no calibration sketch was attached).
+    pub fn divergence(&self, q: usize) -> Option<f64> {
+        let layer = &self.layers[q];
+        let calib = layer.calib.as_ref()?;
+        if calib.n_seen() == 0 {
+            return None;
+        }
+        let live = layer.live.lock().unwrap();
+        if live.n_seen() == 0 {
+            return None;
+        }
+        let a = calib.expand();
+        let b = live.expand();
+        drop(live);
+        if a.is_empty() || b.is_empty() {
+            return None;
+        }
+        let spread =
+            (quantile_sorted(&a, 0.9) - quantile_sorted(&a, 0.1)).abs() + 1e-9;
+        let mut acc = 0.0;
+        for i in 1..10 {
+            let t = i as f64 / 10.0;
+            acc += (quantile_sorted(&a, t) - quantile_sorted(&b, t)).abs();
+        }
+        Some(acc / 9.0 / spread)
+    }
+
+    /// Render every layer's series under the given model label.
+    pub fn render(&self, w: &mut PromWriter, model: &str) {
+        let model = escape_label(model);
+        for (q, layer) in self.layers.iter().enumerate() {
+            let lname = escape_label(&layer.name);
+            let base = format!("model=\"{model}\",layer=\"{lname}\"");
+            w.family(
+                "bskmq_level_occupancy_total",
+                "counter",
+                "activations digitized into each codebook level",
+            );
+            for (lvl, c) in self.occupancy(q).iter().enumerate() {
+                w.raw_sample(
+                    "bskmq_level_occupancy_total",
+                    &format!("{base},level=\"{lvl}\""),
+                    *c as f64,
+                );
+            }
+            let (low, high) = self.saturation(q);
+            w.family(
+                "bskmq_saturation_rate",
+                "gauge",
+                "share of activations in the boundary codebook bins",
+            );
+            w.raw_sample(
+                "bskmq_saturation_rate",
+                &format!("{base},bin=\"low\""),
+                low,
+            );
+            w.raw_sample(
+                "bskmq_saturation_rate",
+                &format!("{base},bin=\"high\""),
+                high,
+            );
+            w.family(
+                "bskmq_activations_observed_total",
+                "counter",
+                "pre-conversion activations seen by health telemetry",
+            );
+            w.raw_sample(
+                "bskmq_activations_observed_total",
+                &base,
+                self.observed(q) as f64,
+            );
+            if let Some(d) = self.divergence(q) {
+                w.family(
+                    "bskmq_sketch_divergence",
+                    "gauge",
+                    "normalized decile drift of live vs calibration \
+                     activations",
+                );
+                w.raw_sample("bskmq_sketch_divergence", &base, d);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_layer_health(sample_every: u64) -> QuantHealth {
+        let books = vec![
+            Codebook::from_centers(&[0.0, 1.0, 2.0, 3.0]),
+            Codebook::from_centers(&[-1.0, 0.0, 1.0]),
+        ];
+        QuantHealth::new(
+            &["a".to_string(), "b".to_string()],
+            &books,
+            None,
+            sample_every,
+        )
+    }
+
+    #[test]
+    fn occupancy_matches_floor_adc() {
+        let h = two_layer_health(0);
+        // refs of layer 0: [0.0, 0.5, 1.5, 2.5]
+        h.observe(0, &[-5.0, 0.0, 0.4, 0.5, 2.0, 99.0]);
+        assert_eq!(h.occupancy(0), vec![3, 1, 1, 1]);
+        assert_eq!(h.observed(0), 6);
+        let (low, high) = h.saturation(0);
+        assert!((low - 0.5).abs() < 1e-12);
+        assert!((high - 1.0 / 6.0).abs() < 1e-12);
+        // untouched layer stays at zero
+        assert_eq!(h.occupancy(1), vec![0, 0, 0]);
+        assert_eq!(h.saturation(1), (0.0, 0.0));
+    }
+
+    #[test]
+    fn strided_sketch_sampling() {
+        let h = two_layer_health(2);
+        let xs: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        h.observe(0, &xs);
+        // positions 0,2,4,6,8 sampled
+        assert_eq!(h.live_sketch(0).n_seen(), 5);
+        h.observe(0, &xs[..3]);
+        // stream positions 10,12 sampled
+        assert_eq!(h.live_sketch(0).n_seen(), 7);
+    }
+
+    #[test]
+    fn divergence_present_only_with_calibration() {
+        let books = vec![Codebook::from_centers(&[0.0, 1.0])];
+        let mut calib = health_sketch();
+        for i in 0..100 {
+            calib.insert(i as f64 / 100.0);
+        }
+        let h = QuantHealth::new(
+            &["a".to_string()],
+            &books,
+            Some(&[calib]),
+            1,
+        );
+        assert_eq!(h.divergence(0), None, "no live traffic yet");
+        let near: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        h.observe(0, &near);
+        let base = h.divergence(0).unwrap();
+        assert!(base < 0.1, "matched distribution drifted: {base}");
+        let far: Vec<f32> = (0..400).map(|i| 5.0 + i as f32 / 100.0).collect();
+        h.observe(0, &far);
+        let shifted = h.divergence(0).unwrap();
+        assert!(
+            shifted > base + 0.5,
+            "shifted traffic must move divergence: {base} -> {shifted}"
+        );
+    }
+}

@@ -1,0 +1,347 @@
+//! Lock-free metrics registry shared across replica workers.
+//!
+//! Hot-path instruments ([`Counter`], [`Gauge`], [`Histogram`]) are plain
+//! atomics behind `Arc` handles: registration takes a `Mutex` once, but
+//! every increment/observe afterwards is a single atomic RMW with no
+//! allocation.  Histograms use fixed bucket bounds chosen at registration
+//! and a fixed-point (×1000) atomic sum so that concurrent observation
+//! followed by [`Histogram::snapshot`] is deterministic: N threads each
+//! recording the same multiset always produce the identical snapshot.
+//! Snapshots [`HistogramSnapshot::merge`] associatively, which is what
+//! lets per-replica registries fold into a pool-level view.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use super::prometheus::PromWriter;
+
+/// Fixed-point scale for histogram sums (1e-3 resolution).
+const SUM_SCALE: f64 = 1000.0;
+
+/// Monotonic atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    n: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter { n: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, k: u64) {
+        self.n.fetch_add(k, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.n.load(Ordering::SeqCst)
+    }
+}
+
+/// Last-write-wins gauge (f64 stored as bits).
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::SeqCst))
+    }
+}
+
+/// Fixed-bucket histogram: `bounds` are the inclusive upper bounds of the
+/// first `bounds.len()` buckets; one overflow bucket follows.  The sum is
+/// kept in fixed point so concurrent `observe` calls commute exactly.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    sum_scaled: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    /// `bounds` must be strictly increasing and non-empty.
+    pub fn new(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        for w in bounds.windows(2) {
+            assert!(w[0] < w[1], "histogram bounds must increase");
+        }
+        let buckets = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets,
+            sum_scaled: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Default latency bounds in milliseconds (sub-ms to 10 s).
+    pub fn latency_ms_bounds() -> Vec<f64> {
+        vec![
+            0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0,
+            500.0, 1000.0, 2500.0, 10_000.0,
+        ]
+    }
+
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        // first bucket whose bound is >= v; equal values land low so the
+        // mapping is a pure function of the value.
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        let scaled = (v.max(0.0) * SUM_SCALE).round() as u64;
+        self.sum_scaled.fetch_add(scaled, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::SeqCst)
+    }
+
+    /// Point-in-time copy; deterministic once all writers are quiescent.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: self.bounds.clone(),
+            counts: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::SeqCst))
+                .collect(),
+            sum_scaled: self.sum_scaled.load(Ordering::SeqCst),
+            count: self.count.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Immutable histogram state; merging is associative and commutative.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub sum_scaled: u64,
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn merge(&mut self, other: &HistogramSnapshot) -> Result<()> {
+        ensure!(
+            self.bounds == other.bounds,
+            "merging histograms with different bucket bounds"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum_scaled += other.sum_scaled;
+        self.count += other.count;
+        Ok(())
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_scaled as f64 / SUM_SCALE
+    }
+
+    /// Render as a Prometheus histogram family.
+    pub fn render(&self, w: &mut PromWriter, name: &str, labels: &str) {
+        w.family(name, "histogram", "");
+        let mut cum = 0u64;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            cum += self.counts[i];
+            let le = format_bound(b);
+            let l = join_labels(labels, &format!("le=\"{le}\""));
+            w.raw_sample(&format!("{name}_bucket"), &l, cum as f64);
+        }
+        cum += self.counts[self.bounds.len()];
+        let l = join_labels(labels, "le=\"+Inf\"");
+        w.raw_sample(&format!("{name}_bucket"), &l, cum as f64);
+        w.raw_sample(&format!("{name}_sum"), labels, self.sum());
+        w.raw_sample(&format!("{name}_count"), labels, self.count as f64);
+    }
+}
+
+fn format_bound(b: f64) -> String {
+    if b == b.trunc() && b.abs() < 1e15 {
+        format!("{}", b as i64)
+    } else {
+        format!("{b}")
+    }
+}
+
+fn join_labels(a: &str, b: &str) -> String {
+    if a.is_empty() {
+        b.to_string()
+    } else {
+        format!("{a},{b}")
+    }
+}
+
+/// A registered instrument.
+#[derive(Clone)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Name → instrument map.  Registration is idempotent: asking twice for
+/// the same name returns the same underlying instrument, so replicas can
+/// all register their shared series without coordination.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.inner.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered as non-counter"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.inner.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric '{name}' already registered as non-gauge"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        let mut m = self.inner.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds))))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric '{name}' already registered as non-histogram"),
+        }
+    }
+
+    /// Registered metric names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Render every registered instrument into `w`.  Names may carry an
+    /// embedded label set (`name{labels}`), split here so families with
+    /// many label combinations render under one family header.
+    pub fn render(&self, w: &mut PromWriter) {
+        let m = self.inner.lock().unwrap();
+        for (full, metric) in m.iter() {
+            let (name, labels) = split_name_labels(full);
+            match metric {
+                Metric::Counter(c) => {
+                    w.family(name, "counter", "");
+                    w.raw_sample(name, labels, c.get() as f64);
+                }
+                Metric::Gauge(g) => {
+                    w.family(name, "gauge", "");
+                    w.raw_sample(name, labels, g.get());
+                }
+                Metric::Histogram(h) => {
+                    h.snapshot().render(w, name, labels);
+                }
+            }
+        }
+    }
+}
+
+/// Split `name{a="b"}` into (`name`, `a="b"`); plain names get no labels.
+fn split_name_labels(full: &str) -> (&str, &str) {
+    match (full.find('{'), full.rfind('}')) {
+        (Some(o), Some(c)) if c > o => (&full[..o], &full[o + 1..c]),
+        _ => (full, ""),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("reqs");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // idempotent registration returns the same instrument
+        assert_eq!(r.counter("reqs").get(), 5);
+        let g = r.gauge("temp");
+        g.set(3.25);
+        assert_eq!(r.gauge("temp").get(), 3.25);
+        assert_eq!(r.names(), vec!["reqs".to_string(), "temp".to_string()]);
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        let h = Histogram::new(&[1.0, 2.0]);
+        for v in [0.5, 1.0, 1.5, 2.5] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.counts, vec![2, 1, 1]);
+        assert_eq!(s.count, 4);
+        assert!((s.sum() - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_merge_requires_matching_bounds() {
+        let a = Histogram::new(&[1.0]);
+        let b = Histogram::new(&[2.0]);
+        a.observe(0.5);
+        b.observe(0.5);
+        let mut sa = a.snapshot();
+        assert!(sa.merge(&b.snapshot()).is_err());
+        let c = Histogram::new(&[1.0]);
+        c.observe(3.0);
+        sa.merge(&c.snapshot()).unwrap();
+        assert_eq!(sa.counts, vec![1, 1]);
+    }
+
+    #[test]
+    fn split_labels() {
+        assert_eq!(split_name_labels("a"), ("a", ""));
+        assert_eq!(
+            split_name_labels("a{x=\"y\"}"),
+            ("a", "x=\"y\"")
+        );
+    }
+}

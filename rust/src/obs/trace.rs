@@ -1,0 +1,284 @@
+//! Request-lifecycle tracing.
+//!
+//! Every *admitted* request opens exactly one span at submit time and
+//! closes it after its reply is sent; rejected submissions never open a
+//! span.  Closed spans are serialized as one JSON object per line
+//! (JSONL) into a [`TraceSink`], but only a sampled subset is actually
+//! emitted (`sample_every`), so steady-state serving does no tracing
+//! allocation beyond the span struct the worker already builds for the
+//! batch it timed.
+//!
+//! The open/closed counters are the invariant the tests pin: after a
+//! pool shuts down, `opened == closed` — no span leaks, no double close.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+/// One closed request span.  Durations are microseconds; `ops` carries
+/// the sampled per-op forward breakdown when profiling was on for the
+/// batch this request rode in (empty otherwise).
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub id: u64,
+    pub model: String,
+    pub replica: u32,
+    pub batch_n: usize,
+    pub queue_us: u64,
+    pub forward_us: u64,
+    pub reply_us: u64,
+    pub ops: Vec<(String, u64)>,
+}
+
+impl Span {
+    /// Serialize as one JSONL line (keys are fixed, values numeric or
+    /// escaped strings — parseable by `util::json`).
+    pub fn to_json_line(&self) -> String {
+        let mut s = String::with_capacity(128);
+        s.push_str(&format!(
+            "{{\"id\":{},\"model\":\"{}\",\"replica\":{},\"batch_n\":{},\
+             \"queue_us\":{},\"forward_us\":{},\"reply_us\":{},\"ops\":[",
+            self.id,
+            escape_json(&self.model),
+            self.replica,
+            self.batch_n,
+            self.queue_us,
+            self.forward_us,
+            self.reply_us
+        ));
+        for (i, (name, ns)) in self.ops.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"op\":\"{}\",\"ns\":{}}}",
+                escape_json(name),
+                ns
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+pub(crate) fn escape_json(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            '\r' => s.push_str("\\r"),
+            '\t' => s.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                s.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            _ => s.push(c),
+        }
+    }
+    s
+}
+
+enum SinkInner {
+    File(Mutex<BufWriter<File>>),
+    Memory(Mutex<Vec<String>>),
+}
+
+/// Destination for emitted span lines: an append-only JSONL file for
+/// production, or an in-memory buffer for tests and the bench harness.
+pub struct TraceSink {
+    inner: SinkInner,
+    written: AtomicU64,
+}
+
+impl TraceSink {
+    pub fn file(path: &Path) -> Result<Arc<TraceSink>> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("mkdir {}", parent.display()))?;
+            }
+        }
+        let f = File::create(path)
+            .with_context(|| format!("create trace file {}", path.display()))?;
+        Ok(Arc::new(TraceSink {
+            inner: SinkInner::File(Mutex::new(BufWriter::new(f))),
+            written: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn memory() -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            inner: SinkInner::Memory(Mutex::new(Vec::new())),
+            written: AtomicU64::new(0),
+        })
+    }
+
+    pub fn emit(&self, line: &str) {
+        match &self.inner {
+            SinkInner::File(w) => {
+                let mut w = w.lock().unwrap();
+                let _ = writeln!(w, "{line}");
+                let _ = w.flush();
+            }
+            SinkInner::Memory(v) => v.lock().unwrap().push(line.to_string()),
+        }
+        self.written.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lines captured so far (memory sinks only; empty for file sinks).
+    pub fn lines(&self) -> Vec<String> {
+        match &self.inner {
+            SinkInner::File(_) => Vec::new(),
+            SinkInner::Memory(v) => v.lock().unwrap().clone(),
+        }
+    }
+
+    pub fn written(&self) -> u64 {
+        self.written.load(Ordering::SeqCst)
+    }
+}
+
+/// Per-pool span bookkeeping.  `open` hands out ids at admission;
+/// `close` is called by the worker after the reply send.  Emission is
+/// sampled by id (`id % sample_every == 0`) so the emitted subset is
+/// deterministic under any thread interleaving.
+pub struct RequestTracer {
+    model: String,
+    sample_every: u64,
+    next_id: AtomicU64,
+    opened: AtomicU64,
+    closed: AtomicU64,
+    emitted: AtomicU64,
+    sink: Option<Arc<TraceSink>>,
+}
+
+impl RequestTracer {
+    /// `sample_every == 0` disables emission entirely (spans are still
+    /// counted, keeping the completeness invariant observable).
+    pub fn new(
+        model: &str,
+        sample_every: u64,
+        sink: Option<Arc<TraceSink>>,
+    ) -> Arc<RequestTracer> {
+        Arc::new(RequestTracer {
+            model: model.to_string(),
+            sample_every,
+            next_id: AtomicU64::new(0),
+            opened: AtomicU64::new(0),
+            closed: AtomicU64::new(0),
+            emitted: AtomicU64::new(0),
+            sink,
+        })
+    }
+
+    /// Open a span for an admitted request; returns its id.
+    pub fn open(&self) -> u64 {
+        self.opened.fetch_add(1, Ordering::Relaxed);
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Roll back an [`RequestTracer::open`] whose request was refused
+    /// admission: the span never existed as far as completeness
+    /// accounting (`opened == closed`) is concerned.
+    pub fn cancel(&self, _id: u64) {
+        self.opened.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Whether span `id` would be emitted — lets workers skip building
+    /// the op-name vector for unsampled spans.
+    pub fn sampled(&self, id: u64) -> bool {
+        self.sample_every > 0
+            && self.sink.is_some()
+            && id % self.sample_every == 0
+    }
+
+    /// Close span `id`.  `build` is only invoked when the span is
+    /// sampled, so unsampled closes stay allocation-free.
+    pub fn close<F: FnOnce() -> Span>(&self, id: u64, build: F) {
+        self.closed.fetch_add(1, Ordering::Relaxed);
+        if self.sampled(id) {
+            let mut span = build();
+            span.id = id;
+            span.model = self.model.clone();
+            if let Some(sink) = &self.sink {
+                sink.emit(&span.to_json_line());
+                self.emitted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn opened(&self) -> u64 {
+        self.opened.load(Ordering::SeqCst)
+    }
+
+    pub fn closed(&self) -> u64 {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    pub fn emitted(&self) -> u64 {
+        self.emitted.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn blank_span() -> Span {
+        Span {
+            id: 0,
+            model: String::new(),
+            replica: 1,
+            batch_n: 4,
+            queue_us: 10,
+            forward_us: 200,
+            reply_us: 3,
+            ops: vec![("d0:dense".into(), 1234)],
+        }
+    }
+
+    #[test]
+    fn span_line_parses_as_json() {
+        let mut span = blank_span();
+        span.model = "res\"net".into();
+        let j = Json::parse(&span.to_json_line()).unwrap();
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "res\"net");
+        assert_eq!(j.get("queue_us").unwrap().as_usize().unwrap(), 10);
+        let ops = j.get("ops").unwrap().as_arr().unwrap();
+        assert_eq!(ops[0].get("op").unwrap().as_str().unwrap(), "d0:dense");
+    }
+
+    #[test]
+    fn sampling_and_counters() {
+        let sink = TraceSink::memory();
+        let t = RequestTracer::new("m", 2, Some(sink.clone()));
+        for _ in 0..6 {
+            let id = t.open();
+            t.close(id, blank_span);
+        }
+        assert_eq!(t.opened(), 6);
+        assert_eq!(t.closed(), 6);
+        assert_eq!(t.emitted(), 3, "ids 0,2,4 sampled");
+        assert_eq!(sink.lines().len(), 3);
+        for line in sink.lines() {
+            Json::parse(&line).unwrap();
+        }
+    }
+
+    #[test]
+    fn sample_every_zero_emits_nothing() {
+        let sink = TraceSink::memory();
+        let t = RequestTracer::new("m", 0, Some(sink.clone()));
+        let id = t.open();
+        t.close(id, blank_span);
+        assert_eq!(t.closed(), 1);
+        assert_eq!(t.emitted(), 0);
+        assert!(sink.lines().is_empty());
+    }
+}

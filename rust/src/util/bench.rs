@@ -22,6 +22,21 @@ impl BenchResult {
         );
     }
 
+    /// Mean wall time in integer nanoseconds (BENCH json unit).
+    pub fn mean_ns(&self) -> u64 {
+        self.mean.as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// Iterations per second implied by the mean (0 when unmeasured).
+    pub fn per_sec(&self) -> f64 {
+        let ns = self.mean.as_nanos() as f64;
+        if ns > 0.0 {
+            1e9 / ns
+        } else {
+            0.0
+        }
+    }
+
     /// Throughput line given work items per iteration.
     pub fn print_throughput(&self, items: f64, unit: &str) {
         let per_sec = items / self.mean.as_secs_f64();

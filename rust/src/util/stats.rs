@@ -78,6 +78,17 @@ pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
     h
 }
 
+/// Guarded rate: `num / den`, or 0 when the denominator is zero or not
+/// finite (throughput and saturation-rate reporting never divide by a
+/// cold counter).
+pub fn rate(num: f64, den: f64) -> f64 {
+    if den.is_finite() && den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +106,13 @@ mod tests {
     #[test]
     fn mse_basic() {
         assert_eq!(mse(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+    }
+
+    #[test]
+    fn rate_guards_zero_denominator() {
+        assert_eq!(rate(5.0, 0.0), 0.0);
+        assert_eq!(rate(5.0, f64::NAN), 0.0);
+        assert!((rate(5.0, 2.0) - 2.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! Observability suite (DESIGN.md §11): the contracts the obs layer
+//! must keep under concurrency and across the serving path.
+//!
+//! * lock-free registry: multi-threaded counter/histogram increments
+//!   end in a deterministic snapshot; snapshot merge is associative;
+//! * cross-replica stats: `ServerStats::merge_from` folds latency
+//!   rings + counters, and p999 is exposed end to end;
+//! * tracing completeness: every admitted request closes exactly one
+//!   span; rejected requests never open one;
+//! * quantization health: boundary-bin (saturation) rates are exact on
+//!   a synthetic clipped layer, and the live-vs-calibration sketch
+//!   divergence moves when the input distribution shifts — the
+//!   boundary-accumulation signal BS-KMQ recalibration would key off;
+//! * exposition: the Prometheus page carries the request + per-qlayer
+//!   health series, and `stats` JSON parses.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bskmq::backend::BackendKind;
+use bskmq::coordinator::server::{
+    ModelPool, ObsConfig, PoolConfig, ServerStats,
+};
+use bskmq::data::dataset::ModelData;
+use bskmq::data::synth;
+use bskmq::obs::quant_health::health_sketch;
+use bskmq::obs::{
+    Histogram, MetricsRegistry, PromWriter, QuantHealth, TraceSink,
+};
+use bskmq::quant::codebook::Codebook;
+use bskmq::quant::{Method, QuantSpec};
+use bskmq::util::json::Json;
+
+fn fresh_dir(tag: &str, models: &[&str]) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bskmq_obs_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    for m in models {
+        synth::write_model(&dir, m, 42).unwrap();
+    }
+    dir
+}
+
+fn obs_cfg(replicas: usize, queue_depth: usize, obs: ObsConfig) -> PoolConfig {
+    PoolConfig {
+        backend: BackendKind::Native,
+        spec: Some(QuantSpec::new(Method::BsKmq, 3)),
+        noise_std: 0.0,
+        calib_batches: 2,
+        replicas,
+        queue_depth,
+        batch_window: Duration::from_millis(1),
+        obs,
+        ..PoolConfig::default()
+    }
+}
+
+/// 8 threads hammering one counter and one histogram: the final
+/// snapshot must be exact, not approximately right.
+#[test]
+fn concurrent_registry_updates_have_deterministic_snapshot() {
+    let reg = Arc::new(MetricsRegistry::new());
+    let c = reg.counter("bskmq_test_total");
+    let h = reg.histogram("bskmq_test_ms", &[1.0, 10.0, 100.0]);
+    let threads = 8usize;
+    let per = 10_000usize;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let c = c.clone();
+            let h = h.clone();
+            s.spawn(move || {
+                for i in 0..per {
+                    c.inc();
+                    // cycle the three buckets + overflow deterministically
+                    h.observe([0.5, 5.0, 50.0, 500.0][i % 4]);
+                }
+            });
+        }
+    });
+    let total = (threads * per) as u64;
+    assert_eq!(c.get(), total);
+    let snap = h.snapshot();
+    assert_eq!(snap.count, total);
+    assert_eq!(snap.counts, vec![total / 4; 4]);
+    // fixed-point sum: (0.5 + 5 + 50 + 500) * 1000 per 4 observes
+    let want_scaled = (threads * per / 4) as u64 * 555_500;
+    assert_eq!(snap.sum_scaled, want_scaled);
+}
+
+#[test]
+fn histogram_snapshot_merge_is_associative() {
+    let bounds = [1.0, 2.0, 4.0];
+    let mk = |vals: &[f64]| {
+        let h = Histogram::new(&bounds);
+        for &v in vals {
+            h.observe(v);
+        }
+        h.snapshot()
+    };
+    let a = mk(&[0.5, 1.5, 8.0]);
+    let b = mk(&[3.0, 3.5]);
+    let c = mk(&[0.1, 0.2, 0.3, 9.0]);
+
+    let mut left = a.clone();
+    left.merge(&b).unwrap();
+    left.merge(&c).unwrap();
+
+    let mut bc = b.clone();
+    bc.merge(&c).unwrap();
+    let mut right = a.clone();
+    right.merge(&bc).unwrap();
+
+    assert_eq!(left.counts, right.counts);
+    assert_eq!(left.count, right.count);
+    assert_eq!(left.sum_scaled, right.sum_scaled);
+    assert_eq!(left.count, 9);
+    // mismatched bounds must refuse to merge, not silently mangle
+    let other = Histogram::new(&[1.0]).snapshot();
+    assert!(left.merge(&other).is_err());
+}
+
+/// merge_from folds counters and both latency rings; the merged stats
+/// expose p999 (and the summary line prints it).
+#[test]
+fn server_stats_merge_and_p999() {
+    let a = ServerStats::default();
+    let b = ServerStats::default();
+    for us in 1..=500u64 {
+        a.record_batch(1, 4, us * 10);
+        a.record_queue_wait(us);
+    }
+    for us in 501..=1000u64 {
+        b.record_batch(1, 4, us * 10);
+        b.record_queue_wait(us);
+    }
+    a.merge_from(&b);
+    assert_eq!(a.requests.load(Ordering::SeqCst), 1000);
+    let p = a.percentiles_ms(&[0.5, 0.999]);
+    // 1000 samples of 10..=10000 us: p50 ~ 5ms, p999 ~ 10ms
+    assert!((p[0] - 5.0).abs() < 0.1, "p50 {}", p[0]);
+    assert!(p[1] > 9.9 && p[1] <= 10.0, "p999 {}", p[1]);
+    let qw = a.queue_percentiles_ms(&[0.999]);
+    assert!(qw[0] > 0.99 && qw[0] <= 1.0, "queue p999 {}", qw[0]);
+    assert!(a.summary().contains("p999="), "{}", a.summary());
+}
+
+/// Every admitted request produces exactly one closed span, every span
+/// is emitted (sampling 1:1 here), and span ids never repeat.
+#[test]
+fn every_admitted_request_closes_exactly_one_span() {
+    let dir = fresh_dir("spans", &["resnet"]);
+    let sink = TraceSink::memory();
+    let cfg = obs_cfg(
+        2,
+        256,
+        ObsConfig {
+            trace_sample_every: 1,
+            trace_sink: Some(sink.clone()),
+            ..ObsConfig::default()
+        },
+    );
+    let mut pool =
+        ModelPool::start(dir.clone(), "resnet".to_string(), &cfg).unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let elems: usize = data.x_test.shape[1..].iter().product();
+    let total = 48usize;
+    std::thread::scope(|s| {
+        for t in 0..6 {
+            let client = pool.client();
+            let x = data.x_test.data[..elems].to_vec();
+            s.spawn(move || {
+                for r in 0..total / 6 {
+                    let mut xi = x.clone();
+                    xi[0] += (t * 100 + r) as f32 * 1e-3;
+                    client.infer(xi).unwrap();
+                }
+            });
+        }
+    });
+    pool.shutdown();
+    let tr = pool.tracer();
+    assert_eq!(tr.opened(), total as u64, "span opened per admission");
+    assert_eq!(tr.closed(), total as u64, "span closed per reply");
+    assert_eq!(tr.emitted(), total as u64, "1:1 sampling emits all");
+    let lines = sink.lines();
+    assert_eq!(lines.len(), total);
+    let mut ids = std::collections::HashSet::new();
+    for line in &lines {
+        let j = Json::parse(line).unwrap();
+        assert!(ids.insert(j.get("id").unwrap().as_usize().unwrap()));
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "resnet");
+        j.get("queue_us").unwrap().as_f64().unwrap();
+        j.get("forward_us").unwrap().as_f64().unwrap();
+    }
+}
+
+/// Rejected submissions roll their span back: opened == closed ==
+/// admitted, and admitted + rejected == attempted.
+#[test]
+fn rejected_requests_open_no_spans() {
+    let dir = fresh_dir("reject", &["resnet"]);
+    let cfg = obs_cfg(1, 1, ObsConfig::default());
+    let mut pool =
+        ModelPool::start(dir.clone(), "resnet".to_string(), &cfg).unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let elems: usize = data.x_test.shape[1..].iter().product();
+    let client = pool.client();
+    let attempts = 512usize;
+    let mut accepted = 0u64;
+    let mut kept = Vec::new();
+    for _ in 0..attempts {
+        // receivers are kept so accepted requests are answered, not
+        // dropped; rejected ones error immediately
+        if let Ok(rx) = client.submit(data.x_test.data[..elems].to_vec()) {
+            accepted += 1;
+            kept.push(rx);
+        }
+    }
+    for rx in &kept {
+        let _ = rx.recv();
+    }
+    pool.shutdown();
+    let rejected = pool.rejected();
+    assert!(rejected > 0, "depth-1 queue under a 512 burst must reject");
+    assert_eq!(accepted + rejected, attempts as u64);
+    assert_eq!(pool.tracer().opened(), accepted);
+    assert_eq!(pool.tracer().closed(), accepted);
+}
+
+/// Saturation rates on a layer driven into clipping: values pinned
+/// outside the codebook range land in the boundary bins exactly.
+#[test]
+fn saturation_rate_is_exact_on_clipped_layer() {
+    let book = Codebook::from_centers(&[0.0, 1.0, 2.0, 3.0]);
+    let health = QuantHealth::new(
+        &["clip".to_string()],
+        std::slice::from_ref(&book),
+        None,
+        0,
+    );
+    // 8 under-range, 1 mid, 1 over-range
+    let mut vals = vec![-10.0f32; 8];
+    vals.push(1.0);
+    vals.push(100.0);
+    health.observe(0, &vals);
+    let occ = health.occupancy(0);
+    assert_eq!(occ, vec![8, 1, 0, 1]);
+    let (low, high) = health.saturation(0);
+    assert!((low - 0.8).abs() < 1e-12, "low {low}");
+    assert!((high - 0.1).abs() < 1e-12, "high {high}");
+    assert_eq!(health.observed(0), 10);
+}
+
+/// The live-vs-calibration sketch divergence must move when the serving
+/// distribution shifts away from what Algorithm 1 calibrated on.
+#[test]
+fn sketch_divergence_moves_under_distribution_shift() {
+    let book = Codebook::from_centers(&[0.0, 0.25, 0.5, 0.75, 1.0]);
+    // calibration-time sketch over a [0, 1) ramp
+    let mut calib = health_sketch();
+    for i in 0..4096 {
+        calib.insert((i % 1000) as f64 / 1000.0);
+    }
+    let names = ["act".to_string()];
+    let mk = || {
+        QuantHealth::new(
+            &names,
+            std::slice::from_ref(&book),
+            Some(std::slice::from_ref(&calib)),
+            1,
+        )
+    };
+
+    // same distribution live: divergence stays near zero
+    let same = mk();
+    let live_same: Vec<f32> =
+        (0..4096).map(|i| (i % 1000) as f32 / 1000.0).collect();
+    same.observe(0, &live_same);
+    let d_same = same.divergence(0).expect("calibrated layer diverges");
+
+    // shifted distribution live: every decile moves by ~2 ranges
+    let shifted = mk();
+    let live_shift: Vec<f32> =
+        (0..4096).map(|i| 2.0 + (i % 1000) as f32 / 1000.0).collect();
+    shifted.observe(0, &live_shift);
+    let d_shift = shifted.divergence(0).expect("calibrated layer diverges");
+
+    assert!(d_same < 0.05, "matched distribution, divergence {d_same}");
+    assert!(d_shift > 1.0, "shifted distribution, divergence {d_shift}");
+    assert!(d_shift > 10.0 * d_same.max(1e-6));
+
+    // uncalibrated health has nothing to diff against
+    let bare = QuantHealth::new(
+        &names,
+        std::slice::from_ref(&book),
+        None,
+        1,
+    );
+    bare.observe(0, &live_same);
+    assert!(bare.divergence(0).is_none());
+}
+
+/// End-to-end exposition: after serving traffic, the pool's Prometheus
+/// page carries the request counters, latency histograms and per-qlayer
+/// health series, and the `stats` JSON parses with matching counts.
+#[test]
+fn pool_prometheus_and_stats_json_expose_health_series() {
+    let dir = fresh_dir("prom", &["resnet"]);
+    let cfg = obs_cfg(1, 64, ObsConfig::default());
+    let mut pool =
+        ModelPool::start(dir.clone(), "resnet".to_string(), &cfg).unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let elems: usize = data.x_test.shape[1..].iter().product();
+    let n = 12usize;
+    for i in 0..n {
+        let mut x = data.x_test.data[..elems].to_vec();
+        x[0] += i as f32 * 1e-3;
+        pool.infer(x).unwrap();
+    }
+    pool.shutdown();
+
+    let health = pool.quant_health().expect("native backend has hooks");
+    assert!(health.num_layers() > 0);
+    assert!(health.observed(0) > 0, "serving traffic reached telemetry");
+
+    let mut w = PromWriter::new();
+    pool.render_prometheus(&mut w);
+    let page = w.finish();
+    for series in [
+        "bskmq_requests_total{model=\"resnet\"}",
+        "bskmq_rejected_total",
+        "bskmq_latency_ms",
+        "bskmq_forward_latency_ms_bucket",
+        "bskmq_queue_wait_ms_bucket",
+        "bskmq_level_occupancy_total",
+        "bskmq_saturation_rate",
+        "bskmq_activations_observed_total",
+        "bskmq_spans_opened_total",
+    ] {
+        assert!(page.contains(series), "missing {series} in:\n{page}");
+    }
+    // every HELP/TYPE header appears exactly once per family
+    let headers: Vec<&str> = page
+        .lines()
+        .filter(|l| l.starts_with("# TYPE "))
+        .collect();
+    let mut uniq = std::collections::HashSet::new();
+    for h in &headers {
+        assert!(uniq.insert(*h), "duplicate family header {h}");
+    }
+
+    let j = Json::parse(&pool.stats_json()).unwrap();
+    assert_eq!(j.get("model").unwrap().as_str().unwrap(), "resnet");
+    assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), n);
+    assert_eq!(
+        j.get("spans").unwrap().get("opened").unwrap().as_usize().unwrap(),
+        n
+    );
+    j.get("latency_ms").unwrap().get("p999").unwrap().as_f64().unwrap();
+    j.get("queue_wait_ms").unwrap().get("p50").unwrap().as_f64().unwrap();
+}
