@@ -23,7 +23,7 @@
 
 use std::collections::BTreeMap;
 
-use bskmq::backend::native::NativeBackend;
+use bskmq::backend::native::{simd, NativeBackend};
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::data::dataset::ModelData;
@@ -61,6 +61,19 @@ fn main() -> anyhow::Result<()> {
         });
         r.print_throughput(batch as f64, "inferences");
 
+        if name == "native" {
+            simd::force_scalar(true);
+            let rs = bench(&format!("{name}: qfwd batch-{batch} (scalar)"), || {
+                black_box(be.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap());
+            });
+            simd::force_scalar(false);
+            rs.print_throughput(batch as f64, "inferences");
+            println!(
+                "{name}: qfwd vectorized speedup vs forced scalar: {:.2}x",
+                rs.mean_ns() as f64 / r.mean_ns().max(1) as f64
+            );
+        }
+
         if be.supports_batch(1) {
             let r = bench(&format!("{name}: qfwd batch-1"), || {
                 black_box(be.run_qfwd(x1, &calib.programmed, 0.0, 7).unwrap());
@@ -79,7 +92,10 @@ fn main() -> anyhow::Result<()> {
 
     // --- per-op breakdown (native graph executor, every topology) ---
     // timings come from the scratch-arena interpreter itself, so the
-    // split reflects exactly what the serving hot path executes
+    // split reflects exactly what the serving hot path executes.  Each
+    // model is profiled twice — `simd::force_scalar(true)` baseline,
+    // then the runtime-dispatched vectorized path — and the delta column
+    // is the measured per-op win of the SIMD kernels (DESIGN.md §12).
     const PROFILE_ITERS: usize = 20;
     for model in bskmq::data::synth::MODELS {
         // trained artifact dirs carry only the aot.py models (no mixer)
@@ -96,31 +112,54 @@ fn main() -> anyhow::Result<()> {
         let batch = be.manifest().batch;
         let xb = &data.x_test.data[..batch * be.manifest().input_elems()];
 
-        // (sum nanos, out elems) per op, in graph order
-        let mut agg: BTreeMap<usize, (String, u128, usize)> = BTreeMap::new();
-        let mut total: u128 = 0;
-        for _ in 0..PROFILE_ITERS {
-            let (_, timings) =
-                be.run_qfwd_profiled(xb, &calib.programmed, 0.0, 7)?;
-            for (i, t) in timings.iter().enumerate() {
-                let e = agg.entry(i).or_insert_with(|| {
-                    (format!("{} ({})", t.name, t.kind), 0, t.out_elems)
-                });
-                e.1 += t.nanos;
-                total += t.nanos;
+        // (label, sum nanos, out elems) per op, in graph order
+        let profile = |force_scalar: bool| -> anyhow::Result<(
+            BTreeMap<usize, (String, u128, usize)>,
+            u128,
+        )> {
+            simd::force_scalar(force_scalar);
+            let mut agg: BTreeMap<usize, (String, u128, usize)> =
+                BTreeMap::new();
+            let mut total: u128 = 0;
+            for _ in 0..PROFILE_ITERS {
+                let (_, timings) =
+                    be.run_qfwd_profiled(xb, &calib.programmed, 0.0, 7)?;
+                for (i, t) in timings.iter().enumerate() {
+                    let e = agg.entry(i).or_insert_with(|| {
+                        (format!("{} ({})", t.name, t.kind), 0, t.out_elems)
+                    });
+                    e.1 += t.nanos;
+                    total += t.nanos;
+                }
             }
-        }
+            Ok((agg, total))
+        };
+        let (scalar_agg, scalar_total) = profile(true)?;
+        let (agg, total) = profile(false)?;
+        simd::force_scalar(false);
+
         println!(
             "=== per-op breakdown: {model} qfwd batch-{batch} \
-             (mean over {PROFILE_ITERS} runs) ==="
+             (mean over {PROFILE_ITERS} runs, vs forced-scalar) ==="
         );
-        for (_, (label, nanos, out_elems)) in &agg {
+        for (i, (label, nanos, out_elems)) in &agg {
             let mean_us = *nanos as f64 / PROFILE_ITERS as f64 / 1e3;
+            let scalar_us = scalar_agg
+                .get(i)
+                .map(|e| e.1 as f64 / PROFILE_ITERS as f64 / 1e3)
+                .unwrap_or(mean_us);
+            let delta_ns = (scalar_us - mean_us) * 1e3;
             println!(
-                "  {label:<24} {mean_us:>9.1} us  {:>5.1}%  out {out_elems}",
+                "  {label:<24} {mean_us:>9.1} us  {:>5.1}%  \
+                 scalar {scalar_us:>9.1} us  d {delta_ns:>+11.0} ns  \
+                 out {out_elems}",
                 100.0 * *nanos as f64 / total.max(1) as f64
             );
         }
+        println!(
+            "  {model} qfwd vectorized speedup vs scalar: {:.2}x",
+            scalar_total as f64 / total.max(1) as f64
+        );
         println!();
     }
     Ok(())

@@ -167,14 +167,16 @@ class QuantCtx:
 
 
 def _collect_subsample(y):
-    """Deterministic strided subsample of a layer's activations."""
+    """Deterministic evenly-spaced subsample of a layer's activations.
+
+    The index formula ``i * len // want`` matches the native backend's
+    ``collect_subsample`` exactly: it spans the whole activation —
+    including the tail that the old truncated-stride decimation silently
+    dropped — and wraps tiny layers by repeating indices.
+    """
     flat = y.reshape(-1)
-    stride = max(1, flat.shape[0] // COLLECT_SAMPLES)
-    sub = flat[::stride][:COLLECT_SAMPLES]
-    if sub.shape[0] < COLLECT_SAMPLES:  # tiny layers: pad by wrapping
-        reps = -(-COLLECT_SAMPLES // sub.shape[0])
-        sub = jnp.tile(sub, reps)[:COLLECT_SAMPLES]
-    return sub
+    idx = (jnp.arange(COLLECT_SAMPLES) * flat.shape[0]) // COLLECT_SAMPLES
+    return flat[idx]
 
 
 def _tile_absmax(x2d, w):

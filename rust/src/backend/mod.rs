@@ -63,6 +63,25 @@ impl ProgrammedCodebooks {
         levels: usize,
     ) -> Result<ProgrammedCodebooks> {
         ensure!(nl.len() == tile.len(), "nl/tile layer count mismatch");
+        // a 0/1-level ladder cannot convert anything: floor_adc would
+        // index an empty centers row and min_ref_step would silently
+        // fall back to 1.0, mis-scaling conversion noise
+        for (i, cb) in nl.iter().enumerate() {
+            ensure!(
+                cb.levels() >= 2,
+                "q-layer {i}: degenerate NL codebook ({} level(s); \
+                 conversion needs at least 2)",
+                cb.levels()
+            );
+        }
+        for (i, cb) in tile.iter().enumerate() {
+            ensure!(
+                cb.levels() >= 2,
+                "q-layer {i}: degenerate tile codebook ({} level(s); \
+                 conversion needs at least 2)",
+                cb.levels()
+            );
+        }
         let nq = nl.len();
         let mut buf = [
             Vec::with_capacity(nq * levels),
@@ -324,5 +343,24 @@ mod tests {
         assert_eq!(tc[0], -8.0);
         // padding refs are +inf, never selected
         assert!(nr[7].is_infinite());
+    }
+
+    #[test]
+    fn stack_rejects_degenerate_ladders() {
+        let ok = vec![Codebook::from_centers(&[0.0, 1.0])];
+        let tile = vec![Codebook::linear(-4.0, 4.0, 2)];
+        // single-level NL book
+        let single = vec![Codebook::from_centers(&[1.0])];
+        let err = ProgrammedCodebooks::stack(&single, &tile, 8).unwrap_err();
+        assert!(err.to_string().contains("degenerate NL codebook"), "{err}");
+        assert!(err.to_string().contains("q-layer 0"), "{err}");
+        // empty tile book (constructed directly: from_centers rejects
+        // empty input by panicking on c[0])
+        let empty = vec![Codebook {
+            centers: Vec::new(),
+            refs: Vec::new(),
+        }];
+        let err = ProgrammedCodebooks::stack(&ok, &empty, 8).unwrap_err();
+        assert!(err.to_string().contains("degenerate tile codebook"), "{err}");
     }
 }

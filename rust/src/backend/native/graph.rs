@@ -24,9 +24,10 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::ops::{
     add_bias_relu_into, add_into, attention_into, avg_pool3_same_into,
-    collect_subsample, concat_c_into, conv_dims, global_avg_pool_into,
-    im2col_into, layer_norm_into, max_pool2_into, mean_over_seq_into,
-    min_ref_step, nl_convert_into, tiled_mac_into, ConvertSpec,
+    bias_relu_convert_into, collect_subsample, concat_c_into, conv_dims,
+    global_avg_pool_into, im2col_into, layer_norm_into, max_pool2_into,
+    mean_over_seq_into, min_ref_step, nl_convert_into, tiled_mac_into,
+    ConvertSpec,
 };
 use crate::backend::ProgrammedCodebooks;
 use crate::io::manifest::Manifest;
@@ -1156,21 +1157,27 @@ fn qmac(
                 seed: layer_seed(seed, q, 0),
             };
             tiled_mac_into(x2d, rows, k, w, ROWS, Some(&spec), out);
-            add_bias_relu_into(out, ql.n, &bias.data, ql.relu);
-            // health telemetry sees exactly what the NL-ADC is about to
-            // digitize: post-bias/ReLU, pre-conversion
-            if let Some(h) = taps {
-                h.observe(q, out);
+            let nl_sigma = noise_std * min_ref_step(n_refs);
+            let nl_seed = layer_seed(seed, q, NL_SEED_SALT);
+            match taps {
+                // health telemetry sees exactly what the NL-ADC is
+                // about to digitize: post-bias/ReLU, pre-conversion —
+                // the tap needs the whole buffer in one piece, so this
+                // path keeps the unfused epilogue (bit-identical to the
+                // fused one; `fused_epilogue_matches_unfused_pair` and
+                // the simd_parity suite pin that)
+                Some(h) => {
+                    add_bias_relu_into(out, ql.n, &bias.data, ql.relu);
+                    h.observe(q, out);
+                    nl_convert_into(
+                        out, rows, ql.n, n_refs, n_centers, nl_sigma, nl_seed,
+                    );
+                }
+                None => bias_relu_convert_into(
+                    out, rows, ql.n, &bias.data, ql.relu, n_refs, n_centers,
+                    nl_sigma, nl_seed,
+                ),
             }
-            nl_convert_into(
-                out,
-                rows,
-                ql.n,
-                n_refs,
-                n_centers,
-                noise_std * min_ref_step(n_refs),
-                layer_seed(seed, q, NL_SEED_SALT),
-            );
         }
     }
 }
@@ -1317,5 +1324,32 @@ mod tests {
             .execute(&m, &weights, &x[..4], 1, mode, &mut buf, None, None)
             .unwrap();
         assert_eq!(one.logits, full.logits[..3].to_vec());
+    }
+
+    #[test]
+    fn qfwd_rejects_degenerate_programmed_ladder() {
+        use crate::backend::Backend;
+        let be = crate::backend::native::NativeBackend::from_parts(
+            chain_manifest(),
+            chain_weights(),
+        )
+        .unwrap();
+        let nl = vec![
+            Codebook::linear(0.0, 8.0, 7),
+            Codebook::linear(-8.0, 8.0, 7),
+        ];
+        let tile = nl.clone();
+        let mut books = ProgrammedCodebooks::stack(&nl, &tile, 128).unwrap();
+        // collapse layer d1's NL row to a single finite reference — the
+        // shape is still valid, so only the per-row check can catch it
+        let levels = books.levels();
+        for v in books.nl_refs.data[levels + 1..2 * levels].iter_mut() {
+            *v = f32::INFINITY;
+        }
+        let x = vec![0.5f32; 2 * 4];
+        let err = be.run_qfwd(&x, &books, 0.0, 7).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("q-layer 'd1'"), "{msg}");
+        assert!(msg.contains("degenerate NL-ADC ladder"), "{msg}");
     }
 }

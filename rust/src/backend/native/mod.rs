@@ -15,6 +15,7 @@
 
 pub mod graph;
 pub mod ops;
+pub mod simd;
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -155,6 +156,29 @@ impl NativeBackend {
             books.nl_refs.shape,
             self.manifest.nq()
         );
+        // degenerate ladders (empty / single-level) would panic inside
+        // the conversion kernels and mis-scale noise via min_ref_step's
+        // 1.0 fallback; reject them here, naming the offending qlayer
+        for (i, ql) in self.manifest.qlayers.iter().enumerate() {
+            for (stack, what) in [
+                (&books.nl_refs, "NL-ADC"),
+                (&books.tile_refs, "tile-ADC"),
+            ] {
+                let finite = stack
+                    .row(i)
+                    .iter()
+                    .filter(|r| r.is_finite())
+                    .count();
+                ensure!(
+                    finite >= 2,
+                    "q-layer '{}': degenerate {} ladder ({} finite \
+                     reference(s); conversion needs at least 2)",
+                    ql.name,
+                    what,
+                    finite
+                );
+            }
+        }
         Ok(())
     }
 }

@@ -12,6 +12,7 @@
 
 use std::sync::Mutex;
 
+use super::simd;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -131,6 +132,76 @@ pub fn min_ref_step(refs: &[f32]) -> f32 {
     }
 }
 
+/// Dense-grid accelerator for [`floor_adc`]: a per-ladder lookup table
+/// mapping a probe value to a *starting guess* for the ladder index,
+/// refined by at most a couple of exact comparison steps.  The LUT is
+/// purely a performance hint — `convert` enforces the `partition_point`
+/// contract with two bounded scans, so it is bit-identical to
+/// [`floor_adc`] for every finite, NaN and -inf input (+inf lands on
+/// the same center *value* through the padding convention: padding
+/// centers repeat the last real center).
+pub struct AdcLut<'a> {
+    refs: &'a [f32],
+    centers: &'a [f32],
+    /// finite ladder prefix length (the rest is `+inf` padding)
+    n_finite: usize,
+    base: f32,
+    scale: f32,
+    lut: Vec<u32>,
+}
+
+impl<'a> AdcLut<'a> {
+    pub fn new(refs: &'a [f32], centers: &'a [f32]) -> AdcLut<'a> {
+        assert!(!centers.is_empty(), "AdcLut: empty centers");
+        let n_finite = refs.iter().take_while(|r| r.is_finite()).count();
+        let base = refs.first().copied().unwrap_or(0.0);
+        let span = if n_finite > 0 {
+            refs[n_finite - 1] - base
+        } else {
+            0.0
+        };
+        // ~4 cells per ladder step keeps the refine scans at <=1 step
+        let cells = (n_finite.max(1) * 4).next_power_of_two().min(4096);
+        let scale = if span > 0.0 { cells as f32 / span } else { 0.0 };
+        let mut lut = vec![0u32; cells + 1];
+        if scale > 0.0 {
+            for (g, slot) in lut.iter_mut().enumerate().skip(1) {
+                // one cell back: a conservative cut that absorbs the
+                // float rounding of the probe->cell map; convert()'s
+                // scans walk the remaining steps exactly
+                let probe = base + (g as f32 - 1.0) / scale;
+                *slot =
+                    refs[..n_finite].partition_point(|&r| r <= probe) as u32;
+            }
+        }
+        AdcLut {
+            refs,
+            centers,
+            n_finite,
+            base,
+            scale,
+            lut,
+        }
+    }
+
+    /// Branch-light [`floor_adc`]: same center for every input (see the
+    /// type-level doc for the one +inf caveat, equal-value by padding).
+    #[inline]
+    pub fn convert(&self, v: f32) -> f32 {
+        // float->usize casts saturate: NaN and negatives land on 0
+        let cell =
+            (((v - self.base) * self.scale) as usize).min(self.lut.len() - 1);
+        let mut c = self.lut[cell] as usize;
+        while c > 0 && self.refs[c - 1] > v {
+            c -= 1;
+        }
+        while c < self.n_finite && self.refs[c] <= v {
+            c += 1;
+        }
+        self.centers[c.saturating_sub(1).min(self.centers.len() - 1)]
+    }
+}
+
 /// Per-tile conversion programmed into the MAC loop (quant mode).
 pub struct ConvertSpec<'a> {
     pub refs: &'a [f32],
@@ -142,6 +213,13 @@ pub struct ConvertSpec<'a> {
 }
 
 const ROW_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Output rows digitized per streamed weight tile: the `tile_k x n`
+/// weight block stays hot in cache across the row block, cutting weight
+/// traffic by ~`ROW_BLOCK`x.  Bit-safe: every output row keeps its own
+/// RNG, created per row and consumed in (tile, then column) order
+/// exactly like the single-row loop.
+const ROW_BLOCK: usize = 8;
 
 /// The crossbar dataflow of Fig. 2: the contraction dimension is split
 /// into `tile_k`-row tiles (one analog accumulation each); every tile's
@@ -165,44 +243,66 @@ pub fn tiled_mac_into(
     assert_eq!(x.len(), m * k, "tiled_mac input shape mismatch");
     assert_eq!(out.len(), m * n, "tiled_mac output shape mismatch");
     let kt = k.div_ceil(tile_k).max(1);
+    let lut = quant.map(|q| AdcLut::new(q.refs, q.centers));
     out.fill(0.0);
     let absmax = Mutex::new(0f64);
     par_row_blocks(m, n, out, |row0, block| {
-        let mut scratch = vec![0f32; n];
+        let rows_here = block.len() / n;
+        let mut scratch = vec![0f32; ROW_BLOCK.min(rows_here) * n];
+        let mut rngs: Vec<Rng> = Vec::with_capacity(ROW_BLOCK);
         let mut local_max = 0f64;
-        for (ri, orow) in block.chunks_mut(n).enumerate() {
-            let r = row0 + ri;
-            let xrow = &x[r * k..(r + 1) * k];
-            let mut rng = quant.map(|q| {
-                Rng::new(q.seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX))
-            });
+        for (bi, sub) in block.chunks_mut(ROW_BLOCK * n).enumerate() {
+            let r0 = row0 + bi * ROW_BLOCK;
+            let rb = sub.len() / n;
+            if let Some(q) = quant {
+                rngs.clear();
+                for r in r0..r0 + rb {
+                    rngs.push(Rng::new(
+                        q.seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX),
+                    ));
+                }
+            }
             for t in 0..kt {
                 let lo = t * tile_k;
                 let hi = ((t + 1) * tile_k).min(k);
-                scratch.fill(0.0);
-                for (kk, &a) in xrow.iter().enumerate().take(hi).skip(lo) {
-                    if a != 0.0 {
-                        let wrow = &w.data[kk * n..kk * n + n];
-                        for (sj, &wj) in scratch.iter_mut().zip(wrow) {
-                            *sj += a * wj;
+                scratch[..rb * n].fill(0.0);
+                // all rb rows stream the same weight tile while it is
+                // hot in cache; the `a != 0.0` skip is part of the
+                // bit-exactness contract (-0.0 + 0.0 flips sign bits),
+                // so it stays in every path
+                for ri in 0..rb {
+                    let xrow = &x[(r0 + ri) * k..(r0 + ri) * k + k];
+                    let srow = &mut scratch[ri * n..ri * n + n];
+                    for (kk, &a) in xrow.iter().enumerate().take(hi).skip(lo) {
+                        if a != 0.0 {
+                            let wrow = &w.data[kk * n..kk * n + n];
+                            simd::axpy(srow, wrow, a);
                         }
                     }
                 }
-                match quant {
-                    None => {
-                        for (oj, &v) in orow.iter_mut().zip(scratch.iter()) {
-                            local_max = local_max.max(v.abs() as f64);
-                            *oj += v;
+                if let (Some(q), Some(adc)) = (quant, lut.as_ref()) {
+                    for ri in 0..rb {
+                        let rng = &mut rngs[ri];
+                        let orow = &mut sub[ri * n..ri * n + n];
+                        let srow = &scratch[ri * n..ri * n + n];
+                        if q.sigma != 0.0 {
+                            for (oj, &v) in orow.iter_mut().zip(srow) {
+                                let p = v + q.sigma * rng.gaussian() as f32;
+                                *oj += adc.convert(p);
+                            }
+                        } else {
+                            for (oj, &v) in orow.iter_mut().zip(srow) {
+                                *oj += adc.convert(v);
+                            }
                         }
                     }
-                    Some(q) => {
-                        let rng = rng.as_mut().unwrap();
-                        for (oj, &v) in orow.iter_mut().zip(scratch.iter()) {
-                            let mut p = v;
-                            if q.sigma != 0.0 {
-                                p += q.sigma * rng.gaussian() as f32;
-                            }
-                            *oj += floor_adc(q.refs, q.centers, p);
+                } else {
+                    for ri in 0..rb {
+                        let orow = &mut sub[ri * n..ri * n + n];
+                        let srow = &scratch[ri * n..ri * n + n];
+                        let mx = simd::accum_absmax(orow, srow);
+                        if mx > local_max {
+                            local_max = mx;
                         }
                     }
                 }
@@ -250,6 +350,46 @@ pub fn add_bias_relu(y: &mut Mat, bias: &[f32], relu: bool) {
     add_bias_relu_into(&mut y.data, y.cols, bias, relu);
 }
 
+/// Fused quant-layer epilogue: bias add, optional ReLU and NL-ADC
+/// conversion in one parallel pass, so each output element is loaded
+/// and stored once instead of three times.  Bit-identical to
+/// [`add_bias_relu_into`] followed by [`nl_convert_into`] — same
+/// per-row RNG stream, same ladder semantics — which the unfused pair
+/// remains for paths that must observe the pre-conversion activations
+/// (the quant-health tap).
+#[allow(clippy::too_many_arguments)]
+pub fn bias_relu_convert_into(
+    y: &mut [f32],
+    rows: usize,
+    cols: usize,
+    bias: &[f32],
+    relu: bool,
+    refs: &[f32],
+    centers: &[f32],
+    sigma: f32,
+    seed: u64,
+) {
+    assert_eq!(bias.len(), cols, "bias length mismatch");
+    let adc = AdcLut::new(refs, centers);
+    par_row_blocks(rows, cols, y, |row0, block| {
+        for (ri, row) in block.chunks_mut(cols).enumerate() {
+            let r = row0 + ri;
+            let mut rng =
+                Rng::new(seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX).rotate_left(17));
+            for (v, &b) in row.iter_mut().zip(bias) {
+                let mut p = *v + b;
+                if relu && p < 0.0 {
+                    p = 0.0;
+                }
+                if sigma != 0.0 {
+                    p += sigma * rng.gaussian() as f32;
+                }
+                *v = adc.convert(p);
+            }
+        }
+    });
+}
+
 /// Layer-output NL-ADC conversion (optionally with conversion noise).
 pub fn nl_convert_into(
     y: &mut [f32],
@@ -260,17 +400,22 @@ pub fn nl_convert_into(
     sigma: f32,
     seed: u64,
 ) {
+    let adc = AdcLut::new(refs, centers);
     par_row_blocks(rows, cols, y, |row0, block| {
         for (ri, row) in block.chunks_mut(cols).enumerate() {
             let r = row0 + ri;
-            let mut rng =
-                Rng::new(seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX).rotate_left(17));
-            for v in row.iter_mut() {
-                let mut p = *v;
-                if sigma != 0.0 {
-                    p += sigma * rng.gaussian() as f32;
+            if sigma != 0.0 {
+                let mut rng = Rng::new(
+                    seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX).rotate_left(17),
+                );
+                for v in row.iter_mut() {
+                    let p = *v + sigma * rng.gaussian() as f32;
+                    *v = adc.convert(p);
                 }
-                *v = floor_adc(refs, centers, p);
+            } else {
+                for v in row.iter_mut() {
+                    *v = adc.convert(*v);
+                }
             }
         }
     });
@@ -693,26 +838,149 @@ pub fn mean_over_seq(h: &Mat, b: usize, t: usize) -> Mat {
     Mat::new(b, h.cols, out)
 }
 
-/// Deterministic strided activation subsample — mirrors the collect
-/// graph's `_collect_subsample` (stride-decimate to `want`, wrap-pad
-/// tiny layers).
+/// Deterministic evenly-spaced activation subsample — mirrors the
+/// collect graph's `_collect_subsample` (index `i -> i*len/want`).
+///
+/// Indices cover the whole activation including the tail; the previous
+/// truncated-stride decimation (`stride = len/want`) read only the
+/// first `stride*want` elements, so e.g. `len=599, want=300` sampled
+/// indices 0..=299 and calibration sketches never saw the upper half.
+/// Tiny layers (`len < want`) repeat elements through the same formula.
 pub fn collect_subsample(flat: &[f32], want: usize) -> Vec<f64> {
     assert!(!flat.is_empty(), "subsample of empty activation");
-    let stride = (flat.len() / want).max(1);
-    let mut sub: Vec<f64> = flat
-        .iter()
-        .step_by(stride)
-        .take(want)
-        .map(|&v| v as f64)
-        .collect();
-    if sub.len() < want {
-        let base = sub.clone();
-        while sub.len() < want {
-            let need = want - sub.len();
-            sub.extend(base.iter().take(need));
-        }
+    (0..want)
+        .map(|i| flat[i * flat.len() / want] as f64)
+        .collect()
+}
+
+/// Frozen pre-SIMD scalar kernels, kept verbatim as the bit-exactness
+/// oracle for the dispatched hot path (`rust/tests/simd_parity.rs`
+/// fuzzes the fused/vectorized kernels against these).  Do not
+/// optimize or "modernize": the whole point is that this module never
+/// changes while the hot path does.
+pub mod reference {
+    use std::sync::Mutex;
+
+    use super::{
+        add_bias_relu_into, floor_adc, par_row_blocks, ConvertSpec,
+        ROW_SEED_MIX,
+    };
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    /// Scalar [`super::tiled_mac_into`]: single-row loop, per-element
+    /// `partition_point` ladder search.
+    pub fn tiled_mac_into(
+        x: &[f32],
+        m: usize,
+        k: usize,
+        w: &Tensor,
+        tile_k: usize,
+        quant: Option<&ConvertSpec>,
+        out: &mut [f32],
+    ) -> f64 {
+        assert_eq!(w.shape.len(), 2, "weight matrix must be 2-D");
+        assert_eq!(w.shape[0], k, "contraction mismatch {} vs {}", w.shape[0], k);
+        let n = w.shape[1];
+        assert_eq!(x.len(), m * k, "tiled_mac input shape mismatch");
+        assert_eq!(out.len(), m * n, "tiled_mac output shape mismatch");
+        let kt = k.div_ceil(tile_k).max(1);
+        out.fill(0.0);
+        let absmax = Mutex::new(0f64);
+        par_row_blocks(m, n, out, |row0, block| {
+            let mut scratch = vec![0f32; n];
+            let mut local_max = 0f64;
+            for (ri, orow) in block.chunks_mut(n).enumerate() {
+                let r = row0 + ri;
+                let xrow = &x[r * k..(r + 1) * k];
+                let mut rng = quant.map(|q| {
+                    Rng::new(q.seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX))
+                });
+                for t in 0..kt {
+                    let lo = t * tile_k;
+                    let hi = ((t + 1) * tile_k).min(k);
+                    scratch.fill(0.0);
+                    for (kk, &a) in xrow.iter().enumerate().take(hi).skip(lo) {
+                        if a != 0.0 {
+                            let wrow = &w.data[kk * n..kk * n + n];
+                            for (sj, &wj) in scratch.iter_mut().zip(wrow) {
+                                *sj += a * wj;
+                            }
+                        }
+                    }
+                    match quant {
+                        None => {
+                            for (oj, &v) in orow.iter_mut().zip(scratch.iter()) {
+                                local_max = local_max.max(v.abs() as f64);
+                                *oj += v;
+                            }
+                        }
+                        Some(q) => {
+                            let rng = rng.as_mut().unwrap();
+                            for (oj, &v) in orow.iter_mut().zip(scratch.iter()) {
+                                let mut p = v;
+                                if q.sigma != 0.0 {
+                                    p += q.sigma * rng.gaussian() as f32;
+                                }
+                                *oj += floor_adc(q.refs, q.centers, p);
+                            }
+                        }
+                    }
+                }
+            }
+            if quant.is_none() {
+                let mut g = absmax.lock().unwrap();
+                if local_max > *g {
+                    *g = local_max;
+                }
+            }
+        });
+        absmax.into_inner().unwrap()
     }
-    sub
+
+    /// Scalar [`super::nl_convert_into`]: per-element ladder search.
+    pub fn nl_convert_into(
+        y: &mut [f32],
+        rows: usize,
+        cols: usize,
+        refs: &[f32],
+        centers: &[f32],
+        sigma: f32,
+        seed: u64,
+    ) {
+        par_row_blocks(rows, cols, y, |row0, block| {
+            for (ri, row) in block.chunks_mut(cols).enumerate() {
+                let r = row0 + ri;
+                let mut rng =
+                    Rng::new(seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX).rotate_left(17));
+                for v in row.iter_mut() {
+                    let mut p = *v;
+                    if sigma != 0.0 {
+                        p += sigma * rng.gaussian() as f32;
+                    }
+                    *v = floor_adc(refs, centers, p);
+                }
+            }
+        });
+    }
+
+    /// Unfused quant-layer epilogue: bias/ReLU pass, then a separate
+    /// conversion pass — what [`super::bias_relu_convert_into`] fuses.
+    #[allow(clippy::too_many_arguments)]
+    pub fn bias_relu_convert_into(
+        y: &mut [f32],
+        rows: usize,
+        cols: usize,
+        bias: &[f32],
+        relu: bool,
+        refs: &[f32],
+        centers: &[f32],
+        sigma: f32,
+        seed: u64,
+    ) {
+        add_bias_relu_into(y, cols, bias, relu);
+        nl_convert_into(y, rows, cols, refs, centers, sigma, seed);
+    }
 }
 
 #[cfg(test)]
@@ -846,13 +1114,134 @@ mod tests {
     }
 
     #[test]
-    fn subsample_strides_and_wraps() {
+    fn subsample_even_spacing_and_tiny_wrap() {
         let xs: Vec<f32> = (0..100).map(|v| v as f32).collect();
         let s = collect_subsample(&xs, 10);
         assert_eq!(s.len(), 10);
-        assert_eq!(s[1], 10.0); // stride = 100/10
+        assert_eq!(s[1], 10.0); // i*len/want = 10
+        assert_eq!(s[9], 90.0);
+        // tiny layers repeat through the same even-index formula
         let tiny = collect_subsample(&[7.0, 8.0], 5);
-        assert_eq!(tiny, vec![7.0, 8.0, 7.0, 8.0, 7.0]);
+        assert_eq!(tiny, vec![7.0, 7.0, 7.0, 8.0, 8.0]);
+    }
+
+    #[test]
+    fn subsample_covers_the_activation_tail() {
+        // the old truncated-stride decimation (stride = len/want = 1)
+        // read only indices 0..=299 of a 599-long activation; pin that
+        // the fix actually reaches the tail
+        let xs: Vec<f32> = (0..599).map(|v| v as f32).collect();
+        let old: Vec<f64> = {
+            let stride = (xs.len() / 300).max(1);
+            xs.iter().step_by(stride).take(300).map(|&v| v as f64).collect()
+        };
+        assert_eq!(old[299], 299.0); // bias: tail never sampled
+        let s = collect_subsample(&xs, 300);
+        assert_eq!(s.len(), 300);
+        assert_eq!(s[299], (299 * 599 / 300) as f64); // 597: tail covered
+        assert!(s[299] > 590.0);
+        for w in s.windows(2) {
+            assert!(w[1] >= w[0], "monotone index walk");
+        }
+    }
+
+    #[test]
+    fn adc_lut_matches_floor_adc_everywhere() {
+        let cb = crate::quant::codebook::Codebook::linear(-3.0, 5.0, 3);
+        let (refs, centers) = cb.padded(16);
+        let adc = AdcLut::new(&refs, &centers);
+        let mut probes: Vec<f32> = vec![
+            f32::NEG_INFINITY,
+            -1e30,
+            -3.0,
+            0.0,
+            -0.0,
+            4.999,
+            5.0,
+            1e30,
+            f32::NAN,
+        ];
+        // every reference exactly, and a hair to either side
+        for &r in refs.iter().filter(|r| r.is_finite()) {
+            probes.push(r);
+            probes.push(r - 1e-4);
+            probes.push(r + 1e-4);
+            probes.push(r - f32::EPSILON * r.abs().max(1.0));
+            probes.push(r + f32::EPSILON * r.abs().max(1.0));
+        }
+        let mut x = 0.1f32;
+        for _ in 0..500 {
+            x = (x * 1.7 + 0.37) % 11.0 - 5.5; // deterministic sweep
+            probes.push(x);
+        }
+        for &p in &probes {
+            let want = floor_adc(&refs, &centers, p);
+            let got = adc.convert(p);
+            assert_eq!(got.to_bits(), want.to_bits(), "probe {p}");
+        }
+    }
+
+    #[test]
+    fn blocked_mac_matches_reference_kernel() {
+        // odd shapes: partial last row block, ragged tiles, SIMD tail
+        let (m, k, n) = (11, 29, 13);
+        let x: Vec<f32> = (0..m * k)
+            .map(|v| if v % 7 == 0 { 0.0 } else { (v as f32) * 0.03 - 1.1 })
+            .collect();
+        let w = Tensor::new(
+            vec![k, n],
+            (0..k * n).map(|v| (v as f32) * 0.011 - 0.8).collect(),
+        )
+        .unwrap();
+        let cb = crate::quant::codebook::Codebook::linear(-40.0, 40.0, 5);
+        let (refs, centers) = cb.padded(64);
+        for sigma in [0.0f32, 0.4] {
+            let spec = ConvertSpec {
+                refs: &refs,
+                centers: &centers,
+                sigma,
+                seed: 99,
+            };
+            for quant in [None, Some(&spec)] {
+                let mut want = vec![0f32; m * n];
+                let wmax =
+                    reference::tiled_mac_into(&x, m, k, &w, 8, quant, &mut want);
+                let mut got = vec![0f32; m * n];
+                let gmax = tiled_mac_into(&x, m, k, &w, 8, quant, &mut got);
+                assert_eq!(wmax.to_bits(), gmax.to_bits());
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "sigma {sigma}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_matches_unfused_pair() {
+        let (rows, cols) = (9, 17);
+        let y0: Vec<f32> = (0..rows * cols)
+            .map(|v| (v as f32) * 0.21 - 14.0)
+            .collect();
+        let bias: Vec<f32> = (0..cols).map(|v| (v as f32) * 0.5 - 4.0).collect();
+        let cb = crate::quant::codebook::Codebook::linear(0.0, 20.0, 4);
+        let (refs, centers) = cb.padded(32);
+        for relu in [false, true] {
+            for sigma in [0.0f32, 0.7] {
+                let mut want = y0.clone();
+                reference::bias_relu_convert_into(
+                    &mut want, rows, cols, &bias, relu, &refs, &centers, sigma,
+                    1234,
+                );
+                let mut got = y0.clone();
+                bias_relu_convert_into(
+                    &mut got, rows, cols, &bias, relu, &refs, &centers, sigma,
+                    1234,
+                );
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "relu {relu} s {sigma}");
+                }
+            }
+        }
     }
 
     #[test]

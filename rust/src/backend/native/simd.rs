@@ -1,0 +1,241 @@
+//! Runtime-dispatched SIMD primitives for the native IMC hot path
+//! (DESIGN.md §12).
+//!
+//! Strategy: vectorize only loops whose scalar per-element operation
+//! sequence is preserved lane-for-lane, so the vector path is
+//! **bit-identical** to the scalar path by construction:
+//!
+//! * no FMA — multiply and add stay separate instructions, exactly like
+//!   the scalar `s + a * w` (a fused `mul_add` rounds once, not twice,
+//!   and would change low bits);
+//! * no reassociation of accumulation order — SIMD runs across the
+//!   *output* dimension, where elements are independent, never across a
+//!   reduction;
+//! * vector `max` only where the reduction is order-free, with operand
+//!   order chosen so NaN semantics match `f64::max` (NaN ignored).
+//!
+//! The contract is enforced bit-for-bit by `rust/tests/simd_parity.rs`
+//! (kernel-level fuzz against the retained `ops::reference` scalar
+//! kernels) and by the whole-model SIMD-vs-scalar assertions in
+//! `rust/tests/graph_golden.rs`.
+//!
+//! Dispatch is decided once per process: AVX2 when detected on x86_64,
+//! the scalar fallback otherwise or when `BSKMQ_NO_SIMD` is set (any
+//! value but `0`).  [`force_scalar`] overrides at runtime so one test
+//! process can exercise and compare both paths.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+const MODE_UNINIT: u8 = 0;
+const MODE_SCALAR: u8 = 1;
+const MODE_VECTOR: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNINIT);
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force the scalar fallback for every subsequent kernel call (parity
+/// tests flip this to diff both paths in one process).  Safe to toggle
+/// from any thread at any time: both paths produce bit-identical
+/// results, so a racing caller only ever changes speed, never output.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+/// Whether [`force_scalar`] is currently set.
+pub fn scalar_forced() -> bool {
+    FORCE_SCALAR.load(Ordering::SeqCst)
+}
+
+fn detect() -> u8 {
+    let off = std::env::var("BSKMQ_NO_SIMD")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if off {
+        return MODE_SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return MODE_VECTOR;
+        }
+    }
+    MODE_SCALAR
+}
+
+/// True when the vector path is active (AVX2 detected, not forced off).
+#[inline]
+pub fn vector_enabled() -> bool {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        return false;
+    }
+    match MODE.load(Ordering::Relaxed) {
+        MODE_VECTOR => true,
+        MODE_SCALAR => false,
+        _ => {
+            let m = detect();
+            MODE.store(m, Ordering::Relaxed);
+            m == MODE_VECTOR
+        }
+    }
+}
+
+/// `acc[j] += a * x[j]` over the paired prefix — the MAC tile inner
+/// loop.  Scalar reference; the dispatched form is [`axpy`].
+#[inline]
+pub fn axpy_scalar(acc: &mut [f32], x: &[f32], a: f32) {
+    for (s, &w) in acc.iter_mut().zip(x) {
+        *s += a * w;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(acc: &mut [f32], x: &[f32], a: f32) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(x.len());
+    let ap = acc.as_mut_ptr();
+    let xp = x.as_ptr();
+    let av = _mm256_set1_ps(a);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        // multiply and add kept separate (never vfmadd): per lane this
+        // is exactly the scalar `s + (a * w)`, so bits match
+        let prod = _mm256_mul_ps(av, _mm256_loadu_ps(xp.add(j)));
+        let sum = _mm256_add_ps(_mm256_loadu_ps(ap.add(j)), prod);
+        _mm256_storeu_ps(ap.add(j), sum);
+        j += 8;
+    }
+    while j < n {
+        *ap.add(j) += a * *xp.add(j);
+        j += 1;
+    }
+}
+
+/// Runtime-dispatched [`axpy_scalar`].
+#[inline]
+pub fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if vector_enabled() {
+        // SAFETY: vector_enabled() implies AVX2 was detected
+        unsafe { axpy_avx2(acc, x, a) };
+        return;
+    }
+    axpy_scalar(acc, x, a);
+}
+
+/// Float-mode tile fold: `out[j] += s[j]` over the paired prefix,
+/// returning `max(|s[j]|)` as f64.  Scalar reference; the dispatched
+/// form is [`accum_absmax`].  The max reduction is order-free, so the
+/// vector path may fold lanes in any order.
+#[inline]
+pub fn accum_absmax_scalar(out: &mut [f32], s: &[f32]) -> f64 {
+    let mut m = 0f64;
+    for (o, &v) in out.iter_mut().zip(s) {
+        m = m.max(v.abs() as f64);
+        *o += v;
+    }
+    m
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accum_absmax_avx2(out: &mut [f32], s: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = out.len().min(s.len());
+    let op = out.as_mut_ptr();
+    let sp = s.as_ptr();
+    let sign = _mm256_set1_ps(-0.0);
+    let mut mv = _mm256_setzero_ps();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let v = _mm256_loadu_ps(sp.add(j));
+        // andnot clears the sign bit: |v| without branches; vmaxps
+        // returns its SECOND operand on NaN, so passing the accumulator
+        // second ignores NaN exactly like `f64::max`
+        let av = _mm256_andnot_ps(sign, v);
+        mv = _mm256_max_ps(av, mv);
+        let acc = _mm256_add_ps(_mm256_loadu_ps(op.add(j)), v);
+        _mm256_storeu_ps(op.add(j), acc);
+        j += 8;
+    }
+    let mut lanes = [0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), mv);
+    let mut m = 0f64;
+    for &l in &lanes {
+        m = m.max(l as f64);
+    }
+    while j < n {
+        let v = *sp.add(j);
+        m = m.max(v.abs() as f64);
+        *op.add(j) += v;
+        j += 1;
+    }
+    m
+}
+
+/// Runtime-dispatched [`accum_absmax_scalar`].
+#[inline]
+pub fn accum_absmax(out: &mut [f32], s: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if vector_enabled() {
+        // SAFETY: vector_enabled() implies AVX2 was detected
+        return unsafe { accum_absmax_avx2(out, s) };
+    }
+    accum_absmax_scalar(out, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn with_forced<R>(on: bool, f: impl FnOnce() -> R) -> R {
+        force_scalar(on);
+        let r = f();
+        force_scalar(false);
+        r
+    }
+
+    #[test]
+    fn axpy_paths_bit_identical() {
+        // 19 elements: two full AVX lanes + a 3-wide scalar tail
+        let x: Vec<f32> = (0..19).map(|v| (v as f32) * 0.37 - 2.1).collect();
+        let base: Vec<f32> = (0..19).map(|v| (v as f32) * -0.11).collect();
+        for a in [0.0f32, -1.5, 3.25e-3, 7.0] {
+            let mut want = base.clone();
+            axpy_scalar(&mut want, &x, a);
+            let mut sc = base.clone();
+            with_forced(true, || axpy(&mut sc, &x, a));
+            let mut vec = base.clone();
+            with_forced(false, || axpy(&mut vec, &x, a));
+            let bits = |v: &[f32]| -> Vec<u32> {
+                v.iter().map(|f| f.to_bits()).collect()
+            };
+            assert_eq!(bits(&sc), bits(&want), "forced-scalar a={a}");
+            assert_eq!(bits(&vec), bits(&want), "dispatched a={a}");
+        }
+    }
+
+    #[test]
+    fn accum_absmax_paths_agree() {
+        let s: Vec<f32> = (0..21).map(|v| (10 - v) as f32 * 1.3).collect();
+        let base: Vec<f32> = (0..21).map(|v| v as f32).collect();
+        let mut want = base.clone();
+        let mw = accum_absmax_scalar(&mut want, &s);
+        let mut got = base.clone();
+        let mg = accum_absmax(&mut got, &s);
+        assert_eq!(mw.to_bits(), mg.to_bits());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(mw, 13.0);
+    }
+
+    #[test]
+    fn force_scalar_toggles() {
+        force_scalar(true);
+        assert!(scalar_forced());
+        assert!(!vector_enabled());
+        force_scalar(false);
+        assert!(!scalar_forced());
+    }
+}

@@ -254,7 +254,18 @@ impl<'a> Calibrator<'a> {
                         m.qlayers[i].name
                     )
                 })?;
-            nl_books.push(ideal.project_to_hardware(spec.act_bits));
+            let hw = ideal.project_to_hardware(spec.act_bits);
+            // a degenerate ladder would panic inside the conversion
+            // kernels and mis-scale noise (min_ref_step falls back to
+            // 1.0); fail calibration here, naming the layer
+            ensure!(
+                hw.levels() >= 2,
+                "q-layer '{}': calibration produced a degenerate \
+                 {}-level NL codebook (conversion needs at least 2 levels)",
+                m.qlayers[i].name,
+                hw.levels()
+            );
+            nl_books.push(hw);
             // per-tile linear conversion over the observed partial range
             let r = root.tile_max[i].max(1e-6);
             tile_books.push(Codebook::linear(-r, r, spec.tile_bits));

@@ -16,8 +16,10 @@
 //!               [--trace FILE] [--trace-sample N] [--profile-every N]
 //!               [--no-quant-health]
 //!   bskmq bench [--quick] [--models M1,M2] [--out DIR]
+//!               [--allow-placeholder]
 //!       # run the standard perf workload per model and write
-//!       # BENCH_<shortrev>.json (schema: src/obs/bench_report.rs)
+//!       # BENCH_<shortrev>.json (schema: src/obs/bench_report.rs);
+//!       # refuses `measured: false` output unless --allow-placeholder
 //!   bskmq synth <dir> [--seed N]      # write synthetic artifacts (5 models)
 //!   bskmq graph <manifest.json>       # validate + dump a layer graph
 //!   bskmq info                        # artifacts + backend summary
@@ -83,6 +85,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20       [--calib-batches N] [--trace FILE] [--trace-sample N]\n\
                  \x20       [--profile-every N] [--no-quant-health]\n\
                  \x20 bench [--quick] [--models M1,M2] [--out DIR]\n\
+                 \x20       [--allow-placeholder]\n\
                  \x20 synth <dir> [--seed N]\n\
                  \x20 graph <manifest.json>\n\
                  \x20 info"
@@ -541,6 +544,7 @@ fn handle_client(
 /// smoke runs.
 fn bench(args: &[String]) -> Result<()> {
     let mut quick = false;
+    let mut allow_placeholder = false;
     let mut out_dir = std::path::PathBuf::from(".");
     let mut models: Option<Vec<String>> = None;
     let mut i = 1;
@@ -548,6 +552,10 @@ fn bench(args: &[String]) -> Result<()> {
         match args[i].as_str() {
             "--quick" => {
                 quick = true;
+                i += 1;
+            }
+            "--allow-placeholder" => {
+                allow_placeholder = true;
                 i += 1;
             }
             "--models" => {
@@ -586,7 +594,13 @@ fn bench(args: &[String]) -> Result<()> {
         println!("benchmarking {model} ...");
         report.models.push(bench_model(&artifacts, model, quick)?);
     }
-    let path = report.write(&out_dir)?;
+    // `write` refuses `measured: false` placeholder reports; the flag
+    // is the deliberate escape hatch for seeding one
+    let path = if allow_placeholder {
+        report.write_placeholder(&out_dir)?
+    } else {
+        report.write(&out_dir)?
+    };
     for m in &report.models {
         println!(
             "  {:<11} qfwd {:>9} ns/batch ({:>8.1} fwd/s)  calib {:>8.0} \

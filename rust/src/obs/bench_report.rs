@@ -161,7 +161,29 @@ impl BenchReport {
 
     /// Serialize, write to `dir`, re-parse and validate the bytes on
     /// disk.  Returns the written path.
+    ///
+    /// Refuses `measured: false` reports: a placeholder that looks like
+    /// a trajectory point poisons the perf history (the committed
+    /// `BENCH_c7ee675.json` seed was exactly that).  Callers that
+    /// genuinely want a placeholder must say so via
+    /// [`BenchReport::write_placeholder`] (`bskmq bench
+    /// --allow-placeholder`).
     pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        ensure!(
+            self.measured,
+            "refusing to write a placeholder BENCH report \
+             (measured: false); pass --allow-placeholder to force"
+        );
+        self.write_unchecked(dir)
+    }
+
+    /// [`BenchReport::write`] without the `measured: true` guard — the
+    /// explicit escape hatch for seeding a placeholder point.
+    pub fn write_placeholder(&self, dir: &Path) -> Result<PathBuf> {
+        self.write_unchecked(dir)
+    }
+
+    fn write_unchecked(&self, dir: &Path) -> Result<PathBuf> {
         let path = dir.join(self.filename());
         let text = self.to_json();
         std::fs::write(&path, &text)
@@ -335,5 +357,20 @@ mod tests {
         assert!(path.exists());
         let found = list_reports(&dir);
         assert_eq!(found, vec![path]);
+    }
+
+    #[test]
+    fn write_refuses_unmeasured_placeholders() {
+        let dir = std::env::temp_dir().join("bskmq_bench_placeholder_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut r = sample_report();
+        r.measured = false;
+        let err = r.write(&dir).unwrap_err();
+        assert!(err.to_string().contains("placeholder"), "{err}");
+        assert!(list_reports(&dir).is_empty(), "no file may land");
+        // the explicit escape hatch still works (and still validates)
+        let path = r.write_placeholder(&dir).unwrap();
+        assert!(path.exists());
     }
 }

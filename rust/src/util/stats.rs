@@ -19,11 +19,17 @@ pub fn std(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// `q`-quantile (linear interpolation) of unsorted data.
+/// `q`-quantile (linear interpolation) of unsorted data.  Non-finite
+/// samples (a NaN latency from a cold `rate`, an overflowed counter)
+/// are dropped rather than poisoning the sort; all-non-finite input
+/// yields 0.0 — the metrics path must never panic mid-serve.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "quantile of empty slice");
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(f64::total_cmp);
     quantile_sorted(&v, q)
 }
 
@@ -101,6 +107,16 @@ mod tests {
         assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
         assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_survives_nan_and_infinities() {
+        // a single NaN used to panic the partial_cmp sort mid-serve
+        let xs = [3.0, f64::NAN, 1.0, 2.0, f64::INFINITY, 4.0];
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        // all-non-finite input degrades to 0.0 instead of panicking
+        assert_eq!(quantile(&[f64::NAN, f64::NEG_INFINITY], 0.5), 0.0);
     }
 
     #[test]

@@ -17,6 +17,7 @@ use bskmq::backend::native::ops::{
     max_pool2, mean_over_seq, min_ref_step, nl_convert, tiled_mac,
     ConvertSpec, Feat, Mat,
 };
+use bskmq::backend::native::simd;
 use bskmq::backend::native::NativeBackend;
 use bskmq::backend::{load, Backend, BackendKind, ProgrammedCodebooks};
 use bskmq::coordinator::calibrate::Calibrator;
@@ -487,6 +488,61 @@ mod oracle_calib {
             tile.push(Codebook::linear(-r, r, TILE_BITS));
         }
         (nl, tile)
+    }
+}
+
+/// Tentpole parity gate for the vectorized hot path (DESIGN.md §12):
+/// across **all five** synthetic topologies, in both execution modes,
+/// with and without conversion noise, the runtime-dispatched SIMD path
+/// must be bit-identical to the forced-scalar fallback — logits,
+/// activation subsamples and tile absmax alike.
+#[test]
+fn simd_and_scalar_paths_bit_identical_across_topologies() {
+    for model in synth::MODELS {
+        let dir = fresh_dir(&format!("simd_{model}"));
+        synth::write_model(&dir, model, 42).unwrap();
+        let be = load(BackendKind::Native, &dir, model).unwrap();
+        let data = ModelData::load(&dir, model).unwrap();
+        let m = be.manifest();
+        let calib =
+            Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
+                .calibrate(&data, 3)
+                .unwrap();
+        let xb = ModelData::batch(&data.x_calib, 0, m.batch);
+        let xt = ModelData::batch(&data.x_test, 0, m.batch);
+
+        let run = || {
+            let collect = be.run_collect(xb).unwrap();
+            let quant: Vec<Vec<f32>> = [(0.0f32, 7u32), (0.5, 9)]
+                .iter()
+                .map(|&(noise_std, seed)| {
+                    be.run_qfwd(xt, &calib.programmed, noise_std, seed)
+                        .unwrap()
+                })
+                .collect();
+            (collect, quant)
+        };
+
+        simd::force_scalar(true);
+        let (sc, sq) = run();
+        simd::force_scalar(false);
+        let (vc, vq) = run();
+
+        assert_eq!(
+            bits(&sc.logits),
+            bits(&vc.logits),
+            "{model}: collect logits diverged between scalar and SIMD"
+        );
+        assert_eq!(sc.samples, vc.samples, "{model}: collect subsamples");
+        assert_eq!(sc.tile_max, vc.tile_max, "{model}: collect tile absmax");
+        for (i, (s, v)) in sq.iter().zip(&vq).enumerate() {
+            assert_eq!(
+                bits(s),
+                bits(v),
+                "{model}: qfwd noise variant {i} diverged between scalar \
+                 and SIMD"
+            );
+        }
     }
 }
 

@@ -1,0 +1,215 @@
+//! Differential fuzz harness for the vectorized IMC hot path
+//! (DESIGN.md §12): random tile shapes, ladders, sparsity and noise
+//! settings, asserting the fused/vectorized kernels are **bit-identical**
+//! to the frozen scalar reference kernels in `ops::reference` — under
+//! both the forced-scalar fallback and the runtime-dispatched SIMD path.
+//!
+//! CI runs this suite at `BSKMQ_THREADS` 1 and 8, so the parity claim
+//! also covers the deterministic row partitioning.
+
+use std::sync::Mutex;
+
+use bskmq::backend::native::ops::{
+    self, bias_relu_convert_into, floor_adc, nl_convert_into,
+    tiled_mac_into, AdcLut, ConvertSpec,
+};
+use bskmq::backend::native::simd;
+use bskmq::quant::codebook::Codebook;
+use bskmq::tensor::Tensor;
+
+/// Serializes `force_scalar` toggles across this binary's test threads
+/// (the flag is process-global; both settings produce identical bits,
+/// so the lock only keeps each assertion's label honest).
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` twice — forced-scalar, then runtime-dispatched — and return
+/// both results for bitwise comparison.
+fn scalar_and_simd<R>(mut f: impl FnMut() -> R) -> (R, R) {
+    let _g = FORCE_LOCK.lock().unwrap();
+    simd::force_scalar(true);
+    let a = f();
+    simd::force_scalar(false);
+    let b = f();
+    (a, b)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Tiny deterministic generator for fuzz inputs (the kernels' own RNG
+/// stays reserved for conversion noise).
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 16
+    }
+
+    fn pick(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() % (hi - lo + 1) as u64) as usize
+    }
+
+    fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let u = (self.next() % (1 << 24)) as f32 / (1u64 << 24) as f32;
+        lo + (hi - lo) * u
+    }
+}
+
+/// A random padded ladder: 2..=16 sorted centers (duplicates allowed —
+/// k-means pads empty clusters that way), padded to a random capacity.
+fn random_ladder(g: &mut Lcg) -> (Vec<f32>, Vec<f32>) {
+    let levels = g.pick(2, 16);
+    let mut centers = Vec::with_capacity(levels);
+    let mut c = g.f32(-30.0, 0.0) as f64;
+    for _ in 0..levels {
+        centers.push(c);
+        c += g.f32(0.0, 8.0) as f64; // 0-width steps = duplicates
+    }
+    let pad = levels + g.pick(0, 16);
+    Codebook::from_centers(&centers).padded(pad)
+}
+
+fn random_x(g: &mut Lcg, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            if g.pick(0, 9) < 3 {
+                0.0 // exercise the `a != 0.0` skip
+            } else {
+                g.f32(-2.0, 2.0)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn fuzz_tiled_mac_bit_identical_to_reference() {
+    let mut g = Lcg(0x5eed_0001);
+    for iter in 0..40 {
+        let m = g.pick(1, 9);
+        let k = g.pick(1, 70);
+        let n = g.pick(1, 40);
+        let tile_k = [1, 3, 16, 256][g.pick(0, 3)];
+        let x = random_x(&mut g, m * k);
+        let w = Tensor::new(
+            vec![k, n],
+            (0..k * n).map(|_| g.f32(-1.0, 1.0)).collect(),
+        )
+        .unwrap();
+        let (t_refs, t_centers) = random_ladder(&mut g);
+        let sigma = if iter % 2 == 0 { 0.0 } else { g.f32(0.05, 0.8) };
+        let spec = ConvertSpec {
+            refs: &t_refs,
+            centers: &t_centers,
+            sigma,
+            seed: g.next(),
+        };
+        for quant in [None, Some(&spec)] {
+            let mut want = vec![0f32; m * n];
+            let wmax = ops::reference::tiled_mac_into(
+                &x, m, k, &w, tile_k, quant, &mut want,
+            );
+            let ((smax, sout), (vmax, vout)) = scalar_and_simd(|| {
+                let mut out = vec![0f32; m * n];
+                let mx = tiled_mac_into(&x, m, k, &w, tile_k, quant, &mut out);
+                (mx, out)
+            });
+            let tag = format!(
+                "iter {iter} m {m} k {k} n {n} tile {tile_k} quant {} \
+                 sigma {sigma}",
+                quant.is_some()
+            );
+            assert_eq!(bits(&sout), bits(&want), "scalar vs ref: {tag}");
+            assert_eq!(bits(&vout), bits(&want), "simd vs ref: {tag}");
+            assert_eq!(smax.to_bits(), wmax.to_bits(), "absmax scalar: {tag}");
+            assert_eq!(vmax.to_bits(), wmax.to_bits(), "absmax simd: {tag}");
+        }
+    }
+}
+
+#[test]
+fn fuzz_fused_epilogue_bit_identical_to_reference() {
+    let mut g = Lcg(0x5eed_0002);
+    for iter in 0..60 {
+        let rows = g.pick(1, 24);
+        let cols = g.pick(1, 50);
+        let y0 = random_x(&mut g, rows * cols);
+        let bias: Vec<f32> = (0..cols).map(|_| g.f32(-3.0, 3.0)).collect();
+        let relu = iter % 2 == 0;
+        let sigma = if iter % 3 == 0 { 0.0 } else { g.f32(0.05, 0.9) };
+        let (refs, centers) = random_ladder(&mut g);
+        let seed = g.next();
+        let mut want = y0.clone();
+        ops::reference::bias_relu_convert_into(
+            &mut want, rows, cols, &bias, relu, &refs, &centers, sigma, seed,
+        );
+        let (sout, vout) = scalar_and_simd(|| {
+            let mut out = y0.clone();
+            bias_relu_convert_into(
+                &mut out, rows, cols, &bias, relu, &refs, &centers, sigma,
+                seed,
+            );
+            out
+        });
+        let tag = format!("iter {iter} rows {rows} cols {cols} relu {relu}");
+        assert_eq!(bits(&sout), bits(&want), "scalar vs ref: {tag}");
+        assert_eq!(bits(&vout), bits(&want), "simd vs ref: {tag}");
+    }
+}
+
+#[test]
+fn fuzz_nl_convert_bit_identical_to_reference() {
+    let mut g = Lcg(0x5eed_0003);
+    for iter in 0..60 {
+        let rows = g.pick(1, 24);
+        let cols = g.pick(1, 50);
+        let y0 = random_x(&mut g, rows * cols);
+        let sigma = if iter % 3 == 0 { 0.0 } else { g.f32(0.05, 0.9) };
+        let (refs, centers) = random_ladder(&mut g);
+        let seed = g.next();
+        let mut want = y0.clone();
+        ops::reference::nl_convert_into(
+            &mut want, rows, cols, &refs, &centers, sigma, seed,
+        );
+        let (sout, vout) = scalar_and_simd(|| {
+            let mut out = y0.clone();
+            nl_convert_into(&mut out, rows, cols, &refs, &centers, sigma, seed);
+            out
+        });
+        let tag = format!("iter {iter} rows {rows} cols {cols} sigma {sigma}");
+        assert_eq!(bits(&sout), bits(&want), "scalar vs ref: {tag}");
+        assert_eq!(bits(&vout), bits(&want), "simd vs ref: {tag}");
+    }
+}
+
+#[test]
+fn fuzz_adc_lut_exact_on_random_ladders() {
+    let mut g = Lcg(0x5eed_0004);
+    for iter in 0..200 {
+        let (refs, centers) = random_ladder(&mut g);
+        let adc = AdcLut::new(&refs, &centers);
+        let mut probes: Vec<f32> =
+            vec![f32::NEG_INFINITY, f32::NAN, -1e30, 1e30, 0.0, -0.0];
+        for &r in refs.iter().filter(|r| r.is_finite()) {
+            probes.push(r);
+            probes.push(r - f32::EPSILON * r.abs().max(1.0));
+            probes.push(r + f32::EPSILON * r.abs().max(1.0));
+        }
+        for _ in 0..50 {
+            probes.push(g.f32(-60.0, 120.0));
+        }
+        for &p in &probes {
+            let want = floor_adc(&refs, &centers, p);
+            let got = adc.convert(p);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "iter {iter} probe {p} refs {refs:?}"
+            );
+        }
+    }
+}
