@@ -1,136 +1,357 @@
-//! Bench: replica-pool serving throughput vs replica count (the scaling
-//! the pool architecture buys on one box), plus the observability
-//! surfaces: rejection rate under a saturating burst, queue-wait
-//! percentiles, and a BENCH-schema json written through the shared
-//! report writer.  Runs on the trained artifacts when present,
-//! otherwise on the library's synthetic ones — no Python, no HLO
-//! needed.
+//! The closed-loop serving load harness (DESIGN.md §13): drive ≥1M
+//! requests through the replica pools at controlled offered
+//! concurrency and measure throughput, tail latency, and shed rate vs
+//! offered load — the saturation numbers behind the ROADMAP's
+//! millions-of-users claim.  Four phases:
+//!
+//! 1. **ladder** — offered load 1→256 closed-loop clients against a
+//!    fixed 4-replica pool: throughput-vs-offered-load and p50/p99/p999.
+//! 2. **overload** — 256 clients vs one replica with a tight deadline
+//!    (well past 2× saturation): graceful degradation means admitted
+//!    requests stay fast and the excess is shed with explicit overload
+//!    replies, not a collapsing tail.
+//! 3. **autoscale** — a 1..4-replica autoscaling pool under load:
+//!    queue depth drives `Backend::replicate()` scale-up.
+//! 4. **tcp** — the epoll event front end-to-end: pipelined NODELAY
+//!    connections over real sockets.
 //!
 //!   cargo bench --bench serving
-//!   BSKMQ_THREADS=1 cargo bench --bench serving   # per-replica 1 thread
-//!   BSKMQ_BENCH_OUT=/tmp cargo bench --bench serving  # also write json
+//!   BSKMQ_LOAD_TOTAL=50000  scale the request budget (default 1M)
+//!   BSKMQ_LOAD_ASSERT=1     enforce p999/shed/accounting bounds (CI)
+//!   BSKMQ_BENCH_OUT=DIR     also write BENCH_<rev>.json (schema v2)
+//!   BSKMQ_THREADS=N         compute threads per replica
 
-use std::sync::atomic::Ordering;
-use std::time::Instant;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
 
 use bskmq::backend::BackendKind;
-use bskmq::coordinator::server::{ModelPool, PoolConfig};
+use bskmq::coordinator::front::{FrontKind, ServeFront};
+use bskmq::coordinator::loadgen::closed_loop;
+use bskmq::coordinator::server::{ModelPool, ModelRegistry, PoolConfig};
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
-use bskmq::obs::bench_report::{short_rev, BenchReport, ModelBench};
-use bskmq::util::stats::rate;
+use bskmq::obs::bench_report::{short_rev, BenchReport, ServingPoint};
 
-fn main() -> anyhow::Result<()> {
-    // trained artifacts when present, synthetic fallback otherwise
+const MODEL: &str = "resnet";
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn print_point(p: &ServingPoint) {
+    println!(
+        "  [{:<9}] offered {:>4}: {:>9.0} req/s  p50 {:>7.2}ms p99 {:>7.2}ms \
+         p999 {:>7.2}ms  shed {:>5.1}%  rej {}  err {}  ({} requests, \
+         {:.1}s wall)",
+        p.phase,
+        p.offered,
+        p.throughput_rps,
+        p.p50_ms,
+        p.p99_ms,
+        p.p999_ms,
+        p.shed_rate() * 100.0,
+        p.rejected,
+        p.errors,
+        p.requests,
+        p.wall_s,
+    );
+}
+
+fn check_accounting(p: &ServingPoint) -> Result<()> {
+    ensure!(
+        p.completed + p.shed + p.rejected + p.errors == p.requests,
+        "[{}] accounting broken: {} + {} + {} + {} != {}",
+        p.phase,
+        p.completed,
+        p.shed,
+        p.rejected,
+        p.errors,
+        p.requests
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
     let artifacts = synth::ensure_artifacts()?;
-    println!("artifacts: {}", artifacts.display());
-    let data = ModelData::load(&artifacts, "resnet")?;
+    let total = env_u64("BSKMQ_LOAD_TOTAL", 1_000_000);
+    let assert_bounds =
+        std::env::var("BSKMQ_LOAD_ASSERT").ok().as_deref() == Some("1");
+    println!(
+        "artifacts: {} | request budget {} | bounds {}",
+        artifacts.display(),
+        total,
+        if assert_bounds { "ENFORCED" } else { "reported only" },
+    );
+
+    let data = ModelData::load(&artifacts, MODEL)?;
     let in_elems: usize = data.x_test.shape[1..].iter().product();
-    let n_clients = 8usize;
-    let reqs_per_client = 64usize;
+    // a cycle of slightly-varied inputs so batches are never
+    // byte-identical across the run
+    let inputs: Vec<Vec<f32>> = (0..64)
+        .map(|k| {
+            let mut xi = data.x_test.data[..in_elems].to_vec();
+            xi[0] += k as f32 * 1e-6;
+            xi
+        })
+        .collect();
+    let mut points: Vec<ServingPoint> = Vec::new();
 
-    let mut best: Option<ModelBench> = None;
-    for replicas in [1usize, 2, 4] {
-        let cfg = PoolConfig {
-            backend: BackendKind::Native,
-            replicas,
-            queue_depth: 4096,
-            calib_batches: 2,
-            ..PoolConfig::default()
-        };
-        let pool =
-            ModelPool::start(artifacts.clone(), "resnet".to_string(), &cfg)?;
-        // warm up the whole pool once before timing
-        pool.infer(data.x_test.data[..in_elems].to_vec())?;
-        let t0 = Instant::now();
-        std::thread::scope(|s| {
-            for c in 0..n_clients {
-                let client = pool.client();
-                let x_test = &data.x_test;
-                s.spawn(move || {
-                    for r in 0..reqs_per_client {
-                        let idx = (c * 31 + r * 7) % x_test.shape[0];
-                        let x = x_test.data
-                            [idx * in_elems..(idx + 1) * in_elems]
-                            .to_vec();
-                        client.infer(x).expect("bench request failed");
-                    }
-                });
-            }
-        });
-        let wall = t0.elapsed().as_secs_f64();
-        let total = (n_clients * reqs_per_client) as f64;
-        println!(
-            "replicas {replicas}: {total:.0} reqs in {wall:.2}s -> {:7.1} req/s",
-            total / wall
+    // ----- phase 1: throughput/latency ladder on a fixed pool ---------
+    let ladder_deadline = Duration::from_millis(250);
+    let ladder: &[usize] = &[1, 8, 32, 128, 256];
+    let per_point = (total * 3 / 4 / ladder.len() as u64).max(1);
+    let cfg = PoolConfig {
+        backend: BackendKind::Native,
+        replicas: 4,
+        queue_depth: 8192,
+        calib_batches: 2,
+        request_deadline: ladder_deadline,
+        ..PoolConfig::default()
+    };
+    let mut pool = ModelPool::start(artifacts.clone(), MODEL.to_string(), &cfg)?;
+    pool.infer(inputs[0].clone())?; // warm every code path once
+    let client = pool.client();
+    println!("ladder: {} requests per offered-load point", per_point);
+    for &offered in ladder {
+        let p = closed_loop(
+            &client,
+            &inputs,
+            MODEL,
+            "ladder",
+            offered,
+            per_point,
+            ladder_deadline,
         );
-        println!("  {}", pool.stats.summary());
-        let qw = pool.stats.queue_percentiles_ms(&[0.5, 0.95, 0.99]);
-        println!(
-            "  queue wait: p50={:.3}ms p95={:.3}ms p99={:.3}ms",
-            qw[0], qw[1], qw[2]
-        );
-        let lat = pool.stats.percentiles_ms(&[0.5, 0.99, 0.999]);
-        best = Some(ModelBench {
-            model: "resnet".to_string(),
-            batch: pool.batch(),
-            forwards_per_sec: rate(
-                pool.stats.batches.load(Ordering::Relaxed) as f64,
-                wall,
-            ),
-            qfwd_batch_ns: 0, // serving bench: no isolated forward timing
-            calib_samples_per_sec: 0.0,
-            serve_p50_ms: lat[0],
-            serve_p99_ms: lat[1],
-            serve_p999_ms: lat[2],
-            serve_requests: pool.stats.requests.load(Ordering::Relaxed),
-            serve_rejected: pool.rejected(),
-            queue_p50_ms: qw[0],
-            queue_p99_ms: qw[2],
-            per_op_ns: Vec::new(),
-        });
+        print_point(&p);
+        check_accounting(&p)?;
+        if assert_bounds {
+            ensure!(p.errors == 0, "ladder@{offered}: {} errors", p.errors);
+            ensure!(
+                p.rejected == 0,
+                "ladder@{offered}: {} rejected with depth 8192",
+                p.rejected
+            );
+            let bound = ladder_deadline.as_secs_f64() * 1e3 + 500.0;
+            ensure!(
+                p.p999_ms <= bound,
+                "ladder@{offered}: p999 {:.1}ms exceeds {:.0}ms",
+                p.p999_ms,
+                bound
+            );
+        }
+        points.push(p);
     }
+    println!("  {}", pool.stats.summary());
+    pool.shutdown();
 
-    // rejection rate under a saturating burst: a depth-8 queue with one
-    // replica cannot absorb 512 back-to-back submits
+    // ----- phase 2: overload — shedding, not collapse -----------------
+    let overload_deadline = Duration::from_millis(25);
     let cfg = PoolConfig {
         backend: BackendKind::Native,
         replicas: 1,
-        queue_depth: 8,
+        queue_depth: 4096,
         calib_batches: 2,
+        request_deadline: overload_deadline,
         ..PoolConfig::default()
     };
-    let pool =
-        ModelPool::start(artifacts.clone(), "resnet".to_string(), &cfg)?;
+    let mut pool = ModelPool::start(artifacts.clone(), MODEL.to_string(), &cfg)?;
     let client = pool.client();
-    let burst = 512usize;
-    let mut kept = Vec::new();
-    for _ in 0..burst {
-        if let Ok(rx) = client.submit(data.x_test.data[..in_elems].to_vec()) {
-            kept.push(rx);
-        }
-    }
-    for rx in &kept {
-        let _ = rx.recv();
-    }
-    let rejected = pool.rejected();
-    println!(
-        "burst {burst} vs queue depth 8: {} accepted, {} rejected \
-         (rejection rate {:.1}%)",
-        kept.len(),
-        rejected,
-        100.0 * rate(rejected as f64, burst as f64),
+    let p = closed_loop(
+        &client,
+        &inputs,
+        MODEL,
+        "overload",
+        256,
+        (total / 4).max(1),
+        overload_deadline,
     );
+    print_point(&p);
+    check_accounting(&p)?;
+    let stats_shed = pool.shed();
+    let prom = {
+        use bskmq::obs::prometheus::PromWriter;
+        let mut w = PromWriter::new();
+        pool.render_prometheus(&mut w);
+        w.finish()
+    };
+    if assert_bounds {
+        ensure!(
+            p.shed > 0,
+            "overload phase shed nothing — 256 clients vs 1 replica with a \
+             25ms deadline must overload"
+        );
+        ensure!(
+            stats_shed == p.shed,
+            "ServerStats shed {} != client-observed shed {}",
+            stats_shed,
+            p.shed
+        );
+        ensure!(
+            prom.contains("bskmq_shed_total"),
+            "shed counter missing from the Prometheus page"
+        );
+        let bound = overload_deadline.as_secs_f64() * 1e3 + 500.0;
+        ensure!(
+            p.p999_ms <= bound,
+            "overload: admitted p999 {:.1}ms exceeds {:.0}ms — tail \
+             collapse instead of shedding",
+            p.p999_ms,
+            bound
+        );
+    }
+    points.push(p);
+    println!("  {}", pool.stats.summary());
+    pool.shutdown();
 
-    // emit the serving numbers through the shared BENCH writer so this
-    // bench and `bskmq bench` agree on the schema (opt-in: set
-    // BSKMQ_BENCH_OUT to a directory)
+    // ----- phase 3: queue-depth-driven autoscaling --------------------
+    let cfg = PoolConfig {
+        backend: BackendKind::Native,
+        replicas: 1,
+        max_replicas: 4,
+        queue_depth: 8192,
+        calib_batches: 2,
+        request_deadline: ladder_deadline,
+        scale_check: Duration::from_millis(5),
+        ..PoolConfig::default()
+    };
+    let mut pool = ModelPool::start(artifacts.clone(), MODEL.to_string(), &cfg)?;
+    let client = pool.client();
+    let p = closed_loop(
+        &client,
+        &inputs,
+        MODEL,
+        "autoscale",
+        32,
+        (total / 20).max(1),
+        ladder_deadline,
+    );
+    print_point(&p);
+    check_accounting(&p)?;
+    println!(
+        "  autoscale pool finished at {} live replica(s) (bounds 1..4)",
+        pool.live_replicas()
+    );
+    points.push(p);
+    pool.shutdown();
+
+    // ----- phase 4: the TCP event front over real sockets -------------
+    let cfg = PoolConfig {
+        backend: BackendKind::Native,
+        replicas: 2,
+        queue_depth: 8192,
+        calib_batches: 2,
+        request_deadline: ladder_deadline,
+        ..PoolConfig::default()
+    };
+    let registry = Arc::new(ModelRegistry::start(
+        &artifacts,
+        &[MODEL.to_string()],
+        &cfg,
+    )?);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let kind = FrontKind::default_for_platform();
+    let mut front = ServeFront::spawn(registry.clone(), listener, kind)?;
+    let addr = front.addr();
+    let conns = 32usize;
+    let per_conn = 200usize;
+    let line: String = {
+        let floats: Vec<String> =
+            inputs[0].iter().map(|v| v.to_string()).collect();
+        floats.join(",")
+    };
+    let t0 = std::time::Instant::now();
+    let errors: usize = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..conns)
+            .map(|_| {
+                let line = &line;
+                scope.spawn(move || -> usize {
+                    let stream = TcpStream::connect(addr).expect("connect");
+                    stream.set_nodelay(true).expect("nodelay");
+                    let mut out = stream.try_clone().expect("clone");
+                    let mut reader = BufReader::new(stream);
+                    // pipelined: write every request, then read every
+                    // reply (the event front preserves per-conn order)
+                    let mut payload = String::new();
+                    for _ in 0..per_conn {
+                        payload.push_str(line);
+                        payload.push('\n');
+                    }
+                    out.write_all(payload.as_bytes()).expect("write");
+                    let mut errs = 0usize;
+                    let mut reply = String::new();
+                    for _ in 0..per_conn {
+                        reply.clear();
+                        reader.read_line(&mut reply).expect("read");
+                        if reply.starts_with("error:") {
+                            errs += 1;
+                        }
+                    }
+                    errs
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let tcp_total = (conns * per_conn) as u64;
+    println!(
+        "  [{:<9}] {} conns x {} pipelined reqs over {} front: {:.0} req/s \
+         ({} error replies, {:.1}s wall)",
+        "tcp",
+        conns,
+        per_conn,
+        kind.name(),
+        tcp_total as f64 / wall,
+        errors,
+        wall,
+    );
+    if assert_bounds {
+        ensure!(errors == 0, "tcp phase: {errors} error replies");
+    }
+    points.push(ServingPoint {
+        phase: "tcp".to_string(),
+        model: MODEL.to_string(),
+        offered: conns,
+        requests: tcp_total,
+        completed: tcp_total - errors as u64,
+        shed: 0,
+        rejected: 0,
+        errors: errors as u64,
+        wall_s: wall,
+        throughput_rps: tcp_total as f64 / wall,
+        p50_ms: 0.0, // per-request timing is hidden by pipelining
+        p99_ms: 0.0,
+        p999_ms: 0.0,
+        deadline_ms: ladder_deadline.as_secs_f64() * 1e3,
+    });
+    front.stop();
+    drop(front);
+    drop(registry);
+
+    let grand: u64 = points.iter().map(|p| p.requests).sum();
+    println!("total driven: {grand} requests across {} points", points.len());
+    if assert_bounds {
+        ensure!(
+            grand >= total,
+            "harness drove {grand} requests, budget was {total}"
+        );
+    }
+
+    // emit through the shared BENCH writer (schema v2 serving section)
     if let Ok(dir) = std::env::var("BSKMQ_BENCH_OUT") {
         let mut report = BenchReport::new(&short_rev(), false);
-        report.note =
-            "benches/serving.rs: serving-only pass (no qfwd/calib timing)"
-                .to_string();
-        report.models.extend(best);
+        report.note = format!(
+            "benches/serving.rs closed-loop load harness ({} requests)",
+            grand
+        );
+        report.serving = points;
         let path = report.write(std::path::Path::new(&dir))?;
         println!("wrote {}", path.display());
     }

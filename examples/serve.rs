@@ -2,17 +2,21 @@
 //! fire concurrent client threads at both models, and report latency /
 //! throughput, the per-replica batching behaviour, the observability
 //! surfaces (JSON stats, request-lifecycle spans, quantization-health
-//! Prometheus series), and admission control rejecting a burst against
-//! a tiny queue.  Falls back to synthetic artifacts when the trained
-//! ones are absent, so it runs in any checkout:
+//! Prometheus series), admission control rejecting a burst against a
+//! tiny queue, deadline shedding answering a burst with explicit
+//! overload replies, and the TCP front serving pipelined NODELAY
+//! clients over real sockets.  Falls back to synthetic artifacts when
+//! the trained ones are absent, so it runs in any checkout:
 //!
 //!   cargo run --release --example serve
 //!   BSKMQ_REPLICAS=4 cargo run --release --example serve
 
+use std::io::{BufRead, BufReader, Write};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use bskmq::backend::BackendKind;
+use bskmq::coordinator::front::{FrontKind, ServeFront};
 use bskmq::coordinator::server::{
     ModelPool, ModelRegistry, ObsConfig, PoolConfig,
 };
@@ -169,5 +173,83 @@ fn main() -> anyhow::Result<()> {
         kept.len(),
         tiny.rejected()
     );
+    drop(tiny);
+
+    // deadline shedding: with a zero deadline every admitted request is
+    // past-due at batch assembly, so the pool answers the whole burst
+    // with explicit overload replies instead of hanging clients
+    println!("\ndeadline-shedding demo (deadline 0 ms, replicas 1):");
+    let shedder = ModelPool::start(
+        artifacts.clone(),
+        "resnet".to_string(),
+        &PoolConfig {
+            backend: cfg.backend,
+            replicas: 1,
+            queue_depth: 256,
+            calib_batches: 2,
+            request_deadline: std::time::Duration::ZERO,
+            ..PoolConfig::default()
+        },
+    )?;
+    let client = shedder.client();
+    let rxs: Vec<_> = (0..32)
+        .filter_map(|_| {
+            client.submit(data.x_test.data[..in_elems].to_vec()).ok()
+        })
+        .collect();
+    let mut overloads = 0usize;
+    for rx in rxs {
+        if let Ok(Err(e)) = rx.recv() {
+            if e.is_overload() {
+                overloads += 1;
+            }
+        }
+    }
+    println!(
+        "  burst of 32: {overloads} shed with explicit overload replies \
+         (pool shed counter {})",
+        shedder.shed()
+    );
+    drop(shedder);
+
+    // the TCP front: epoll event loop on linux, thread-per-connection
+    // elsewhere.  Protocol clients always set TCP_NODELAY — the
+    // line-oriented protocol writes one small reply per request, which
+    // Nagle would otherwise hold back.
+    let kind = FrontKind::default_for_platform();
+    println!("\nTCP front demo ({} front):", kind.name());
+    let registry = std::sync::Arc::new(registry);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let mut front = ServeFront::spawn(registry.clone(), listener, kind)?;
+    let stream = std::net::TcpStream::connect(front.addr())?;
+    stream.set_nodelay(true)?;
+    let mut out = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let floats: Vec<String> = data.x_test.data[..in_elems]
+        .iter()
+        .map(|v| v.to_string())
+        .collect();
+    let infer_line = floats.join(",");
+    // pipelined: three inferences and a stats line in one write
+    let mut payload = String::new();
+    for _ in 0..3 {
+        payload.push_str(&infer_line);
+        payload.push('\n');
+    }
+    payload.push_str("stats --text\n");
+    out.write_all(payload.as_bytes())?;
+    let mut reply = String::new();
+    for i in 0..4 {
+        reply.clear();
+        reader.read_line(&mut reply)?;
+        let trimmed = reply.trim_end();
+        let shown = if trimmed.len() > 72 {
+            &trimmed[..72]
+        } else {
+            trimmed
+        };
+        println!("  reply {i}: {shown}");
+    }
+    front.stop();
     Ok(())
 }

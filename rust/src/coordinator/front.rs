@@ -1,0 +1,947 @@
+//! TCP serving fronts over a [`ModelRegistry`] (DESIGN.md §13).
+//!
+//! Two interchangeable fronts speak the same line protocol — one line
+//! `[model:]f1,f2,...` in, one line of logits (or `error: ...`) out,
+//! plus the `stats` / `stats --text` / `metrics` commands:
+//!
+//! * [`FrontKind::Threaded`] — the historical thread-per-connection
+//!   accept loop.  Simple, blocking, and kept as the oracle: the
+//!   agreement test (`rust/tests/serving_front.rs`) pins the event
+//!   front's replies byte-identical to it.
+//! * [`FrontKind::Event`] — a nonblocking epoll event loop (linux)
+//!   multiplexing thousands of connections onto one thread.  Requests
+//!   are submitted with a completion-queue reply route; replies come
+//!   back through a self-pipe wakeup and are written in request order
+//!   per connection (the protocol is pipelined: a client may send many
+//!   lines before reading any reply).
+//!
+//! Both fronts build every reply through the same [`classify`] /
+//! [`format_reply`] helpers, so protocol bytes are identical by
+//! construction; both set `TCP_NODELAY` on accepted sockets (the
+//! line-oriented protocol writes one small reply per request, which
+//! Nagle would otherwise delay).  The front never blocks on the pool:
+//! admission control and deadline shedding guarantee every submitted
+//! request gets exactly one reply.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::pool::{
+    ModelRegistry, PoolClient, Reply, REPLY_GRACE,
+};
+use crate::obs::prometheus::PromWriter;
+use crate::obs::registry::{Counter, Gauge, MetricsRegistry};
+
+/// Which serving front multiplexes the TCP connections.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrontKind {
+    /// nonblocking epoll event loop (linux only)
+    Event,
+    /// one thread per connection (the historical front, kept as the
+    /// byte-identity oracle)
+    Threaded,
+}
+
+impl FrontKind {
+    pub fn parse(s: &str) -> Result<FrontKind> {
+        match s {
+            "event" => Ok(FrontKind::Event),
+            "threaded" | "thread" => Ok(FrontKind::Threaded),
+            other => bail!("unknown front '{other}' (event|threaded)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrontKind::Event => "event",
+            FrontKind::Threaded => "threaded",
+        }
+    }
+
+    /// The event front where epoll exists, the threaded front elsewhere.
+    pub fn default_for_platform() -> FrontKind {
+        if cfg!(target_os = "linux") {
+            FrontKind::Event
+        } else {
+            FrontKind::Threaded
+        }
+    }
+}
+
+/// State both fronts share: the routed registry plus front-level
+/// telemetry (connection gauge/counter rendered on the `metrics` page).
+struct FrontShared {
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<MetricsRegistry>,
+    conns: AtomicU64,
+    conn_gauge: Arc<Gauge>,
+    accepted: Arc<Counter>,
+    stop: AtomicBool,
+}
+
+impl FrontShared {
+    fn conn_opened(&self) {
+        let n = self.conns.fetch_add(1, Ordering::SeqCst) + 1;
+        self.conn_gauge.set(n as f64);
+    }
+
+    fn conn_closed(&self) {
+        let n = self.conns.fetch_sub(1, Ordering::SeqCst) - 1;
+        self.conn_gauge.set(n as f64);
+    }
+
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+/// A running TCP front.  Dropping (or [`ServeFront::stop`]) shuts the
+/// accept/event loop down and joins its thread; the registry and its
+/// pools stay up — fronts are replaceable, pools are the server.
+pub struct ServeFront {
+    kind: FrontKind,
+    addr: SocketAddr,
+    shared: Arc<FrontShared>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl ServeFront {
+    /// Start serving `listener`'s connections against `registry` on a
+    /// background thread.  The event front requires linux epoll; asking
+    /// for it elsewhere is an error (pick
+    /// [`FrontKind::default_for_platform`] when in doubt).
+    pub fn spawn(
+        registry: Arc<ModelRegistry>,
+        listener: TcpListener,
+        kind: FrontKind,
+    ) -> Result<ServeFront> {
+        #[cfg(not(target_os = "linux"))]
+        {
+            if matches!(kind, FrontKind::Event) {
+                bail!("the event front needs linux epoll; use --front threaded");
+            }
+        }
+        let addr = listener.local_addr()?;
+        let metrics = Arc::new(MetricsRegistry::new());
+        let conn_gauge = metrics.gauge("bskmq_connections");
+        let accepted = metrics.counter("bskmq_connections_accepted_total");
+        let shared = Arc::new(FrontShared {
+            registry,
+            metrics,
+            conns: AtomicU64::new(0),
+            conn_gauge,
+            accepted,
+            stop: AtomicBool::new(false),
+        });
+        let sh = shared.clone();
+        let handle = match kind {
+            FrontKind::Threaded => {
+                std::thread::spawn(move || threaded_loop(&sh, listener))
+            }
+            FrontKind::Event => {
+                std::thread::spawn(move || event_front_entry(&sh, listener))
+            }
+        };
+        Ok(ServeFront {
+            kind,
+            addr,
+            shared,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn kind(&self) -> FrontKind {
+        self.kind
+    }
+
+    /// The bound address (useful with port 0 in tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Front-level metrics (connection gauge, accepted counter); also
+    /// rendered on the `metrics` protocol page.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.shared.metrics
+    }
+
+    /// Currently open connections.
+    pub fn connections(&self) -> u64 {
+        self.shared.conns.load(Ordering::SeqCst)
+    }
+
+    /// Signal the loop to stop, then join it.  Idempotent; also runs on
+    /// Drop.  Open connections are torn down, in-flight requests still
+    /// get served by the pools (their replies just have nowhere to go).
+    pub fn stop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("{} front failed: {e:#}", self.kind.name()),
+                Err(_) => eprintln!("{} front panicked", self.kind.name()),
+            }
+        }
+    }
+
+    /// Block until the front exits (it only exits on [`ServeFront::stop`]
+    /// or a fatal loop error).
+    pub fn join(&mut self) -> Result<()> {
+        match self.handle.take() {
+            Some(h) => match h.join() {
+                Ok(r) => r,
+                Err(_) => bail!("{} front panicked", self.kind.name()),
+            },
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ServeFront {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// What one protocol line asks for.
+enum Action {
+    /// empty line: no reply
+    Nothing,
+    /// a complete reply, ready to write (stats/metrics/errors)
+    Text(String),
+    /// submit `x` to pool index `idx`
+    Infer(usize, Vec<f32>),
+}
+
+/// Parse one trimmed protocol line.  Every reply byte either front
+/// writes for a given line originates here or in [`format_reply`], which
+/// is what makes the two fronts byte-identical by construction.
+fn classify(sh: &FrontShared, t: &str) -> Action {
+    if t.is_empty() {
+        return Action::Nothing;
+    }
+    if t == "stats" {
+        return Action::Text(format!("{}\n", sh.registry.stats_json()));
+    }
+    if t == "stats --text" {
+        return Action::Text(format!(
+            "{}\n",
+            sh.registry.summary().replace('\n', " | ")
+        ));
+    }
+    if t == "metrics" {
+        // Prometheus text exposition 0.0.4, terminated by a blank line
+        // so line-oriented clients know where the page ends
+        return Action::Text(format!("{}\n", metrics_page(sh)));
+    }
+    // route by `model:` prefix; bare lines go to the default pool
+    let (idx, payload) = match t.split_once(':') {
+        Some((name, rest)) => {
+            match sh.registry.pools().iter().position(|p| p.model == name) {
+                Some(i) => (i, rest),
+                None => {
+                    return Action::Text(format!(
+                        "error: unknown model '{name}' (serving: {})\n",
+                        sh.registry.models().join(",")
+                    ));
+                }
+            }
+        }
+        None => (0, t),
+    };
+    let parsed: std::result::Result<Vec<f32>, _> = payload
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().parse::<f32>())
+        .collect();
+    match parsed {
+        Ok(x) => Action::Infer(idx, x),
+        Err(e) => Action::Text(format!("error: parsing input floats: {e}\n")),
+    }
+}
+
+/// Format one pool reply as protocol bytes.
+fn format_reply(r: &Reply) -> String {
+    match r {
+        Ok(logits) => {
+            let s: Vec<String> =
+                logits.iter().map(|v| format!("{v:.6}")).collect();
+            format!("{}\n", s.join(","))
+        }
+        Err(e) => format!("error: {e}\n"),
+    }
+}
+
+/// A submit refused before admission (wrong size, queue full, closed).
+fn format_submit_error(e: &anyhow::Error) -> String {
+    format!("error: {e:#}\n")
+}
+
+/// The `metrics` page: every pool's series plus the front's own
+/// connection telemetry, through one writer.
+fn metrics_page(sh: &FrontShared) -> String {
+    let mut w = PromWriter::new();
+    for p in sh.registry.pools() {
+        p.render_prometheus(&mut w);
+    }
+    sh.metrics.render(&mut w);
+    w.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Threaded front (the oracle)
+// ---------------------------------------------------------------------------
+
+/// Accept loop: one thread per connection.  Nonblocking accept with a
+/// short sleep so the stop flag is observed.
+fn threaded_loop(sh: &Arc<FrontShared>, listener: TcpListener) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let clients: Vec<PoolClient> =
+        sh.registry.pools().iter().map(|p| p.client()).collect();
+    std::thread::scope(|scope| {
+        loop {
+            if sh.stopping() {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    sh.accepted.inc();
+                    let sh = sh.clone();
+                    let clients = &clients;
+                    scope.spawn(move || {
+                        sh.conn_opened();
+                        if let Err(e) = threaded_conn(&sh, clients, stream) {
+                            eprintln!("client connection error: {e}");
+                        }
+                        sh.conn_closed();
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    eprintln!("accept failed: {e}");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+    });
+    Ok(())
+}
+
+/// One blocking client session.  Reads use a short timeout so the
+/// session also winds down when the front stops.
+fn threaded_conn(
+    sh: &FrontShared,
+    clients: &[PoolClient],
+    stream: TcpStream,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    'session: loop {
+        line.clear();
+        // assemble one full line, tolerating read timeouts (partial
+        // reads accumulate in `line` across retries)
+        loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => break 'session,
+                Ok(_) => break,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if sh.stopping() {
+                        break 'session;
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        match classify(sh, line.trim()) {
+            Action::Nothing => {}
+            Action::Text(s) => out.write_all(s.as_bytes())?,
+            Action::Infer(idx, x) => {
+                let c = &clients[idx];
+                match c.submit_deadline(x, c.deadline()) {
+                    Ok(rx) => {
+                        let s = match rx.recv_timeout(c.deadline() + REPLY_GRACE)
+                        {
+                            Ok(r) => format_reply(&r),
+                            Err(_) => {
+                                "error: request dropped or timed out\n"
+                                    .to_string()
+                            }
+                        };
+                        out.write_all(s.as_bytes())?;
+                    }
+                    Err(e) => {
+                        out.write_all(format_submit_error(&e).as_bytes())?
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Event front (linux epoll)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+fn event_front_entry(sh: &Arc<FrontShared>, listener: TcpListener) -> Result<()> {
+    event::run(sh, listener)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn event_front_entry(
+    _sh: &Arc<FrontShared>,
+    _listener: TcpListener,
+) -> Result<()> {
+    bail!("the event front needs linux epoll")
+}
+
+#[cfg(target_os = "linux")]
+mod event {
+    //! The epoll event loop.  No external crates: std already links
+    //! libc, so the four epoll symbols are declared directly.
+    //!
+    //! Life of a request: readable socket → buffered bytes split into
+    //! lines → [`classify`] → `submit_to` with a completion token
+    //! (slot | generation | sequence) → worker replies into the
+    //! [`CompletionQueue`], firing the self-pipe → the loop drains
+    //! completions, fills each connection's in-order pending queue, and
+    //! flushes.  Replies are written strictly in request order per
+    //! connection; a closed connection bumps its slot generation so
+    //! late completions for it are dropped instead of crossing wires.
+
+    use std::collections::VecDeque;
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::{AsRawFd, RawFd};
+    use std::os::unix::net::UnixStream;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    use anyhow::{ensure, Result};
+
+    use super::{
+        classify, format_reply, format_submit_error, Action, FrontShared,
+    };
+    use crate::coordinator::pool::{CompletionQueue, PoolClient, ReplyTo};
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    /// x86_64's epoll_event is packed (no padding between the fields);
+    /// other architectures use the natural layout.  Fields must be read
+    /// by value, never by reference.
+    #[cfg(target_arch = "x86_64")]
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(
+            epfd: i32,
+            op: i32,
+            fd: i32,
+            event: *mut EpollEvent,
+        ) -> i32;
+        fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout: i32,
+        ) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// Owned epoll instance.
+    struct Epoll {
+        fd: i32,
+    }
+
+    impl Epoll {
+        fn new() -> Result<Epoll> {
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            ensure!(
+                fd >= 0,
+                "epoll_create1 failed: {}",
+                std::io::Error::last_os_error()
+            );
+            Ok(Epoll { fd })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> Result<()> {
+            let mut ev = EpollEvent {
+                events,
+                data: token,
+            };
+            let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+            ensure!(
+                rc == 0,
+                "epoll_ctl failed: {}",
+                std::io::Error::last_os_error()
+            );
+            Ok(())
+        }
+
+        fn del(&self, fd: RawFd) {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            unsafe { epoll_ctl(self.fd, EPOLL_CTL_DEL, fd, &mut ev) };
+        }
+
+        /// Wait up to `timeout_ms`; EINTR reads as zero events.
+        fn wait(&self, out: &mut [EpollEvent], timeout_ms: i32) -> usize {
+            let rc = unsafe {
+                epoll_wait(
+                    self.fd,
+                    out.as_mut_ptr(),
+                    out.len() as i32,
+                    timeout_ms,
+                )
+            };
+            if rc < 0 {
+                0
+            } else {
+                rc as usize
+            }
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            unsafe { close(self.fd) };
+        }
+    }
+
+    const TOK_LISTENER: u64 = u64::MAX;
+    const TOK_WAKE: u64 = u64::MAX - 1;
+
+    /// At most this many in-flight + completed-unflushed requests per
+    /// connection; past it the protocol answers with an error line.
+    const MAX_PENDING_PER_CONN: usize = 4096;
+    /// A single protocol line longer than this closes the connection.
+    const MAX_LINE_BYTES: usize = 1 << 20;
+
+    /// Completion tokens: slot (24 bits) | generation (16) | seq (24).
+    fn conn_token(slot: usize, gen: u16) -> u64 {
+        ((slot as u64) << 40) | ((gen as u64) << 24)
+    }
+
+    fn completion_token(slot: usize, gen: u16, seq: u32) -> u64 {
+        conn_token(slot, gen) | (seq as u64 & 0xFF_FFFF)
+    }
+
+    fn token_slot(tok: u64) -> usize {
+        (tok >> 40) as usize
+    }
+
+    fn token_gen(tok: u64) -> u16 {
+        ((tok >> 24) & 0xFFFF) as u16
+    }
+
+    fn token_seq(tok: u64) -> u32 {
+        (tok & 0xFF_FFFF) as u32
+    }
+
+    /// One request slot in a connection's in-order reply queue.
+    struct Pending {
+        seq: u32,
+        /// `None` while the pool is working; the formatted reply once
+        /// it is ready to write
+        done: Option<String>,
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        rbuf: Vec<u8>,
+        wbuf: Vec<u8>,
+        wpos: usize,
+        /// replies in request order; only the front is ever written
+        pending: VecDeque<Pending>,
+        next_seq: u32,
+        want_write: bool,
+        registered_out: bool,
+        peer_closed: bool,
+    }
+
+    impl Conn {
+        fn new(stream: TcpStream) -> Conn {
+            Conn {
+                stream,
+                rbuf: Vec::new(),
+                wbuf: Vec::new(),
+                wpos: 0,
+                pending: VecDeque::new(),
+                next_seq: 0,
+                want_write: false,
+                registered_out: false,
+                peer_closed: false,
+            }
+        }
+
+        fn alloc_seq(&mut self) -> u32 {
+            let s = self.next_seq;
+            self.next_seq = (self.next_seq + 1) & 0xFF_FFFF;
+            s
+        }
+    }
+
+    /// Connection slot: the generation survives the connection so stale
+    /// completion tokens from a closed session are recognized.
+    struct Slot {
+        gen: u16,
+        conn: Option<Conn>,
+    }
+
+    pub(super) fn run(
+        sh: &Arc<FrontShared>,
+        listener: TcpListener,
+    ) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        let ep = Epoll::new()?;
+        // self-pipe: workers completing requests write one byte to wake
+        // epoll_wait; the loop drains the pipe and the completion queue
+        let (wake_rx, wake_tx) = UnixStream::pair()?;
+        wake_rx.set_nonblocking(true)?;
+        wake_tx.set_nonblocking(true)?;
+        ep.ctl(
+            EPOLL_CTL_ADD,
+            listener.as_raw_fd(),
+            EPOLLIN,
+            TOK_LISTENER,
+        )?;
+        ep.ctl(EPOLL_CTL_ADD, wake_rx.as_raw_fd(), EPOLLIN, TOK_WAKE)?;
+        let cq = CompletionQueue::new(Box::new(move || {
+            let _ = (&wake_tx).write(&[1u8]);
+        }));
+        let clients: Vec<PoolClient> =
+            sh.registry.pools().iter().map(|p| p.client()).collect();
+
+        let mut events = vec![EpollEvent { events: 0, data: 0 }; 256];
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut free: Vec<usize> = Vec::new();
+        let mut touched: Vec<usize> = Vec::new();
+        loop {
+            if sh.stopping() {
+                break;
+            }
+            let n = ep.wait(&mut events, 100);
+            touched.clear();
+            for e in &events[..n] {
+                // packed struct: copy the fields out, never reference
+                let ev = e.events;
+                let tok = e.data;
+                match tok {
+                    TOK_LISTENER => {
+                        accept_all(sh, &listener, &ep, &mut slots, &mut free)
+                    }
+                    TOK_WAKE => {
+                        let mut b = [0u8; 64];
+                        while let Ok(k) = (&wake_rx).read(&mut b) {
+                            if k == 0 {
+                                break;
+                            }
+                        }
+                    }
+                    _ => {
+                        let slot = token_slot(tok);
+                        if slot >= slots.len()
+                            || slots[slot].gen != token_gen(tok)
+                        {
+                            continue; // stale event for a closed conn
+                        }
+                        if ev & (EPOLLIN | EPOLLERR | EPOLLHUP | EPOLLRDHUP)
+                            != 0
+                        {
+                            let gen = slots[slot].gen;
+                            if let Some(conn) = slots[slot].conn.as_mut() {
+                                read_and_dispatch(
+                                    conn, &clients, sh, &cq, slot, gen,
+                                );
+                            }
+                        }
+                        // EPOLLOUT needs no special handling: maintain()
+                        // below flushes every touched connection
+                        touched.push(slot);
+                    }
+                }
+            }
+            // drain completions unconditionally (not only on a wake
+            // event): immune to any lost-wakeup interleaving
+            for (tok, reply) in cq.drain() {
+                let slot = token_slot(tok);
+                let Some(s) = slots.get_mut(slot) else { continue };
+                if s.gen != token_gen(tok) {
+                    continue; // the conn this belonged to is gone
+                }
+                let Some(conn) = s.conn.as_mut() else { continue };
+                let seq = token_seq(tok);
+                if let Some(p) = conn
+                    .pending
+                    .iter_mut()
+                    .find(|p| p.seq == seq && p.done.is_none())
+                {
+                    p.done = Some(format_reply(&reply));
+                }
+                touched.push(slot);
+            }
+            touched.sort_unstable();
+            touched.dedup();
+            for i in 0..touched.len() {
+                maintain(&ep, &mut slots, &mut free, touched[i], sh);
+            }
+        }
+        // teardown: close every live connection (pools keep running)
+        for (slot, s) in slots.iter_mut().enumerate() {
+            if let Some(conn) = s.conn.take() {
+                ep.del(conn.stream.as_raw_fd());
+                s.gen = s.gen.wrapping_add(1);
+                free.push(slot);
+                sh.conn_closed();
+            }
+        }
+        Ok(())
+    }
+
+    fn accept_all(
+        sh: &Arc<FrontShared>,
+        listener: &TcpListener,
+        ep: &Epoll,
+        slots: &mut Vec<Slot>,
+        free: &mut Vec<usize>,
+    ) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nodelay(true);
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    sh.accepted.inc();
+                    let slot = free.pop().unwrap_or_else(|| {
+                        slots.push(Slot { gen: 0, conn: None });
+                        slots.len() - 1
+                    });
+                    let gen = slots[slot].gen;
+                    let tok = conn_token(slot, gen);
+                    if ep
+                        .ctl(
+                            EPOLL_CTL_ADD,
+                            stream.as_raw_fd(),
+                            EPOLLIN | EPOLLRDHUP,
+                            tok,
+                        )
+                        .is_err()
+                    {
+                        free.push(slot);
+                        continue;
+                    }
+                    slots[slot].conn = Some(Conn::new(stream));
+                    sh.conn_opened();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    eprintln!("accept failed: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Drain the socket, split complete lines, classify and submit.
+    fn read_and_dispatch(
+        conn: &mut Conn,
+        clients: &[PoolClient],
+        sh: &FrontShared,
+        cq: &Arc<CompletionQueue>,
+        slot: usize,
+        gen: u16,
+    ) {
+        let mut buf = [0u8; 4096];
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.peer_closed = true;
+                    break;
+                }
+                Ok(k) => conn.rbuf.extend_from_slice(&buf[..k]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    conn.peer_closed = true;
+                    break;
+                }
+            }
+        }
+        while let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+            let text = String::from_utf8_lossy(&line);
+            dispatch_line(conn, text.trim(), clients, sh, cq, slot, gen);
+        }
+        if conn.rbuf.len() > MAX_LINE_BYTES {
+            // unbounded line: refuse rather than buffer forever
+            let seq = conn.alloc_seq();
+            conn.pending.push_back(Pending {
+                seq,
+                done: Some("error: line too long\n".to_string()),
+            });
+            conn.rbuf.clear();
+            conn.peer_closed = true;
+        }
+    }
+
+    fn dispatch_line(
+        conn: &mut Conn,
+        t: &str,
+        clients: &[PoolClient],
+        sh: &FrontShared,
+        cq: &Arc<CompletionQueue>,
+        slot: usize,
+        gen: u16,
+    ) {
+        match classify(sh, t) {
+            Action::Nothing => {}
+            Action::Text(s) => {
+                let seq = conn.alloc_seq();
+                conn.pending.push_back(Pending { seq, done: Some(s) });
+            }
+            Action::Infer(idx, x) => {
+                if conn.pending.len() >= MAX_PENDING_PER_CONN {
+                    let seq = conn.alloc_seq();
+                    conn.pending.push_back(Pending {
+                        seq,
+                        done: Some(
+                            "error: too many pipelined requests\n".to_string(),
+                        ),
+                    });
+                    return;
+                }
+                let seq = conn.alloc_seq();
+                let c = &clients[idx];
+                let reply = ReplyTo::Completion {
+                    cq: cq.clone(),
+                    token: completion_token(slot, gen, seq),
+                };
+                match c.submit_to(x, c.deadline(), reply) {
+                    Ok(()) => {
+                        conn.pending.push_back(Pending { seq, done: None })
+                    }
+                    Err(e) => conn.pending.push_back(Pending {
+                        seq,
+                        done: Some(format_submit_error(&e)),
+                    }),
+                }
+            }
+        }
+    }
+
+    /// Move completed in-order replies into the write buffer and write
+    /// as much as the socket takes.
+    fn flush(conn: &mut Conn) -> std::io::Result<()> {
+        while let Some(front) = conn.pending.front_mut() {
+            match front.done.take() {
+                Some(s) => {
+                    conn.wbuf.extend_from_slice(s.as_bytes());
+                    conn.pending.pop_front();
+                }
+                None => break,
+            }
+        }
+        while conn.wpos < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::from(ErrorKind::WriteZero))
+                }
+                Ok(k) => conn.wpos += k,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if conn.wpos >= conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+            conn.want_write = false;
+        } else {
+            conn.want_write = true;
+        }
+        Ok(())
+    }
+
+    /// Post-event housekeeping for one slot: flush, adjust EPOLLOUT
+    /// interest, tear the connection down when finished or failed.
+    fn maintain(
+        ep: &Epoll,
+        slots: &mut [Slot],
+        free: &mut Vec<usize>,
+        slot: usize,
+        sh: &FrontShared,
+    ) {
+        let close_now = {
+            let s = &mut slots[slot];
+            let gen = s.gen;
+            let Some(conn) = s.conn.as_mut() else { return };
+            let dead = flush(conn).is_err()
+                || (conn.peer_closed
+                    && conn.pending.is_empty()
+                    && conn.wbuf.is_empty());
+            if !dead && conn.want_write != conn.registered_out {
+                let mask = if conn.want_write {
+                    EPOLLIN | EPOLLRDHUP | EPOLLOUT
+                } else {
+                    EPOLLIN | EPOLLRDHUP
+                };
+                let tok = conn_token(slot, gen);
+                if ep
+                    .ctl(EPOLL_CTL_MOD, conn.stream.as_raw_fd(), mask, tok)
+                    .is_ok()
+                {
+                    conn.registered_out = conn.want_write;
+                }
+            }
+            dead
+        };
+        if close_now {
+            let s = &mut slots[slot];
+            if let Some(conn) = s.conn.take() {
+                ep.del(conn.stream.as_raw_fd());
+            }
+            // a new generation invalidates completion tokens still in
+            // flight for the closed session
+            s.gen = s.gen.wrapping_add(1);
+            free.push(slot);
+            sh.conn_closed();
+        }
+    }
+}

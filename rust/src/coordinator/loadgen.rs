@@ -1,0 +1,159 @@
+//! Closed-loop load generation against a [`PoolClient`].
+//!
+//! `concurrency` client threads each keep exactly one request in flight
+//! (submit → wait → repeat), drawing request indices from one shared
+//! counter until `total` have been issued — offered load is the number
+//! of closed-loop clients, the knob the serving BENCH section sweeps.
+//! Every issued request is accounted for exactly once: completed (with
+//! its latency sample), shed
+//! ([`crate::coordinator::pool::ServeError::Overload`]), rejected
+//! (admission control refused the submit), or errored.  The returned
+//! [`ServingPoint`] carries latency percentiles over *completed*
+//! requests — under overload the interesting claim is that admitted
+//! requests stay fast while the rest are shed, not that averages
+//! degrade gracefully.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::pool::{AdmissionError, PoolClient, REPLY_GRACE};
+use crate::obs::bench_report::ServingPoint;
+
+/// Per-thread tally merged after the run.
+#[derive(Default)]
+struct Tally {
+    latencies_ms: Vec<f64>,
+    shed: u64,
+    rejected: u64,
+    errors: u64,
+}
+
+/// Drive `total` requests through `client` from `concurrency` closed-loop
+/// threads, cycling over `inputs`.  `model` and `phase` label the
+/// resulting [`ServingPoint`]; `deadline` is the per-request deadline
+/// (also recorded in the point).
+pub fn closed_loop(
+    client: &PoolClient,
+    inputs: &[Vec<f32>],
+    model: &str,
+    phase: &str,
+    concurrency: usize,
+    total: u64,
+    deadline: Duration,
+) -> ServingPoint {
+    assert!(!inputs.is_empty(), "closed_loop needs at least one input");
+    let issued = AtomicU64::new(0);
+    let t0 = Instant::now();
+    let tallies: Vec<Tally> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..concurrency.max(1))
+            .map(|_| {
+                let issued = &issued;
+                scope.spawn(move || {
+                    let mut t = Tally::default();
+                    loop {
+                        let k = issued.fetch_add(1, Ordering::SeqCst);
+                        if k >= total {
+                            break;
+                        }
+                        let x = inputs[(k as usize) % inputs.len()].clone();
+                        let sent = Instant::now();
+                        match client.submit_deadline(x, deadline) {
+                            Ok(rx) => {
+                                match rx.recv_timeout(deadline + REPLY_GRACE) {
+                                    Ok(Ok(_logits)) => {
+                                        let ms = sent.elapsed().as_secs_f64()
+                                            * 1e3;
+                                        t.latencies_ms.push(ms);
+                                    }
+                                    Ok(Err(e)) if e.is_overload() => {
+                                        t.shed += 1
+                                    }
+                                    Ok(Err(_)) => t.errors += 1,
+                                    Err(_) => t.errors += 1,
+                                }
+                            }
+                            Err(e) => {
+                                let full = matches!(
+                                    e.downcast_ref::<AdmissionError>(),
+                                    Some(AdmissionError::Full { .. })
+                                );
+                                if full {
+                                    t.rejected += 1;
+                                } else {
+                                    t.errors += 1;
+                                }
+                            }
+                        }
+                    }
+                    t
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("load thread panicked"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut lat: Vec<f64> = Vec::new();
+    let (mut shed, mut rejected, mut errors) = (0u64, 0u64, 0u64);
+    for mut t in tallies {
+        lat.append(&mut t.latencies_ms);
+        shed += t.shed;
+        rejected += t.rejected;
+        errors += t.errors;
+    }
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let completed = lat.len() as u64;
+    debug_assert_eq!(
+        completed + shed + rejected + errors,
+        total,
+        "every issued request must end exactly one way"
+    );
+
+    ServingPoint {
+        phase: phase.to_string(),
+        model: model.to_string(),
+        offered: concurrency.max(1),
+        requests: total,
+        completed,
+        shed,
+        rejected,
+        errors,
+        wall_s,
+        throughput_rps: if wall_s > 0.0 {
+            completed as f64 / wall_s
+        } else {
+            0.0
+        },
+        p50_ms: pct(&lat, 0.50),
+        p99_ms: pct(&lat, 0.99),
+        p999_ms: pct(&lat, 0.999),
+        deadline_ms: deadline.as_secs_f64() * 1e3,
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (0.0 on empty).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pct_nearest_rank() {
+        assert_eq!(pct(&[], 0.5), 0.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(pct(&v, 0.0), 1.0);
+        assert_eq!(pct(&v, 0.5), 51.0);
+        assert_eq!(pct(&v, 0.99), 99.0);
+        assert_eq!(pct(&v, 1.0), 100.0);
+    }
+}

@@ -3,15 +3,22 @@
 //! layer, program the NL-ADC codebooks, evaluate PTQ accuracy through the
 //! `qfwd` graph (optionally with circuit-derived conversion noise and
 //! quantized weights), and serve inference from a multi-model,
-//! multi-replica pool with admission control.
+//! multi-replica pool (continuous batching, deadline shedding, replica
+//! autoscaling) behind pluggable TCP fronts (epoll event loop or
+//! thread-per-connection).
 
 pub mod calibrate;
+pub mod front;
+pub mod loadgen;
+pub mod pool;
 pub mod ptq;
 pub mod server;
 
 pub use calibrate::{CalibrationResult, Calibrator};
-pub use ptq::{PtqEvaluator, PtqResult};
-pub use server::{
+pub use front::{FrontKind, ServeFront};
+pub use loadgen::closed_loop;
+pub use pool::{
     AdmissionError, InferenceServer, ModelPool, ModelRegistry, ObsConfig,
-    PoolClient, PoolConfig, ServerStats,
+    PoolClient, PoolConfig, Reply, ServeError, ServerStats, REPLY_GRACE,
 };
+pub use ptq::{PtqEvaluator, PtqResult};

@@ -1,0 +1,1857 @@
+//! Replica-pool inference serving: the request path of the deployed
+//! system.
+//!
+//! One process hosts a [`ModelRegistry`] of independently calibrated
+//! models.  Each model is served by a [`ModelPool`]: a shared **bounded**
+//! intake queue with admission control (a full queue rejects the request
+//! with an error instead of buffering without bound) feeding N worker
+//! replicas.  Batching is *continuous*: every worker steals whatever is
+//! pending from the one shared per-model queue, so a batch forms from
+//! work across all clients rather than one replica's private window.
+//! Every worker owns its own [`Backend`] instance — replicas come from
+//! [`Backend::replicate`], which for the native engine is an `Arc` clone
+//! of the shared weight set, the software analogue of programming the
+//! same weights into another crossbar bank.
+//!
+//! Overload is handled in two layers (DESIGN.md §13): admission control
+//! rejects when the bounded queue is full, and **deadline shedding**
+//! answers requests that have already missed their per-request deadline
+//! with an explicit [`ServeError::Overload`] reply at batch-assembly
+//! time, so a saturated pool degrades by shedding rather than by letting
+//! queue waits grow without bound.  Pools may also **autoscale**: when
+//! `max_replicas > replicas` a supervisor grows/shrinks the live worker
+//! set between those bounds, driven by queue depth.
+//!
+//! Shutdown is an explicit signal on the queue, not a channel-hangup
+//! side effect: dropping a pool closes the queue, which wakes and drains
+//! every worker even while [`PoolClient`] handles are still alive in
+//! other threads (the bug the old mpsc-based server had).
+//!
+//! With zero conversion noise the quantized forward is a deterministic
+//! per-sample function (per-(layer, row) noise seeding, no cross-sample
+//! coupling), so logits are bit-identical regardless of replica count,
+//! batch composition, thread interleaving, or live autoscaling — the
+//! property the concurrency suite (`rust/tests/server_concurrency.rs`)
+//! pins.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::backend::{Backend, BackendKind, ProgrammedCodebooks};
+use crate::coordinator::calibrate::{CalibrationResult, Calibrator};
+use crate::coordinator::ptq::PtqEvaluator;
+use crate::data::dataset::ModelData;
+use crate::obs::prometheus::{escape_label, PromWriter};
+use crate::obs::quant_health::QuantHealth;
+use crate::obs::registry::{Gauge, Histogram, MetricsRegistry};
+use crate::obs::trace::{escape_json, RequestTracer, Span, TraceSink};
+use crate::quant::QuantSpec;
+
+/// How a request can fail *after* admission.  Typed (unlike the old
+/// `String` payload) so fronts and load generators can distinguish
+/// deliberate overload shedding from genuine execution failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// shed by deadline-based graceful degradation: the request had
+    /// already missed its admission deadline when a worker assembled
+    /// its batch, so it was answered immediately instead of queued on
+    Overload { queued_ms: u64, deadline_ms: u64 },
+    /// the backend failed the batch this request rode in
+    Failed(String),
+}
+
+impl ServeError {
+    /// Was this the deliberate shedding path (retry later), as opposed
+    /// to an execution failure?
+    pub fn is_overload(&self) -> bool {
+        matches!(self, ServeError::Overload { .. })
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overload {
+                queued_ms,
+                deadline_ms,
+            } => write!(
+                f,
+                "overload: shed after {queued_ms} ms in queue \
+                 (deadline {deadline_ms} ms)"
+            ),
+            ServeError::Failed(msg) => write!(f, "inference failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Outcome of one request: logits, or a typed serving-side error.
+pub type Reply = std::result::Result<Vec<f32>, ServeError>;
+
+/// Completion queue for non-blocking fronts: workers push `(token,
+/// reply)` pairs and fire the waker, the event loop drains on its next
+/// iteration.  The waker only fires on the empty→non-empty transition,
+/// so a batch of replies costs one wake.
+pub(crate) struct CompletionQueue {
+    done: Mutex<Vec<(u64, Reply)>>,
+    waker: Box<dyn Fn() + Send + Sync>,
+}
+
+impl CompletionQueue {
+    pub(crate) fn new(waker: Box<dyn Fn() + Send + Sync>) -> Arc<CompletionQueue> {
+        Arc::new(CompletionQueue {
+            done: Mutex::new(Vec::new()),
+            waker,
+        })
+    }
+
+    pub(crate) fn push(&self, token: u64, r: Reply) {
+        let mut d = self.done.lock().unwrap();
+        let was_empty = d.is_empty();
+        d.push((token, r));
+        drop(d);
+        if was_empty {
+            (self.waker)();
+        }
+    }
+
+    pub(crate) fn drain(&self) -> Vec<(u64, Reply)> {
+        std::mem::take(&mut *self.done.lock().unwrap())
+    }
+}
+
+/// Where a worker delivers the reply: a blocking client's channel, or an
+/// event front's completion queue (the token routes back to the
+/// connection + in-flight request the reply belongs to).
+pub(crate) enum ReplyTo {
+    Channel(mpsc::Sender<Reply>),
+    Completion { cq: Arc<CompletionQueue>, token: u64 },
+}
+
+impl ReplyTo {
+    fn send(&self, r: Reply) {
+        match self {
+            ReplyTo::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            ReplyTo::Completion { cq, token } => cq.push(*token, r),
+        }
+    }
+}
+
+/// One queued inference request.  Internal: the only producers are
+/// [`PoolClient::submit`]-family methods, which have already validated
+/// the input size.
+struct Request {
+    /// span id handed out by the pool's tracer at admission
+    id: u64,
+    /// when admission accepted the request (queue-wait clock)
+    submitted: Instant,
+    /// shed horizon: a worker assembling a batch at or past this instant
+    /// answers the request with [`ServeError::Overload`] instead
+    deadline: Instant,
+    x: Vec<f32>,
+    reply: ReplyTo,
+}
+
+/// Upper bound on retained latency samples (~8 MB worst case).
+pub const MAX_LATENCY_SAMPLES: usize = 1 << 20;
+
+/// Latency sample store: a ring over the most recent `capacity` service
+/// times, so percentiles keep tracking a long-running server instead of
+/// freezing on the warm-up era.
+#[derive(Clone)]
+struct LatencyRing {
+    samples: Vec<u64>,
+    capacity: usize,
+    /// next overwrite position once the ring is full
+    head: usize,
+}
+
+impl Default for LatencyRing {
+    fn default() -> Self {
+        LatencyRing::with_capacity(MAX_LATENCY_SAMPLES)
+    }
+}
+
+impl LatencyRing {
+    fn with_capacity(capacity: usize) -> LatencyRing {
+        LatencyRing {
+            samples: Vec::new(),
+            capacity: capacity.max(1),
+            head: 0,
+        }
+    }
+
+    fn push(&mut self, us: u64) {
+        if self.samples.len() < self.capacity {
+            self.samples.push(us);
+        } else {
+            self.samples[self.head] = us;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    /// Append another ring's retained samples, oldest first, as if they
+    /// had been pushed here (cross-replica aggregation).  `head` is 0
+    /// until a ring fills, so `(head + i) % len` is oldest-first in both
+    /// regimes.
+    fn merge(&mut self, other: &LatencyRing) {
+        let n = other.samples.len();
+        for i in 0..n {
+            self.push(other.samples[(other.head + i) % n]);
+        }
+    }
+}
+
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub full_batches: AtomicU64,
+    pub singles: AtomicU64,
+    pub busy_us: AtomicU64,
+    /// requests refused by admission control (bounded queue full)
+    pub rejected: AtomicU64,
+    /// requests shed past their deadline at batch assembly
+    pub shed: AtomicU64,
+    /// per-request service latency samples (us)
+    lat_us: Mutex<LatencyRing>,
+    /// per-request queue-wait samples (us), recorded at batch assembly
+    queue_us: Mutex<LatencyRing>,
+}
+
+/// One lock (copy only) + one sort outside the lock, so the serving
+/// threads never stall on a reader.
+fn ring_percentiles_ms(ring: &Mutex<LatencyRing>, qs: &[f64]) -> Vec<f64> {
+    let raw = ring.lock().unwrap().samples.clone(); // memcpy only
+    let mut sorted: Vec<f64> = raw.into_iter().map(|u| u as f64).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qs.iter()
+        .map(|&q| {
+            if sorted.is_empty() {
+                0.0
+            } else {
+                crate::util::stats::quantile_sorted(&sorted, q) / 1e3
+            }
+        })
+        .collect()
+}
+
+impl ServerStats {
+    /// Record the service latency of a batch covering `n` requests.
+    pub fn record_latency(&self, us: u64, n: usize) {
+        let mut lat = self.lat_us.lock().unwrap();
+        for _ in 0..n {
+            lat.push(us);
+        }
+    }
+
+    /// Record one executed batch of `n` requests against the model's
+    /// compiled batch size.
+    pub fn record_batch(&self, n: usize, full_batch: usize, us: u64) {
+        self.requests.fetch_add(n as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        if n == full_batch {
+            self.full_batches.fetch_add(1, Ordering::Relaxed);
+        } else if n == 1 {
+            self.singles.fetch_add(1, Ordering::Relaxed);
+        }
+        self.busy_us.fetch_add(us, Ordering::Relaxed);
+        self.record_latency(us, n);
+    }
+
+    /// Record how long one request sat queued before batch assembly.
+    pub fn record_queue_wait(&self, us: u64) {
+        self.queue_us.lock().unwrap().push(us);
+    }
+
+    /// Latency percentiles in milliseconds, one per requested quantile
+    /// (all 0.0 when no samples yet).
+    pub fn percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
+        ring_percentiles_ms(&self.lat_us, qs)
+    }
+
+    /// Queue-wait percentiles in milliseconds.
+    pub fn queue_percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
+        ring_percentiles_ms(&self.queue_us, qs)
+    }
+
+    /// Fold another stats instance into this one: counters add, latency
+    /// rings append oldest-first — the cross-replica aggregation path
+    /// (`other` must not be `self`).
+    pub fn merge_from(&self, other: &ServerStats) {
+        for (a, b) in [
+            (&self.requests, &other.requests),
+            (&self.batches, &other.batches),
+            (&self.full_batches, &other.full_batches),
+            (&self.singles, &other.singles),
+            (&self.busy_us, &other.busy_us),
+            (&self.rejected, &other.rejected),
+            (&self.shed, &other.shed),
+        ] {
+            a.fetch_add(b.load(Ordering::SeqCst), Ordering::Relaxed);
+        }
+        let theirs = other.lat_us.lock().unwrap().clone();
+        self.lat_us.lock().unwrap().merge(&theirs);
+        let theirs = other.queue_us.lock().unwrap().clone();
+        self.queue_us.lock().unwrap().merge(&theirs);
+    }
+
+    /// Latency percentile in milliseconds (0.0 when no samples yet).
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        self.percentiles_ms(&[q])[0]
+    }
+
+    pub fn summary(&self) -> String {
+        let p = self.percentiles_ms(&[0.50, 0.95, 0.99, 0.999]);
+        format!(
+            "requests={} batches={} full={} singles={} rejected={} shed={} \
+             busy={:.1}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms p999={:.2}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.full_batches.load(Ordering::Relaxed),
+            self.singles.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.busy_us.load(Ordering::Relaxed) as f64 / 1e3,
+            p[0],
+            p[1],
+            p[2],
+            p[3],
+        )
+    }
+}
+
+/// Why intake refused a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// bounded queue at capacity — back off and retry
+    Full { depth: usize },
+    /// pool shut down
+    Closed,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::Full { depth } => write!(
+                f,
+                "queue full (depth {depth}): request rejected by admission \
+                 control"
+            ),
+            AdmissionError::Closed => write!(f, "server shut down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+struct QueueInner {
+    jobs: VecDeque<Request>,
+    closed: bool,
+    /// desired live worker count (autoscaling); a worker whose slot id
+    /// is >= target retires on its next wakeup
+    target: usize,
+    /// retire acknowledgements, one flag per worker slot; set by the
+    /// retiring worker under this mutex, collected by `resize_target`
+    retired: Vec<bool>,
+}
+
+/// What one call to [`JobQueue::pop_batch`] yields.
+enum Popped {
+    /// at least one request (deadline shedding happens at assembly)
+    Batch(Vec<Request>),
+    /// queue closed and fully drained
+    Shutdown,
+    /// this worker's slot was scaled away; exit without draining
+    Retire,
+}
+
+/// Shared bounded work queue: the single intake point of a pool and the
+/// continuous-batching source every replica steals from.  `push` applies
+/// admission control; `close` is the explicit shutdown signal workers
+/// observe even while client handles stay alive; `target`/`retired`
+/// carry the autoscaling protocol (workers retire themselves when their
+/// slot falls past the target, the supervisor collects and respawns).
+struct JobQueue {
+    inner: Mutex<QueueInner>,
+    ready: Condvar,
+    depth: usize,
+    /// live queue-depth gauge (`bskmq_queue_depth`), updated on every
+    /// push/pop under the queue lock
+    depth_gauge: Option<Arc<Gauge>>,
+}
+
+impl JobQueue {
+    fn new(
+        depth: usize,
+        target: usize,
+        slots: usize,
+        depth_gauge: Option<Arc<Gauge>>,
+    ) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(QueueInner {
+                jobs: VecDeque::new(),
+                closed: false,
+                target: target.max(1),
+                retired: vec![false; slots.max(1)],
+            }),
+            ready: Condvar::new(),
+            depth: depth.max(1),
+            depth_gauge,
+        }
+    }
+
+    /// Enqueue or reject immediately — never blocks, never buffers past
+    /// the configured depth.
+    fn push(&self, r: Request) -> std::result::Result<(), AdmissionError> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err(AdmissionError::Closed);
+        }
+        if q.jobs.len() >= self.depth {
+            return Err(AdmissionError::Full { depth: self.depth });
+        }
+        q.jobs.push_back(r);
+        if let Some(g) = &self.depth_gauge {
+            g.set(q.jobs.len() as f64);
+        }
+        drop(q);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Blocking batched pop for worker `slot`: waits for at least one
+    /// job, drains up to `max`, then tops a partial batch up for at most
+    /// `window`.  A **full batch dispatches immediately** — the top-up
+    /// wait only ever runs while the batch is short.  Returns
+    /// [`Popped::Shutdown`] only on close with the queue fully drained,
+    /// and [`Popped::Retire`] when autoscaling moved the target below
+    /// this slot (handing any wakeup it may have consumed to a live
+    /// worker first).
+    fn pop_batch(&self, slot: usize, max: usize, window: Duration) -> Popped {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if slot >= q.target {
+                if let Some(r) = q.retired.get_mut(slot) {
+                    *r = true;
+                }
+                drop(q);
+                // a push's notify_one may have woken us; pass it on so
+                // the job is not stranded with live workers asleep
+                self.ready.notify_one();
+                return Popped::Retire;
+            }
+            if !q.jobs.is_empty() {
+                break;
+            }
+            if q.closed {
+                return Popped::Shutdown;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+        let mut out = Vec::with_capacity(max.min(q.jobs.len()));
+        while out.len() < max {
+            match q.jobs.pop_front() {
+                Some(j) => out.push(j),
+                None => break,
+            }
+        }
+        if out.len() < max && !window.is_zero() {
+            let deadline = Instant::now() + window;
+            while out.len() < max && !q.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) =
+                    self.ready.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+                while out.len() < max {
+                    match q.jobs.pop_front() {
+                        Some(j) => out.push(j),
+                        None => break,
+                    }
+                }
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        if let Some(g) = &self.depth_gauge {
+            g.set(q.jobs.len() as f64);
+        }
+        Popped::Batch(out)
+    }
+
+    /// Set the autoscaling target and collect the slots below it whose
+    /// workers have retired (each reported exactly once — the supervisor
+    /// must join and respawn them).
+    fn resize_target(&self, target: usize) -> Vec<usize> {
+        let mut q = self.inner.lock().unwrap();
+        q.target = target.max(1);
+        let t = q.target;
+        let mut respawn = Vec::new();
+        for (i, r) in q.retired.iter_mut().enumerate() {
+            if i < t && *r {
+                *r = false;
+                respawn.push(i);
+            }
+        }
+        drop(q);
+        // wake everyone: sleeping workers past the target retire, the
+        // rest re-check and keep serving
+        self.ready.notify_all();
+        respawn
+    }
+
+    fn target(&self) -> usize {
+        self.inner.lock().unwrap().target
+    }
+
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+
+    fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    fn close(&self) {
+        let mut q = self.inner.lock().unwrap();
+        q.closed = true;
+        drop(q);
+        self.ready.notify_all();
+    }
+}
+
+/// Observability knobs for one pool (DESIGN.md §11).  All sampling
+/// rates use `0 = off` so the defaults cost nothing on the hot path.
+#[derive(Clone)]
+pub struct ObsConfig {
+    /// run every Nth batch through `run_qfwd_profiled` for a per-op
+    /// wall-time breakdown (0 = never; steady state stays allocation
+    /// free because unprofiled batches collect no rows)
+    pub profile_every: u64,
+    /// emit every Nth request span to the trace sink (0 = never; span
+    /// open/close accounting runs regardless)
+    pub trace_sample_every: u64,
+    /// JSONL span sink on disk (ignored when `trace_sink` is set)
+    pub trace_path: Option<PathBuf>,
+    /// explicit span sink (tests hand in memory sinks)
+    pub trace_sink: Option<Arc<TraceSink>>,
+    /// attach quantization-health telemetry to the backend's
+    /// digitization step (engines without hooks silently skip it)
+    pub quant_health: bool,
+    /// live-sketch stride: every Nth observed activation feeds the
+    /// per-layer bottom-k sketch (0 disables live sketching)
+    pub sketch_sample_every: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            profile_every: 0,
+            trace_sample_every: 0,
+            trace_path: None,
+            trace_sink: None,
+            quant_health: true,
+            sketch_sample_every: 31,
+        }
+    }
+}
+
+impl std::fmt::Debug for ObsConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsConfig")
+            .field("profile_every", &self.profile_every)
+            .field("trace_sample_every", &self.trace_sample_every)
+            .field("trace_path", &self.trace_path)
+            .field("trace_sink", &self.trace_sink.is_some())
+            .field("quant_health", &self.quant_health)
+            .field("sketch_sample_every", &self.sketch_sample_every)
+            .finish()
+    }
+}
+
+/// Per-pool serving configuration.  `replicas`, `max_replicas` and
+/// `queue_depth` are the scaling knobs; the rest mirrors the calibration
+/// pipeline.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    pub backend: BackendKind,
+    /// uniform calibration-spec override; `None` serves the manifest's
+    /// per-layer specs (the mixed-precision deployment default)
+    pub spec: Option<QuantSpec>,
+    pub noise_std: f32,
+    pub calib_batches: usize,
+    /// parallel calibration shards (merged codebooks are bit-identical
+    /// to serial, so this is purely a startup-latency knob)
+    pub calib_shards: usize,
+    /// minimum (and initial) worker replicas, each owning its own
+    /// `Backend` instance
+    pub replicas: usize,
+    /// autoscaling ceiling; 0 (default) pins the pool at `replicas` and
+    /// keeps engines without `replicate` support serveable
+    pub max_replicas: usize,
+    /// bounded intake queue depth (admission control threshold)
+    pub queue_depth: usize,
+    /// how long a worker waits to top up a partial batch
+    pub batch_window: Duration,
+    /// per-request deadline: a request still unassembled this long after
+    /// admission is shed with an explicit overload reply (clients may
+    /// override per request via `submit_deadline`)
+    pub request_deadline: Duration,
+    /// autoscaling supervisor tick
+    pub scale_check: Duration,
+    /// queue depth that triggers a scale-up; 0 = the model's batch size
+    pub scale_up_depth: usize,
+    /// consecutive idle supervisor ticks before one replica scales down
+    pub scale_down_idle: u32,
+    /// observability: tracing, profiling, quantization health
+    pub obs: ObsConfig,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            backend: BackendKind::Auto,
+            spec: None,
+            noise_std: 0.0,
+            calib_batches: 8,
+            calib_shards: 1,
+            replicas: 1,
+            max_replicas: 0,
+            queue_depth: 256,
+            batch_window: Duration::from_millis(2),
+            request_deadline: Duration::from_secs(10),
+            scale_check: Duration::from_millis(20),
+            scale_up_depth: 0,
+            scale_down_idle: 50,
+            obs: ObsConfig::default(),
+        }
+    }
+}
+
+/// Extra time a blocking client waits for its reply beyond the request
+/// deadline: sheds happen at batch assembly, so an answered request can
+/// arrive after the deadline by up to one batch's service time.  With
+/// the default 10 s deadline this reproduces the old fixed 120 s recv
+/// timeout.
+pub const REPLY_GRACE: Duration = Duration::from_secs(110);
+
+/// Cloneable intake handle: validates the input size, then submits
+/// through the pool's admission-controlled queue.  Holding one does NOT
+/// keep the pool alive — shutdown closes the queue underneath it and
+/// later submissions fail with [`AdmissionError::Closed`].
+#[derive(Clone)]
+pub struct PoolClient {
+    queue: Arc<JobQueue>,
+    stats: Arc<ServerStats>,
+    tracer: Arc<RequestTracer>,
+    in_elems: usize,
+    num_classes: usize,
+    /// default per-request deadline (the pool's `request_deadline`)
+    deadline: Duration,
+}
+
+impl PoolClient {
+    /// Non-blocking submit under admission control with the pool's
+    /// default deadline; on acceptance the receiver yields exactly one
+    /// [`Reply`].  Rejections (queue full, shutdown, wrong input size)
+    /// surface as immediate errors — a request is never silently
+    /// dropped.
+    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Reply>> {
+        self.submit_deadline(x, self.deadline)
+    }
+
+    /// [`PoolClient::submit`] with an explicit per-request deadline.
+    pub fn submit_deadline(
+        &self,
+        x: Vec<f32>,
+        deadline: Duration,
+    ) -> Result<mpsc::Receiver<Reply>> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_to(x, deadline, ReplyTo::Channel(tx))?;
+        Ok(rx)
+    }
+
+    /// Core submission path shared by blocking clients and the event
+    /// front: validate, open a span, push under admission control.
+    pub(crate) fn submit_to(
+        &self,
+        x: Vec<f32>,
+        deadline: Duration,
+        reply: ReplyTo,
+    ) -> Result<()> {
+        ensure!(
+            x.len() == self.in_elems,
+            "input has {} elements, model wants {}",
+            x.len(),
+            self.in_elems
+        );
+        // span opens at admission; a refused push rolls it back so
+        // rejected requests never count as open spans
+        let id = self.tracer.open();
+        let now = Instant::now();
+        let req = Request {
+            id,
+            submitted: now,
+            deadline: now + deadline,
+            x,
+            reply,
+        };
+        match self.queue.push(req) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.tracer.cancel(id);
+                if matches!(e, AdmissionError::Full { .. }) {
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(anyhow::Error::new(e))
+            }
+        }
+    }
+
+    /// Blocking request: submit, then wait for the logits.  Overload
+    /// sheds and execution failures surface as errors (the error string
+    /// of a shed contains "overload").
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        let rx = self.submit(x)?;
+        match rx.recv_timeout(self.deadline + REPLY_GRACE) {
+            Ok(Ok(logits)) => Ok(logits),
+            Ok(Err(e)) => bail!("{e}"),
+            Err(_) => bail!("request dropped or timed out"),
+        }
+    }
+
+    /// Logit vector length of the served model.
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Per-sample input element count of the served model.
+    pub fn in_elems(&self) -> usize {
+        self.in_elems
+    }
+
+    /// This client's default request deadline.
+    pub fn deadline(&self) -> Duration {
+        self.deadline
+    }
+}
+
+/// What the coordinator thread reports back once serving can start.
+struct PoolReady {
+    engine: String,
+    in_elems: usize,
+    num_classes: usize,
+    batch: usize,
+    health: Option<Arc<QuantHealth>>,
+}
+
+/// One model's serving pool: worker replicas stealing from one bounded
+/// queue, optionally autoscaled between `replicas` and `max_replicas`.
+pub struct ModelPool {
+    pub model: String,
+    queue: Arc<JobQueue>,
+    /// pool-wide aggregate (every worker records here too)
+    pub stats: Arc<ServerStats>,
+    /// per-slot counters, index = worker slot id (sized to the
+    /// autoscaling ceiling; slots never spawned stay zero)
+    pub replica_stats: Vec<Arc<ServerStats>>,
+    engine: String,
+    in_elems: usize,
+    num_classes: usize,
+    batch: usize,
+    min_replicas: usize,
+    request_deadline: Duration,
+    /// request-lifecycle tracer (span accounting + sampled JSONL)
+    tracer: Arc<RequestTracer>,
+    /// pool-local metrics registry (latency/queue-wait/deadline
+    /// histograms, queue-depth and live-replica gauges)
+    metrics: Arc<MetricsRegistry>,
+    /// quantization-health telemetry, when the engine supports hooks
+    health: Option<Arc<QuantHealth>>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+/// Move a replicated engine onto its own worker thread.
+fn spawn_worker(
+    rep: Box<dyn Backend + Send>,
+    shared: &Arc<WorkerShared>,
+    queue: &Arc<JobQueue>,
+    slot: usize,
+    mine: &Arc<ServerStats>,
+    global: &Arc<ServerStats>,
+) -> std::thread::JoinHandle<()> {
+    let shared = shared.clone();
+    let queue = queue.clone();
+    let mine = mine.clone();
+    let global = global.clone();
+    std::thread::spawn(move || {
+        worker_loop(rep.as_ref(), &shared, &queue, slot, &mine, &global);
+    })
+}
+
+impl ModelPool {
+    /// Start the pool: a coordinator thread loads the backend, calibrates
+    /// the per-layer spec'd codebooks on `cfg.calib_batches` batches, then
+    /// serves until the pool is dropped.  With `max_replicas` at its
+    /// default the coordinator itself runs worker slot 0 (engines whose
+    /// handles cannot cross threads still serve at `--replicas 1`); with
+    /// `max_replicas > replicas` every slot runs on its own thread over a
+    /// [`Backend::replicate`] clone and the coordinator becomes the
+    /// autoscaling supervisor.
+    pub fn start(
+        artifacts: std::path::PathBuf,
+        model: String,
+        cfg: &PoolConfig,
+    ) -> Result<ModelPool> {
+        let cfg = cfg.clone();
+        ensure!(cfg.replicas >= 1, "pool needs at least one replica");
+        let max = if cfg.max_replicas == 0 {
+            cfg.replicas
+        } else {
+            cfg.max_replicas
+        };
+        ensure!(
+            max >= cfg.replicas,
+            "max_replicas {} below replicas {}",
+            max,
+            cfg.replicas
+        );
+        let autoscaled = max > cfg.replicas;
+        let stats = Arc::new(ServerStats::default());
+        let replica_stats: Vec<Arc<ServerStats>> = (0..max)
+            .map(|_| Arc::new(ServerStats::default()))
+            .collect();
+        let sink = match (&cfg.obs.trace_sink, &cfg.obs.trace_path) {
+            (Some(s), _) => Some(s.clone()),
+            (None, Some(p)) => Some(TraceSink::file(p)?),
+            (None, None) => None,
+        };
+        let tracer =
+            RequestTracer::new(&model, cfg.obs.trace_sample_every, sink);
+        let metrics = Arc::new(MetricsRegistry::new());
+        // pool-level instruments carry the model label in their
+        // registered name so the registry renders them route-scoped
+        let ml = escape_label(&model);
+        let forward_hist = metrics.histogram(
+            &format!("bskmq_forward_latency_ms{{model=\"{ml}\"}}"),
+            &Histogram::latency_ms_bounds(),
+        );
+        let queue_hist = metrics.histogram(
+            &format!("bskmq_queue_wait_ms{{model=\"{ml}\"}}"),
+            &Histogram::latency_ms_bounds(),
+        );
+        let deadline_hist = metrics.histogram(
+            &format!("bskmq_deadline_headroom_ms{{model=\"{ml}\"}}"),
+            &Histogram::latency_ms_bounds(),
+        );
+        let depth_gauge =
+            metrics.gauge(&format!("bskmq_queue_depth{{model=\"{ml}\"}}"));
+        let live_gauge =
+            metrics.gauge(&format!("bskmq_replicas_live{{model=\"{ml}\"}}"));
+        live_gauge.set(cfg.replicas as f64);
+        let queue = Arc::new(JobQueue::new(
+            cfg.queue_depth,
+            cfg.replicas,
+            max,
+            Some(depth_gauge),
+        ));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<PoolReady>>();
+
+        let m_name = model.clone();
+        let q = queue.clone();
+        let st = stats.clone();
+        let rst = replica_stats.clone();
+        let tracer_w = tracer.clone();
+        let handle = std::thread::spawn(move || -> Result<()> {
+            // setup: load + calibrate, reporting failure instead of
+            // leaving the caller blocked
+            let (be, calib, health) =
+                match pool_setup(&cfg, &artifacts, &m_name) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                        return Err(e);
+                    }
+                };
+            let shared = Arc::new(WorkerShared {
+                books: calib.programmed,
+                noise_std: cfg.noise_std,
+                window: cfg.batch_window,
+                profile_every: cfg.obs.profile_every,
+                tracer: tracer_w,
+                forward_hist,
+                queue_hist,
+                deadline_hist,
+            });
+            let m = be.manifest();
+            let batch = m.batch;
+            let ready = PoolReady {
+                engine: be.name().to_string(),
+                in_elems: m.input_elems(),
+                num_classes: m.num_classes,
+                batch: m.batch,
+                health,
+            };
+            if autoscaled {
+                // autoscaled pool: every slot runs on its own thread
+                // over a replicate() clone; the loaded engine stays here
+                // as the replication prototype, and this thread becomes
+                // the scaling supervisor
+                let mut slots: Vec<Option<std::thread::JoinHandle<()>>> =
+                    (0..max).map(|_| None).collect();
+                for (slot, mine) in
+                    rst.iter().enumerate().take(cfg.replicas)
+                {
+                    let rep = match be.replicate() {
+                        Ok(b) => b,
+                        Err(e) => {
+                            let e = e.context(format!(
+                                "cannot autoscale '{m_name}': every worker \
+                                 needs a replicate() clone"
+                            ));
+                            let _ =
+                                ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                            q.close();
+                            for h in slots.into_iter().flatten() {
+                                let _ = h.join();
+                            }
+                            return Err(e);
+                        }
+                    };
+                    slots[slot] =
+                        Some(spawn_worker(rep, &shared, &q, slot, mine, &st));
+                }
+                let _ = ready_tx.send(Ok(ready));
+                // queue-depth-driven autoscaling between cfg.replicas
+                // and max (DESIGN.md §13): scale up one replica when the
+                // backlog reaches a batch, scale down after a sustained
+                // idle streak.  The supervisor sleeps rather than waits
+                // on the queue condvar so it can never consume a
+                // notify_one meant for a worker.
+                let up_at = if cfg.scale_up_depth == 0 {
+                    batch.max(1)
+                } else {
+                    cfg.scale_up_depth
+                };
+                let mut hard_max = max;
+                let mut target = cfg.replicas;
+                let mut idle_ticks: u32 = 0;
+                loop {
+                    std::thread::sleep(cfg.scale_check);
+                    if q.is_closed() {
+                        break;
+                    }
+                    let depth = q.len();
+                    if depth >= up_at && target < hard_max {
+                        target += 1;
+                        for slot in q.resize_target(target) {
+                            if let Some(h) = slots[slot].take() {
+                                let _ = h.join();
+                            }
+                        }
+                        let mut ok = true;
+                        for (slot, s) in
+                            slots.iter_mut().enumerate().take(target)
+                        {
+                            if s.is_some() {
+                                continue;
+                            }
+                            match be.replicate() {
+                                Ok(rep) => {
+                                    *s = Some(spawn_worker(
+                                        rep, &shared, &q, slot, &rst[slot],
+                                        &st,
+                                    ));
+                                }
+                                Err(e) => {
+                                    eprintln!(
+                                        "pool '{m_name}': scale-up to \
+                                         {target} failed: {e:#}"
+                                    );
+                                    ok = false;
+                                    break;
+                                }
+                            }
+                        }
+                        if !ok {
+                            // pin the ceiling at what we actually have
+                            target -= 1;
+                            hard_max = target.max(cfg.replicas);
+                            q.resize_target(target);
+                        }
+                        live_gauge.set(target as f64);
+                        idle_ticks = 0;
+                    } else if depth == 0 && target > cfg.replicas {
+                        idle_ticks += 1;
+                        if idle_ticks >= cfg.scale_down_idle {
+                            target -= 1;
+                            q.resize_target(target);
+                            live_gauge.set(target as f64);
+                            idle_ticks = 0;
+                        }
+                    } else {
+                        idle_ticks = 0;
+                    }
+                }
+                for h in slots.into_iter().flatten() {
+                    let _ = h.join();
+                }
+            } else {
+                // fixed-size pool: replicas 1..N each own a cheap clone
+                // of the engine; worker slot 0 serves on the coordinator
+                // thread (PJRT handles never cross threads; the native
+                // replicas simply live where their work is)
+                let mut workers = Vec::new();
+                for (i, mine) in rst.iter().enumerate().skip(1) {
+                    let rep = match be.replicate() {
+                        Ok(b) => b,
+                        Err(e) => {
+                            let e = e.context(format!(
+                                "cannot serve '{m_name}' with {} replicas",
+                                cfg.replicas
+                            ));
+                            let _ =
+                                ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                            q.close();
+                            for w in workers {
+                                let _ = w.join();
+                            }
+                            return Err(e);
+                        }
+                    };
+                    workers.push(spawn_worker(rep, &shared, &q, i, mine, &st));
+                }
+                let _ = ready_tx.send(Ok(ready));
+                worker_loop(be.as_ref(), &shared, &q, 0, &rst[0], &st);
+                for w in workers {
+                    let _ = w.join();
+                }
+            }
+            Ok(())
+        });
+
+        let ready = match ready_rx.recv() {
+            Ok(Ok(r)) => r,
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                return Err(e);
+            }
+            Err(_) => {
+                let _ = handle.join();
+                bail!("pool coordinator died during setup");
+            }
+        };
+        Ok(ModelPool {
+            model,
+            queue,
+            stats,
+            replica_stats,
+            engine: ready.engine,
+            in_elems: ready.in_elems,
+            num_classes: ready.num_classes,
+            batch: ready.batch,
+            min_replicas: cfg.replicas,
+            request_deadline: cfg.request_deadline,
+            tracer,
+            metrics,
+            health: ready.health,
+            handle: Some(handle),
+        })
+    }
+
+    /// Clone-able intake handle for client threads.
+    pub fn client(&self) -> PoolClient {
+        PoolClient {
+            queue: self.queue.clone(),
+            stats: self.stats.clone(),
+            tracer: self.tracer.clone(),
+            in_elems: self.in_elems,
+            num_classes: self.num_classes,
+            deadline: self.request_deadline,
+        }
+    }
+
+    /// Blocking request against this pool.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.client().infer(x)
+    }
+
+    /// Execution engine serving this pool ("native", "xla").
+    pub fn engine(&self) -> &str {
+        &self.engine
+    }
+
+    /// Worker slot count (the autoscaling ceiling; equals the configured
+    /// replica count for fixed pools).
+    pub fn replicas(&self) -> usize {
+        self.replica_stats.len()
+    }
+
+    /// Current autoscaling target: how many worker slots are live.
+    pub fn live_replicas(&self) -> usize {
+        self.queue.target()
+    }
+
+    /// Configured minimum replica count.
+    pub fn min_replicas(&self) -> usize {
+        self.min_replicas
+    }
+
+    /// Compiled batch size of the served model.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Per-request deadline this pool sheds against.
+    pub fn request_deadline(&self) -> Duration {
+        self.request_deadline
+    }
+
+    /// Requests refused by admission control so far.
+    pub fn rejected(&self) -> u64 {
+        self.stats.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed past their deadline so far.
+    pub fn shed(&self) -> u64 {
+        self.stats.shed.load(Ordering::Relaxed)
+    }
+
+    /// Explicit shutdown: close the queue (rejecting new requests), wake
+    /// and drain every worker, join them.  Idempotent; also runs on Drop.
+    /// Live [`PoolClient`] handles cannot keep the pool alive.
+    pub fn shutdown(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Request-lifecycle tracer (span accounting, sampled JSONL sink).
+    pub fn tracer(&self) -> &Arc<RequestTracer> {
+        &self.tracer
+    }
+
+    /// Pool-local metrics registry.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// Quantization-health telemetry (None when the engine has no
+    /// digitization hooks or `obs.quant_health` is off).
+    pub fn quant_health(&self) -> Option<&Arc<QuantHealth>> {
+        self.health.as_ref()
+    }
+
+    /// Machine-readable pool stats (the `stats` protocol command).
+    pub fn stats_json(&self) -> String {
+        let lat = self.stats.percentiles_ms(&[0.5, 0.95, 0.99, 0.999]);
+        let qw = self.stats.queue_percentiles_ms(&[0.5, 0.99]);
+        let mut s = format!(
+            "{{\"model\":\"{}\",\"engine\":\"{}\",\"replicas\":{},\
+             \"replicas_live\":{},\
+             \"queue_depth\":{},\"deadline_ms\":{},\"requests\":{},\
+             \"batches\":{},\
+             \"full_batches\":{},\"singles\":{},\"rejected\":{},\
+             \"shed\":{},\
+             \"busy_ms\":{:.3},\
+             \"latency_ms\":{{\"p50\":{:.3},\"p95\":{:.3},\"p99\":{:.3},\
+             \"p999\":{:.3}}},\
+             \"queue_wait_ms\":{{\"p50\":{:.3},\"p99\":{:.3}}},\
+             \"spans\":{{\"opened\":{},\"closed\":{},\"emitted\":{}}},\
+             \"per_replica_requests\":[",
+            escape_json(&self.model),
+            escape_json(&self.engine),
+            self.replicas(),
+            self.live_replicas(),
+            self.queue.depth,
+            self.request_deadline.as_millis(),
+            self.stats.requests.load(Ordering::SeqCst),
+            self.stats.batches.load(Ordering::SeqCst),
+            self.stats.full_batches.load(Ordering::SeqCst),
+            self.stats.singles.load(Ordering::SeqCst),
+            self.stats.rejected.load(Ordering::SeqCst),
+            self.stats.shed.load(Ordering::SeqCst),
+            self.stats.busy_us.load(Ordering::SeqCst) as f64 / 1e3,
+            lat[0],
+            lat[1],
+            lat[2],
+            lat[3],
+            qw[0],
+            qw[1],
+            self.tracer.opened(),
+            self.tracer.closed(),
+            self.tracer.emitted(),
+        );
+        for (i, r) in self.replica_stats.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&r.requests.load(Ordering::SeqCst).to_string());
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Render this pool's Prometheus series into `w` (the `metrics`
+    /// protocol command aggregates every pool through one writer).
+    pub fn render_prometheus(&self, w: &mut PromWriter) {
+        let l = format!("model=\"{}\"", escape_label(&self.model));
+        w.family("bskmq_requests_total", "counter", "requests served");
+        w.raw_sample(
+            "bskmq_requests_total",
+            &l,
+            self.stats.requests.load(Ordering::SeqCst) as f64,
+        );
+        w.family(
+            "bskmq_rejected_total",
+            "counter",
+            "requests refused by admission control",
+        );
+        w.raw_sample(
+            "bskmq_rejected_total",
+            &l,
+            self.stats.rejected.load(Ordering::SeqCst) as f64,
+        );
+        w.family(
+            "bskmq_shed_total",
+            "counter",
+            "requests shed past their deadline",
+        );
+        w.raw_sample(
+            "bskmq_shed_total",
+            &l,
+            self.stats.shed.load(Ordering::SeqCst) as f64,
+        );
+        w.family("bskmq_batches_total", "counter", "executed batches");
+        w.raw_sample(
+            "bskmq_batches_total",
+            &l,
+            self.stats.batches.load(Ordering::SeqCst) as f64,
+        );
+        let qs = [0.5, 0.95, 0.99, 0.999];
+        let lat = self.stats.percentiles_ms(&qs);
+        let qw = self.stats.queue_percentiles_ms(&qs);
+        w.family(
+            "bskmq_latency_ms",
+            "gauge",
+            "service latency quantiles (ms)",
+        );
+        w.family(
+            "bskmq_queue_wait_quantile_ms",
+            "gauge",
+            "queue-wait quantiles (ms)",
+        );
+        for (i, q) in qs.iter().enumerate() {
+            w.raw_sample(
+                "bskmq_latency_ms",
+                &format!("{l},quantile=\"{q}\""),
+                lat[i],
+            );
+            w.raw_sample(
+                "bskmq_queue_wait_quantile_ms",
+                &format!("{l},quantile=\"{q}\""),
+                qw[i],
+            );
+        }
+        w.family(
+            "bskmq_replica_requests_total",
+            "counter",
+            "requests per replica",
+        );
+        for (i, r) in self.replica_stats.iter().enumerate() {
+            w.raw_sample(
+                "bskmq_replica_requests_total",
+                &format!("{l},replica=\"{i}\""),
+                r.requests.load(Ordering::SeqCst) as f64,
+            );
+        }
+        w.family(
+            "bskmq_spans_opened_total",
+            "counter",
+            "request spans opened at admission",
+        );
+        w.raw_sample("bskmq_spans_opened_total", &l, self.tracer.opened() as f64);
+        w.family(
+            "bskmq_spans_closed_total",
+            "counter",
+            "request spans closed after reply",
+        );
+        w.raw_sample("bskmq_spans_closed_total", &l, self.tracer.closed() as f64);
+        self.metrics.render(w);
+        if let Some(h) = &self.health {
+            h.render(w, &self.model);
+        }
+    }
+
+    /// Pool summary: aggregate line plus one line per replica.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{} [{} backend, {} replica(s), {} live, queue depth {}]\n  \
+             all: {}",
+            self.model,
+            self.engine,
+            self.replicas(),
+            self.live_replicas(),
+            self.queue.depth,
+            self.stats.summary()
+        );
+        for (i, r) in self.replica_stats.iter().enumerate() {
+            s.push_str(&format!("\n  r{i}:  {}", r.summary()));
+        }
+        s
+    }
+}
+
+impl Drop for ModelPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Load + calibrate one model for a pool (runs on the coordinator
+/// thread so PJRT-style engines never cross threads).  Per-layer specs
+/// come from the manifest unless `cfg.spec` overrides them uniformly;
+/// specs carrying `weight_bits` quantize the weights *first* and then
+/// calibrate on the quantized-weight backend (Algorithm 1 runs on the
+/// deployed macro, not a float simulator).
+fn pool_setup(
+    cfg: &PoolConfig,
+    artifacts: &std::path::Path,
+    model: &str,
+) -> Result<(Box<dyn Backend>, CalibrationResult, Option<Arc<QuantHealth>>)> {
+    let be = crate::backend::load(cfg.backend, artifacts, model)?;
+    let data = ModelData::load(artifacts, model)?;
+    let specs = match cfg.spec {
+        Some(s) => s.per_layer(be.manifest().nq()),
+        None => be.manifest().layer_specs(),
+    };
+    let mut be: Box<dyn Backend> =
+        if specs.iter().any(|s| s.weight_bits.is_some()) {
+            PtqEvaluator::new(be.as_ref()).quantize_weights_spec(&specs)?
+        } else {
+            be
+        };
+    let calib = Calibrator::with_specs(be.as_ref(), specs)
+        .calibrate_sharded(&data, cfg.calib_batches, cfg.calib_shards)?;
+    // attach quant-health BEFORE replicate(): replicas clone the engine
+    // and share the telemetry Arc, so the pool aggregates one view
+    let health = if cfg.obs.quant_health {
+        let names: Vec<String> = be
+            .manifest()
+            .qlayers
+            .iter()
+            .map(|ql| ql.name.clone())
+            .collect();
+        let h = Arc::new(QuantHealth::new(
+            &names,
+            &calib.nl_books,
+            Some(&calib.sketches),
+            cfg.obs.sketch_sample_every,
+        ));
+        if be.attach_quant_health(h.clone()) {
+            Some(h)
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+    Ok((be, calib, health))
+}
+
+/// Immutable state every worker replica shares: the programmed
+/// codebooks plus the pool's observability handles.
+struct WorkerShared {
+    books: ProgrammedCodebooks,
+    noise_std: f32,
+    window: Duration,
+    /// profile every Nth batch through `run_qfwd_profiled` (0 = never)
+    profile_every: u64,
+    tracer: Arc<RequestTracer>,
+    forward_hist: Arc<Histogram>,
+    queue_hist: Arc<Histogram>,
+    /// deadline headroom at batch assembly (0 for shed requests)
+    deadline_hist: Arc<Histogram>,
+}
+
+/// One worker replica: pop a batch, shed what already missed its
+/// deadline, execute the rest, reply, repeat until the queue closes and
+/// drains (or autoscaling retires the slot).  Backend failures answer
+/// the affected batch with errors and keep the worker alive.
+fn worker_loop(
+    backend: &dyn Backend,
+    sh: &WorkerShared,
+    queue: &JobQueue,
+    slot: usize,
+    mine: &ServerStats,
+    global: &ServerStats,
+) {
+    let m = backend.manifest();
+    let batch = m.batch;
+    let classes = m.num_classes;
+    let in_elems = m.input_elems();
+    let replica = slot as u32;
+    let mut seed = replica.wrapping_mul(0x9E37);
+    let mut batches_done: u64 = 0;
+    loop {
+        let popped = match queue.pop_batch(slot, batch, sh.window) {
+            Popped::Batch(v) => v,
+            // shutdown observed with the queue drained, or this slot
+            // scaled away — either way this thread is done
+            Popped::Shutdown | Popped::Retire => return,
+        };
+        let t0 = Instant::now();
+        seed = seed.wrapping_add(1);
+        // queue wait is measured at batch assembly, per request; the
+        // same instant decides shedding, so a shed request's wait is
+        // still visible in the queue-wait percentiles
+        let mut pending: Vec<Request> = Vec::with_capacity(popped.len());
+        let mut queue_waits: Vec<u64> = Vec::with_capacity(popped.len());
+        for r in popped {
+            let us = r.submitted.elapsed().as_micros() as u64;
+            sh.queue_hist.observe(us as f64 / 1e3);
+            mine.record_queue_wait(us);
+            global.record_queue_wait(us);
+            if t0 >= r.deadline {
+                // deadline shed: answer immediately with an explicit
+                // overload reply instead of spending batch capacity on
+                // an answer the client has given up on
+                mine.shed.fetch_add(1, Ordering::Relaxed);
+                global.shed.fetch_add(1, Ordering::Relaxed);
+                sh.deadline_hist.observe(0.0);
+                let deadline_ms = r
+                    .deadline
+                    .saturating_duration_since(r.submitted)
+                    .as_millis() as u64;
+                r.reply.send(Err(ServeError::Overload {
+                    queued_ms: us / 1000,
+                    deadline_ms,
+                }));
+                sh.tracer.close(r.id, || Span {
+                    id: 0,
+                    model: String::new(),
+                    replica,
+                    batch_n: 0,
+                    queue_us: us,
+                    forward_us: 0,
+                    reply_us: 0,
+                    ops: Vec::new(),
+                });
+                continue;
+            }
+            let headroom =
+                r.deadline.saturating_duration_since(t0).as_secs_f64() * 1e3;
+            sh.deadline_hist.observe(headroom);
+            queue_waits.push(us);
+            pending.push(r);
+        }
+        if pending.is_empty() {
+            continue; // the whole pop was shed
+        }
+        let n = pending.len();
+        // exact-size execution when the backend can (native: always;
+        // xla: full batch or the batch-1 graph); otherwise pad up to the
+        // compiled batch
+        let run_n = if backend.supports_batch(n) { n } else { batch };
+        let mut x = Vec::with_capacity(run_n * in_elems);
+        for r in &pending {
+            x.extend_from_slice(&r.x);
+        }
+        for _ in n..run_n {
+            x.extend_from_slice(&pending[0].x);
+        }
+        batches_done += 1;
+        // sampled per-op profiling: unprofiled batches collect no rows,
+        // so the steady state allocates nothing for tracing
+        let profiled =
+            sh.profile_every > 0 && batches_done % sh.profile_every == 0;
+        let (result, ops) = if profiled {
+            match backend.run_qfwd_profiled(&x, &sh.books, sh.noise_std, seed)
+            {
+                Ok((logits, timings)) => (
+                    Ok(logits),
+                    timings
+                        .into_iter()
+                        .map(|t| (t.name, t.nanos as u64))
+                        .collect::<Vec<(String, u64)>>(),
+                ),
+                Err(e) => (Err(e), Vec::new()),
+            }
+        } else {
+            (
+                backend.run_qfwd(&x, &sh.books, sh.noise_std, seed),
+                Vec::new(),
+            )
+        };
+        // record BEFORE replying: a client that just received its answer
+        // must already see itself in the counters
+        let forward_us = t0.elapsed().as_micros() as u64;
+        mine.record_batch(n, batch, forward_us);
+        global.record_batch(n, batch, forward_us);
+        sh.forward_hist.observe(forward_us as f64 / 1e3);
+        match result {
+            Ok(logits) => {
+                for (i, r) in pending.iter().enumerate() {
+                    r.reply
+                        .send(Ok(logits[i * classes..(i + 1) * classes].to_vec()));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                eprintln!("worker r{replica}: batch of {n} failed: {msg}");
+                for r in &pending {
+                    r.reply.send(Err(ServeError::Failed(msg.clone())));
+                }
+            }
+        }
+        // close spans AFTER the replies: reply_us covers the send
+        let reply_us =
+            (t0.elapsed().as_micros() as u64).saturating_sub(forward_us);
+        for (i, r) in pending.iter().enumerate() {
+            sh.tracer.close(r.id, || Span {
+                id: 0,
+                model: String::new(),
+                replica,
+                batch_n: n,
+                queue_us: queue_waits[i],
+                forward_us,
+                reply_us,
+                ops: ops.clone(),
+            });
+        }
+    }
+}
+
+/// Several models served from one process, each behind its own
+/// [`ModelPool`].  Routing is by model name; the first model is the
+/// default route.
+pub struct ModelRegistry {
+    pools: Vec<ModelPool>,
+}
+
+impl ModelRegistry {
+    /// Load + calibrate every model sequentially; any failure aborts the
+    /// whole registry (fail fast beats serving a partial fleet silently).
+    pub fn start(
+        artifacts: &std::path::Path,
+        models: &[String],
+        cfg: &PoolConfig,
+    ) -> Result<ModelRegistry> {
+        ensure!(!models.is_empty(), "registry needs at least one model");
+        let mut pools: Vec<ModelPool> = Vec::with_capacity(models.len());
+        for name in models {
+            ensure!(
+                pools.iter().all(|p| &p.model != name),
+                "model '{name}' listed twice"
+            );
+            pools.push(ModelPool::start(
+                artifacts.to_path_buf(),
+                name.clone(),
+                cfg,
+            )?);
+        }
+        Ok(ModelRegistry { pools })
+    }
+
+    /// Pool by model name.
+    pub fn get(&self, model: &str) -> Option<&ModelPool> {
+        self.pools.iter().find(|p| p.model == model)
+    }
+
+    /// The default route (first model listed).
+    pub fn default_pool(&self) -> &ModelPool {
+        &self.pools[0]
+    }
+
+    pub fn pools(&self) -> &[ModelPool] {
+        &self.pools
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.pools.iter().map(|p| p.model.as_str()).collect()
+    }
+
+    /// Multi-line summary: per-pool aggregate + per-replica stats.
+    pub fn summary(&self) -> String {
+        let lines: Vec<String> =
+            self.pools.iter().map(|p| p.summary()).collect();
+        lines.join("\n")
+    }
+
+    /// Machine-readable stats over every pool (the `stats` command).
+    pub fn stats_json(&self) -> String {
+        let items: Vec<String> =
+            self.pools.iter().map(|p| p.stats_json()).collect();
+        format!("{{\"pools\":[{}]}}", items.join(","))
+    }
+
+    /// Prometheus text exposition over every pool (the `metrics`
+    /// command).
+    pub fn prometheus(&self) -> String {
+        let mut w = PromWriter::new();
+        for p in &self.pools {
+            p.render_prometheus(&mut w);
+        }
+        w.finish()
+    }
+}
+
+/// Single-model compatibility front over [`ModelPool`] (the pre-pool
+/// API).  `start` keeps its historical signature; replica count and
+/// queue depth come from [`PoolConfig::default`] unless the pool API is
+/// used directly.
+pub struct InferenceServer {
+    pool: ModelPool,
+    pub stats: Arc<ServerStats>,
+}
+
+impl InferenceServer {
+    /// Start a one-model, default-config pool: load the selected
+    /// backend, calibrate on `calib_batches` batches — with `spec` as a
+    /// uniform per-layer override, or the manifest's specs when `None` —
+    /// then serve until dropped.
+    pub fn start(
+        artifacts: std::path::PathBuf,
+        model: String,
+        backend: BackendKind,
+        spec: Option<QuantSpec>,
+        noise_std: f32,
+        calib_batches: usize,
+    ) -> Result<InferenceServer> {
+        let cfg = PoolConfig {
+            backend,
+            spec,
+            noise_std,
+            calib_batches,
+            ..PoolConfig::default()
+        };
+        let pool = ModelPool::start(artifacts, model, &cfg)?;
+        eprintln!("inference server ready ({} backend)", pool.engine());
+        let stats = pool.stats.clone();
+        Ok(InferenceServer { pool, stats })
+    }
+
+    /// Blocking request: returns the logits for one input.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.pool.infer(x)
+    }
+
+    /// Clone-able intake handle for concurrent client threads.
+    pub fn client(&self) -> PoolClient {
+        self.pool.client()
+    }
+
+    /// The underlying pool (replica stats, admission counters).
+    pub fn pool(&self) -> &ModelPool {
+        &self.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_request(tx: mpsc::Sender<Reply>) -> Request {
+        let now = Instant::now();
+        Request {
+            id: 0,
+            submitted: now,
+            deadline: now + Duration::from_secs(10),
+            x: vec![0.0],
+            reply: ReplyTo::Channel(tx),
+        }
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let st = ServerStats::default();
+        assert_eq!(st.percentile_ms(0.5), 0.0);
+        for us in [1000u64, 2000, 3000, 4000] {
+            st.record_latency(us, 1);
+        }
+        assert!((st.percentile_ms(0.5) - 2.5).abs() < 1e-9);
+        assert!(st.percentile_ms(0.99) <= 4.0);
+        let s = st.summary();
+        assert!(s.contains("p50="), "{s}");
+        assert!(s.contains("p99="), "{s}");
+        assert!(s.contains("rejected=0"), "{s}");
+        assert!(s.contains("shed=0"), "{s}");
+    }
+
+    /// Empty ring: every percentile is 0.0, for any quantile list.
+    #[test]
+    fn empty_ring_percentiles_are_zero() {
+        let st = ServerStats::default();
+        assert_eq!(
+            st.percentiles_ms(&[0.0, 0.25, 0.5, 0.95, 1.0]),
+            vec![0.0; 5]
+        );
+        assert_eq!(st.percentiles_ms(&[]), Vec::<f64>::new());
+    }
+
+    /// Small-capacity ring against a naive keep-the-last-K reference:
+    /// wraparound must retain exactly the most recent `capacity` samples.
+    #[test]
+    fn ring_wraparound_matches_naive_reference() {
+        let cap = 8;
+        let mut ring = LatencyRing::with_capacity(cap);
+        let feed: Vec<u64> = (0..31).map(|i| (i * 37 + 5) % 97).collect();
+        for &v in &feed {
+            ring.push(v);
+        }
+        assert_eq!(ring.samples.len(), cap, "ring exceeded its capacity");
+        let mut got = ring.samples.clone();
+        got.sort_unstable();
+        let mut want: Vec<u64> = feed[feed.len() - cap..].to_vec();
+        want.sort_unstable();
+        assert_eq!(got, want, "ring lost or kept the wrong samples");
+    }
+
+    /// Full-size ring: push past MAX_LATENCY_SAMPLES and check the
+    /// percentiles against a sort-everything reference over the retained
+    /// window (the last MAX samples).
+    #[test]
+    fn ring_wraps_past_max_and_percentiles_track_recent_window() {
+        let st = ServerStats::default();
+        let extra = 1234usize;
+        let total = MAX_LATENCY_SAMPLES + extra;
+        for i in 0..total {
+            st.record_latency(i as u64, 1);
+        }
+        assert_eq!(
+            st.lat_us.lock().unwrap().samples.len(),
+            MAX_LATENCY_SAMPLES,
+            "ring grew past its bound"
+        );
+        // retained window = values extra..total (the most recent MAX)
+        let window: Vec<f64> =
+            (extra..total).map(|v| v as f64).collect(); // already sorted
+        let qs = [0.0, 0.01, 0.5, 0.95, 1.0];
+        let got = st.percentiles_ms(&qs); // one sort for all quantiles
+        for (q, got) in qs.iter().zip(got) {
+            let want =
+                crate::util::stats::quantile_sorted(&window, *q) / 1e3;
+            assert!(
+                (got - want).abs() < 1e-6,
+                "q={q}: got {got} want {want}"
+            );
+        }
+    }
+
+    /// Bounded queue semantics: admission rejection at depth, explicit
+    /// close rejects producers and releases consumers.
+    #[test]
+    fn job_queue_admission_and_close() {
+        let q = JobQueue::new(2, 1, 1, None);
+        let mk = || {
+            let (tx, rx) = mpsc::channel();
+            (mk_request(tx), rx)
+        };
+        let (r1, _k1) = mk();
+        let (r2, _k2) = mk();
+        let (r3, _k3) = mk();
+        assert!(q.push(r1).is_ok());
+        assert!(q.push(r2).is_ok());
+        assert_eq!(
+            q.push(r3).unwrap_err(),
+            AdmissionError::Full { depth: 2 }
+        );
+        match q.pop_batch(0, 8, Duration::ZERO) {
+            Popped::Batch(got) => {
+                assert_eq!(got.len(), 2, "drain returns everything queued");
+            }
+            _ => panic!("expected a batch"),
+        }
+        q.close();
+        let (r4, _k4) = mk();
+        assert_eq!(q.push(r4).unwrap_err(), AdmissionError::Closed);
+        assert!(
+            matches!(
+                q.pop_batch(0, 8, Duration::from_millis(50)),
+                Popped::Shutdown
+            ),
+            "closed+empty queue must release consumers immediately"
+        );
+    }
+
+    /// A full batch dispatches the moment it is full: the top-up window
+    /// must never add latency once `len == max` (the old per-replica
+    /// batching bug class this module's rewrite retires structurally).
+    #[test]
+    fn full_batch_dispatches_without_waiting_for_window() {
+        let q = JobQueue::new(8, 1, 1, None);
+        for _ in 0..4 {
+            let (tx, _rx) = mpsc::channel();
+            q.push(mk_request(tx)).unwrap();
+        }
+        let t0 = Instant::now();
+        match q.pop_batch(0, 4, Duration::from_secs(5)) {
+            Popped::Batch(b) => assert_eq!(b.len(), 4),
+            _ => panic!("expected a batch"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "full batch must dispatch immediately, not wait out the window"
+        );
+    }
+
+    /// The autoscaling protocol on the queue: slots past the target
+    /// retire (handing queued work to live workers), and a later resize
+    /// reports each retired slot for respawn exactly once.
+    #[test]
+    fn scale_target_retires_and_respawns_slots() {
+        let q = Arc::new(JobQueue::new(8, 2, 4, None));
+        match q.pop_batch(3, 4, Duration::ZERO) {
+            Popped::Retire => {}
+            _ => panic!("slot past the target must retire"),
+        }
+        assert_eq!(q.resize_target(4), vec![3]);
+        assert_eq!(q.resize_target(4), Vec::<usize>::new());
+        assert_eq!(q.target(), 4);
+        // with work queued, a retiring slot must hand the wakeup on so
+        // the job reaches a live worker
+        q.resize_target(1);
+        let (tx, _rx) = mpsc::channel();
+        q.push(mk_request(tx)).unwrap();
+        let q2 = q.clone();
+        let h =
+            std::thread::spawn(move || q2.pop_batch(1, 4, Duration::ZERO));
+        match q.pop_batch(0, 4, Duration::ZERO) {
+            Popped::Batch(b) => assert_eq!(b.len(), 1),
+            _ => panic!("slot 0 must receive the handed-off job"),
+        }
+        match h.join().unwrap() {
+            Popped::Retire => {}
+            _ => panic!("slot 1 must retire after the resize"),
+        }
+    }
+
+    #[test]
+    fn serve_error_display_and_overload_flag() {
+        let o = ServeError::Overload {
+            queued_ms: 7,
+            deadline_ms: 5,
+        };
+        assert!(o.is_overload());
+        let s = o.to_string();
+        assert!(s.contains("overload"), "{s}");
+        assert!(s.contains('7'), "{s}");
+        let f = ServeError::Failed("boom".into());
+        assert!(!f.is_overload());
+        assert_eq!(f.to_string(), "inference failed: boom");
+    }
+}

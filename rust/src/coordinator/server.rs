@@ -1,1286 +1,7 @@
-//! Replica-pool inference serving: the request path of the deployed
-//! system.
-//!
-//! One process hosts a [`ModelRegistry`] of independently calibrated
-//! models.  Each model is served by a [`ModelPool`]: a shared **bounded**
-//! intake queue with admission control (a full queue rejects the request
-//! with an error instead of buffering without bound) feeding N worker
-//! replicas.  Every worker owns its own [`Backend`] instance — replicas
-//! come from [`Backend::replicate`], which for the native engine is an
-//! `Arc` clone of the shared weight set, the software analogue of
-//! programming the same weights into another crossbar bank — and batches
-//! greedily: pop everything queued up to the model batch size, top a
-//! partial batch up for a short window, execute, reply.  The vLLM-style
-//! dynamic batching of the single-thread server, scaled across replicas.
-//!
-//! Shutdown is an explicit signal on the queue, not a channel-hangup
-//! side effect: dropping a pool closes the queue, which wakes and drains
-//! every worker even while [`PoolClient`] handles are still alive in
-//! other threads (the bug the old mpsc-based server had).
-//!
-//! With zero conversion noise the quantized forward is a deterministic
-//! per-sample function (per-(layer, row) noise seeding, no cross-sample
-//! coupling), so logits are bit-identical regardless of replica count,
-//! batch composition, or thread interleaving — the property the
-//! concurrency suite (`rust/tests/server_concurrency.rs`) pins.
-
-use std::collections::VecDeque;
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
-
-use anyhow::{bail, ensure, Result};
-
-use crate::backend::{Backend, BackendKind, ProgrammedCodebooks};
-use crate::coordinator::calibrate::{CalibrationResult, Calibrator};
-use crate::coordinator::ptq::PtqEvaluator;
-use crate::data::dataset::ModelData;
-use crate::obs::prometheus::{escape_label, PromWriter};
-use crate::obs::quant_health::QuantHealth;
-use crate::obs::registry::{Histogram, MetricsRegistry};
-use crate::obs::trace::{escape_json, RequestTracer, Span, TraceSink};
-use crate::quant::QuantSpec;
-
-/// Outcome of one request: logits, or a serving-side error message.
-pub type Reply = std::result::Result<Vec<f32>, String>;
-
-/// One queued inference request.  Internal: the only producer is
-/// [`PoolClient::submit`], which has already validated the input size.
-struct Request {
-    /// span id handed out by the pool's tracer at admission
-    id: u64,
-    /// when admission accepted the request (queue-wait clock)
-    submitted: Instant,
-    x: Vec<f32>,
-    reply: mpsc::Sender<Reply>,
-}
-
-/// Upper bound on retained latency samples (~8 MB worst case).
-pub const MAX_LATENCY_SAMPLES: usize = 1 << 20;
-
-/// Latency sample store: a ring over the most recent `capacity` service
-/// times, so percentiles keep tracking a long-running server instead of
-/// freezing on the warm-up era.
-#[derive(Clone)]
-struct LatencyRing {
-    samples: Vec<u64>,
-    capacity: usize,
-    /// next overwrite position once the ring is full
-    head: usize,
-}
-
-impl Default for LatencyRing {
-    fn default() -> Self {
-        LatencyRing::with_capacity(MAX_LATENCY_SAMPLES)
-    }
-}
-
-impl LatencyRing {
-    fn with_capacity(capacity: usize) -> LatencyRing {
-        LatencyRing {
-            samples: Vec::new(),
-            capacity: capacity.max(1),
-            head: 0,
-        }
-    }
-
-    fn push(&mut self, us: u64) {
-        if self.samples.len() < self.capacity {
-            self.samples.push(us);
-        } else {
-            self.samples[self.head] = us;
-            self.head = (self.head + 1) % self.capacity;
-        }
-    }
-
-    /// Append another ring's retained samples, oldest first, as if they
-    /// had been pushed here (cross-replica aggregation).  `head` is 0
-    /// until a ring fills, so `(head + i) % len` is oldest-first in both
-    /// regimes.
-    fn merge(&mut self, other: &LatencyRing) {
-        let n = other.samples.len();
-        for i in 0..n {
-            self.push(other.samples[(other.head + i) % n]);
-        }
-    }
-}
-
-#[derive(Default)]
-pub struct ServerStats {
-    pub requests: AtomicU64,
-    pub batches: AtomicU64,
-    pub full_batches: AtomicU64,
-    pub singles: AtomicU64,
-    pub busy_us: AtomicU64,
-    /// requests refused by admission control (bounded queue full)
-    pub rejected: AtomicU64,
-    /// per-request service latency samples (us)
-    lat_us: Mutex<LatencyRing>,
-    /// per-request queue-wait samples (us), recorded at batch assembly
-    queue_us: Mutex<LatencyRing>,
-}
-
-/// One lock (copy only) + one sort outside the lock, so the serving
-/// threads never stall on a reader.
-fn ring_percentiles_ms(ring: &Mutex<LatencyRing>, qs: &[f64]) -> Vec<f64> {
-    let raw = ring.lock().unwrap().samples.clone(); // memcpy only
-    let mut sorted: Vec<f64> = raw.into_iter().map(|u| u as f64).collect();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    qs.iter()
-        .map(|&q| {
-            if sorted.is_empty() {
-                0.0
-            } else {
-                crate::util::stats::quantile_sorted(&sorted, q) / 1e3
-            }
-        })
-        .collect()
-}
-
-impl ServerStats {
-    /// Record the service latency of a batch covering `n` requests.
-    pub fn record_latency(&self, us: u64, n: usize) {
-        let mut lat = self.lat_us.lock().unwrap();
-        for _ in 0..n {
-            lat.push(us);
-        }
-    }
-
-    /// Record one executed batch of `n` requests against the model's
-    /// compiled batch size.
-    pub fn record_batch(&self, n: usize, full_batch: usize, us: u64) {
-        self.requests.fetch_add(n as u64, Ordering::Relaxed);
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        if n == full_batch {
-            self.full_batches.fetch_add(1, Ordering::Relaxed);
-        } else if n == 1 {
-            self.singles.fetch_add(1, Ordering::Relaxed);
-        }
-        self.busy_us.fetch_add(us, Ordering::Relaxed);
-        self.record_latency(us, n);
-    }
-
-    /// Record how long one request sat queued before batch assembly.
-    pub fn record_queue_wait(&self, us: u64) {
-        self.queue_us.lock().unwrap().push(us);
-    }
-
-    /// Latency percentiles in milliseconds, one per requested quantile
-    /// (all 0.0 when no samples yet).
-    pub fn percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
-        ring_percentiles_ms(&self.lat_us, qs)
-    }
-
-    /// Queue-wait percentiles in milliseconds.
-    pub fn queue_percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
-        ring_percentiles_ms(&self.queue_us, qs)
-    }
-
-    /// Fold another stats instance into this one: counters add, latency
-    /// rings append oldest-first — the cross-replica aggregation path
-    /// (`other` must not be `self`).
-    pub fn merge_from(&self, other: &ServerStats) {
-        for (a, b) in [
-            (&self.requests, &other.requests),
-            (&self.batches, &other.batches),
-            (&self.full_batches, &other.full_batches),
-            (&self.singles, &other.singles),
-            (&self.busy_us, &other.busy_us),
-            (&self.rejected, &other.rejected),
-        ] {
-            a.fetch_add(b.load(Ordering::SeqCst), Ordering::Relaxed);
-        }
-        let theirs = other.lat_us.lock().unwrap().clone();
-        self.lat_us.lock().unwrap().merge(&theirs);
-        let theirs = other.queue_us.lock().unwrap().clone();
-        self.queue_us.lock().unwrap().merge(&theirs);
-    }
-
-    /// Latency percentile in milliseconds (0.0 when no samples yet).
-    pub fn percentile_ms(&self, q: f64) -> f64 {
-        self.percentiles_ms(&[q])[0]
-    }
-
-    pub fn summary(&self) -> String {
-        let p = self.percentiles_ms(&[0.50, 0.95, 0.99, 0.999]);
-        format!(
-            "requests={} batches={} full={} singles={} rejected={} \
-             busy={:.1}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms p999={:.2}ms",
-            self.requests.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.full_batches.load(Ordering::Relaxed),
-            self.singles.load(Ordering::Relaxed),
-            self.rejected.load(Ordering::Relaxed),
-            self.busy_us.load(Ordering::Relaxed) as f64 / 1e3,
-            p[0],
-            p[1],
-            p[2],
-            p[3],
-        )
-    }
-}
-
-/// Why intake refused a request.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum AdmissionError {
-    /// bounded queue at capacity — back off and retry
-    Full { depth: usize },
-    /// pool shut down
-    Closed,
-}
-
-impl std::fmt::Display for AdmissionError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            AdmissionError::Full { depth } => write!(
-                f,
-                "queue full (depth {depth}): request rejected by admission \
-                 control"
-            ),
-            AdmissionError::Closed => write!(f, "server shut down"),
-        }
-    }
-}
-
-impl std::error::Error for AdmissionError {}
-
-struct QueueInner {
-    jobs: VecDeque<Request>,
-    closed: bool,
-}
-
-/// Shared bounded work queue: the single intake point of a pool.
-/// `push` applies admission control; `close` is the explicit shutdown
-/// signal workers observe even while client handles stay alive.
-struct JobQueue {
-    inner: Mutex<QueueInner>,
-    ready: Condvar,
-    depth: usize,
-}
-
-impl JobQueue {
-    fn with_depth(depth: usize) -> JobQueue {
-        JobQueue {
-            inner: Mutex::new(QueueInner {
-                jobs: VecDeque::new(),
-                closed: false,
-            }),
-            ready: Condvar::new(),
-            depth: depth.max(1),
-        }
-    }
-
-    /// Enqueue or reject immediately — never blocks, never buffers past
-    /// the configured depth.
-    fn push(&self, r: Request) -> std::result::Result<(), AdmissionError> {
-        let mut q = self.inner.lock().unwrap();
-        if q.closed {
-            return Err(AdmissionError::Closed);
-        }
-        if q.jobs.len() >= self.depth {
-            return Err(AdmissionError::Full { depth: self.depth });
-        }
-        q.jobs.push_back(r);
-        drop(q);
-        self.ready.notify_one();
-        Ok(())
-    }
-
-    /// Blocking batched pop: waits for at least one job, drains up to
-    /// `max`, then tops a partial batch up for at most `window`.  Returns
-    /// an empty vec only on shutdown with the queue fully drained.
-    fn pop_batch(&self, max: usize, window: Duration) -> Vec<Request> {
-        let mut q = self.inner.lock().unwrap();
-        loop {
-            if !q.jobs.is_empty() {
-                break;
-            }
-            if q.closed {
-                return Vec::new();
-            }
-            q = self.ready.wait(q).unwrap();
-        }
-        let mut out = Vec::with_capacity(max.min(q.jobs.len()));
-        while out.len() < max {
-            match q.jobs.pop_front() {
-                Some(j) => out.push(j),
-                None => break,
-            }
-        }
-        if out.len() < max && !window.is_zero() {
-            let deadline = Instant::now() + window;
-            while out.len() < max && !q.closed {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                let (guard, timeout) =
-                    self.ready.wait_timeout(q, deadline - now).unwrap();
-                q = guard;
-                while out.len() < max {
-                    match q.jobs.pop_front() {
-                        Some(j) => out.push(j),
-                        None => break,
-                    }
-                }
-                if timeout.timed_out() {
-                    break;
-                }
-            }
-        }
-        out
-    }
-
-    fn close(&self) {
-        let mut q = self.inner.lock().unwrap();
-        q.closed = true;
-        drop(q);
-        self.ready.notify_all();
-    }
-}
-
-/// Observability knobs for one pool (DESIGN.md §11).  All sampling
-/// rates use `0 = off` so the defaults cost nothing on the hot path.
-#[derive(Clone)]
-pub struct ObsConfig {
-    /// run every Nth batch through `run_qfwd_profiled` for a per-op
-    /// wall-time breakdown (0 = never; steady state stays allocation
-    /// free because unprofiled batches collect no rows)
-    pub profile_every: u64,
-    /// emit every Nth request span to the trace sink (0 = never; span
-    /// open/close accounting runs regardless)
-    pub trace_sample_every: u64,
-    /// JSONL span sink on disk (ignored when `trace_sink` is set)
-    pub trace_path: Option<PathBuf>,
-    /// explicit span sink (tests hand in memory sinks)
-    pub trace_sink: Option<Arc<TraceSink>>,
-    /// attach quantization-health telemetry to the backend's
-    /// digitization step (engines without hooks silently skip it)
-    pub quant_health: bool,
-    /// live-sketch stride: every Nth observed activation feeds the
-    /// per-layer bottom-k sketch (0 disables live sketching)
-    pub sketch_sample_every: u64,
-}
-
-impl Default for ObsConfig {
-    fn default() -> Self {
-        ObsConfig {
-            profile_every: 0,
-            trace_sample_every: 0,
-            trace_path: None,
-            trace_sink: None,
-            quant_health: true,
-            sketch_sample_every: 31,
-        }
-    }
-}
-
-impl std::fmt::Debug for ObsConfig {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("ObsConfig")
-            .field("profile_every", &self.profile_every)
-            .field("trace_sample_every", &self.trace_sample_every)
-            .field("trace_path", &self.trace_path)
-            .field("trace_sink", &self.trace_sink.is_some())
-            .field("quant_health", &self.quant_health)
-            .field("sketch_sample_every", &self.sketch_sample_every)
-            .finish()
-    }
-}
-
-/// Per-pool serving configuration.  `replicas` and `queue_depth` are the
-/// scaling knobs; the rest mirrors the calibration pipeline.
-#[derive(Clone, Debug)]
-pub struct PoolConfig {
-    pub backend: BackendKind,
-    /// uniform calibration-spec override; `None` serves the manifest's
-    /// per-layer specs (the mixed-precision deployment default)
-    pub spec: Option<QuantSpec>,
-    pub noise_std: f32,
-    pub calib_batches: usize,
-    /// parallel calibration shards (merged codebooks are bit-identical
-    /// to serial, so this is purely a startup-latency knob)
-    pub calib_shards: usize,
-    /// worker replicas, each owning its own `Backend` instance
-    pub replicas: usize,
-    /// bounded intake queue depth (admission control threshold)
-    pub queue_depth: usize,
-    /// how long a worker waits to top up a partial batch
-    pub batch_window: Duration,
-    /// observability: tracing, profiling, quantization health
-    pub obs: ObsConfig,
-}
-
-impl Default for PoolConfig {
-    fn default() -> Self {
-        PoolConfig {
-            backend: BackendKind::Auto,
-            spec: None,
-            noise_std: 0.0,
-            calib_batches: 8,
-            calib_shards: 1,
-            replicas: 1,
-            queue_depth: 256,
-            batch_window: Duration::from_millis(2),
-            obs: ObsConfig::default(),
-        }
-    }
-}
-
-/// Cloneable intake handle: validates the input size, then submits
-/// through the pool's admission-controlled queue.  Holding one does NOT
-/// keep the pool alive — shutdown closes the queue underneath it and
-/// later submissions fail with [`AdmissionError::Closed`].
-#[derive(Clone)]
-pub struct PoolClient {
-    queue: Arc<JobQueue>,
-    stats: Arc<ServerStats>,
-    tracer: Arc<RequestTracer>,
-    in_elems: usize,
-    num_classes: usize,
-}
-
-impl PoolClient {
-    /// Non-blocking submit under admission control; on acceptance the
-    /// receiver yields exactly one [`Reply`].  Rejections (queue full,
-    /// shutdown, wrong input size) surface as immediate errors — a
-    /// request is never silently dropped.
-    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Reply>> {
-        ensure!(
-            x.len() == self.in_elems,
-            "input has {} elements, model wants {}",
-            x.len(),
-            self.in_elems
-        );
-        let (tx, rx) = mpsc::channel();
-        // span opens at admission; a refused push rolls it back so
-        // rejected requests never count as open spans
-        let id = self.tracer.open();
-        let req = Request {
-            id,
-            submitted: Instant::now(),
-            x,
-            reply: tx,
-        };
-        match self.queue.push(req) {
-            Ok(()) => Ok(rx),
-            Err(e) => {
-                self.tracer.cancel(id);
-                if matches!(e, AdmissionError::Full { .. }) {
-                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                }
-                Err(anyhow::Error::new(e))
-            }
-        }
-    }
-
-    /// Blocking request: submit, then wait for the logits.
-    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
-        let rx = self.submit(x)?;
-        match rx.recv_timeout(Duration::from_secs(120)) {
-            Ok(Ok(logits)) => Ok(logits),
-            Ok(Err(msg)) => bail!("inference failed: {msg}"),
-            Err(_) => bail!("request dropped or timed out"),
-        }
-    }
-
-    /// Logit vector length of the served model.
-    pub fn num_classes(&self) -> usize {
-        self.num_classes
-    }
-
-    /// Per-sample input element count of the served model.
-    pub fn in_elems(&self) -> usize {
-        self.in_elems
-    }
-}
-
-/// What the coordinator thread reports back once serving can start.
-struct PoolReady {
-    engine: String,
-    in_elems: usize,
-    num_classes: usize,
-    batch: usize,
-    health: Option<Arc<QuantHealth>>,
-}
-
-/// One model's serving pool: N replica workers behind a bounded queue.
-pub struct ModelPool {
-    pub model: String,
-    queue: Arc<JobQueue>,
-    /// pool-wide aggregate (every worker records here too)
-    pub stats: Arc<ServerStats>,
-    /// per-replica counters, index = replica id
-    pub replica_stats: Vec<Arc<ServerStats>>,
-    engine: String,
-    in_elems: usize,
-    num_classes: usize,
-    batch: usize,
-    /// request-lifecycle tracer (span accounting + sampled JSONL)
-    tracer: Arc<RequestTracer>,
-    /// pool-local metrics registry (latency/queue-wait histograms)
-    metrics: Arc<MetricsRegistry>,
-    /// quantization-health telemetry, when the engine supports hooks
-    health: Option<Arc<QuantHealth>>,
-    handle: Option<std::thread::JoinHandle<Result<()>>>,
-}
-
-impl ModelPool {
-    /// Start the pool: a coordinator thread loads the backend, calibrates
-    /// the per-layer spec'd codebooks on `cfg.calib_batches` batches, spawns
-    /// `cfg.replicas - 1` additional workers over [`Backend::replicate`]
-    /// clones, then serves as worker 0 until the pool is dropped.
-    pub fn start(
-        artifacts: std::path::PathBuf,
-        model: String,
-        cfg: &PoolConfig,
-    ) -> Result<ModelPool> {
-        let cfg = cfg.clone();
-        ensure!(cfg.replicas >= 1, "pool needs at least one replica");
-        let queue = Arc::new(JobQueue::with_depth(cfg.queue_depth));
-        let stats = Arc::new(ServerStats::default());
-        let replica_stats: Vec<Arc<ServerStats>> = (0..cfg.replicas)
-            .map(|_| Arc::new(ServerStats::default()))
-            .collect();
-        let sink = match (&cfg.obs.trace_sink, &cfg.obs.trace_path) {
-            (Some(s), _) => Some(s.clone()),
-            (None, Some(p)) => Some(TraceSink::file(p)?),
-            (None, None) => None,
-        };
-        let tracer =
-            RequestTracer::new(&model, cfg.obs.trace_sample_every, sink);
-        let metrics = Arc::new(MetricsRegistry::new());
-        // pool-level histograms carry the model label in their
-        // registered name so the registry renders them route-scoped
-        let ml = escape_label(&model);
-        let forward_hist = metrics.histogram(
-            &format!("bskmq_forward_latency_ms{{model=\"{ml}\"}}"),
-            &Histogram::latency_ms_bounds(),
-        );
-        let queue_hist = metrics.histogram(
-            &format!("bskmq_queue_wait_ms{{model=\"{ml}\"}}"),
-            &Histogram::latency_ms_bounds(),
-        );
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<PoolReady>>();
-
-        let m_name = model.clone();
-        let q = queue.clone();
-        let st = stats.clone();
-        let rst = replica_stats.clone();
-        let tracer_w = tracer.clone();
-        let handle = std::thread::spawn(move || -> Result<()> {
-            // setup: load + calibrate, reporting failure instead of
-            // leaving the caller blocked
-            let (be, calib, health) =
-                match pool_setup(&cfg, &artifacts, &m_name) {
-                    Ok(v) => v,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
-                        return Err(e);
-                    }
-                };
-            let shared = Arc::new(WorkerShared {
-                books: calib.programmed,
-                noise_std: cfg.noise_std,
-                window: cfg.batch_window,
-                profile_every: cfg.obs.profile_every,
-                tracer: tracer_w,
-                forward_hist,
-                queue_hist,
-            });
-            // replicas 1..N each own a cheap clone of the engine
-            let mut workers = Vec::new();
-            for (i, mine) in rst.iter().enumerate().skip(1) {
-                let rep = match be.replicate() {
-                    Ok(b) => b,
-                    Err(e) => {
-                        let e = e.context(format!(
-                            "cannot serve '{m_name}' with {} replicas",
-                            cfg.replicas
-                        ));
-                        let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
-                        q.close();
-                        for w in workers {
-                            let _ = w.join();
-                        }
-                        return Err(e);
-                    }
-                };
-                let q = q.clone();
-                let st = st.clone();
-                let mine = mine.clone();
-                let shared = shared.clone();
-                workers.push(std::thread::spawn(move || {
-                    worker_loop(rep.as_ref(), &shared, &q, i as u32, &mine, &st);
-                }));
-            }
-            let m = be.manifest();
-            let _ = ready_tx.send(Ok(PoolReady {
-                engine: be.name().to_string(),
-                in_elems: m.input_elems(),
-                num_classes: m.num_classes,
-                batch: m.batch,
-                health,
-            }));
-            // worker 0 serves on the coordinator thread (PJRT handles
-            // never cross threads; the native replicas simply live where
-            // their work is)
-            worker_loop(be.as_ref(), &shared, &q, 0, &rst[0], &st);
-            for w in workers {
-                let _ = w.join();
-            }
-            Ok(())
-        });
-
-        let ready = match ready_rx.recv() {
-            Ok(Ok(r)) => r,
-            Ok(Err(e)) => {
-                let _ = handle.join();
-                return Err(e);
-            }
-            Err(_) => {
-                let _ = handle.join();
-                bail!("pool coordinator died during setup");
-            }
-        };
-        Ok(ModelPool {
-            model,
-            queue,
-            stats,
-            replica_stats,
-            engine: ready.engine,
-            in_elems: ready.in_elems,
-            num_classes: ready.num_classes,
-            batch: ready.batch,
-            tracer,
-            metrics,
-            health: ready.health,
-            handle: Some(handle),
-        })
-    }
-
-    /// Clone-able intake handle for client threads.
-    pub fn client(&self) -> PoolClient {
-        PoolClient {
-            queue: self.queue.clone(),
-            stats: self.stats.clone(),
-            tracer: self.tracer.clone(),
-            in_elems: self.in_elems,
-            num_classes: self.num_classes,
-        }
-    }
-
-    /// Blocking request against this pool.
-    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
-        self.client().infer(x)
-    }
-
-    /// Execution engine serving this pool ("native", "xla").
-    pub fn engine(&self) -> &str {
-        &self.engine
-    }
-
-    /// Replica count.
-    pub fn replicas(&self) -> usize {
-        self.replica_stats.len()
-    }
-
-    /// Compiled batch size of the served model.
-    pub fn batch(&self) -> usize {
-        self.batch
-    }
-
-    /// Requests refused by admission control so far.
-    pub fn rejected(&self) -> u64 {
-        self.stats.rejected.load(Ordering::Relaxed)
-    }
-
-    /// Explicit shutdown: close the queue (rejecting new requests), wake
-    /// and drain every worker, join them.  Idempotent; also runs on Drop.
-    /// Live [`PoolClient`] handles cannot keep the pool alive.
-    pub fn shutdown(&mut self) {
-        self.queue.close();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-
-    /// Request-lifecycle tracer (span accounting, sampled JSONL sink).
-    pub fn tracer(&self) -> &Arc<RequestTracer> {
-        &self.tracer
-    }
-
-    /// Pool-local metrics registry.
-    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
-        &self.metrics
-    }
-
-    /// Quantization-health telemetry (None when the engine has no
-    /// digitization hooks or `obs.quant_health` is off).
-    pub fn quant_health(&self) -> Option<&Arc<QuantHealth>> {
-        self.health.as_ref()
-    }
-
-    /// Machine-readable pool stats (the `stats` protocol command).
-    pub fn stats_json(&self) -> String {
-        let lat = self.stats.percentiles_ms(&[0.5, 0.95, 0.99, 0.999]);
-        let qw = self.stats.queue_percentiles_ms(&[0.5, 0.99]);
-        let mut s = format!(
-            "{{\"model\":\"{}\",\"engine\":\"{}\",\"replicas\":{},\
-             \"queue_depth\":{},\"requests\":{},\"batches\":{},\
-             \"full_batches\":{},\"singles\":{},\"rejected\":{},\
-             \"busy_ms\":{:.3},\
-             \"latency_ms\":{{\"p50\":{:.3},\"p95\":{:.3},\"p99\":{:.3},\
-             \"p999\":{:.3}}},\
-             \"queue_wait_ms\":{{\"p50\":{:.3},\"p99\":{:.3}}},\
-             \"spans\":{{\"opened\":{},\"closed\":{},\"emitted\":{}}},\
-             \"per_replica_requests\":[",
-            escape_json(&self.model),
-            escape_json(&self.engine),
-            self.replicas(),
-            self.queue.depth,
-            self.stats.requests.load(Ordering::SeqCst),
-            self.stats.batches.load(Ordering::SeqCst),
-            self.stats.full_batches.load(Ordering::SeqCst),
-            self.stats.singles.load(Ordering::SeqCst),
-            self.stats.rejected.load(Ordering::SeqCst),
-            self.stats.busy_us.load(Ordering::SeqCst) as f64 / 1e3,
-            lat[0],
-            lat[1],
-            lat[2],
-            lat[3],
-            qw[0],
-            qw[1],
-            self.tracer.opened(),
-            self.tracer.closed(),
-            self.tracer.emitted(),
-        );
-        for (i, r) in self.replica_stats.iter().enumerate() {
-            if i > 0 {
-                s.push(',');
-            }
-            s.push_str(&r.requests.load(Ordering::SeqCst).to_string());
-        }
-        s.push_str("]}");
-        s
-    }
-
-    /// Render this pool's Prometheus series into `w` (the `metrics`
-    /// protocol command aggregates every pool through one writer).
-    pub fn render_prometheus(&self, w: &mut PromWriter) {
-        let l = format!("model=\"{}\"", escape_label(&self.model));
-        w.family("bskmq_requests_total", "counter", "requests served");
-        w.raw_sample(
-            "bskmq_requests_total",
-            &l,
-            self.stats.requests.load(Ordering::SeqCst) as f64,
-        );
-        w.family(
-            "bskmq_rejected_total",
-            "counter",
-            "requests refused by admission control",
-        );
-        w.raw_sample(
-            "bskmq_rejected_total",
-            &l,
-            self.stats.rejected.load(Ordering::SeqCst) as f64,
-        );
-        w.family("bskmq_batches_total", "counter", "executed batches");
-        w.raw_sample(
-            "bskmq_batches_total",
-            &l,
-            self.stats.batches.load(Ordering::SeqCst) as f64,
-        );
-        let qs = [0.5, 0.95, 0.99, 0.999];
-        let lat = self.stats.percentiles_ms(&qs);
-        let qw = self.stats.queue_percentiles_ms(&qs);
-        w.family(
-            "bskmq_latency_ms",
-            "gauge",
-            "service latency quantiles (ms)",
-        );
-        w.family(
-            "bskmq_queue_wait_quantile_ms",
-            "gauge",
-            "queue-wait quantiles (ms)",
-        );
-        for (i, q) in qs.iter().enumerate() {
-            w.raw_sample(
-                "bskmq_latency_ms",
-                &format!("{l},quantile=\"{q}\""),
-                lat[i],
-            );
-            w.raw_sample(
-                "bskmq_queue_wait_quantile_ms",
-                &format!("{l},quantile=\"{q}\""),
-                qw[i],
-            );
-        }
-        w.family(
-            "bskmq_replica_requests_total",
-            "counter",
-            "requests per replica",
-        );
-        for (i, r) in self.replica_stats.iter().enumerate() {
-            w.raw_sample(
-                "bskmq_replica_requests_total",
-                &format!("{l},replica=\"{i}\""),
-                r.requests.load(Ordering::SeqCst) as f64,
-            );
-        }
-        w.family(
-            "bskmq_spans_opened_total",
-            "counter",
-            "request spans opened at admission",
-        );
-        w.raw_sample("bskmq_spans_opened_total", &l, self.tracer.opened() as f64);
-        w.family(
-            "bskmq_spans_closed_total",
-            "counter",
-            "request spans closed after reply",
-        );
-        w.raw_sample("bskmq_spans_closed_total", &l, self.tracer.closed() as f64);
-        self.metrics.render(w);
-        if let Some(h) = &self.health {
-            h.render(w, &self.model);
-        }
-    }
-
-    /// Pool summary: aggregate line plus one line per replica.
-    pub fn summary(&self) -> String {
-        let mut s = format!(
-            "{} [{} backend, {} replica(s), queue depth {}]\n  all: {}",
-            self.model,
-            self.engine,
-            self.replicas(),
-            self.queue.depth,
-            self.stats.summary()
-        );
-        for (i, r) in self.replica_stats.iter().enumerate() {
-            s.push_str(&format!("\n  r{i}:  {}", r.summary()));
-        }
-        s
-    }
-}
-
-impl Drop for ModelPool {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
-/// Load + calibrate one model for a pool (runs on the coordinator
-/// thread so PJRT-style engines never cross threads).  Per-layer specs
-/// come from the manifest unless `cfg.spec` overrides them uniformly;
-/// specs carrying `weight_bits` quantize the weights *first* and then
-/// calibrate on the quantized-weight backend (Algorithm 1 runs on the
-/// deployed macro, not a float simulator).
-fn pool_setup(
-    cfg: &PoolConfig,
-    artifacts: &std::path::Path,
-    model: &str,
-) -> Result<(Box<dyn Backend>, CalibrationResult, Option<Arc<QuantHealth>>)> {
-    let be = crate::backend::load(cfg.backend, artifacts, model)?;
-    let data = ModelData::load(artifacts, model)?;
-    let specs = match cfg.spec {
-        Some(s) => s.per_layer(be.manifest().nq()),
-        None => be.manifest().layer_specs(),
-    };
-    let mut be: Box<dyn Backend> =
-        if specs.iter().any(|s| s.weight_bits.is_some()) {
-            PtqEvaluator::new(be.as_ref()).quantize_weights_spec(&specs)?
-        } else {
-            be
-        };
-    let calib = Calibrator::with_specs(be.as_ref(), specs)
-        .calibrate_sharded(&data, cfg.calib_batches, cfg.calib_shards)?;
-    // attach quant-health BEFORE replicate(): replicas clone the engine
-    // and share the telemetry Arc, so the pool aggregates one view
-    let health = if cfg.obs.quant_health {
-        let names: Vec<String> = be
-            .manifest()
-            .qlayers
-            .iter()
-            .map(|ql| ql.name.clone())
-            .collect();
-        let h = Arc::new(QuantHealth::new(
-            &names,
-            &calib.nl_books,
-            Some(&calib.sketches),
-            cfg.obs.sketch_sample_every,
-        ));
-        if be.attach_quant_health(h.clone()) {
-            Some(h)
-        } else {
-            None
-        }
-    } else {
-        None
-    };
-    Ok((be, calib, health))
-}
-
-/// Immutable state every worker replica shares: the programmed
-/// codebooks plus the pool's observability handles.
-struct WorkerShared {
-    books: ProgrammedCodebooks,
-    noise_std: f32,
-    window: Duration,
-    /// profile every Nth batch through `run_qfwd_profiled` (0 = never)
-    profile_every: u64,
-    tracer: Arc<RequestTracer>,
-    forward_hist: Arc<Histogram>,
-    queue_hist: Arc<Histogram>,
-}
-
-/// One worker replica: pop a batch, execute, reply, repeat until the
-/// queue closes and drains.  Backend failures answer the affected batch
-/// with errors and keep the worker alive.
-fn worker_loop(
-    backend: &dyn Backend,
-    sh: &WorkerShared,
-    queue: &JobQueue,
-    replica: u32,
-    mine: &ServerStats,
-    global: &ServerStats,
-) {
-    let m = backend.manifest();
-    let batch = m.batch;
-    let classes = m.num_classes;
-    let in_elems = m.input_elems();
-    let mut seed = replica.wrapping_mul(0x9E37);
-    let mut batches_done: u64 = 0;
-    loop {
-        let pending = queue.pop_batch(batch, sh.window);
-        if pending.is_empty() {
-            return; // shutdown signal observed, queue drained
-        }
-        let t0 = Instant::now();
-        seed = seed.wrapping_add(1);
-        let n = pending.len();
-        // queue wait is measured at batch assembly, per request
-        let mut queue_waits: Vec<u64> = Vec::with_capacity(n);
-        for r in &pending {
-            let us = r.submitted.elapsed().as_micros() as u64;
-            sh.queue_hist.observe(us as f64 / 1e3);
-            mine.record_queue_wait(us);
-            global.record_queue_wait(us);
-            queue_waits.push(us);
-        }
-        // exact-size execution when the backend can (native: always;
-        // xla: full batch or the batch-1 graph); otherwise pad up to the
-        // compiled batch
-        let run_n = if backend.supports_batch(n) { n } else { batch };
-        let mut x = Vec::with_capacity(run_n * in_elems);
-        for r in &pending {
-            x.extend_from_slice(&r.x);
-        }
-        for _ in n..run_n {
-            x.extend_from_slice(&pending[0].x);
-        }
-        batches_done += 1;
-        // sampled per-op profiling: unprofiled batches collect no rows,
-        // so the steady state allocates nothing for tracing
-        let profiled =
-            sh.profile_every > 0 && batches_done % sh.profile_every == 0;
-        let (result, ops) = if profiled {
-            match backend.run_qfwd_profiled(&x, &sh.books, sh.noise_std, seed)
-            {
-                Ok((logits, timings)) => (
-                    Ok(logits),
-                    timings
-                        .into_iter()
-                        .map(|t| (t.name, t.nanos as u64))
-                        .collect::<Vec<(String, u64)>>(),
-                ),
-                Err(e) => (Err(e), Vec::new()),
-            }
-        } else {
-            (
-                backend.run_qfwd(&x, &sh.books, sh.noise_std, seed),
-                Vec::new(),
-            )
-        };
-        // record BEFORE replying: a client that just received its answer
-        // must already see itself in the counters
-        let forward_us = t0.elapsed().as_micros() as u64;
-        mine.record_batch(n, batch, forward_us);
-        global.record_batch(n, batch, forward_us);
-        sh.forward_hist.observe(forward_us as f64 / 1e3);
-        match result {
-            Ok(logits) => {
-                for (i, r) in pending.iter().enumerate() {
-                    let _ = r
-                        .reply
-                        .send(Ok(logits[i * classes..(i + 1) * classes].to_vec()));
-                }
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                eprintln!("worker r{replica}: batch of {n} failed: {msg}");
-                for r in &pending {
-                    let _ = r.reply.send(Err(msg.clone()));
-                }
-            }
-        }
-        // close spans AFTER the replies: reply_us covers the send
-        let reply_us =
-            (t0.elapsed().as_micros() as u64).saturating_sub(forward_us);
-        for (i, r) in pending.iter().enumerate() {
-            sh.tracer.close(r.id, || Span {
-                id: 0,
-                model: String::new(),
-                replica,
-                batch_n: n,
-                queue_us: queue_waits[i],
-                forward_us,
-                reply_us,
-                ops: ops.clone(),
-            });
-        }
-    }
-}
-
-/// Several models served from one process, each behind its own
-/// [`ModelPool`].  Routing is by model name; the first model is the
-/// default route.
-pub struct ModelRegistry {
-    pools: Vec<ModelPool>,
-}
-
-impl ModelRegistry {
-    /// Load + calibrate every model sequentially; any failure aborts the
-    /// whole registry (fail fast beats serving a partial fleet silently).
-    pub fn start(
-        artifacts: &std::path::Path,
-        models: &[String],
-        cfg: &PoolConfig,
-    ) -> Result<ModelRegistry> {
-        ensure!(!models.is_empty(), "registry needs at least one model");
-        let mut pools: Vec<ModelPool> = Vec::with_capacity(models.len());
-        for name in models {
-            ensure!(
-                pools.iter().all(|p| &p.model != name),
-                "model '{name}' listed twice"
-            );
-            pools.push(ModelPool::start(
-                artifacts.to_path_buf(),
-                name.clone(),
-                cfg,
-            )?);
-        }
-        Ok(ModelRegistry { pools })
-    }
-
-    /// Pool by model name.
-    pub fn get(&self, model: &str) -> Option<&ModelPool> {
-        self.pools.iter().find(|p| p.model == model)
-    }
-
-    /// The default route (first model listed).
-    pub fn default_pool(&self) -> &ModelPool {
-        &self.pools[0]
-    }
-
-    pub fn pools(&self) -> &[ModelPool] {
-        &self.pools
-    }
-
-    pub fn models(&self) -> Vec<&str> {
-        self.pools.iter().map(|p| p.model.as_str()).collect()
-    }
-
-    /// Multi-line summary: per-pool aggregate + per-replica stats.
-    pub fn summary(&self) -> String {
-        let lines: Vec<String> =
-            self.pools.iter().map(|p| p.summary()).collect();
-        lines.join("\n")
-    }
-
-    /// Machine-readable stats over every pool (the `stats` command).
-    pub fn stats_json(&self) -> String {
-        let items: Vec<String> =
-            self.pools.iter().map(|p| p.stats_json()).collect();
-        format!("{{\"pools\":[{}]}}", items.join(","))
-    }
-
-    /// Prometheus text exposition over every pool (the `metrics`
-    /// command).
-    pub fn prometheus(&self) -> String {
-        let mut w = PromWriter::new();
-        for p in &self.pools {
-            p.render_prometheus(&mut w);
-        }
-        w.finish()
-    }
-}
-
-/// Single-model compatibility front over [`ModelPool`] (the pre-pool
-/// API).  `start` keeps its historical signature; replica count and
-/// queue depth come from [`PoolConfig::default`] unless the pool API is
-/// used directly.
-pub struct InferenceServer {
-    pool: ModelPool,
-    pub stats: Arc<ServerStats>,
-}
-
-impl InferenceServer {
-    /// Start a one-model, default-config pool: load the selected
-    /// backend, calibrate on `calib_batches` batches — with `spec` as a
-    /// uniform per-layer override, or the manifest's specs when `None` —
-    /// then serve until dropped.
-    pub fn start(
-        artifacts: std::path::PathBuf,
-        model: String,
-        backend: BackendKind,
-        spec: Option<QuantSpec>,
-        noise_std: f32,
-        calib_batches: usize,
-    ) -> Result<InferenceServer> {
-        let cfg = PoolConfig {
-            backend,
-            spec,
-            noise_std,
-            calib_batches,
-            ..PoolConfig::default()
-        };
-        let pool = ModelPool::start(artifacts, model, &cfg)?;
-        eprintln!("inference server ready ({} backend)", pool.engine());
-        let stats = pool.stats.clone();
-        Ok(InferenceServer { pool, stats })
-    }
-
-    /// Blocking request: returns the logits for one input.
-    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
-        self.pool.infer(x)
-    }
-
-    /// Clone-able intake handle for concurrent client threads.
-    pub fn client(&self) -> PoolClient {
-        self.pool.client()
-    }
-
-    /// The underlying pool (replica stats, admission counters).
-    pub fn pool(&self) -> &ModelPool {
-        &self.pool
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn stats_percentiles() {
-        let st = ServerStats::default();
-        assert_eq!(st.percentile_ms(0.5), 0.0);
-        for us in [1000u64, 2000, 3000, 4000] {
-            st.record_latency(us, 1);
-        }
-        assert!((st.percentile_ms(0.5) - 2.5).abs() < 1e-9);
-        assert!(st.percentile_ms(0.99) <= 4.0);
-        let s = st.summary();
-        assert!(s.contains("p50="), "{s}");
-        assert!(s.contains("p99="), "{s}");
-        assert!(s.contains("rejected=0"), "{s}");
-    }
-
-    /// Empty ring: every percentile is 0.0, for any quantile list.
-    #[test]
-    fn empty_ring_percentiles_are_zero() {
-        let st = ServerStats::default();
-        assert_eq!(
-            st.percentiles_ms(&[0.0, 0.25, 0.5, 0.95, 1.0]),
-            vec![0.0; 5]
-        );
-        assert_eq!(st.percentiles_ms(&[]), Vec::<f64>::new());
-    }
-
-    /// Small-capacity ring against a naive keep-the-last-K reference:
-    /// wraparound must retain exactly the most recent `capacity` samples.
-    #[test]
-    fn ring_wraparound_matches_naive_reference() {
-        let cap = 8;
-        let mut ring = LatencyRing::with_capacity(cap);
-        let feed: Vec<u64> = (0..31).map(|i| (i * 37 + 5) % 97).collect();
-        for &v in &feed {
-            ring.push(v);
-        }
-        assert_eq!(ring.samples.len(), cap, "ring exceeded its capacity");
-        let mut got = ring.samples.clone();
-        got.sort_unstable();
-        let mut want: Vec<u64> = feed[feed.len() - cap..].to_vec();
-        want.sort_unstable();
-        assert_eq!(got, want, "ring lost or kept the wrong samples");
-    }
-
-    /// Full-size ring: push past MAX_LATENCY_SAMPLES and check the
-    /// percentiles against a sort-everything reference over the retained
-    /// window (the last MAX samples).
-    #[test]
-    fn ring_wraps_past_max_and_percentiles_track_recent_window() {
-        let st = ServerStats::default();
-        let extra = 1234usize;
-        let total = MAX_LATENCY_SAMPLES + extra;
-        for i in 0..total {
-            st.record_latency(i as u64, 1);
-        }
-        assert_eq!(
-            st.lat_us.lock().unwrap().samples.len(),
-            MAX_LATENCY_SAMPLES,
-            "ring grew past its bound"
-        );
-        // retained window = values extra..total (the most recent MAX)
-        let window: Vec<f64> =
-            (extra..total).map(|v| v as f64).collect(); // already sorted
-        let qs = [0.0, 0.01, 0.5, 0.95, 1.0];
-        let got = st.percentiles_ms(&qs); // one sort for all quantiles
-        for (q, got) in qs.iter().zip(got) {
-            let want =
-                crate::util::stats::quantile_sorted(&window, *q) / 1e3;
-            assert!(
-                (got - want).abs() < 1e-6,
-                "q={q}: got {got} want {want}"
-            );
-        }
-    }
-
-    /// Bounded queue semantics: admission rejection at depth, explicit
-    /// close rejects producers and releases consumers.
-    #[test]
-    fn job_queue_admission_and_close() {
-        let q = JobQueue::with_depth(2);
-        let mk = || {
-            let (tx, rx) = mpsc::channel();
-            (
-                Request {
-                    id: 0,
-                    submitted: Instant::now(),
-                    x: vec![0.0],
-                    reply: tx,
-                },
-                rx,
-            )
-        };
-        let (r1, _k1) = mk();
-        let (r2, _k2) = mk();
-        let (r3, _k3) = mk();
-        assert!(q.push(r1).is_ok());
-        assert!(q.push(r2).is_ok());
-        assert_eq!(
-            q.push(r3).unwrap_err(),
-            AdmissionError::Full { depth: 2 }
-        );
-        let got = q.pop_batch(8, Duration::ZERO);
-        assert_eq!(got.len(), 2, "drain returns everything queued");
-        q.close();
-        let (r4, _k4) = mk();
-        assert_eq!(q.push(r4).unwrap_err(), AdmissionError::Closed);
-        assert!(
-            q.pop_batch(8, Duration::from_millis(50)).is_empty(),
-            "closed+empty queue must release consumers immediately"
-        );
-    }
-}
+//! Back-compat shim: the serving layer now lives in
+//! [`crate::coordinator::pool`] (replica pools, continuous batching,
+//! deadline shedding, autoscaling) and [`crate::coordinator::front`]
+//! (the TCP fronts).  Everything that used to be defined here is
+//! re-exported so `coordinator::server::*` paths keep working.
+
+pub use crate::coordinator::pool::*;

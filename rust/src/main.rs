@@ -12,9 +12,10 @@
 //!       # without overrides keep the manifest's per-layer specs.
 //!   bskmq serve [--addr 127.0.0.1:7878] [--models resnet,vgg]
 //!               [--spec S] [--backend auto|native|xla] [--replicas N]
-//!               [--shards N] [--queue-depth N] [--calib-batches N]
-//!               [--trace FILE] [--trace-sample N] [--profile-every N]
-//!               [--no-quant-health]
+//!               [--max-replicas N] [--shards N] [--queue-depth N]
+//!               [--request-deadline-ms N] [--front event|threaded]
+//!               [--calib-batches N] [--trace FILE] [--trace-sample N]
+//!               [--profile-every N] [--no-quant-health]
 //!   bskmq bench [--quick] [--models M1,M2] [--out DIR]
 //!               [--allow-placeholder]
 //!       # run the standard perf workload per model and write
@@ -28,23 +29,32 @@
 //! loadable, the native integer IMC engine otherwise); `BSKMQ_BACKEND`
 //! sets the process-wide default.  `--replicas` spawns that many worker
 //! replicas per model (native backends share one weight set via `Arc`);
-//! `--queue-depth` bounds each model's intake queue — a full queue
-//! rejects requests with an error line instead of buffering them.
-//! `--shards` streams calibration batches over that many threads
-//! (codebooks stay bit-identical to serial).
+//! `--max-replicas` > `--replicas` turns on queue-depth-driven
+//! autoscaling between the two bounds.  `--queue-depth` bounds each
+//! model's intake queue — a full queue rejects requests with an error
+//! line instead of buffering them — and `--request-deadline-ms` is the
+//! per-request shed horizon: requests still queued past it get an
+//! explicit overload reply instead of service.  `--front` picks the TCP
+//! front (epoll event loop by default on linux, thread-per-connection
+//! otherwise).  `--shards` streams calibration batches over that many
+//! threads (codebooks stay bit-identical to serial).
 
-use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
 use bskmq::backend::{Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::coordinator::front::{FrontKind, ServeFront};
+use bskmq::coordinator::loadgen::closed_loop;
 use bskmq::coordinator::ptq::PtqEvaluator;
 use bskmq::coordinator::server::{ModelPool, ModelRegistry, PoolConfig};
 use bskmq::data::dataset::ModelData;
-use bskmq::obs::bench_report::{short_rev, BenchReport, ModelBench};
+use bskmq::obs::bench_report::{
+    short_rev, BenchReport, ModelBench, ServingPoint,
+};
 use bskmq::quant::QuantSpec;
 use bskmq::util::stats::rate;
 
@@ -81,8 +91,10 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20           [--shards N] [--eval-batches N] [--backend B]\n\
                  \x20           (S = [method:]TILE/WEIGHT/ACT or ACT, e.g. 6/2/3)\n\
                  \x20 serve [--addr A] [--models M1,M2] [--spec S] [--backend B]\n\
-                 \x20       [--replicas N] [--shards N] [--queue-depth N]\n\
-                 \x20       [--calib-batches N] [--trace FILE] [--trace-sample N]\n\
+                 \x20       [--replicas N] [--max-replicas N] [--shards N]\n\
+                 \x20       [--queue-depth N] [--request-deadline-ms N]\n\
+                 \x20       [--front event|threaded] [--calib-batches N]\n\
+                 \x20       [--trace FILE] [--trace-sample N]\n\
                  \x20       [--profile-every N] [--no-quant-health]\n\
                  \x20 bench [--quick] [--models M1,M2] [--out DIR]\n\
                  \x20       [--allow-placeholder]\n\
@@ -299,6 +311,7 @@ fn calibrate(args: &[String]) -> Result<()> {
 fn serve(args: &[String]) -> Result<()> {
     let mut addr = "127.0.0.1:7878".to_string();
     let mut models: Vec<String> = vec!["resnet".to_string()];
+    let mut front_kind = FrontKind::default_for_platform();
     let mut cfg = PoolConfig {
         backend: BackendKind::from_env(),
         ..PoolConfig::default()
@@ -367,6 +380,28 @@ fn serve(args: &[String]) -> Result<()> {
                     .parse()?;
                 i += 2;
             }
+            "--max-replicas" => {
+                cfg.max_replicas = args
+                    .get(i + 1)
+                    .context("--max-replicas value")?
+                    .parse()?;
+                i += 2;
+            }
+            "--request-deadline-ms" => {
+                let ms: u64 = args
+                    .get(i + 1)
+                    .context("--request-deadline-ms value")?
+                    .parse()?;
+                ensure!(ms > 0, "--request-deadline-ms must be positive");
+                cfg.request_deadline = std::time::Duration::from_millis(ms);
+                i += 2;
+            }
+            "--front" => {
+                front_kind = FrontKind::parse(
+                    args.get(i + 1).context("--front value")?,
+                )?;
+                i += 2;
+            }
             "--calib-batches" => {
                 cfg.calib_batches = args
                     .get(i + 1)
@@ -404,18 +439,28 @@ fn serve(args: &[String]) -> Result<()> {
             other => anyhow::bail!("unknown serve flag '{other}'"),
         }
     }
-    let registry =
-        ModelRegistry::start(&bskmq::artifacts_dir(), &models, &cfg)?;
+    let registry = Arc::new(ModelRegistry::start(
+        &bskmq::artifacts_dir(),
+        &models,
+        &cfg,
+    )?);
     let listener = TcpListener::bind(&addr)?;
     let spec_desc = match &cfg.spec {
         Some(s) => s.summary(),
         None => "manifest per-layer specs".to_string(),
     };
+    let replica_desc = if cfg.max_replicas > cfg.replicas {
+        format!("{}..{} replica(s)/model", cfg.replicas, cfg.max_replicas)
+    } else {
+        format!("{} replica(s)/model", cfg.replicas)
+    };
     println!(
-        "serving {} ({spec_desc}, {} replica(s)/model, queue depth {}) on {addr}",
+        "serving {} ({spec_desc}, {replica_desc}, queue depth {}, deadline \
+         {} ms, {} front) on {addr}",
         registry.models().join("+"),
-        cfg.replicas,
         cfg.queue_depth,
+        cfg.request_deadline.as_millis(),
+        front_kind.name(),
     );
     println!(
         "protocol: one line `[model:]f1,f2,...` -> one line of logits; \
@@ -423,117 +468,11 @@ fn serve(args: &[String]) -> Result<()> {
          summary); `metrics` -> Prometheus text; default model is {}",
         registry.default_pool().model
     );
-    // one thread per connection: the replica pool is the concurrency
-    // limiter, not the accept loop
-    std::thread::scope(|s| {
-        for stream in listener.incoming() {
-            // one misbehaving client must not take the server down:
-            // per-line errors answer on the wire, connection errors just
-            // end that session
-            let stream = match stream {
-                Ok(st) => st,
-                Err(e) => {
-                    eprintln!("accept failed: {e}");
-                    continue;
-                }
-            };
-            let registry = &registry;
-            s.spawn(move || {
-                if let Err(e) = handle_client(registry, stream) {
-                    eprintln!("client connection error: {e}");
-                }
-                // cheap atomic counters only — the full percentile
-                // summary (clone + sort per latency ring) stays behind
-                // the `stats` protocol command
-                let brief: Vec<String> = registry
-                    .pools()
-                    .iter()
-                    .map(|p| {
-                        format!(
-                            "{}:{}req/{}rej",
-                            p.model,
-                            p.stats.requests.load(Ordering::Relaxed),
-                            p.rejected()
-                        )
-                    })
-                    .collect();
-                println!("client done; {}", brief.join(" "));
-            });
-        }
-    });
-    Ok(())
-}
-
-/// One TCP client session: lines of `[model:]` + comma-separated floats
-/// in, lines of logits (or `error: ...`) out.  Returns Err only on
-/// connection IO.
-fn handle_client(
-    registry: &ModelRegistry,
-    stream: std::net::TcpStream,
-) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
-    let mut line = String::new();
-    while {
-        line.clear();
-        reader.read_line(&mut line)? > 0
-    } {
-        let t = line.trim();
-        if t.is_empty() {
-            continue;
-        }
-        if t == "stats" {
-            writeln!(out, "{}", registry.stats_json())?;
-            continue;
-        }
-        if t == "stats --text" {
-            writeln!(out, "{}", registry.summary().replace('\n', " | "))?;
-            continue;
-        }
-        if t == "metrics" {
-            // Prometheus text exposition 0.0.4, terminated by a blank
-            // line so line-oriented clients know where the page ends
-            out.write_all(registry.prometheus().as_bytes())?;
-            writeln!(out)?;
-            continue;
-        }
-        // route by `model:` prefix; bare lines go to the default pool
-        let (pool, payload) = match t.split_once(':') {
-            Some((name, rest)) => match registry.get(name) {
-                Some(p) => (p, rest),
-                None => {
-                    writeln!(
-                        out,
-                        "error: unknown model '{name}' (serving: {})",
-                        registry.models().join(",")
-                    )?;
-                    continue;
-                }
-            },
-            None => (registry.default_pool(), t),
-        };
-        let parsed: std::result::Result<Vec<f32>, _> = payload
-            .split(',')
-            .filter(|s| !s.is_empty())
-            .map(|s| s.trim().parse::<f32>())
-            .collect();
-        let x = match parsed {
-            Ok(x) => x,
-            Err(e) => {
-                writeln!(out, "error: parsing input floats: {e}")?;
-                continue;
-            }
-        };
-        match pool.infer(x) {
-            Ok(logits) => {
-                let s: Vec<String> =
-                    logits.iter().map(|v| format!("{v:.6}")).collect();
-                writeln!(out, "{}", s.join(","))?;
-            }
-            Err(e) => writeln!(out, "error: {e:#}")?,
-        }
-    }
-    Ok(())
+    // the front multiplexes connections onto the replica pools; the pool
+    // (admission control + deadline shedding) is the concurrency
+    // limiter, not the accept path
+    let mut front = ServeFront::spawn(registry.clone(), listener, front_kind)?;
+    front.join()
 }
 
 /// `bskmq bench [--quick] [--models M1,M2] [--out DIR]`: run the
@@ -594,6 +533,12 @@ fn bench(args: &[String]) -> Result<()> {
         println!("benchmarking {model} ...");
         report.models.push(bench_model(&artifacts, model, quick)?);
     }
+    // closed-loop serving sweep on the lead model: throughput/latency vs
+    // offered load plus a deliberate overload point (schema v2 `serving`)
+    if let Some(lead) = models.first() {
+        println!("load sweep on {lead} ...");
+        report.serving = bench_serving(&artifacts, lead, quick)?;
+    }
     // `write` refuses `measured: false` placeholder reports; the flag
     // is the deliberate escape hatch for seeding one
     let path = if allow_placeholder {
@@ -617,8 +562,92 @@ fn bench(args: &[String]) -> Result<()> {
             m.serve_rejected,
         );
     }
+    for p in &report.serving {
+        println!(
+            "  serving[{:<8}] offered {:>4}: {:>8.0} req/s  p50 {:.2}ms \
+             p99 {:.2}ms p999 {:.2}ms  shed {:.1}% of {} requests",
+            p.phase,
+            p.offered,
+            p.throughput_rps,
+            p.p50_ms,
+            p.p99_ms,
+            p.p999_ms,
+            p.shed_rate() * 100.0,
+            p.requests,
+        );
+    }
     println!("wrote {}", path.display());
     Ok(())
+}
+
+/// The serving section of the BENCH report: a ladder of offered loads
+/// against a fixed replica pool (throughput and tail latency as
+/// concurrency grows), then an overload point on a deliberately starved
+/// pool with a tight deadline — the claim being measured is that
+/// admitted requests stay fast while the excess is shed.
+fn bench_serving(
+    artifacts: &std::path::Path,
+    model: &str,
+    quick: bool,
+) -> Result<Vec<ServingPoint>> {
+    use std::time::Duration;
+
+    let be = bskmq::backend::load(BackendKind::Native, artifacts, model)?;
+    let in_elems = be.manifest().input_elems();
+    drop(be);
+    let data = ModelData::load(artifacts, model)?;
+    let base = ModelData::batch(&data.x_test, 0, 1).to_vec();
+    // a cycle of slightly-varied inputs so batches are not byte-identical
+    let inputs: Vec<Vec<f32>> = (0..64)
+        .map(|k| {
+            let mut xi = base[..in_elems].to_vec();
+            xi[0] += k as f32 * 1e-6;
+            xi
+        })
+        .collect();
+
+    let calib_batches = if quick { 2 } else { 8 };
+    let per_point: u64 = if quick { 2_000 } else { 20_000 };
+    let deadline = Duration::from_millis(250);
+    let cfg = PoolConfig {
+        backend: BackendKind::Native,
+        calib_batches,
+        replicas: if quick { 2 } else { 4 },
+        queue_depth: 4096,
+        request_deadline: deadline,
+        ..PoolConfig::default()
+    };
+    let mut pool =
+        ModelPool::start(artifacts.to_path_buf(), model.to_string(), &cfg)?;
+    let client = pool.client();
+    let ladder: &[usize] =
+        if quick { &[1, 8, 32] } else { &[1, 8, 32, 128] };
+    let mut points = Vec::new();
+    for &offered in ladder {
+        points.push(closed_loop(
+            &client, &inputs, model, "ladder", offered, per_point, deadline,
+        ));
+    }
+    pool.shutdown();
+
+    // overload: one replica, tight deadline, 64 closed-loop clients
+    let deadline = Duration::from_millis(5);
+    let cfg = PoolConfig {
+        backend: BackendKind::Native,
+        calib_batches,
+        replicas: 1,
+        queue_depth: 4096,
+        request_deadline: deadline,
+        ..cfg
+    };
+    let mut pool =
+        ModelPool::start(artifacts.to_path_buf(), model.to_string(), &cfg)?;
+    let client = pool.client();
+    points.push(closed_loop(
+        &client, &inputs, model, "overload", 64, per_point, deadline,
+    ));
+    pool.shutdown();
+    Ok(points)
 }
 
 /// One model's bench pass (native backend: the measured engine must not

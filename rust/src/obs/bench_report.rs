@@ -15,7 +15,9 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::util::json::Json;
 
 /// Bump when the BENCH json layout changes.
-pub const BENCH_SCHEMA_VERSION: u64 = 1;
+/// v2: adds the `serving` section (closed-loop load-harness points:
+/// latency percentiles, throughput, and shed rate vs offered load).
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
 
 /// Per-topology measurements.
 #[derive(Clone, Debug, Default)]
@@ -40,6 +42,44 @@ pub struct ModelBench {
     pub per_op_ns: Vec<(String, u64)>,
 }
 
+/// One closed-loop load-harness measurement: `offered` concurrent
+/// clients driving `requests` requests against a pool, every request
+/// accounted for as completed, shed (deadline overload), rejected
+/// (admission), or errored.
+#[derive(Clone, Debug, Default)]
+pub struct ServingPoint {
+    /// which sweep this point belongs to (e.g. "ladder", "overload")
+    pub phase: String,
+    pub model: String,
+    /// offered load: closed-loop client threads
+    pub offered: usize,
+    pub requests: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub wall_s: f64,
+    /// completed requests per second of wall time
+    pub throughput_rps: f64,
+    /// latency percentiles over *admitted completed* requests
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    /// the per-request deadline the point ran with
+    pub deadline_ms: f64,
+}
+
+impl ServingPoint {
+    /// Fraction of offered requests shed past their deadline.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.requests as f64
+        }
+    }
+}
+
 /// The whole report.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
@@ -53,6 +93,8 @@ pub struct BenchReport {
     pub host_threads: usize,
     pub note: String,
     pub models: Vec<ModelBench>,
+    /// closed-loop load-harness points (schema v2)
+    pub serving: Vec<ServingPoint>,
 }
 
 impl BenchReport {
@@ -71,6 +113,7 @@ impl BenchReport {
                 .unwrap_or(1),
             note: String::new(),
             models: Vec::new(),
+            serving: Vec::new(),
         }
     }
 
@@ -154,6 +197,41 @@ impl BenchReport {
             s.push_str("]\n");
             s.push_str("    }");
             s.push_str(if i + 1 < self.models.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"serving\": [\n");
+        for (i, p) in self.serving.iter().enumerate() {
+            s.push_str("    {\n");
+            s.push_str(&format!("      \"phase\": \"{}\",\n", esc(&p.phase)));
+            s.push_str(&format!("      \"model\": \"{}\",\n", esc(&p.model)));
+            s.push_str(&format!("      \"offered\": {},\n", p.offered));
+            s.push_str(&format!("      \"requests\": {},\n", p.requests));
+            s.push_str(&format!("      \"completed\": {},\n", p.completed));
+            s.push_str(&format!("      \"shed\": {},\n", p.shed));
+            s.push_str(&format!("      \"rejected\": {},\n", p.rejected));
+            s.push_str(&format!("      \"errors\": {},\n", p.errors));
+            s.push_str(&format!("      \"wall_s\": {},\n", num(p.wall_s)));
+            s.push_str(&format!(
+                "      \"throughput_rps\": {},\n",
+                num(p.throughput_rps)
+            ));
+            s.push_str(&format!(
+                "      \"shed_rate\": {},\n",
+                num(p.shed_rate())
+            ));
+            s.push_str(&format!("      \"p50_ms\": {},\n", num(p.p50_ms)));
+            s.push_str(&format!("      \"p99_ms\": {},\n", num(p.p99_ms)));
+            s.push_str(&format!("      \"p999_ms\": {},\n", num(p.p999_ms)));
+            s.push_str(&format!(
+                "      \"deadline_ms\": {}\n",
+                num(p.deadline_ms)
+            ));
+            s.push_str("    }");
+            s.push_str(if i + 1 < self.serving.len() {
+                ",\n"
+            } else {
+                "\n"
+            });
         }
         s.push_str("  ]\n}\n");
         s
@@ -258,6 +336,46 @@ pub fn validate(j: &Json) -> Result<()> {
             op.get("ns")?.as_f64()?;
         }
     }
+    let serving = j.get("serving")?.as_arr()?;
+    for p in serving {
+        let phase = p.get("phase")?.as_str()?;
+        ensure!(!phase.is_empty(), "serving point without a phase");
+        ensure!(
+            !p.get("model")?.as_str()?.is_empty(),
+            "serving point without a model"
+        );
+        for key in [
+            "offered",
+            "requests",
+            "completed",
+            "shed",
+            "rejected",
+            "errors",
+            "wall_s",
+            "throughput_rps",
+            "shed_rate",
+            "p50_ms",
+            "p99_ms",
+            "p999_ms",
+            "deadline_ms",
+        ] {
+            let v = p.get(key)?.as_f64()?;
+            ensure!(
+                v.is_finite() && v >= 0.0,
+                "serving[{phase}].{key} is not a non-negative number"
+            );
+        }
+        // accounting identity: every offered request ends exactly one way
+        let total = p.get("requests")?.as_f64()?;
+        let parts = p.get("completed")?.as_f64()?
+            + p.get("shed")?.as_f64()?
+            + p.get("rejected")?.as_f64()?
+            + p.get("errors")?.as_f64()?;
+        ensure!(
+            (total - parts).abs() < 0.5,
+            "serving[{phase}]: completed+shed+rejected+errors != requests"
+        );
+    }
     Ok(())
 }
 
@@ -316,6 +434,22 @@ mod tests {
             queue_p99_ms: 1.1,
             per_op_ns: vec![("conv0:conv".into(), 400_000)],
         });
+        r.serving.push(ServingPoint {
+            phase: "ladder".into(),
+            model: "resnet".into(),
+            offered: 32,
+            requests: 1000,
+            completed: 990,
+            shed: 8,
+            rejected: 2,
+            errors: 0,
+            wall_s: 2.5,
+            throughput_rps: 396.0,
+            p50_ms: 1.0,
+            p99_ms: 4.0,
+            p999_ms: 8.0,
+            deadline_ms: 250.0,
+        });
         r
     }
 
@@ -340,11 +474,14 @@ mod tests {
     fn validate_rejects_corruption() {
         let r = sample_report();
         let good = r.to_json();
-        let bad = good.replace("\"schema\": 1", "\"schema\": 99");
+        let bad = good.replace("\"schema\": 2", "\"schema\": 99");
         assert!(validate(&Json::parse(&bad).unwrap()).is_err());
         let bad = good.replace("\"serve_p50_ms\": 1.2", "\"serve_p50_ms\": -1");
         assert!(validate(&Json::parse(&bad).unwrap()).is_err());
         let bad = good.replace("\"shortrev\": \"abc1234\",", "");
+        assert!(validate(&Json::parse(&bad).unwrap()).is_err());
+        // serving accounting identity is part of the schema
+        let bad = good.replace("\"completed\": 990", "\"completed\": 500");
         assert!(validate(&Json::parse(&bad).unwrap()).is_err());
     }
 

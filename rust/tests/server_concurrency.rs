@@ -11,7 +11,12 @@
 //!   silently dropped and clients never hang;
 //! * dropping the server while client handles are still alive shuts the
 //!   pool down instead of hanging the serve loop (regression for the
-//!   old mpsc-hangup Drop).
+//!   old mpsc-hangup Drop);
+//! * past-deadline requests are shed with an explicit overload reply
+//!   and counted (stats, summary, Prometheus) — including requests
+//!   still queued when the pool shuts down mid-overload;
+//! * queue-depth autoscaling grows and shrinks the live replica set
+//!   without ever changing a single logit bit.
 //!
 //! CI runs this suite with `BSKMQ_THREADS` at 1 and 8 to catch
 //! thread-count-dependent results.
@@ -28,6 +33,7 @@ use bskmq::coordinator::server::{
 };
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
+use bskmq::obs::prometheus::PromWriter;
 use bskmq::quant::{Method, QuantSpec};
 
 const CLIENT_THREADS: usize = 16;
@@ -332,4 +338,169 @@ fn registry_serves_two_models_with_two_replicas() {
         assert!(summary.contains("r0:"), "{summary}");
         assert!(summary.contains("r1:"), "{summary}");
     }
+}
+
+/// Deadline shedding: with a zero deadline every admitted request is
+/// past-due at batch assembly, so *all* of them must come back as
+/// explicit overload replies — no hangs, no silent drops — and the shed
+/// count must agree across `pool.shed()`, the summary line, and the
+/// Prometheus page.  A pool shut down mid-overload still drains its
+/// queue and answers everything before the workers exit.
+#[test]
+fn overload_sheds_with_explicit_replies_and_counters() {
+    let dir = fresh_dir("overload", &["resnet"]);
+    let inputs = unique_inputs(&dir, "resnet");
+    let cfg = PoolConfig {
+        request_deadline: Duration::ZERO,
+        ..native_cfg(1, 4096)
+    };
+    let mut pool =
+        ModelPool::start(dir.clone(), "resnet".into(), &cfg).unwrap();
+    let client = pool.client();
+
+    let burst = 64usize;
+    let rxs: Vec<_> = (0..burst)
+        .map(|i| {
+            client
+                .submit(inputs[i % UNIQUE_INPUTS].clone())
+                .expect("queue sized for the burst")
+        })
+        .collect();
+    for rx in rxs {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("shed request must still be answered");
+        let err = reply.expect_err("a zero deadline cannot be met");
+        assert!(err.is_overload(), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("overload"), "{msg}");
+        assert!(msg.contains("deadline"), "{msg}");
+    }
+    assert_eq!(pool.shed(), burst as u64, "shed counter drifted");
+    // sheds are not served requests
+    assert_eq!(
+        pool.stats.requests.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "shed requests leaked into the served counter"
+    );
+
+    // second burst, then shut down while it is still queued: workers
+    // observe close only after the queue is drained, so every request
+    // still gets its overload reply
+    let rxs: Vec<_> = (0..burst)
+        .map(|i| {
+            client
+                .submit(inputs[i % UNIQUE_INPUTS].clone())
+                .expect("queue sized for the burst")
+        })
+        .collect();
+    pool.shutdown();
+    for rx in rxs {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("shutdown dropped a queued request");
+        assert!(reply.expect_err("still past-due").is_overload());
+    }
+    let err = client.submit(inputs[0].clone()).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<AdmissionError>(),
+        Some(&AdmissionError::Closed),
+        "{err}"
+    );
+
+    assert_eq!(pool.shed(), 2 * burst as u64);
+    let summary = pool.summary();
+    assert!(summary.contains("shed=128"), "{summary}");
+    let prom = {
+        let mut w = PromWriter::new();
+        pool.render_prometheus(&mut w);
+        w.finish()
+    };
+    assert!(
+        prom.contains("bskmq_shed_total{model=\"resnet\"} 128"),
+        "{prom}"
+    );
+}
+
+/// Queue-depth autoscaling between 1 and 3 replicas: sustained backlog
+/// must grow the live set past one replica, every reply must be
+/// bit-identical to the pre-scaling single-replica logits, and an idle
+/// pool must fall back to its floor.
+#[test]
+fn autoscale_scales_up_and_back_down() {
+    let dir = fresh_dir("autoscale", &["resnet"]);
+    let inputs = unique_inputs(&dir, "resnet");
+    let cfg = PoolConfig {
+        max_replicas: 3,
+        scale_check: Duration::from_millis(5),
+        scale_up_depth: 1,
+        scale_down_idle: 10,
+        ..native_cfg(1, 4096)
+    };
+    let pool = ModelPool::start(dir.clone(), "resnet".into(), &cfg).unwrap();
+    assert_eq!(pool.replicas(), 1);
+    assert_eq!(pool.live_replicas(), 1);
+
+    // reference logits before any scaling happens
+    let refs: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| pool.infer(x.clone()).unwrap())
+        .collect();
+    let client = pool.client();
+
+    // submit async bursts and sample liveness while each backlog
+    // drains; keep the pressure up until a scale-up is observed
+    let mut peak = pool.live_replicas();
+    let mut served = refs.len() as u64;
+    for _round in 0..50 {
+        let rxs: Vec<_> = (0..128)
+            .map(|i| {
+                let idx = i % UNIQUE_INPUTS;
+                let rx = client
+                    .submit(inputs[idx].clone())
+                    .expect("queue sized for the burst");
+                (idx, rx)
+            })
+            .collect();
+        for _ in 0..20 {
+            peak = peak.max(pool.live_replicas());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for (idx, rx) in rxs {
+            let reply = rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("request lost during scaling");
+            let logits = reply.expect("request failed during scaling");
+            assert_eq!(
+                logits, refs[idx],
+                "input {idx}: autoscaling changed the logits bitwise"
+            );
+            served += 1;
+        }
+        peak = peak.max(pool.live_replicas());
+        if peak >= 2 {
+            break;
+        }
+    }
+    assert!(
+        peak >= 2,
+        "50 rounds of 128-deep backlog never scaled past one replica"
+    );
+    assert_eq!(
+        pool.stats.requests.load(std::sync::atomic::Ordering::SeqCst),
+        served,
+        "requests lost across scale events"
+    );
+
+    // idle: the supervisor must walk the target back down to the floor
+    let t0 = std::time::Instant::now();
+    while pool.live_replicas() > 1 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "pool never scaled back down to 1 (live {})",
+            pool.live_replicas()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(pool.live_replicas(), 1);
 }

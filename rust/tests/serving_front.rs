@@ -1,0 +1,250 @@
+//! TCP front suite over synthetic artifacts: the event front must be
+//! byte-identical to the threaded oracle on the full protocol surface
+//! (logits, routing errors, parse errors, admission errors), preserve
+//! per-connection reply order under deep pipelining, and expose the
+//! stats/metrics commands.
+//!
+//! The agreement test is the acceptance gate for DESIGN.md §13: both
+//! fronts serve the *same* registry back to back, so any byte of
+//! divergence is the front's fault, not the pools'.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bskmq::backend::BackendKind;
+use bskmq::coordinator::front::{FrontKind, ServeFront};
+use bskmq::coordinator::server::{ModelRegistry, PoolConfig};
+use bskmq::data::dataset::ModelData;
+use bskmq::data::synth;
+use bskmq::quant::{Method, QuantSpec};
+
+const UNIQUE_INPUTS: usize = 8;
+
+fn fresh_dir(tag: &str, models: &[&str]) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bskmq_front_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    for m in models {
+        synth::write_model(&dir, m, 42).unwrap();
+    }
+    dir
+}
+
+fn native_cfg(replicas: usize, queue_depth: usize) -> PoolConfig {
+    PoolConfig {
+        backend: BackendKind::Native,
+        spec: Some(QuantSpec::new(Method::BsKmq, 3)),
+        noise_std: 0.0,
+        calib_batches: 2,
+        replicas,
+        queue_depth,
+        batch_window: Duration::from_millis(1),
+        ..PoolConfig::default()
+    }
+}
+
+fn unique_inputs(dir: &std::path::Path, model: &str) -> Vec<Vec<f32>> {
+    let data = ModelData::load(dir, model).unwrap();
+    let elems: usize = data.x_test.shape[1..].iter().product();
+    (0..UNIQUE_INPUTS)
+        .map(|i| data.x_test.data[i * elems..(i + 1) * elems].to_vec())
+        .collect()
+}
+
+fn spawn_front(registry: &Arc<ModelRegistry>, kind: FrontKind) -> ServeFront {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    ServeFront::spawn(registry.clone(), listener, kind).unwrap()
+}
+
+/// One protocol line per float vector (`f32::to_string` round-trips
+/// exactly through the front's parser).
+fn infer_line(x: &[f32]) -> String {
+    let s: Vec<String> = x.iter().map(|v| v.to_string()).collect();
+    s.join(",")
+}
+
+/// The front's logits formatting, duplicated here so the pipelining
+/// test can predict exact reply bytes.
+fn logits_line(logits: &[f32]) -> String {
+    let s: Vec<String> = logits.iter().map(|v| format!("{v:.6}")).collect();
+    format!("{}\n", s.join(","))
+}
+
+/// Write every line pipelined, then read exactly `replies` reply lines.
+fn run_script(addr: SocketAddr, lines: &[String], replies: usize) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let mut out = stream.try_clone().unwrap();
+    let mut payload = String::new();
+    for l in lines {
+        payload.push_str(l);
+        payload.push('\n');
+    }
+    out.write_all(payload.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut got = Vec::with_capacity(replies);
+    for i in 0..replies {
+        let mut s = String::new();
+        reader
+            .read_line(&mut s)
+            .unwrap_or_else(|e| panic!("reply {i} never arrived: {e}"));
+        assert!(!s.is_empty(), "connection closed before reply {i}");
+        got.push(s);
+    }
+    got
+}
+
+/// Acceptance: the event front's replies are byte-identical to the
+/// threaded oracle across the whole protocol surface — logits, empty
+/// lines, model routing, unknown-model errors, float parse errors, and
+/// admission (wrong size) errors — served by the *same* registry.
+#[test]
+fn event_and_threaded_fronts_agree_bytewise() {
+    let dir = fresh_dir("agree", &["resnet", "vgg"]);
+    let models = vec!["resnet".to_string(), "vgg".to_string()];
+    let registry = Arc::new(
+        ModelRegistry::start(&dir, &models, &native_cfg(2, 1024)).unwrap(),
+    );
+    let resnet = unique_inputs(&dir, "resnet");
+    let vgg = unique_inputs(&dir, "vgg");
+
+    let script: Vec<String> = vec![
+        infer_line(&resnet[0]),
+        String::new(), // empty line: no reply
+        format!("vgg:{}", infer_line(&vgg[1])),
+        format!("resnet:{}", infer_line(&resnet[2])),
+        "nosuch:1,2,3".to_string(),
+        "1,2,not_a_float".to_string(),
+        "1,2".to_string(), // wrong size: refused at submit
+    ];
+    let replies = script.len() - 1; // the empty line answers nothing
+
+    let mut threaded = spawn_front(&registry, FrontKind::Threaded);
+    let a = run_script(threaded.addr(), &script, replies);
+    threaded.stop();
+
+    // sanity on the oracle itself before pinning the event front to it
+    assert_eq!(a[0].trim().split(',').count(), synth::CLASSES);
+    assert!(a[3].starts_with("error: unknown model 'nosuch'"), "{}", a[3]);
+    assert!(a[3].contains("resnet,vgg"), "{}", a[3]);
+    assert!(a[4].starts_with("error: parsing input floats:"), "{}", a[4]);
+    assert!(a[5].starts_with("error:"), "{}", a[5]);
+    assert!(a[5].contains("elements"), "{}", a[5]);
+
+    if !cfg!(target_os = "linux") {
+        return; // no epoll, nothing to compare
+    }
+    let mut event = spawn_front(&registry, FrontKind::Event);
+    let b = run_script(event.addr(), &script, replies);
+    event.stop();
+    assert_eq!(a, b, "event front diverged from the threaded oracle");
+}
+
+/// The event front is pipelined: a client may write many requests
+/// before reading anything, and replies must come back in request
+/// order — including error replies interleaved mid-stream, which the
+/// front answers out of the pool's band.
+#[test]
+fn event_front_preserves_pipelined_reply_order() {
+    if !cfg!(target_os = "linux") {
+        return;
+    }
+    let dir = fresh_dir("pipeline", &["resnet"]);
+    let models = vec!["resnet".to_string()];
+    let registry = Arc::new(
+        ModelRegistry::start(&dir, &models, &native_cfg(2, 4096)).unwrap(),
+    );
+    let inputs = unique_inputs(&dir, "resnet");
+
+    // expected logits per unique input, via the in-process client
+    let client = registry.default_pool().client();
+    let expected_logits: Vec<String> = inputs
+        .iter()
+        .map(|x| logits_line(&client.infer(x.clone()).unwrap()))
+        .collect();
+
+    let mut script: Vec<String> = Vec::new();
+    let mut expected: Vec<String> = Vec::new();
+    for i in 0..60 {
+        if i % 10 == 9 {
+            script.push("nosuch:1".to_string());
+            expected.push(
+                "error: unknown model 'nosuch' (serving: resnet)\n"
+                    .to_string(),
+            );
+        } else {
+            let idx = (i * 5 + 3) % UNIQUE_INPUTS;
+            script.push(infer_line(&inputs[idx]));
+            expected.push(expected_logits[idx].clone());
+        }
+    }
+
+    let mut front = spawn_front(&registry, FrontKind::Event);
+    let got = run_script(front.addr(), &script, expected.len());
+    front.stop();
+    for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+        assert_eq!(g, e, "reply {i} out of order or wrong");
+    }
+}
+
+/// The stats / stats --text / metrics commands answer over TCP; the
+/// metrics page carries both pool series (shed counter) and the
+/// front's own connection telemetry.
+#[test]
+fn stats_and_metrics_commands_answer_over_tcp() {
+    let dir = fresh_dir("metrics", &["resnet"]);
+    let models = vec!["resnet".to_string()];
+    let registry = Arc::new(
+        ModelRegistry::start(&dir, &models, &native_cfg(1, 256)).unwrap(),
+    );
+    let inputs = unique_inputs(&dir, "resnet");
+    let mut front =
+        spawn_front(&registry, FrontKind::default_for_platform());
+
+    let stream = TcpStream::connect(front.addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let mut out = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+
+    out.write_all(format!("{}\n", infer_line(&inputs[0])).as_bytes())
+        .unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(!line.starts_with("error:"), "{line}");
+
+    line.clear();
+    out.write_all(b"stats\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with('{'), "{line}");
+    assert!(line.contains("resnet"), "{line}");
+
+    line.clear();
+    out.write_all(b"stats --text\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("backend"), "{line}");
+
+    out.write_all(b"metrics\n").unwrap();
+    let mut page = String::new();
+    loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        if line == "\n" || line.is_empty() {
+            break; // blank line terminates the page
+        }
+        page.push_str(&line);
+    }
+    assert!(page.contains("bskmq_requests_total"), "{page}");
+    assert!(page.contains("bskmq_shed_total"), "{page}");
+    assert!(page.contains("bskmq_connections"), "{page}");
+
+    drop(out);
+    drop(reader);
+    front.stop();
+}
