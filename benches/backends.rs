@@ -1,6 +1,8 @@
 //! Bench: NativeBackend vs XlaBackend forward latency on the resnet-mini
-//! config — single-sample and batch-32 qfwd, plus the collect path and a
-//! per-op timing breakdown from the scratch-arena graph executor.
+//! config — single-sample and batch-32 qfwd, plus the collect path, a
+//! per-op timing breakdown from the scratch-arena graph executor, and
+//! (native only) forced-scalar and forced-spawn phases isolating the
+//! SIMD and executor-pool wins respectively.
 //! The xla column needs `--features xla` and the lowered HLO artifacts;
 //! the native column only needs the manifest + weights container.
 //!
@@ -23,7 +25,7 @@
 
 use std::collections::BTreeMap;
 
-use bskmq::backend::native::{simd, NativeBackend};
+use bskmq::backend::native::{exec_pool, simd, NativeBackend};
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::data::dataset::ModelData;
@@ -71,6 +73,22 @@ fn main() -> anyhow::Result<()> {
             println!(
                 "{name}: qfwd vectorized speedup vs forced scalar: {:.2}x",
                 rs.mean_ns() as f64 / r.mean_ns().max(1) as f64
+            );
+
+            // same forward with the persistent executor pool disabled:
+            // every par_row_blocks call pays a fresh std::thread::scope
+            // spawn per op (the pre-pool dispatch path).  The default
+            // `r` timing above already ran through the pool with the
+            // cached LayerPlan, so rp/r is the pool+plan win.
+            exec_pool::force_spawn(true);
+            let rp = bench(&format!("{name}: qfwd batch-{batch} (spawn)"), || {
+                black_box(be.run_qfwd(xb, &calib.programmed, 0.0, 7).unwrap());
+            });
+            exec_pool::force_spawn(false);
+            rp.print_throughput(batch as f64, "inferences");
+            println!(
+                "{name}: qfwd executor-pool speedup vs per-op spawn: {:.2}x",
+                rp.mean_ns() as f64 / r.mean_ns().max(1) as f64
             );
         }
 

@@ -18,7 +18,7 @@
 //!   cargo bench --bench serving
 //!   BSKMQ_LOAD_TOTAL=50000  scale the request budget (default 1M)
 //!   BSKMQ_LOAD_ASSERT=1     enforce p999/shed/accounting bounds (CI)
-//!   BSKMQ_BENCH_OUT=DIR     also write BENCH_<rev>.json (schema v2)
+//!   BSKMQ_BENCH_OUT=DIR     also write BENCH_<rev>.json (schema v3)
 //!   BSKMQ_THREADS=N         compute threads per replica
 
 use std::io::{BufRead, BufReader, Write};
@@ -330,6 +330,8 @@ fn main() -> Result<()> {
         p99_ms: 0.0,
         p999_ms: 0.0,
         deadline_ms: ladder_deadline.as_secs_f64() * 1e3,
+        replicas: 2,
+        exec_threads: bskmq::backend::native::ops::num_threads(),
     });
     front.stop();
     drop(front);
@@ -344,7 +346,7 @@ fn main() -> Result<()> {
         );
     }
 
-    // emit through the shared BENCH writer (schema v2 serving section)
+    // emit through the shared BENCH writer (schema v3 serving section)
     if let Ok(dir) = std::env::var("BSKMQ_BENCH_OUT") {
         let mut report = BenchReport::new(&short_rev(), false);
         report.note = format!(

@@ -53,6 +53,12 @@ pub struct ProgrammedCodebooks {
     /// stacked per-tile (7-bit linear) refs/centers
     pub tile_refs: Tensor,
     pub tile_centers: Tensor,
+    /// process-unique id minted by [`ProgrammedCodebooks::stack`]; the
+    /// compiled-graph layer-plan cache keys on it, so a codebook
+    /// hot-swap (new `stack` → new uid) can never serve stale LUTs.
+    /// Mutating the pub tensor fields of an existing instance bypasses
+    /// this key and is unsupported on the quantized forward path.
+    uid: u64,
 }
 
 impl ProgrammedCodebooks {
@@ -99,12 +105,21 @@ impl ProgrammedCodebooks {
         }
         let shape = vec![nq, levels];
         let mut it = buf.into_iter();
+        static NEXT_UID: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(1);
         Ok(ProgrammedCodebooks {
             nl_refs: Tensor::new(shape.clone(), it.next().unwrap())?,
             nl_centers: Tensor::new(shape.clone(), it.next().unwrap())?,
             tile_refs: Tensor::new(shape.clone(), it.next().unwrap())?,
             tile_centers: Tensor::new(shape, it.next().unwrap())?,
+            uid: NEXT_UID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         })
+    }
+
+    /// Process-unique identity of this programmed codebook set (layer-plan
+    /// cache key; see the field doc for the mutation caveat).
+    pub fn uid(&self) -> u64 {
+        self.uid
     }
 
     /// Number of levels per stacked row.

@@ -1,0 +1,402 @@
+//! Persistent executor pool for the row-parallel kernels (DESIGN.md
+//! §14).
+//!
+//! Before this module every `par_row_blocks` call spawned and joined
+//! fresh OS threads — microseconds of kernel time per *op*, paid dozens
+//! of times per forward — and every autoscaled replica independently
+//! claimed `available_parallelism()` threads, so an R-replica pool on C
+//! cores ran R×C compute threads.  The pool replaces both: one
+//! process-wide set of long-lived workers, parked on a condvar when
+//! idle, sized once from the `BSKMQ_THREADS` budget and **shared by
+//! every replica** through weighted slot leasing (with J concurrent
+//! jobs each job may occupy at most `ceil(budget / J)` workers, so no
+//! replica starves the others and the pool never grows).
+//!
+//! Determinism contract: the pool executes *tasks*, and a task is one
+//! statically partitioned row block — the identical
+//! `chunk_rows = rows.div_ceil(threads)` split the scoped-spawn path
+//! uses.  Tasks write disjoint output blocks and carry per-row RNG
+//! seeding, so which worker runs which task (or whether the submitter
+//! runs them all) cannot move a single bit.  The scoped-spawn path is
+//! retained verbatim behind `BSKMQ_NO_POOL=1` / [`force_spawn`] as the
+//! escape hatch and differential baseline, exactly like
+//! `BSKMQ_NO_SIMD` / `simd::force_scalar` for the vector kernels.
+//!
+//! Submitters always participate in their own job (the pool holds
+//! `budget - 1` workers), so a job makes progress even with a budget of
+//! one or with every worker leased elsewhere, and `run` never returns
+//! before all of its tasks have finished — which is what makes lending
+//! stack-borrowed closures to the workers sound.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Type-erased task body: run task `i` of the job.  The submitter
+/// blocks in [`ExecPool::run`] until every task has finished, so the
+/// borrowed closure outlives all worker accesses.
+type TaskFn = dyn Fn(usize) + Sync;
+
+struct Job {
+    /// lifetime-erased pointer to the submitter's closure
+    body: *const TaskFn,
+    n_tasks: usize,
+    /// next unclaimed task index
+    next: usize,
+    /// tasks claimed but not yet finished
+    running: usize,
+    /// tasks not yet finished (claimed or not)
+    pending: usize,
+    /// a task panicked; the submitter re-raises on return
+    panicked: bool,
+    id: u64,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced while the
+// submitting thread is blocked inside `run`, which keeps the referent
+// alive; the closure itself is `Sync`.
+unsafe impl Send for Job {}
+
+#[derive(Default)]
+struct PoolState {
+    jobs: Vec<Job>,
+    next_id: u64,
+}
+
+/// The process-wide executor: `budget - 1` parked workers plus every
+/// submitting thread working on its own job.
+pub struct ExecPool {
+    state: Mutex<PoolState>,
+    /// wakes parked workers when tasks become claimable
+    work_cv: Condvar,
+    /// wakes submitters waiting for their last straggler task
+    done_cv: Condvar,
+    budget: usize,
+    workers: usize,
+}
+
+impl ExecPool {
+    fn new(budget: usize) -> ExecPool {
+        let budget = budget.max(1);
+        ExecPool {
+            state: Mutex::new(PoolState::default()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            budget,
+            workers: budget - 1,
+        }
+    }
+
+    fn spawn_workers(&'static self) {
+        for i in 0..self.workers {
+            std::thread::Builder::new()
+                .name(format!("bskmq-exec-{i}"))
+                .spawn(move || self.worker_loop())
+                .expect("spawning executor pool worker");
+        }
+    }
+
+    /// Configured process-wide thread budget (`BSKMQ_THREADS` or the
+    /// host parallelism at first use).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Pool-owned worker threads (`budget - 1`; submitters supply the
+    /// remaining slot themselves).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Jobs currently in flight (a gauge snapshot, racy by nature).
+    pub fn active_jobs(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    /// Worker slots a single job may occupy under the current load —
+    /// the weighted lease `ceil(budget / active_jobs)` (whole budget
+    /// when idle).
+    pub fn lease_slots(&self) -> usize {
+        let jobs = self.active_jobs().max(1);
+        self.budget.div_ceil(jobs)
+    }
+
+    /// Per-job worker cap given `jobs` concurrent jobs.
+    fn lease(&self, jobs: usize) -> usize {
+        self.budget.div_ceil(jobs.max(1))
+    }
+
+    /// Claim one task a pool worker may run: the first job (FIFO) with
+    /// unclaimed tasks still under its lease.
+    fn claim_any(&self, st: &mut PoolState) -> Option<(*const TaskFn, u64, usize)> {
+        let live = st.jobs.iter().filter(|j| j.pending > 0).count();
+        let lease = self.lease(live);
+        for job in st.jobs.iter_mut() {
+            if job.next < job.n_tasks && job.running < lease {
+                let idx = job.next;
+                job.next += 1;
+                job.running += 1;
+                return Some((job.body, job.id, idx));
+            }
+        }
+        None
+    }
+
+    /// Mark one task of job `id` finished and wake the submitter when
+    /// it was the last one.  The job record itself is retired by its
+    /// submitter (so the panic flag is always observed before removal).
+    fn finish(&self, id: u64, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        let job = st
+            .jobs
+            .iter_mut()
+            .find(|j| j.id == id)
+            .expect("finished task of unknown job");
+        job.running -= 1;
+        job.pending -= 1;
+        job.panicked |= panicked;
+        let job_done = job.pending == 0;
+        drop(st);
+        if job_done {
+            self.done_cv.notify_all();
+            // a completed job frees lease slots for the others
+            self.work_cv.notify_all();
+        }
+    }
+
+    fn run_task(&self, body: *const TaskFn, id: u64, idx: usize) {
+        // SAFETY: the submitter of job `id` is blocked in `run` until
+        // `pending == 0`, so `body` is alive for the whole call.
+        let r = catch_unwind(AssertUnwindSafe(|| unsafe { (*body)(idx) }));
+        self.finish(id, r.is_err());
+    }
+
+    fn worker_loop(&self) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match self.claim_any(&mut st) {
+                Some((body, id, idx)) => {
+                    drop(st);
+                    self.run_task(body, id, idx);
+                    st = self.state.lock().unwrap();
+                }
+                None => {
+                    // park until a submitter enqueues or a lease frees
+                    st = self.work_cv.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Execute `body(0..n_tasks)` across the pool and the calling
+    /// thread, returning once every task has finished.  Tasks must
+    /// touch disjoint data; the call propagates a panic from any task.
+    /// (The parameter is spelled out rather than using [`TaskFn`]: the
+    /// alias carries the defaulted `'static` object bound, while here
+    /// the closure only needs to outlive the call.)
+    pub fn run(&self, n_tasks: usize, body: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        if n_tasks == 1 || self.workers == 0 {
+            for i in 0..n_tasks {
+                body(i);
+            }
+            return;
+        }
+        // SAFETY (lifetime erasure): `run` does not return until
+        // `pending == 0`, so the erased borrow never dangles.
+        let body_ptr: *const TaskFn = unsafe {
+            std::mem::transmute::<*const (dyn Fn(usize) + Sync + '_), *const TaskFn>(
+                body as *const _,
+            )
+        };
+        let id = {
+            let mut st = self.state.lock().unwrap();
+            let id = st.next_id;
+            st.next_id = st.next_id.wrapping_add(1);
+            st.jobs.push(Job {
+                body: body_ptr,
+                n_tasks,
+                next: 0,
+                running: 0,
+                pending: n_tasks,
+                panicked: false,
+                id,
+            });
+            id
+        };
+        self.work_cv.notify_all();
+
+        // the submitter works its own job, lease-exempt: progress is
+        // guaranteed even if every worker is leased to other jobs
+        loop {
+            let mut st = self.state.lock().unwrap();
+            let job = st
+                .jobs
+                .iter_mut()
+                .find(|j| j.id == id)
+                .expect("submitter lost its own job record");
+            if job.next < job.n_tasks {
+                let idx = job.next;
+                job.next += 1;
+                job.running += 1;
+                drop(st);
+                self.run_task(body_ptr, id, idx);
+                continue;
+            }
+            // all tasks claimed; wait for stragglers on other workers,
+            // then retire the job record ourselves (only the submitter
+            // removes it, so the panic flag is never lost)
+            loop {
+                let pos = st
+                    .jobs
+                    .iter()
+                    .position(|j| j.id == id)
+                    .expect("submitter lost its own job record");
+                if st.jobs[pos].pending == 0 {
+                    let job = st.jobs.remove(pos);
+                    drop(st);
+                    if job.panicked {
+                        panic!("executor pool task panicked");
+                    }
+                    return;
+                }
+                st = self.done_cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+static POOL: OnceLock<&'static ExecPool> = OnceLock::new();
+static FORCE_SPAWN: AtomicBool = AtomicBool::new(false);
+static NO_POOL_ENV: OnceLock<bool> = OnceLock::new();
+
+/// The process-wide pool, spawned on first use with the thread budget
+/// [`super::ops::num_threads`] reports at that moment.
+pub fn global() -> &'static ExecPool {
+    POOL.get_or_init(|| {
+        let pool: &'static ExecPool =
+            Box::leak(Box::new(ExecPool::new(super::ops::num_threads())));
+        pool.spawn_workers();
+        pool
+    })
+}
+
+/// Force the scoped-spawn fallback for subsequent row-parallel kernels
+/// (benches and the determinism suite flip this to diff both paths in
+/// one process).  Safe to toggle at any time: both paths produce
+/// bit-identical results, so a racing caller only changes speed.
+pub fn force_spawn(on: bool) {
+    FORCE_SPAWN.store(on, Ordering::SeqCst);
+}
+
+/// Whether [`force_spawn`] is currently set.
+pub fn spawn_forced() -> bool {
+    FORCE_SPAWN.load(Ordering::SeqCst)
+}
+
+/// Telemetry snapshot of the executor configuration and load:
+/// `(thread_budget, pool_workers, active_jobs, lease_slots)`.  Never
+/// instantiates the pool — before first use (or with the pool disabled)
+/// workers/jobs read 0 and the lease equals the full budget, while the
+/// budget itself always reflects [`super::ops::num_threads`].
+pub fn snapshot() -> (usize, usize, usize, usize) {
+    let budget = super::ops::num_threads();
+    match POOL.get() {
+        Some(p) => (p.budget(), p.workers(), p.active_jobs(), p.lease_slots()),
+        None => (budget, 0, 0, budget),
+    }
+}
+
+/// True when row-parallel kernels should dispatch through the
+/// persistent pool: not forced off at runtime and not disabled by
+/// `BSKMQ_NO_POOL` (any value but `0`), the escape hatch mirroring
+/// `BSKMQ_NO_SIMD`.
+#[inline]
+pub fn pool_enabled() -> bool {
+    if FORCE_SPAWN.load(Ordering::Relaxed) {
+        return false;
+    }
+    !*NO_POOL_ENV.get_or_init(|| {
+        std::env::var("BSKMQ_NO_POOL")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = global();
+        for n in [1usize, 2, 3, 7, 64, 257] {
+            let hits: Vec<AtomicUsize> =
+                (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "task {i} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        let pool = global();
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        pool.run(8, &|_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 50 * 8);
+    }
+
+    #[test]
+    fn lease_divides_budget_across_jobs() {
+        let pool = global();
+        assert_eq!(pool.lease(1), pool.budget());
+        assert_eq!(pool.lease(0), pool.budget());
+        assert!(pool.lease(4) >= 1);
+        assert!(pool.lease(4) <= pool.budget().div_ceil(4).max(1));
+    }
+
+    #[test]
+    fn task_panic_propagates_to_submitter() {
+        let pool = global();
+        let r = std::panic::catch_unwind(|| {
+            pool.run(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(r.is_err(), "panic must cross the pool boundary");
+        // the pool survives and keeps executing afterwards
+        let n = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn force_spawn_toggles() {
+        force_spawn(true);
+        assert!(spawn_forced());
+        assert!(!pool_enabled());
+        force_spawn(false);
+        assert!(!spawn_forced());
+    }
+}

@@ -18,16 +18,18 @@
 //! `cargo bench --bench backends` breakdown and `bskmq graph`.
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::ops::{
     add_bias_relu_into, add_into, attention_into, avg_pool3_same_into,
-    bias_relu_convert_into, collect_subsample, concat_c_into, conv_dims,
-    global_avg_pool_into, im2col_into, layer_norm_into, max_pool2_into,
-    mean_over_seq_into, min_ref_step, nl_convert_into, tiled_mac_into,
-    ConvertSpec,
+    bias_relu_convert_into_with_lut, collect_subsample, concat_c_into,
+    conv_dims, global_avg_pool_into, im2col_into, layer_norm_into,
+    max_pool2_into, mean_over_seq_into, min_ref_step,
+    nl_convert_into_with_lut, tiled_mac_into, tiled_mac_into_with_lut,
+    AdcLut, ConvertSpec,
 };
 use crate::backend::ProgrammedCodebooks;
 use crate::io::manifest::Manifest;
@@ -179,7 +181,6 @@ pub struct OpTiming {
 pub struct ExecBuffers {
     slots: Vec<Vec<f32>>,
     patch: Vec<f32>,
-    scores: Vec<f32>,
 }
 
 /// Execution mode of one forward pass.
@@ -219,8 +220,35 @@ pub fn layer_seed(seed: u32, wi: usize, salt: u64) -> u64 {
         ^ salt
 }
 
+/// Everything the quantized forward derives from one programmed
+/// codebook set, built once per (program, codebooks) pairing and reused
+/// by every forward on every replica: the per-q-layer tile/NL
+/// [`AdcLut`]s (previously rebuilt on every single op) and the
+/// pre-resolved noise LSB units.  The weight matrices themselves need
+/// no repacking — the `[k, n]` row-major layout already *is* tile-major
+/// (crossbar tiles are contiguous `tile_k`-row bands), so the plan
+/// stores derived tables only and never duplicates weight bytes.
+#[derive(Debug)]
+pub struct LayerPlan {
+    /// [`ProgrammedCodebooks::uid`] this plan was compiled from
+    books_uid: u64,
+    layers: Vec<PlanLayer>,
+}
+
+/// One q-layer's slice of a [`LayerPlan`].
+#[derive(Debug)]
+struct PlanLayer {
+    tile_lut: AdcLut,
+    nl_lut: AdcLut,
+    /// `min_ref_step(tile_refs)` — the tile-ADC LSB the conversion
+    /// noise sigma scales by
+    tile_sigma_unit: f32,
+    /// `min_ref_step(nl_refs)` — the NL-ADC LSB
+    nl_sigma_unit: f32,
+}
+
 /// A compiled, validated layer graph, ready to interpret.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct GraphProgram {
     nodes: Vec<Node>,
     values: Vec<ValueInfo>,
@@ -228,6 +256,29 @@ pub struct GraphProgram {
     output_vid: usize,
     n_slots: usize,
     nq: usize,
+    /// Cached [`LayerPlan`] for the most recently seen codebook set.
+    /// Keyed on [`ProgrammedCodebooks::uid`], so a hot-swapped codebook
+    /// stack (always a fresh `stack()` → fresh uid) rebuilds the plan on
+    /// first use and every replica sharing this program (via `Arc`)
+    /// picks it up atomically; `with_weights`-style backend swaps
+    /// recompile the program and start from an empty cache.
+    plan: Mutex<Option<Arc<LayerPlan>>>,
+}
+
+impl Clone for GraphProgram {
+    fn clone(&self) -> GraphProgram {
+        GraphProgram {
+            nodes: self.nodes.clone(),
+            values: self.values.clone(),
+            input_vid: self.input_vid,
+            output_vid: self.output_vid,
+            n_slots: self.n_slots,
+            nq: self.nq,
+            // carry the cached plan: it is pure derived data keyed by
+            // codebook uid, so sharing the Arc is always valid
+            plan: Mutex::new(self.plan.lock().unwrap().clone()),
+        }
+    }
 }
 
 fn pop_or_new(free: &mut Vec<usize>, n_slots: &mut usize) -> usize {
@@ -805,7 +856,49 @@ impl GraphProgram {
             output_vid,
             n_slots,
             nq: m.nq(),
+            plan: Mutex::new(None),
         })
+    }
+
+    /// The cached [`LayerPlan`] for `books`, compiling it on first use
+    /// (or after a codebook hot-swap changed the uid).  Cheap on the
+    /// steady-state path: one mutex lock + one u64 compare + one `Arc`
+    /// clone per forward.
+    pub fn plan_for(&self, books: &ProgrammedCodebooks) -> Arc<LayerPlan> {
+        let mut g = self.plan.lock().unwrap();
+        if let Some(p) = g.as_ref() {
+            if p.books_uid == books.uid() {
+                return Arc::clone(p);
+            }
+        }
+        let layers = (0..self.nq)
+            .map(|q| {
+                let (n_refs, n_centers, t_refs, t_centers) =
+                    books.layer_rows(q);
+                PlanLayer {
+                    tile_lut: AdcLut::new(t_refs, t_centers),
+                    nl_lut: AdcLut::new(n_refs, n_centers),
+                    tile_sigma_unit: min_ref_step(t_refs),
+                    nl_sigma_unit: min_ref_step(n_refs),
+                }
+            })
+            .collect();
+        let p = Arc::new(LayerPlan {
+            books_uid: books.uid(),
+            layers,
+        });
+        *g = Some(Arc::clone(&p));
+        p
+    }
+
+    /// True when a [`LayerPlan`] for `books` is already cached (test /
+    /// introspection hook for the invalidation contract).
+    pub fn plan_cached_for(&self, books: &ProgrammedCodebooks) -> bool {
+        self.plan
+            .lock()
+            .unwrap()
+            .as_ref()
+            .is_some_and(|p| p.books_uid == books.uid())
     }
 
     /// Ops in execution order, with names resolved for display.
@@ -876,6 +969,12 @@ impl GraphProgram {
                 (vec![Vec::new(); self.nq], vec![0f64; self.nq])
             }
             ExecMode::Quant { .. } => (Vec::new(), Vec::new()),
+        };
+        // resolve the cached layer plan once per forward; every qmac in
+        // the op loop then runs without LUT construction or ladder scans
+        let plan = match mode {
+            ExecMode::Quant { books, .. } => Some(self.plan_for(books)),
+            ExecMode::Collect => None,
         };
 
         for node in &self.nodes {
@@ -952,6 +1051,7 @@ impl GraphProgram {
                         rows,
                         cols,
                         mode,
+                        plan.as_deref(),
                         &mut samples,
                         &mut tile_max,
                         &mut out,
@@ -971,6 +1071,7 @@ impl GraphProgram {
                         batch * rows,
                         cols,
                         mode,
+                        plan.as_deref(),
                         &mut samples,
                         &mut tile_max,
                         &mut out,
@@ -1051,20 +1152,7 @@ impl GraphProgram {
                     let VShape::Mat { rows: t, cols: d } = shape else {
                         unreachable!()
                     };
-                    if buf.scores.len() < t * t {
-                        buf.scores.resize(t * t, 0.0);
-                    }
-                    attention_into(
-                        q,
-                        k,
-                        v,
-                        batch,
-                        t,
-                        d,
-                        heads,
-                        &mut buf.scores[..t * t],
-                        &mut out,
-                    );
+                    attention_into(q, k, v, batch, t, d, heads, &mut out);
                 }
                 OpKind::Embed { table, pos } => {
                     let (xdat, shape) = input!(0);
@@ -1129,6 +1217,7 @@ fn qmac(
     rows: usize,
     k: usize,
     mode: ExecMode,
+    plan: Option<&LayerPlan>,
     samples: &mut [Vec<f64>],
     tile_max: &mut [f64],
     out: &mut [f32],
@@ -1149,15 +1238,26 @@ fn qmac(
             noise_std,
             seed,
         } => {
-            let (n_refs, n_centers, t_refs, t_centers) = books.layer_rows(q);
+            let pl = &plan.expect("quant mode runs with a layer plan").layers
+                [q];
+            let (_, _, t_refs, t_centers) = books.layer_rows(q);
             let spec = ConvertSpec {
                 refs: t_refs,
                 centers: t_centers,
-                sigma: noise_std * min_ref_step(t_refs),
+                sigma: noise_std * pl.tile_sigma_unit,
                 seed: layer_seed(seed, q, 0),
             };
-            tiled_mac_into(x2d, rows, k, w, ROWS, Some(&spec), out);
-            let nl_sigma = noise_std * min_ref_step(n_refs);
+            tiled_mac_into_with_lut(
+                x2d,
+                rows,
+                k,
+                w,
+                ROWS,
+                Some(&spec),
+                Some(&pl.tile_lut),
+                out,
+            );
+            let nl_sigma = noise_std * pl.nl_sigma_unit;
             let nl_seed = layer_seed(seed, q, NL_SEED_SALT);
             match taps {
                 // health telemetry sees exactly what the NL-ADC is
@@ -1169,12 +1269,12 @@ fn qmac(
                 Some(h) => {
                     add_bias_relu_into(out, ql.n, &bias.data, ql.relu);
                     h.observe(q, out);
-                    nl_convert_into(
-                        out, rows, ql.n, n_refs, n_centers, nl_sigma, nl_seed,
+                    nl_convert_into_with_lut(
+                        out, rows, ql.n, &pl.nl_lut, nl_sigma, nl_seed,
                     );
                 }
-                None => bias_relu_convert_into(
-                    out, rows, ql.n, &bias.data, ql.relu, n_refs, n_centers,
+                None => bias_relu_convert_into_with_lut(
+                    out, rows, ql.n, &bias.data, ql.relu, &pl.nl_lut,
                     nl_sigma, nl_seed,
                 ),
             }

@@ -13,6 +13,7 @@
 //! validates at load time and interprets over a reusable scratch-buffer
 //! arena — serving a new workload means writing a manifest, not Rust.
 
+pub mod exec_pool;
 pub mod graph;
 pub mod ops;
 pub mod simd;

@@ -72,19 +72,51 @@ impl Feat {
     }
 }
 
-/// Worker thread count (env `BSKMQ_THREADS` overrides).
+/// Worker thread count: the [`set_thread_override`] hook when armed,
+/// else env `BSKMQ_THREADS` / host parallelism, resolved **once** per
+/// process (the old implementation re-read the environment on every
+/// `par_row_blocks` call — a syscall-shaped tax on every op).
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("BSKMQ_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    let o = THREAD_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed);
+    if o != 0 {
+        return o;
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+    *BASE_THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("BSKMQ_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
 }
 
-/// Run `f(first_row, block)` over row blocks of `out` on scoped threads.
+static BASE_THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+static THREAD_OVERRIDE: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+
+/// Test-only override of [`num_threads`] (`None` restores the cached
+/// process default).  Lets one test process sweep the 1/4/8-thread
+/// partitioning matrix without respawning; results are bit-identical at
+/// any thread count by the per-row seeding contract, so a racing
+/// override never changes another test's output, only its partition.
+pub fn set_thread_override(n: Option<usize>) {
+    THREAD_OVERRIDE.store(
+        n.map(|v| v.max(1)).unwrap_or(0),
+        std::sync::atomic::Ordering::SeqCst,
+    );
+}
+
+/// Run `f(first_row, block)` over row blocks of `out` — through the
+/// persistent executor pool ([`super::exec_pool`]) by default, on
+/// freshly scoped threads when the pool is disabled (`BSKMQ_NO_POOL`,
+/// [`super::exec_pool::force_spawn`]).  Both paths use the identical
+/// static partition (`chunk_rows = rows.div_ceil(threads)`, block
+/// `ti` starting at row `ti * chunk_rows`), so they are bit-identical
+/// for any kernel whose per-row work is deterministic — the contract
+/// every caller in this module upholds via per-row RNG seeding.
 pub fn par_row_blocks<F>(rows: usize, cols: usize, out: &mut [f32], f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -100,11 +132,51 @@ where
     }
     let chunk_rows = rows.div_ceil(threads);
     let f = &f;
+    if super::exec_pool::pool_enabled() {
+        let n_tasks = rows.div_ceil(chunk_rows);
+        let base = out.as_mut_ptr() as usize;
+        let total = out.len();
+        super::exec_pool::global().run(n_tasks, &move |ti| {
+            let start = ti * chunk_rows * cols;
+            let end = (start + chunk_rows * cols).min(total);
+            // SAFETY: tasks receive disjoint [start, end) sub-slices of
+            // `out`, which outlives the (blocking) pool call
+            let block = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (base as *mut f32).add(start),
+                    end - start,
+                )
+            };
+            f(ti * chunk_rows, block);
+        });
+        return;
+    }
     std::thread::scope(|s| {
         for (ti, block) in out.chunks_mut(chunk_rows * cols).enumerate() {
             s.spawn(move || f(ti * chunk_rows, block));
         }
     });
+}
+
+thread_local! {
+    /// Per-thread kernel scratch, reused across ops and forwards: pool
+    /// workers are long-lived, so after warmup the hot path performs
+    /// zero per-op heap allocation (the scoped-spawn fallback's threads
+    /// die per call and keep paying it — one more reason the pool wins).
+    static KERNEL_SCRATCH: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's reusable zero-filled scratch of `len`
+/// floats (grown, never shrunk).
+fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    KERNEL_SCRATCH.with(|c| {
+        let mut buf = c.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
 }
 
 /// Floor-ADC conversion against a padded reference ladder: the index of
@@ -140,9 +212,15 @@ pub fn min_ref_step(refs: &[f32]) -> f32 {
 /// [`floor_adc`] for every finite, NaN and -inf input (+inf lands on
 /// the same center *value* through the padding convention: padding
 /// centers repeat the last real center).
-pub struct AdcLut<'a> {
-    refs: &'a [f32],
-    centers: &'a [f32],
+/// Owned (no ladder borrow) so compiled [`LayerPlan`]s can cache one
+/// per quantized layer across forwards — rebuilding these per op was
+/// the single largest steady-state allocation before PR 9.
+///
+/// [`LayerPlan`]: super::graph::LayerPlan
+#[derive(Clone, Debug)]
+pub struct AdcLut {
+    refs: Vec<f32>,
+    centers: Vec<f32>,
     /// finite ladder prefix length (the rest is `+inf` padding)
     n_finite: usize,
     base: f32,
@@ -150,8 +228,8 @@ pub struct AdcLut<'a> {
     lut: Vec<u32>,
 }
 
-impl<'a> AdcLut<'a> {
-    pub fn new(refs: &'a [f32], centers: &'a [f32]) -> AdcLut<'a> {
+impl AdcLut {
+    pub fn new(refs: &[f32], centers: &[f32]) -> AdcLut {
         assert!(!centers.is_empty(), "AdcLut: empty centers");
         let n_finite = refs.iter().take_while(|r| r.is_finite()).count();
         let base = refs.first().copied().unwrap_or(0.0);
@@ -175,13 +253,23 @@ impl<'a> AdcLut<'a> {
             }
         }
         AdcLut {
-            refs,
-            centers,
+            refs: refs.to_vec(),
+            centers: centers.to_vec(),
             n_finite,
             base,
             scale,
             lut,
         }
+    }
+
+    /// The padded reference ladder this table was built from.
+    pub fn refs(&self) -> &[f32] {
+        &self.refs
+    }
+
+    /// The digital centers this table was built from.
+    pub fn centers(&self) -> &[f32] {
+        &self.centers
     }
 
     /// Branch-light [`floor_adc`]: same center for every input (see the
@@ -237,83 +325,109 @@ pub fn tiled_mac_into(
     quant: Option<&ConvertSpec>,
     out: &mut [f32],
 ) -> f64 {
+    let lut = quant.map(|q| AdcLut::new(q.refs, q.centers));
+    tiled_mac_into_with_lut(x, m, k, w, tile_k, quant, lut.as_ref(), out)
+}
+
+/// [`tiled_mac_into`] with a caller-supplied [`AdcLut`] (built from the
+/// same ladder as `quant`, normally cached in a compiled layer plan) so
+/// the steady-state forward skips per-op LUT construction.
+#[allow(clippy::too_many_arguments)]
+pub fn tiled_mac_into_with_lut(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &Tensor,
+    tile_k: usize,
+    quant: Option<&ConvertSpec>,
+    lut: Option<&AdcLut>,
+    out: &mut [f32],
+) -> f64 {
     assert_eq!(w.shape.len(), 2, "weight matrix must be 2-D");
     assert_eq!(w.shape[0], k, "contraction mismatch {} vs {}", w.shape[0], k);
     let n = w.shape[1];
     assert_eq!(x.len(), m * k, "tiled_mac input shape mismatch");
     assert_eq!(out.len(), m * n, "tiled_mac output shape mismatch");
+    assert_eq!(
+        quant.is_some(),
+        lut.is_some(),
+        "quant spec and AdcLut must be supplied together"
+    );
     let kt = k.div_ceil(tile_k).max(1);
-    let lut = quant.map(|q| AdcLut::new(q.refs, q.centers));
     out.fill(0.0);
     let absmax = Mutex::new(0f64);
     par_row_blocks(m, n, out, |row0, block| {
         let rows_here = block.len() / n;
-        let mut scratch = vec![0f32; ROW_BLOCK.min(rows_here) * n];
-        let mut rngs: Vec<Rng> = Vec::with_capacity(ROW_BLOCK);
-        let mut local_max = 0f64;
-        for (bi, sub) in block.chunks_mut(ROW_BLOCK * n).enumerate() {
-            let r0 = row0 + bi * ROW_BLOCK;
-            let rb = sub.len() / n;
-            if let Some(q) = quant {
-                rngs.clear();
-                for r in r0..r0 + rb {
-                    rngs.push(Rng::new(
-                        q.seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX),
-                    ));
-                }
-            }
-            for t in 0..kt {
-                let lo = t * tile_k;
-                let hi = ((t + 1) * tile_k).min(k);
-                scratch[..rb * n].fill(0.0);
-                // all rb rows stream the same weight tile while it is
-                // hot in cache; the `a != 0.0` skip is part of the
-                // bit-exactness contract (-0.0 + 0.0 flips sign bits),
-                // so it stays in every path
-                for ri in 0..rb {
-                    let xrow = &x[(r0 + ri) * k..(r0 + ri) * k + k];
-                    let srow = &mut scratch[ri * n..ri * n + n];
-                    for (kk, &a) in xrow.iter().enumerate().take(hi).skip(lo) {
-                        if a != 0.0 {
-                            let wrow = &w.data[kk * n..kk * n + n];
-                            simd::axpy(srow, wrow, a);
-                        }
+        with_scratch(ROW_BLOCK.min(rows_here) * n, |scratch| {
+            let mut rngs: [Rng; ROW_BLOCK] =
+                std::array::from_fn(|_| Rng::new(0));
+            let mut local_max = 0f64;
+            for (bi, sub) in block.chunks_mut(ROW_BLOCK * n).enumerate() {
+                let r0 = row0 + bi * ROW_BLOCK;
+                let rb = sub.len() / n;
+                if let Some(q) = quant {
+                    for (ri, r) in (r0..r0 + rb).enumerate() {
+                        rngs[ri] = Rng::new(
+                            q.seed ^ (r as u64).wrapping_mul(ROW_SEED_MIX),
+                        );
                     }
                 }
-                if let (Some(q), Some(adc)) = (quant, lut.as_ref()) {
+                for t in 0..kt {
+                    let lo = t * tile_k;
+                    let hi = ((t + 1) * tile_k).min(k);
+                    scratch[..rb * n].fill(0.0);
+                    // all rb rows stream the same weight tile while it is
+                    // hot in cache; the `a != 0.0` skip is part of the
+                    // bit-exactness contract (-0.0 + 0.0 flips sign bits),
+                    // so it stays in every path
                     for ri in 0..rb {
-                        let rng = &mut rngs[ri];
-                        let orow = &mut sub[ri * n..ri * n + n];
-                        let srow = &scratch[ri * n..ri * n + n];
-                        if q.sigma != 0.0 {
-                            for (oj, &v) in orow.iter_mut().zip(srow) {
-                                let p = v + q.sigma * rng.gaussian() as f32;
-                                *oj += adc.convert(p);
-                            }
-                        } else {
-                            for (oj, &v) in orow.iter_mut().zip(srow) {
-                                *oj += adc.convert(v);
+                        let xrow = &x[(r0 + ri) * k..(r0 + ri) * k + k];
+                        let srow = &mut scratch[ri * n..ri * n + n];
+                        for (kk, &a) in
+                            xrow.iter().enumerate().take(hi).skip(lo)
+                        {
+                            if a != 0.0 {
+                                let wrow = &w.data[kk * n..kk * n + n];
+                                simd::axpy(srow, wrow, a);
                             }
                         }
                     }
-                } else {
-                    for ri in 0..rb {
-                        let orow = &mut sub[ri * n..ri * n + n];
-                        let srow = &scratch[ri * n..ri * n + n];
-                        let mx = simd::accum_absmax(orow, srow);
-                        if mx > local_max {
-                            local_max = mx;
+                    if let (Some(q), Some(adc)) = (quant, lut) {
+                        for ri in 0..rb {
+                            let rng = &mut rngs[ri];
+                            let orow = &mut sub[ri * n..ri * n + n];
+                            let srow = &scratch[ri * n..ri * n + n];
+                            if q.sigma != 0.0 {
+                                for (oj, &v) in orow.iter_mut().zip(srow) {
+                                    let p =
+                                        v + q.sigma * rng.gaussian() as f32;
+                                    *oj += adc.convert(p);
+                                }
+                            } else {
+                                for (oj, &v) in orow.iter_mut().zip(srow) {
+                                    *oj += adc.convert(v);
+                                }
+                            }
+                        }
+                    } else {
+                        for ri in 0..rb {
+                            let orow = &mut sub[ri * n..ri * n + n];
+                            let srow = &scratch[ri * n..ri * n + n];
+                            let mx = simd::accum_absmax(orow, srow);
+                            if mx > local_max {
+                                local_max = mx;
+                            }
                         }
                     }
                 }
             }
-        }
-        if quant.is_none() {
-            let mut g = absmax.lock().unwrap();
-            if local_max > *g {
-                *g = local_max;
+            if quant.is_none() {
+                let mut g = absmax.lock().unwrap();
+                if local_max > *g {
+                    *g = local_max;
+                }
             }
-        }
+        });
     });
     absmax.into_inner().unwrap()
 }
@@ -369,8 +483,26 @@ pub fn bias_relu_convert_into(
     sigma: f32,
     seed: u64,
 ) {
-    assert_eq!(bias.len(), cols, "bias length mismatch");
     let adc = AdcLut::new(refs, centers);
+    bias_relu_convert_into_with_lut(
+        y, rows, cols, bias, relu, &adc, sigma, seed,
+    );
+}
+
+/// [`bias_relu_convert_into`] against a cached [`AdcLut`] (satellite of
+/// the layer-plan work: the plan owns the LUT, the op just converts).
+#[allow(clippy::too_many_arguments)]
+pub fn bias_relu_convert_into_with_lut(
+    y: &mut [f32],
+    rows: usize,
+    cols: usize,
+    bias: &[f32],
+    relu: bool,
+    adc: &AdcLut,
+    sigma: f32,
+    seed: u64,
+) {
+    assert_eq!(bias.len(), cols, "bias length mismatch");
     par_row_blocks(rows, cols, y, |row0, block| {
         for (ri, row) in block.chunks_mut(cols).enumerate() {
             let r = row0 + ri;
@@ -401,6 +533,18 @@ pub fn nl_convert_into(
     seed: u64,
 ) {
     let adc = AdcLut::new(refs, centers);
+    nl_convert_into_with_lut(y, rows, cols, &adc, sigma, seed);
+}
+
+/// [`nl_convert_into`] against a cached [`AdcLut`].
+pub fn nl_convert_into_with_lut(
+    y: &mut [f32],
+    rows: usize,
+    cols: usize,
+    adc: &AdcLut,
+    sigma: f32,
+    seed: u64,
+) {
     par_row_blocks(rows, cols, y, |row0, block| {
         for (ri, row) in block.chunks_mut(cols).enumerate() {
             let r = row0 + ri;
@@ -469,29 +613,30 @@ pub fn im2col_into(
     let cols = kh * kw * c;
     assert_eq!(x.len(), b * h * w * c, "im2col input shape mismatch");
     assert_eq!(out.len(), b * oh * ow * cols, "im2col output shape mismatch");
-    out.fill(0.0);
-    for bi in 0..b {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((bi * oh + oy) * ow + ox) * cols;
-                for i in 0..kh {
-                    let iy = (oy * stride + i) as isize - pt as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue; // zero padding rows add nothing
+    // one patch row per output pixel: rows are written independently, so
+    // the parallel partition cannot change any byte of the result
+    par_row_blocks(b * oh * ow, cols, out, |row0, block| {
+        block.fill(0.0);
+        for (ri, row) in block.chunks_mut(cols).enumerate() {
+            let r = row0 + ri;
+            let (bi, oy, ox) = (r / (oh * ow), r / ow % oh, r % ow);
+            for i in 0..kh {
+                let iy = (oy * stride + i) as isize - pt as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue; // zero padding rows add nothing
+                }
+                for j in 0..kw {
+                    let ix = (ox * stride + j) as isize - pl as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
                     }
-                    for j in 0..kw {
-                        let ix = (ox * stride + j) as isize - pl as isize;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
-                        let dst = row + (i * kw + j) * c;
-                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
-                    }
+                    let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                    let dst = (i * kw + j) * c;
+                    row[dst..dst + c].copy_from_slice(&x[src..src + c]);
                 }
             }
         }
-    }
+    });
     (oh, ow)
 }
 
@@ -522,26 +667,23 @@ pub fn max_pool2_into(
     let (oh, ow) = (h / 2, w / 2);
     assert_eq!(x.len(), b * h * w * c, "max_pool2 input shape mismatch");
     assert_eq!(out.len(), b * oh * ow * c, "max_pool2 output shape mismatch");
-    for bi in 0..b {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                for ci in 0..c {
-                    let mut m = f32::NEG_INFINITY;
-                    for dy in 0..2 {
-                        for dx in 0..2 {
-                            let src = ((bi * h + oy * 2 + dy) * w
-                                + ox * 2
-                                + dx)
-                                * c
-                                + ci;
-                            m = m.max(x[src]);
-                        }
+    par_row_blocks(b * oh * ow, c, out, |row0, block| {
+        for (ri, row) in block.chunks_mut(c).enumerate() {
+            let r = row0 + ri;
+            let (bi, oy, ox) = (r / (oh * ow), r / ow % oh, r % ow);
+            for (ci, o) in row.iter_mut().enumerate() {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let src =
+                            ((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ci;
+                        m = m.max(x[src]);
                     }
-                    out[((bi * oh + oy) * ow + ox) * c + ci] = m;
                 }
+                *o = m;
             }
         }
-    }
+    });
 }
 
 /// [`max_pool2_into`] on a [`Feat`].
@@ -565,31 +707,30 @@ pub fn avg_pool3_same_into(
 ) {
     assert_eq!(x.len(), b * h * w * c, "avg_pool3 input shape mismatch");
     assert_eq!(out.len(), x.len(), "avg_pool3 output shape mismatch");
-    for bi in 0..b {
-        for oy in 0..h {
-            for ox in 0..w {
-                for ci in 0..c {
-                    let mut s = 0f32;
-                    for dy in -1isize..=1 {
-                        let iy = oy as isize + dy;
-                        if iy < 0 || iy >= h as isize {
+    par_row_blocks(b * h * w, c, out, |row0, block| {
+        for (ri, row) in block.chunks_mut(c).enumerate() {
+            let r = row0 + ri;
+            let (bi, oy, ox) = (r / (h * w), r / w % h, r % w);
+            for (ci, o) in row.iter_mut().enumerate() {
+                let mut s = 0f32;
+                for dy in -1isize..=1 {
+                    let iy = oy as isize + dy;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for dx in -1isize..=1 {
+                        let ix = ox as isize + dx;
+                        if ix < 0 || ix >= w as isize {
                             continue;
                         }
-                        for dx in -1isize..=1 {
-                            let ix = ox as isize + dx;
-                            if ix < 0 || ix >= w as isize {
-                                continue;
-                            }
-                            s += x[((bi * h + iy as usize) * w + ix as usize)
-                                * c
-                                + ci];
-                        }
+                        s += x[((bi * h + iy as usize) * w + ix as usize) * c
+                            + ci];
                     }
-                    out[((bi * h + oy) * w + ox) * c + ci] = s / 9.0;
                 }
+                *o = s / 9.0;
             }
         }
-    }
+    });
 }
 
 /// [`avg_pool3_same_into`] on a [`Feat`].
@@ -611,19 +752,21 @@ pub fn global_avg_pool_into(
     let hw = (h * w) as f32;
     assert_eq!(x.len(), b * h * w * c, "gap input shape mismatch");
     assert_eq!(out.len(), b * c, "gap output shape mismatch");
-    out.fill(0.0);
-    for bi in 0..b {
-        let orow = bi * c;
-        for p in 0..h * w {
-            let src = (bi * h * w + p) * c;
-            for ci in 0..c {
-                out[orow + ci] += x[src + ci];
+    par_row_blocks(b, c, out, |row0, block| {
+        block.fill(0.0);
+        for (ri, orow) in block.chunks_mut(c).enumerate() {
+            let bi = row0 + ri;
+            for p in 0..h * w {
+                let src = (bi * h * w + p) * c;
+                for (ci, o) in orow.iter_mut().enumerate() {
+                    *o += x[src + ci];
+                }
+            }
+            for o in orow.iter_mut() {
+                *o /= hw;
             }
         }
-        for ci in 0..c {
-            out[orow + ci] /= hw;
-        }
-    }
+    });
 }
 
 /// [`global_avg_pool_into`] on a [`Feat`], to `[b, c]`.
@@ -703,15 +846,19 @@ pub fn layer_norm_into(
     assert_eq!(gamma.len(), cols, "layernorm gamma mismatch");
     assert_eq!(beta.len(), cols, "layernorm beta mismatch");
     assert_eq!(out.len(), x.len(), "layernorm output shape mismatch");
-    for (orow, row) in out.chunks_mut(cols).zip(x.chunks(cols)) {
-        let mu = row.iter().sum::<f32>() / cols as f32;
-        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>()
-            / cols as f32;
-        let inv = 1.0 / (var + 1e-6).sqrt();
-        for j in 0..cols {
-            orow[j] = (row[j] - mu) * inv * gamma[j] + beta[j];
+    let rows = x.len() / cols;
+    par_row_blocks(rows, cols, out, |row0, block| {
+        for (ri, orow) in block.chunks_mut(cols).enumerate() {
+            let row = &x[(row0 + ri) * cols..(row0 + ri + 1) * cols];
+            let mu = row.iter().sum::<f32>() / cols as f32;
+            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>()
+                / cols as f32;
+            let inv = 1.0 / (var + 1e-6).sqrt();
+            for j in 0..cols {
+                orow[j] = (row[j] - mu) * inv * gamma[j] + beta[j];
+            }
         }
-    }
+    });
 }
 
 /// [`layer_norm_into`] on a [`Mat`].
@@ -741,8 +888,10 @@ fn softmax_inplace(row: &mut [f32]) {
 }
 
 /// Digital-domain multi-head attention over quantized Q/K/V `[b*t, d]`
-/// row matrices (the transformer's non-MAC stage).  `scores` is a
-/// caller-provided `t*t` scratch (fully overwritten per head); `out`
+/// row matrices (the transformer's non-MAC stage), parallel over the
+/// batch: each batch element's `t*d` output block is written by one
+/// task, with the score matrix living in that thread's reusable
+/// scratch (no caller-provided buffer, no per-op allocation).  `out`
 /// must be zeroed on entry (partials accumulate per head).
 #[allow(clippy::too_many_arguments)]
 pub fn attention_into(
@@ -753,56 +902,56 @@ pub fn attention_into(
     t: usize,
     d: usize,
     heads: usize,
-    scores: &mut [f32],
     out: &mut [f32],
 ) {
     assert_eq!(d % heads, 0, "d_model not divisible by heads");
     assert_eq!(q.len(), b * t * d, "attention q shape mismatch");
     assert_eq!(k.len(), q.len(), "attention k shape mismatch");
     assert_eq!(v.len(), q.len(), "attention v shape mismatch");
-    assert_eq!(scores.len(), t * t, "attention scores scratch mismatch");
     assert_eq!(out.len(), q.len(), "attention output shape mismatch");
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    for bi in 0..b {
-        for h in 0..heads {
-            let off = h * hd;
-            for t1 in 0..t {
-                let qrow = &q[(bi * t + t1) * d + off..][..hd];
-                for t2 in 0..t {
-                    let krow = &k[(bi * t + t2) * d + off..][..hd];
-                    let mut s = 0f32;
-                    for dd in 0..hd {
-                        s += qrow[dd] * krow[dd];
+    par_row_blocks(b, t * d, out, |b0, block| {
+        with_scratch(t * t, |scores| {
+            for (bi_off, bout) in block.chunks_mut(t * d).enumerate() {
+                let bi = b0 + bi_off;
+                for h in 0..heads {
+                    let off = h * hd;
+                    for t1 in 0..t {
+                        let qrow = &q[(bi * t + t1) * d + off..][..hd];
+                        for t2 in 0..t {
+                            let krow = &k[(bi * t + t2) * d + off..][..hd];
+                            let mut s = 0f32;
+                            for dd in 0..hd {
+                                s += qrow[dd] * krow[dd];
+                            }
+                            scores[t1 * t + t2] = s * scale;
+                        }
                     }
-                    scores[t1 * t + t2] = s * scale;
+                    for t1 in 0..t {
+                        softmax_inplace(&mut scores[t1 * t..(t1 + 1) * t]);
+                    }
+                    for t1 in 0..t {
+                        let orow = &mut bout[t1 * d + off..][..hd];
+                        for t2 in 0..t {
+                            let a = scores[t1 * t + t2];
+                            let vrow = &v[(bi * t + t2) * d + off..][..hd];
+                            for dd in 0..hd {
+                                orow[dd] += a * vrow[dd];
+                            }
+                        }
+                    }
                 }
             }
-            for t1 in 0..t {
-                softmax_inplace(&mut scores[t1 * t..(t1 + 1) * t]);
-            }
-            for t1 in 0..t {
-                let orow = &mut out[(bi * t + t1) * d + off..][..hd];
-                for t2 in 0..t {
-                    let a = scores[t1 * t + t2];
-                    let vrow = &v[(bi * t + t2) * d + off..][..hd];
-                    for dd in 0..hd {
-                        orow[dd] += a * vrow[dd];
-                    }
-                }
-            }
-        }
-    }
+        });
+    });
 }
 
-/// [`attention_into`] on [`Mat`] operands, allocating output + scratch.
+/// [`attention_into`] on [`Mat`] operands, allocating the output.
 pub fn attention(q: &Mat, k: &Mat, v: &Mat, b: usize, t: usize, heads: usize) -> Mat {
     let d = q.cols;
     let mut out = vec![0f32; b * t * d];
-    let mut scores = vec![0f32; t * t];
-    attention_into(
-        &q.data, &k.data, &v.data, b, t, d, heads, &mut scores, &mut out,
-    );
+    attention_into(&q.data, &k.data, &v.data, b, t, d, heads, &mut out);
     Mat::new(b * t, d, out)
 }
 
@@ -817,18 +966,21 @@ pub fn mean_over_seq_into(
 ) {
     assert_eq!(x.len(), b * t * d, "mean_over_seq input shape mismatch");
     assert_eq!(out.len(), b * d, "mean_over_seq output shape mismatch");
-    out.fill(0.0);
-    for bi in 0..b {
-        for ti in 0..t {
-            let src = (bi * t + ti) * d;
-            for dd in 0..d {
-                out[bi * d + dd] += x[src + dd];
+    par_row_blocks(b, d, out, |row0, block| {
+        block.fill(0.0);
+        for (ri, orow) in block.chunks_mut(d).enumerate() {
+            let bi = row0 + ri;
+            for ti in 0..t {
+                let src = (bi * t + ti) * d;
+                for (dd, o) in orow.iter_mut().enumerate() {
+                    *o += x[src + dd];
+                }
+            }
+            for o in orow.iter_mut() {
+                *o /= t as f32;
             }
         }
-        for dd in 0..d {
-            out[bi * d + dd] /= t as f32;
-        }
-    }
+    });
 }
 
 /// [`mean_over_seq_into`] on a [`Mat`].

@@ -131,6 +131,8 @@ pub fn closed_loop(
         p99_ms: pct(&lat, 0.99),
         p999_ms: pct(&lat, 0.999),
         deadline_ms: deadline.as_secs_f64() * 1e3,
+        replicas: client.live_replicas(),
+        exec_threads: crate::backend::native::ops::num_threads(),
     }
 }
 

@@ -43,6 +43,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
+use crate::backend::native::exec_pool;
 use crate::backend::{Backend, BackendKind, ProgrammedCodebooks};
 use crate::coordinator::calibrate::{CalibrationResult, Calibrator};
 use crate::coordinator::ptq::PtqEvaluator;
@@ -673,6 +674,13 @@ impl PoolClient {
         self.submit_deadline(x, self.deadline)
     }
 
+    /// Live replica target of the pool behind this client (autoscaling
+    /// moves it at runtime) — recorded on load-harness points so BENCH
+    /// numbers carry their replica config.
+    pub fn live_replicas(&self) -> usize {
+        self.queue.target()
+    }
+
     /// [`PoolClient::submit`] with an explicit per-request deadline.
     pub fn submit_deadline(
         &self,
@@ -1160,9 +1168,15 @@ impl ModelPool {
     pub fn stats_json(&self) -> String {
         let lat = self.stats.percentiles_ms(&[0.5, 0.95, 0.99, 0.999]);
         let qw = self.stats.queue_percentiles_ms(&[0.5, 0.99]);
+        let (exec_threads, pool_workers, active_jobs, lease_slots) =
+            exec_pool::snapshot();
         let mut s = format!(
             "{{\"model\":\"{}\",\"engine\":\"{}\",\"replicas\":{},\
              \"replicas_live\":{},\
+             \"exec\":{{\"threads\":{exec_threads},\
+             \"pool_workers\":{pool_workers},\
+             \"active_jobs\":{active_jobs},\
+             \"lease_slots\":{lease_slots},\"pool_enabled\":{}}},\
              \"queue_depth\":{},\"deadline_ms\":{},\"requests\":{},\
              \"batches\":{},\
              \"full_batches\":{},\"singles\":{},\"rejected\":{},\
@@ -1177,6 +1191,7 @@ impl ModelPool {
             escape_json(&self.engine),
             self.replicas(),
             self.live_replicas(),
+            exec_pool::pool_enabled(),
             self.queue.depth,
             self.request_deadline.as_millis(),
             self.stats.requests.load(Ordering::SeqCst),
@@ -1277,6 +1292,25 @@ impl ModelPool {
                 "bskmq_replica_requests_total",
                 &format!("{l},replica=\"{i}\""),
                 r.requests.load(Ordering::SeqCst) as f64,
+            );
+        }
+        // executor-thread leasing per replica slot: live slots share the
+        // one process-wide pool, each entitled to the current weighted
+        // lease; retired slots hold no lease.  Together with
+        // bskmq_exec_threads this makes serving BENCH points comparable
+        // across machines (the old pages never recorded thread config).
+        let lease = exec_pool::snapshot().3;
+        let live = self.live_replicas();
+        w.family(
+            "bskmq_replica_lease_slots",
+            "gauge",
+            "executor-pool worker slots leasable per replica",
+        );
+        for i in 0..self.replica_stats.len() {
+            w.raw_sample(
+                "bskmq_replica_lease_slots",
+                &format!("{l},replica=\"{i}\""),
+                if i < live { lease as f64 } else { 0.0 },
             );
         }
         w.family(
@@ -1603,6 +1637,33 @@ impl ModelRegistry {
     /// command).
     pub fn prometheus(&self) -> String {
         let mut w = PromWriter::new();
+        // process-global executor gauges, emitted once (all pools share
+        // the one thread budget — the point of the persistent pool)
+        let (threads, workers, jobs, lease) = exec_pool::snapshot();
+        w.family(
+            "bskmq_exec_threads",
+            "gauge",
+            "process-wide executor thread budget (BSKMQ_THREADS)",
+        );
+        w.raw_sample("bskmq_exec_threads", "", threads as f64);
+        w.family(
+            "bskmq_exec_pool_workers",
+            "gauge",
+            "persistent executor-pool worker threads",
+        );
+        w.raw_sample("bskmq_exec_pool_workers", "", workers as f64);
+        w.family(
+            "bskmq_exec_active_jobs",
+            "gauge",
+            "row-parallel jobs in flight across all replicas",
+        );
+        w.raw_sample("bskmq_exec_active_jobs", "", jobs as f64);
+        w.family(
+            "bskmq_exec_lease_slots",
+            "gauge",
+            "worker slots one job may lease under current load",
+        );
+        w.raw_sample("bskmq_exec_lease_slots", "", lease as f64);
         for p in &self.pools {
             p.render_prometheus(&mut w);
         }

@@ -16,6 +16,7 @@
 //!               [--request-deadline-ms N] [--front event|threaded]
 //!               [--calib-batches N] [--trace FILE] [--trace-sample N]
 //!               [--profile-every N] [--no-quant-health]
+//!               [--exec-threads N]
 //!   bskmq bench [--quick] [--models M1,M2] [--out DIR]
 //!               [--allow-placeholder]
 //!       # run the standard perf workload per model and write
@@ -53,7 +54,7 @@ use bskmq::coordinator::ptq::PtqEvaluator;
 use bskmq::coordinator::server::{ModelPool, ModelRegistry, PoolConfig};
 use bskmq::data::dataset::ModelData;
 use bskmq::obs::bench_report::{
-    short_rev, BenchReport, ModelBench, ServingPoint,
+    short_rev, BenchReport, ExecBench, ModelBench, ServingPoint,
 };
 use bskmq::quant::QuantSpec;
 use bskmq::util::stats::rate;
@@ -96,6 +97,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20       [--front event|threaded] [--calib-batches N]\n\
                  \x20       [--trace FILE] [--trace-sample N]\n\
                  \x20       [--profile-every N] [--no-quant-health]\n\
+                 \x20       [--exec-threads N]\n\
                  \x20 bench [--quick] [--models M1,M2] [--out DIR]\n\
                  \x20       [--allow-placeholder]\n\
                  \x20 synth <dir> [--seed N]\n\
@@ -436,6 +438,18 @@ fn serve(args: &[String]) -> Result<()> {
                 cfg.obs.quant_health = false;
                 i += 1;
             }
+            // global executor thread budget shared by ALL replicas of
+            // ALL models (DESIGN.md §14) — overrides BSKMQ_THREADS; must
+            // land before the first forward instantiates the pool
+            "--exec-threads" => {
+                let n: usize = args
+                    .get(i + 1)
+                    .context("--exec-threads value")?
+                    .parse()?;
+                ensure!(n > 0, "--exec-threads must be positive");
+                bskmq::backend::native::ops::set_thread_override(Some(n));
+                i += 2;
+            }
             other => anyhow::bail!("unknown serve flag '{other}'"),
         }
     }
@@ -477,10 +491,11 @@ fn serve(args: &[String]) -> Result<()> {
 
 /// `bskmq bench [--quick] [--models M1,M2] [--out DIR]`: run the
 /// standard perf workload per model — calibration throughput, quantized
-/// forward latency with a per-op breakdown, and a short closed-loop
-/// serving run — then write `BENCH_<shortrev>.json` into `--out`
-/// (default: current directory).  `--quick` shrinks every phase for CI
-/// smoke runs.
+/// forward latency with a per-op breakdown, the executor-pool vs
+/// scoped-spawn comparison (schema v3 `exec` section), and a short
+/// closed-loop serving run — then write `BENCH_<shortrev>.json` into
+/// `--out` (default: current directory).  `--quick` shrinks every phase
+/// for CI smoke runs.
 fn bench(args: &[String]) -> Result<()> {
     let mut quick = false;
     let mut allow_placeholder = false;
@@ -531,10 +546,12 @@ fn bench(args: &[String]) -> Result<()> {
     let mut report = BenchReport::new(&short_rev(), quick);
     for model in &models {
         println!("benchmarking {model} ...");
-        report.models.push(bench_model(&artifacts, model, quick)?);
+        let (mb, eb) = bench_model(&artifacts, model, quick)?;
+        report.models.push(mb);
+        report.exec.push(eb);
     }
     // closed-loop serving sweep on the lead model: throughput/latency vs
-    // offered load plus a deliberate overload point (schema v2 `serving`)
+    // offered load plus a deliberate overload point (the `serving` section)
     if let Some(lead) = models.first() {
         println!("load sweep on {lead} ...");
         report.serving = bench_serving(&artifacts, lead, quick)?;
@@ -574,6 +591,18 @@ fn bench(args: &[String]) -> Result<()> {
             p.p999_ms,
             p.shed_rate() * 100.0,
             p.requests,
+        );
+    }
+    for e in &report.exec {
+        println!(
+            "  exec[{:<11}] spawn {:>9} ns/batch  pool {:>9} ns/batch  \
+             speedup {:.2}x  ({} threads, {} pool workers)",
+            e.model,
+            e.spawn_qfwd_ns,
+            e.pool_qfwd_ns,
+            e.speedup,
+            e.exec_threads,
+            e.pool_workers,
         );
     }
     println!("wrote {}", path.display());
@@ -651,12 +680,15 @@ fn bench_serving(
 }
 
 /// One model's bench pass (native backend: the measured engine must not
-/// depend on optional features).
+/// depend on optional features).  Also returns the schema-v3 executor
+/// measurement: the identical quantized forward timed through the
+/// persistent pool (warm `LayerPlan` cache) and again with
+/// `force_spawn` pinning the legacy per-op scoped-spawn path.
 fn bench_model(
     artifacts: &std::path::Path,
     model: &str,
     quick: bool,
-) -> Result<ModelBench> {
+) -> Result<(ModelBench, ExecBench)> {
     use bskmq::util::bench::{bench_cfg, black_box};
     use std::time::{Duration, Instant};
 
@@ -715,6 +747,43 @@ fn bench_model(
         *ns /= prof_iters;
     }
 
+    // executor section: the qfwd timing above ran through the persistent
+    // pool with the cached plan (the default path); re-time the same
+    // forward with the pool disabled via force_spawn so the speedup is
+    // apples-to-apples on this host
+    let exec = {
+        use bskmq::backend::native::{exec_pool, ops};
+        exec_pool::force_spawn(true);
+        let rs = bench_cfg(
+            &format!("{model}:qfwd-spawn"),
+            warmup,
+            budget,
+            min_iters,
+            &mut || {
+                black_box(
+                    be.run_qfwd(&x, &calib.programmed, 0.0, 7).unwrap(),
+                );
+            },
+        );
+        exec_pool::force_spawn(false);
+        let spawn_qfwd_ns = rs.mean_ns();
+        let (_, pool_workers, _, _) = exec_pool::snapshot();
+        ExecBench {
+            model: model.to_string(),
+            batch,
+            exec_threads: ops::num_threads(),
+            pool_workers,
+            spawn_qfwd_ns,
+            pool_qfwd_ns: qfwd_batch_ns,
+            speedup: if qfwd_batch_ns > 0 {
+                spawn_qfwd_ns as f64 / qfwd_batch_ns as f64
+            } else {
+                0.0
+            },
+            per_op_ns: per_op.clone(),
+        }
+    };
+
     // short closed-loop serving run against a 2-replica pool
     let cfg = PoolConfig {
         backend: BackendKind::Native,
@@ -760,7 +829,7 @@ fn bench_model(
         per_op_ns: per_op,
     };
     pool.shutdown();
-    Ok(mb)
+    Ok((mb, exec))
 }
 
 fn info() -> Result<()> {

@@ -17,7 +17,11 @@ use crate::util::json::Json;
 /// Bump when the BENCH json layout changes.
 /// v2: adds the `serving` section (closed-loop load-harness points:
 /// latency percentiles, throughput, and shed rate vs offered load).
-pub const BENCH_SCHEMA_VERSION: u64 = 2;
+/// v3: adds the `exec` section (executor-pool vs scoped-spawn qfwd
+/// timings, per-op ns, thread-budget config) and records
+/// `replicas`/`exec_threads` on every serving point so load numbers are
+/// comparable across machines.
+pub const BENCH_SCHEMA_VERSION: u64 = 3;
 
 /// Per-topology measurements.
 #[derive(Clone, Debug, Default)]
@@ -67,6 +71,11 @@ pub struct ServingPoint {
     pub p999_ms: f64,
     /// the per-request deadline the point ran with
     pub deadline_ms: f64,
+    /// replicas live when the point ran (0 when the harness ran inline
+    /// without a pool)
+    pub replicas: usize,
+    /// global executor thread budget (`BSKMQ_THREADS`) the point ran with
+    pub exec_threads: usize,
 }
 
 impl ServingPoint {
@@ -78,6 +87,29 @@ impl ServingPoint {
             self.shed as f64 / self.requests as f64
         }
     }
+}
+
+/// One executor measurement (schema v3): the same quantized forward
+/// timed on the legacy per-op scoped-spawn path and through the
+/// persistent executor pool with the cached `LayerPlan`, under a stated
+/// thread budget.  `speedup` > 1 means the pool path is faster.
+#[derive(Clone, Debug, Default)]
+pub struct ExecBench {
+    pub model: String,
+    pub batch: usize,
+    /// thread budget the measurement ran under (`BSKMQ_THREADS`)
+    pub exec_threads: usize,
+    /// parked workers in the persistent pool (budget - 1; the submitter
+    /// is the remaining thread)
+    pub pool_workers: usize,
+    /// mean ns of one quantized batch forward, per-op scoped spawn
+    pub spawn_qfwd_ns: u64,
+    /// mean ns of one quantized batch forward, pool + cached plan
+    pub pool_qfwd_ns: u64,
+    /// spawn_qfwd_ns / pool_qfwd_ns
+    pub speedup: f64,
+    /// pool-path per-op mean ns from `run_qfwd_profiled`
+    pub per_op_ns: Vec<(String, u64)>,
 }
 
 /// The whole report.
@@ -95,6 +127,8 @@ pub struct BenchReport {
     pub models: Vec<ModelBench>,
     /// closed-loop load-harness points (schema v2)
     pub serving: Vec<ServingPoint>,
+    /// executor-pool vs scoped-spawn measurements (schema v3)
+    pub exec: Vec<ExecBench>,
 }
 
 impl BenchReport {
@@ -114,6 +148,7 @@ impl BenchReport {
             note: String::new(),
             models: Vec::new(),
             serving: Vec::new(),
+            exec: Vec::new(),
         }
     }
 
@@ -223,8 +258,13 @@ impl BenchReport {
             s.push_str(&format!("      \"p99_ms\": {},\n", num(p.p99_ms)));
             s.push_str(&format!("      \"p999_ms\": {},\n", num(p.p999_ms)));
             s.push_str(&format!(
-                "      \"deadline_ms\": {}\n",
+                "      \"deadline_ms\": {},\n",
                 num(p.deadline_ms)
+            ));
+            s.push_str(&format!("      \"replicas\": {},\n", p.replicas));
+            s.push_str(&format!(
+                "      \"exec_threads\": {}\n",
+                p.exec_threads
             ));
             s.push_str("    }");
             s.push_str(if i + 1 < self.serving.len() {
@@ -232,6 +272,44 @@ impl BenchReport {
             } else {
                 "\n"
             });
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"exec\": [\n");
+        for (i, e) in self.exec.iter().enumerate() {
+            s.push_str("    {\n");
+            s.push_str(&format!("      \"model\": \"{}\",\n", esc(&e.model)));
+            s.push_str(&format!("      \"batch\": {},\n", e.batch));
+            s.push_str(&format!(
+                "      \"exec_threads\": {},\n",
+                e.exec_threads
+            ));
+            s.push_str(&format!(
+                "      \"pool_workers\": {},\n",
+                e.pool_workers
+            ));
+            s.push_str(&format!(
+                "      \"spawn_qfwd_ns\": {},\n",
+                e.spawn_qfwd_ns
+            ));
+            s.push_str(&format!(
+                "      \"pool_qfwd_ns\": {},\n",
+                e.pool_qfwd_ns
+            ));
+            s.push_str(&format!("      \"speedup\": {},\n", num(e.speedup)));
+            s.push_str("      \"per_op_ns\": [");
+            for (j, (op, ns)) in e.per_op_ns.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!(
+                    "{{\"op\": \"{}\", \"ns\": {}}}",
+                    esc(op),
+                    ns
+                ));
+            }
+            s.push_str("]\n");
+            s.push_str("    }");
+            s.push_str(if i + 1 < self.exec.len() { ",\n" } else { "\n" });
         }
         s.push_str("  ]\n}\n");
         s
@@ -358,6 +436,8 @@ pub fn validate(j: &Json) -> Result<()> {
             "p99_ms",
             "p999_ms",
             "deadline_ms",
+            "replicas",
+            "exec_threads",
         ] {
             let v = p.get(key)?.as_f64()?;
             ensure!(
@@ -375,6 +455,29 @@ pub fn validate(j: &Json) -> Result<()> {
             (total - parts).abs() < 0.5,
             "serving[{phase}]: completed+shed+rejected+errors != requests"
         );
+    }
+    let exec = j.get("exec")?.as_arr()?;
+    for e in exec {
+        let name = e.get("model")?.as_str()?;
+        ensure!(!name.is_empty(), "exec entry without a model");
+        for key in [
+            "batch",
+            "exec_threads",
+            "pool_workers",
+            "spawn_qfwd_ns",
+            "pool_qfwd_ns",
+            "speedup",
+        ] {
+            let v = e.get(key)?.as_f64()?;
+            ensure!(
+                v.is_finite() && v >= 0.0,
+                "exec[{name}].{key} is not a non-negative number"
+            );
+        }
+        for op in e.get("per_op_ns")?.as_arr()? {
+            ensure!(!op.get("op")?.as_str()?.is_empty(), "unnamed op");
+            op.get("ns")?.as_f64()?;
+        }
     }
     Ok(())
 }
@@ -449,6 +552,18 @@ mod tests {
             p99_ms: 4.0,
             p999_ms: 8.0,
             deadline_ms: 250.0,
+            replicas: 2,
+            exec_threads: 8,
+        });
+        r.exec.push(ExecBench {
+            model: "resnet".into(),
+            batch: 4,
+            exec_threads: 8,
+            pool_workers: 7,
+            spawn_qfwd_ns: 900_000,
+            pool_qfwd_ns: 750_000,
+            speedup: 1.2,
+            per_op_ns: vec![("conv0:conv".into(), 380_000)],
         });
         r
     }
@@ -474,9 +589,11 @@ mod tests {
     fn validate_rejects_corruption() {
         let r = sample_report();
         let good = r.to_json();
-        let bad = good.replace("\"schema\": 2", "\"schema\": 99");
+        let bad = good.replace("\"schema\": 3", "\"schema\": 99");
         assert!(validate(&Json::parse(&bad).unwrap()).is_err());
         let bad = good.replace("\"serve_p50_ms\": 1.2", "\"serve_p50_ms\": -1");
+        assert!(validate(&Json::parse(&bad).unwrap()).is_err());
+        let bad = good.replace("\"spawn_qfwd_ns\": 900000", "\"spawn_qfwd_ns\": -1");
         assert!(validate(&Json::parse(&bad).unwrap()).is_err());
         let bad = good.replace("\"shortrev\": \"abc1234\",", "");
         assert!(validate(&Json::parse(&bad).unwrap()).is_err());

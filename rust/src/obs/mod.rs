@@ -24,7 +24,7 @@ pub mod quant_health;
 pub mod registry;
 pub mod trace;
 
-pub use bench_report::{BenchReport, ModelBench, ServingPoint};
+pub use bench_report::{BenchReport, ExecBench, ModelBench, ServingPoint};
 pub use prometheus::PromWriter;
 pub use quant_health::QuantHealth;
 pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry};

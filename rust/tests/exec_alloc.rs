@@ -1,0 +1,87 @@
+//! Steady-state allocation gate for the executor-pool + LayerPlan
+//! tentpole (DESIGN.md §14): once the plan cache, the backend's arena
+//! pool and the executor workers' thread-local scratch are warm, a
+//! quantized forward performs no per-op heap allocation.  Rebuilding
+//! the two `AdcLut`s per qlayer would cost ~6 Vec allocations per
+//! layer per forward, and per-op scoped thread spawn hundreds (stack
+//! and handle allocations per op) — either regression blows the budget
+//! asserted here by an order of magnitude.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use bskmq::backend::{load, BackendKind};
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::data::dataset::ModelData;
+use bskmq::data::synth;
+use bskmq::quant::{Method, QuantSpec};
+
+/// Counts every allocation in the process (all threads, pool workers
+/// included), so per-op churn on worker threads cannot hide.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_qfwd_allocates_a_small_constant() {
+    let dir = std::env::temp_dir().join("bskmq_exec_alloc");
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_model(&dir, "resnet", 42).unwrap();
+    let be = load(BackendKind::Native, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let batch = be.manifest().batch;
+    let calib =
+        Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
+            .calibrate(&data, 2)
+            .unwrap();
+    let xt = ModelData::batch(&data.x_test, 0, batch);
+
+    // warm-up: builds and caches the LayerPlan, grows the arena, spawns
+    // the pool workers and sizes their thread-local kernel scratch (any
+    // worker may claim any row block, so several rounds are needed
+    // before every worker has seen the largest block)
+    for _ in 0..8 {
+        be.run_qfwd(xt, &calib.programmed, 0.5, 9).unwrap();
+    }
+
+    const ITERS: u64 = 8;
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..ITERS {
+        be.run_qfwd(xt, &calib.programmed, 0.5, 9).unwrap();
+    }
+    let per_fwd = (ALLOCS.load(Ordering::Relaxed) - before) / ITERS;
+
+    // warm forwards allocate only the returned logits vector plus a
+    // handful of bookkeeping vectors (multi-input gather lists); the
+    // budget below is several times that, and far below any per-op
+    // allocation pattern
+    assert!(
+        per_fwd <= 16,
+        "steady-state forward allocates {per_fwd} times per run — per-op \
+         allocation crept back into the hot path"
+    );
+}

@@ -546,6 +546,123 @@ fn simd_and_scalar_paths_bit_identical_across_topologies() {
     }
 }
 
+/// Tentpole parity gate for the persistent executor pool (DESIGN.md
+/// §14): across **all five** synthetic topologies, in both execution
+/// modes, with and without conversion noise, and under thread budgets
+/// 1/4/8, the pool path must be bit-identical to the per-op
+/// scoped-spawn path — logits, activation subsamples and tile absmax
+/// alike.  The deterministic static row partitioning is seeded per row,
+/// so neither the thread count nor the dispatch mechanism may move a
+/// single bit.
+#[test]
+fn executor_pool_and_scoped_spawn_bit_identical_across_topologies() {
+    use bskmq::backend::native::{exec_pool, ops};
+    for model in synth::MODELS {
+        let dir = fresh_dir(&format!("pool_{model}"));
+        synth::write_model(&dir, model, 42).unwrap();
+        let be = load(BackendKind::Native, &dir, model).unwrap();
+        let data = ModelData::load(&dir, model).unwrap();
+        let m = be.manifest();
+        let calib =
+            Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
+                .calibrate(&data, 3)
+                .unwrap();
+        let xb = ModelData::batch(&data.x_calib, 0, m.batch);
+        let xt = ModelData::batch(&data.x_test, 0, m.batch);
+
+        let run = || {
+            let collect = be.run_collect(xb).unwrap();
+            let quant: Vec<Vec<f32>> = [(0.0f32, 7u32), (0.5, 9)]
+                .iter()
+                .map(|&(noise_std, seed)| {
+                    be.run_qfwd(xt, &calib.programmed, noise_std, seed)
+                        .unwrap()
+                })
+                .collect();
+            (collect, quant)
+        };
+
+        // reference: single-threaded scoped spawn (degenerates to the
+        // inline serial path)
+        ops::set_thread_override(Some(1));
+        exec_pool::force_spawn(true);
+        let (rc, rq) = run();
+
+        for threads in [1usize, 4, 8] {
+            ops::set_thread_override(Some(threads));
+            for spawn in [true, false] {
+                exec_pool::force_spawn(spawn);
+                let (c, q) = run();
+                let tag = format!(
+                    "{model} ({threads} threads, {})",
+                    if spawn { "scoped spawn" } else { "executor pool" }
+                );
+                assert_eq!(
+                    bits(&rc.logits),
+                    bits(&c.logits),
+                    "{tag}: collect logits diverged"
+                );
+                assert_eq!(rc.samples, c.samples, "{tag}: collect subsamples");
+                assert_eq!(rc.tile_max, c.tile_max, "{tag}: collect tile absmax");
+                for (i, (r, g)) in rq.iter().zip(&q).enumerate() {
+                    assert_eq!(
+                        bits(r),
+                        bits(g),
+                        "{tag}: qfwd noise variant {i} diverged"
+                    );
+                }
+            }
+        }
+        exec_pool::force_spawn(false);
+        ops::set_thread_override(None);
+    }
+}
+
+/// Four replicas of one program hammering the shared executor pool
+/// concurrently must each produce the exact logits of an undisturbed
+/// single run: per-job weighted leasing divides the budget but cannot
+/// change the deterministic per-row partitioning.
+#[test]
+fn concurrent_replicas_on_shared_pool_stay_bit_identical() {
+    use bskmq::backend::native::{exec_pool, ops};
+    let dir = fresh_dir("pool_replicas");
+    synth::write_model(&dir, "resnet", 42).unwrap();
+    let be = load(BackendKind::Native, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let m = be.manifest();
+    let calib =
+        Calibrator::with_uniform(be.as_ref(), QuantSpec::new(Method::BsKmq, 3))
+            .calibrate(&data, 3)
+            .unwrap();
+    let xt = ModelData::batch(&data.x_test, 0, m.batch);
+
+    ops::set_thread_override(Some(4));
+    exec_pool::force_spawn(false);
+    let want = be.run_qfwd(xt, &calib.programmed, 0.5, 9).unwrap();
+    let replicas: Vec<_> = (0..4)
+        .map(|_| be.replicate().expect("native backends replicate"))
+        .collect();
+    std::thread::scope(|scope| {
+        for (ri, r) in replicas.into_iter().enumerate() {
+            let want = &want;
+            let calib = &calib;
+            scope.spawn(move || {
+                for iter in 0..4 {
+                    let got =
+                        r.run_qfwd(xt, &calib.programmed, 0.5, 9).unwrap();
+                    assert_eq!(
+                        bits(&got),
+                        bits(want),
+                        "replica {ri} iter {iter}: logits diverged under \
+                         concurrent pool sharing"
+                    );
+                }
+            });
+        }
+    });
+    ops::set_thread_override(None);
+}
+
 /// Backward-compat shim: a manifest **without** per-layer quant specs
 /// (the pre-QuantSpec schema) must resolve to defaults that reproduce
 /// the old uniform BS-KMQ/3-bit calibration *bit for bit* — codebooks

@@ -9,9 +9,11 @@
 
 use std::sync::Mutex;
 
+use bskmq::backend::native::exec_pool;
 use bskmq::backend::native::ops::{
-    self, bias_relu_convert_into, floor_adc, nl_convert_into,
-    tiled_mac_into, AdcLut, ConvertSpec,
+    self, bias_relu_convert_into, bias_relu_convert_into_with_lut,
+    floor_adc, nl_convert_into, tiled_mac_into, tiled_mac_into_with_lut,
+    AdcLut, ConvertSpec,
 };
 use bskmq::backend::native::simd;
 use bskmq::quant::codebook::Codebook;
@@ -183,6 +185,82 @@ fn fuzz_nl_convert_bit_identical_to_reference() {
         let tag = format!("iter {iter} rows {rows} cols {cols} sigma {sigma}");
         assert_eq!(bits(&sout), bits(&want), "scalar vs ref: {tag}");
         assert_eq!(bits(&vout), bits(&want), "simd vs ref: {tag}");
+    }
+}
+
+/// Executor-pool extension of the fuzz harness (DESIGN.md §14): the
+/// same random tiles run through the persistent pool and the per-op
+/// scoped-spawn path, at thread budgets 1 and 8, stay bit-identical to
+/// the frozen scalar reference — and the cached-`AdcLut` kernel forms
+/// (`_with_lut`, the zero-alloc steady-state entry points) match their
+/// allocating wrappers exactly.
+#[test]
+fn fuzz_pool_and_cached_lut_bit_identical_to_reference() {
+    let _g_lock = FORCE_LOCK.lock().unwrap();
+    let mut g = Lcg(0x5eed_0005);
+    for iter in 0..20 {
+        let m = g.pick(1, 24);
+        let k = g.pick(1, 70);
+        let n = g.pick(1, 40);
+        let tile_k = [1, 3, 16, 256][g.pick(0, 3)];
+        let x = random_x(&mut g, m * k);
+        let w = Tensor::new(
+            vec![k, n],
+            (0..k * n).map(|_| g.f32(-1.0, 1.0)).collect(),
+        )
+        .unwrap();
+        let (t_refs, t_centers) = random_ladder(&mut g);
+        let sigma = if iter % 2 == 0 { 0.0 } else { g.f32(0.05, 0.8) };
+        let spec = ConvertSpec {
+            refs: &t_refs,
+            centers: &t_centers,
+            sigma,
+            seed: g.next(),
+        };
+        let lut = AdcLut::new(&t_refs, &t_centers);
+        let mut want = vec![0f32; m * n];
+        let wmax = ops::reference::tiled_mac_into(
+            &x, m, k, &w, tile_k, Some(&spec), &mut want,
+        );
+
+        for threads in [1usize, 8] {
+            ops::set_thread_override(Some(threads));
+            for spawn in [true, false] {
+                exec_pool::force_spawn(spawn);
+                let mut out = vec![0f32; m * n];
+                let mx = tiled_mac_into_with_lut(
+                    &x, m, k, &w, tile_k, Some(&spec), Some(&lut), &mut out,
+                );
+                let tag = format!(
+                    "iter {iter} threads {threads} {}",
+                    if spawn { "scoped spawn" } else { "executor pool" }
+                );
+                assert_eq!(bits(&out), bits(&want), "pool parity: {tag}");
+                assert_eq!(mx.to_bits(), wmax.to_bits(), "absmax: {tag}");
+            }
+        }
+        exec_pool::force_spawn(false);
+        ops::set_thread_override(None);
+
+        // cached-LUT epilogue vs its allocating wrapper on the mac output
+        let bias: Vec<f32> = (0..n).map(|_| g.f32(-3.0, 3.0)).collect();
+        let (e_refs, e_centers) = random_ladder(&mut g);
+        let e_lut = AdcLut::new(&e_refs, &e_centers);
+        let e_seed = g.next();
+        let relu = iter % 2 == 0;
+        let mut ew = want.clone();
+        bias_relu_convert_into(
+            &mut ew, m, n, &bias, relu, &e_refs, &e_centers, sigma, e_seed,
+        );
+        let mut eg = want.clone();
+        bias_relu_convert_into_with_lut(
+            &mut eg, m, n, &bias, relu, &e_lut, sigma, e_seed,
+        );
+        assert_eq!(
+            bits(&eg),
+            bits(&ew),
+            "cached-LUT epilogue diverged from wrapper: iter {iter}"
+        );
     }
 }
 
