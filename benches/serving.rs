@@ -31,7 +31,7 @@ use anyhow::{ensure, Result};
 use bskmq::backend::BackendKind;
 use bskmq::coordinator::front::{FrontKind, ServeFront};
 use bskmq::coordinator::loadgen::closed_loop;
-use bskmq::coordinator::server::{ModelPool, ModelRegistry, PoolConfig};
+use bskmq::coordinator::pool::{ModelPool, ModelRegistry, PoolConfig};
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
 use bskmq::obs::bench_report::{short_rev, BenchReport, ServingPoint};
@@ -332,6 +332,9 @@ fn main() -> Result<()> {
         deadline_ms: ladder_deadline.as_secs_f64() * 1e3,
         replicas: 2,
         exec_threads: bskmq::backend::native::ops::num_threads(),
+        swaps: 0,
+        swap_ns: 0,
+        inflight_at_swap: 0,
     });
     front.stop();
     drop(front);

@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use bskmq::backend::BackendKind;
 use bskmq::coordinator::front::{FrontKind, ServeFront};
-use bskmq::coordinator::server::{
+use bskmq::coordinator::pool::{
     ModelPool, ModelRegistry, ObsConfig, PoolConfig,
 };
 use bskmq::data::dataset::ModelData;

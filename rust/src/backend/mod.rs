@@ -21,7 +21,7 @@ pub mod native;
 pub mod xla;
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{ensure, Result};
 
@@ -136,6 +136,63 @@ impl ProgrammedCodebooks {
             self.tile_refs.row(i),
             self.tile_centers.row(i),
         )
+    }
+}
+
+/// One immutable codebook generation: the programmed books plus a
+/// 1-based monotonic generation number (1 = the calibration-time books
+/// a pool started serving with).  Held behind an `Arc` so the pair can
+/// never be observed half-swapped.
+pub struct CodebookGeneration {
+    pub books: ProgrammedCodebooks,
+    pub generation: u64,
+}
+
+/// The `Backend::with_codebooks`-style replacement point shared by every
+/// replica of one pool (DESIGN.md §15).  Workers grab
+/// [`CodebookCell::current`] once per batch and run the whole batch —
+/// digitization, noise, replies — against that snapshot, so every reply
+/// is produced entirely under a single codebook generation; a concurrent
+/// [`CodebookCell::swap`] only takes effect at the next batch boundary.
+/// Because `swap` installs a freshly [`ProgrammedCodebooks::stack`]ed
+/// set (new uid), the compiled-graph layer-plan cache rebuilds its LUTs
+/// instead of serving stale ones.
+pub struct CodebookCell {
+    inner: RwLock<Arc<CodebookGeneration>>,
+}
+
+impl CodebookCell {
+    /// Wrap the calibration-time books as generation 1.
+    pub fn new(books: ProgrammedCodebooks) -> CodebookCell {
+        CodebookCell {
+            inner: RwLock::new(Arc::new(CodebookGeneration {
+                books,
+                generation: 1,
+            })),
+        }
+    }
+
+    /// Snapshot the live generation (cheap: one read lock + Arc clone).
+    pub fn current(&self) -> Arc<CodebookGeneration> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// The live generation number.
+    pub fn generation(&self) -> u64 {
+        self.inner.read().unwrap().generation
+    }
+
+    /// Atomically publish `books` as the next generation and return its
+    /// number.  In-flight batches keep the snapshot they grabbed; no
+    /// request is dropped, reordered, or mixed across generations.
+    pub fn swap(&self, books: ProgrammedCodebooks) -> u64 {
+        let mut g = self.inner.write().unwrap();
+        let next = g.generation + 1;
+        *g = Arc::new(CodebookGeneration {
+            books,
+            generation: next,
+        });
+        next
     }
 }
 
@@ -377,5 +434,30 @@ mod tests {
         }];
         let err = ProgrammedCodebooks::stack(&ok, &empty, 8).unwrap_err();
         assert!(err.to_string().contains("degenerate tile codebook"), "{err}");
+    }
+
+    #[test]
+    fn codebook_cell_swaps_generations_atomically() {
+        let mk = |c0: f64| {
+            let nl = vec![Codebook::from_centers(&[c0, c0 + 1.0])];
+            let tile = vec![Codebook::linear(-4.0, 4.0, 2)];
+            ProgrammedCodebooks::stack(&nl, &tile, 4).unwrap()
+        };
+        let cell = CodebookCell::new(mk(0.0));
+        assert_eq!(cell.generation(), 1);
+        let a = cell.current();
+        assert_eq!(a.generation, 1);
+        let uid_a = a.books.uid();
+        // a swap bumps the generation and mints a new uid (layer-plan
+        // cache key), while the old snapshot stays intact for in-flight
+        // batches
+        assert_eq!(cell.swap(mk(5.0)), 2);
+        let b = cell.current();
+        assert_eq!(b.generation, 2);
+        assert_ne!(b.books.uid(), uid_a);
+        assert_eq!(a.generation, 1);
+        assert_eq!(a.books.uid(), uid_a);
+        assert_eq!(cell.swap(mk(9.0)), 3);
+        assert_eq!(cell.generation(), 3);
     }
 }

@@ -45,6 +45,62 @@ pub struct CalibrationResult {
     pub sketches: Vec<ValueSketch>,
 }
 
+/// Fit + hardware-project every layer's codebook pair from accumulated
+/// estimator state — the single fitting path shared by offline
+/// calibration and the online shadow-recalibration controller
+/// ([`crate::coordinator::recalib`]), so refit codebooks go through
+/// exactly the spec-driven pipeline the deployed books came from.
+pub fn finish_codebooks(
+    specs: &[QuantSpec],
+    estimators: &[Box<dyn QuantEstimator>],
+    tile_max: &[f64],
+    layer_names: &[String],
+    max_levels: usize,
+) -> Result<(Vec<Codebook>, Vec<Codebook>, ProgrammedCodebooks)> {
+    let nq = specs.len();
+    ensure!(
+        estimators.len() == nq
+            && tile_max.len() == nq
+            && layer_names.len() == nq,
+        "finish_codebooks: mismatched per-layer lengths \
+         ({} specs, {} estimators, {} tile maxima, {} names)",
+        nq,
+        estimators.len(),
+        tile_max.len(),
+        layer_names.len()
+    );
+    let mut nl_books = Vec::with_capacity(nq);
+    let mut tile_books = Vec::with_capacity(nq);
+    for i in 0..nq {
+        let spec = &specs[i];
+        let ideal = estimators[i].finish(spec.act_bits).with_context(|| {
+            format!(
+                "fitting the {} codebook of q-layer '{}'",
+                spec.method.name(),
+                layer_names[i]
+            )
+        })?;
+        let hw = ideal.project_to_hardware(spec.act_bits);
+        // a degenerate ladder would panic inside the conversion
+        // kernels and mis-scale noise (min_ref_step falls back to
+        // 1.0); fail the fit here, naming the layer
+        ensure!(
+            hw.levels() >= 2,
+            "q-layer '{}': calibration produced a degenerate \
+             {}-level NL codebook (conversion needs at least 2 levels)",
+            layer_names[i],
+            hw.levels()
+        );
+        nl_books.push(hw);
+        // per-tile linear conversion over the observed partial range
+        let r = tile_max[i].max(1e-6);
+        tile_books.push(Codebook::linear(-r, r, spec.tile_bits));
+    }
+    let programmed =
+        ProgrammedCodebooks::stack(&nl_books, &tile_books, max_levels)?;
+    Ok((nl_books, tile_books, programmed))
+}
+
 /// Per-shard accumulation state: one estimator per q-layer plus the
 /// exactly-associative side statistics.
 struct ShardState {
@@ -241,37 +297,15 @@ impl<'a> Calibrator<'a> {
             root.absorb(st)?;
         }
 
-        let mut nl_books = Vec::with_capacity(nq);
-        let mut tile_books = Vec::with_capacity(nq);
-        for i in 0..nq {
-            let spec = &self.specs[i];
-            let ideal = root.estimators[i]
-                .finish(spec.act_bits)
-                .with_context(|| {
-                    format!(
-                        "fitting the {} codebook of q-layer '{}'",
-                        spec.method.name(),
-                        m.qlayers[i].name
-                    )
-                })?;
-            let hw = ideal.project_to_hardware(spec.act_bits);
-            // a degenerate ladder would panic inside the conversion
-            // kernels and mis-scale noise (min_ref_step falls back to
-            // 1.0); fail calibration here, naming the layer
-            ensure!(
-                hw.levels() >= 2,
-                "q-layer '{}': calibration produced a degenerate \
-                 {}-level NL codebook (conversion needs at least 2 levels)",
-                m.qlayers[i].name,
-                hw.levels()
-            );
-            nl_books.push(hw);
-            // per-tile linear conversion over the observed partial range
-            let r = root.tile_max[i].max(1e-6);
-            tile_books.push(Codebook::linear(-r, r, spec.tile_bits));
-        }
-        let programmed =
-            ProgrammedCodebooks::stack(&nl_books, &tile_books, m.max_levels)?;
+        let layer_names: Vec<String> =
+            m.qlayers.iter().map(|q| q.name.clone()).collect();
+        let (nl_books, tile_books, programmed) = finish_codebooks(
+            &self.specs,
+            &root.estimators,
+            &root.tile_max,
+            &layer_names,
+            m.max_levels,
+        )?;
         Ok(CalibrationResult {
             nl_books,
             tile_books,

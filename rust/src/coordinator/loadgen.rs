@@ -12,6 +12,14 @@
 //! requests — under overload the interesting claim is that admitted
 //! requests stay fast while the rest are shed, not that averages
 //! degrade gracefully.
+//!
+//! [`closed_loop_phased`] drives **nonstationary** traffic: an ordered
+//! list of [`TrafficPhase`]s, each contributing its own input set for a
+//! span of the issued-request sequence.  Request `k` draws from the
+//! phase owning `k`, so the offered distribution shifts mid-run without
+//! tearing down the clients — the traffic shape the shadow
+//! recalibration controller (DESIGN.md §15) exists to chase, and what
+//! the swap-under-load BENCH point drives.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -42,6 +50,72 @@ pub fn closed_loop(
     deadline: Duration,
 ) -> ServingPoint {
     assert!(!inputs.is_empty(), "closed_loop needs at least one input");
+    let pick = |k: u64| inputs[(k as usize) % inputs.len()].clone();
+    run_closed_loop(client, &pick, model, phase, concurrency, total, deadline)
+}
+
+/// One span of a nonstationary traffic program: `requests` issued
+/// requests drawn (round-robin) from `inputs`.
+pub struct TrafficPhase {
+    pub inputs: Vec<Vec<f32>>,
+    pub requests: u64,
+}
+
+/// Copies of `inputs` with every element scaled by `gain` — the
+/// simplest controlled distribution shift (it moves every activation
+/// decile), used by the recalibration tests and the swap-under-load
+/// BENCH phase.
+pub fn scaled_inputs(inputs: &[Vec<f32>], gain: f32) -> Vec<Vec<f32>> {
+    inputs
+        .iter()
+        .map(|x| x.iter().map(|v| v * gain).collect())
+        .collect()
+}
+
+/// Closed-loop run over a nonstationary traffic program: request index
+/// `k` draws from the [`TrafficPhase`] owning `k` in issue order, so
+/// the offered distribution shifts mid-run while the client threads
+/// stay up.  Accounting spans the whole program (one [`ServingPoint`]).
+pub fn closed_loop_phased(
+    client: &PoolClient,
+    phases: &[TrafficPhase],
+    model: &str,
+    phase: &str,
+    concurrency: usize,
+    deadline: Duration,
+) -> ServingPoint {
+    assert!(!phases.is_empty(), "phased run needs at least one phase");
+    for p in phases {
+        assert!(
+            !p.inputs.is_empty() && p.requests >= 1,
+            "every traffic phase needs inputs and a request budget"
+        );
+    }
+    let total: u64 = phases.iter().map(|p| p.requests).sum();
+    let pick = |k: u64| {
+        let mut k = k;
+        for p in phases {
+            if k < p.requests {
+                return p.inputs[(k as usize) % p.inputs.len()].clone();
+            }
+            k -= p.requests;
+        }
+        // issued indices are < total by construction
+        unreachable!("request index past the traffic program")
+    };
+    run_closed_loop(client, &pick, model, phase, concurrency, total, deadline)
+}
+
+/// The shared driver: `pick` maps an issued-request index to its input.
+fn run_closed_loop(
+    client: &PoolClient,
+    pick: &(dyn Fn(u64) -> Vec<f32> + Sync),
+    model: &str,
+    phase: &str,
+    concurrency: usize,
+    total: u64,
+    deadline: Duration,
+) -> ServingPoint {
     let issued = AtomicU64::new(0);
     let t0 = Instant::now();
     let tallies: Vec<Tally> = std::thread::scope(|scope| {
@@ -55,7 +129,7 @@ pub fn closed_loop(
                         if k >= total {
                             break;
                         }
-                        let x = inputs[(k as usize) % inputs.len()].clone();
+                        let x = pick(k);
                         let sent = Instant::now();
                         match client.submit_deadline(x, deadline) {
                             Ok(rx) => {
@@ -133,6 +207,10 @@ pub fn closed_loop(
         deadline_ms: deadline.as_secs_f64() * 1e3,
         replicas: client.live_replicas(),
         exec_threads: crate::backend::native::ops::num_threads(),
+        // filled in by the caller when the run exercised a hot-swap
+        swaps: 0,
+        swap_ns: 0,
+        inflight_at_swap: 0,
     }
 }
 
@@ -148,6 +226,15 @@ fn pct(sorted: &[f64], q: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scaled_inputs_scale_elementwise() {
+        let base = vec![vec![1.0f32, -2.0], vec![0.5, 0.0]];
+        let hot = scaled_inputs(&base, 4.0);
+        assert_eq!(hot, vec![vec![4.0, -8.0], vec![2.0, 0.0]]);
+        // the originals are untouched (the phases own copies)
+        assert_eq!(base[0], vec![1.0, -2.0]);
+    }
 
     #[test]
     fn pct_nearest_rank() {

@@ -12,13 +12,14 @@ pub mod front;
 pub mod loadgen;
 pub mod pool;
 pub mod ptq;
-pub mod server;
+pub mod recalib;
 
 pub use calibrate::{CalibrationResult, Calibrator};
 pub use front::{FrontKind, ServeFront};
-pub use loadgen::closed_loop;
+pub use loadgen::{closed_loop, closed_loop_phased, scaled_inputs, TrafficPhase};
 pub use pool::{
     AdmissionError, InferenceServer, ModelPool, ModelRegistry, ObsConfig,
     PoolClient, PoolConfig, Reply, ServeError, ServerStats, REPLY_GRACE,
 };
 pub use ptq::{PtqEvaluator, PtqResult};
+pub use recalib::{RecalibConfig, RecalibShared, RecalibStats};

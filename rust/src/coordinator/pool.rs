@@ -41,17 +41,22 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::backend::native::exec_pool;
-use crate::backend::{Backend, BackendKind, ProgrammedCodebooks};
+use crate::backend::{Backend, BackendKind, CodebookCell, ProgrammedCodebooks};
 use crate::coordinator::calibrate::{CalibrationResult, Calibrator};
 use crate::coordinator::ptq::PtqEvaluator;
+use crate::coordinator::recalib::{
+    RecalibConfig, RecalibController, RecalibShared, RecalibStats, ShadowTap,
+};
 use crate::data::dataset::ModelData;
 use crate::obs::prometheus::{escape_label, PromWriter};
 use crate::obs::quant_health::QuantHealth;
 use crate::obs::registry::{Gauge, Histogram, MetricsRegistry};
 use crate::obs::trace::{escape_json, RequestTracer, Span, TraceSink};
+use crate::quant::codebook::Codebook;
+use crate::quant::sketch::ValueSketch;
 use crate::quant::QuantSpec;
 
 /// How a request can fail *after* admission.  Typed (unlike the old
@@ -619,6 +624,11 @@ pub struct PoolConfig {
     pub scale_down_idle: u32,
     /// observability: tracing, profiling, quantization health
     pub obs: ObsConfig,
+    /// online shadow recalibration (DESIGN.md §15): `Some` runs a
+    /// controller that samples live traffic, watches sketch drift, and
+    /// hot-swaps refit codebooks; requires `obs.quant_health` and a
+    /// replicable backend
+    pub recalib: Option<RecalibConfig>,
 }
 
 impl Default for PoolConfig {
@@ -638,6 +648,7 @@ impl Default for PoolConfig {
             scale_up_depth: 0,
             scale_down_idle: 50,
             obs: ObsConfig::default(),
+            recalib: None,
         }
     }
 }
@@ -763,7 +774,12 @@ struct PoolReady {
     in_elems: usize,
     num_classes: usize,
     batch: usize,
+    max_levels: usize,
     health: Option<Arc<QuantHealth>>,
+    /// the swap cell every worker snapshots per batch
+    cell: Arc<CodebookCell>,
+    /// shadow-recalibration handle (None unless `cfg.recalib`)
+    recalib: Option<Arc<RecalibShared>>,
 }
 
 /// One model's serving pool: worker replicas stealing from one bounded
@@ -789,6 +805,12 @@ pub struct ModelPool {
     metrics: Arc<MetricsRegistry>,
     /// quantization-health telemetry, when the engine supports hooks
     health: Option<Arc<QuantHealth>>,
+    /// manifest ladder capacity, needed to restack swapped codebooks
+    max_levels: usize,
+    /// the generation cell the workers snapshot per batch
+    cell: Arc<CodebookCell>,
+    /// shadow-recalibration handle (None unless configured)
+    recalib: Option<Arc<RecalibShared>>,
     handle: Option<std::thread::JoinHandle<Result<()>>>,
 }
 
@@ -894,8 +916,45 @@ impl ModelPool {
                         return Err(e);
                     }
                 };
+            // manifest facts are hoisted before `calib.programmed` moves
+            // into the swap cell (a whole-struct borrow would be illegal
+            // after the partial move)
+            let (engine_name, batch, max_levels, in_elems, num_classes) = {
+                let m = be.manifest();
+                (
+                    be.name().to_string(),
+                    m.batch,
+                    m.max_levels,
+                    m.input_elems(),
+                    m.num_classes,
+                )
+            };
+            let specs = calib.specs.clone();
+            let cell = Arc::new(CodebookCell::new(calib.programmed));
+            // shadow recalibration (DESIGN.md §15): a supervisor thread
+            // feeding tap samples into fresh estimators and hot-swapping
+            // refit codebooks through the cell
+            let mut recalib_shared: Option<Arc<RecalibShared>> = None;
+            let mut _recalib_ctl: Option<RecalibController> = None;
+            if let Some(rc) = cfg.recalib.clone() {
+                match recalib_setup(rc, be.as_ref(), specs, &health, &cell, &q)
+                {
+                    Ok((sh, ctl)) => {
+                        recalib_shared = Some(sh);
+                        // held for the life of this closure: Drop stops
+                        // the controller after the workers join below
+                        _recalib_ctl = Some(ctl);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                        q.close();
+                        return Err(e);
+                    }
+                }
+            }
             let shared = Arc::new(WorkerShared {
-                books: calib.programmed,
+                cell: cell.clone(),
+                tap: recalib_shared.as_ref().map(|r| r.tap.clone()),
                 noise_std: cfg.noise_std,
                 window: cfg.batch_window,
                 profile_every: cfg.obs.profile_every,
@@ -904,14 +963,15 @@ impl ModelPool {
                 queue_hist,
                 deadline_hist,
             });
-            let m = be.manifest();
-            let batch = m.batch;
             let ready = PoolReady {
-                engine: be.name().to_string(),
-                in_elems: m.input_elems(),
-                num_classes: m.num_classes,
-                batch: m.batch,
+                engine: engine_name,
+                in_elems,
+                num_classes,
+                batch,
+                max_levels,
                 health,
+                cell,
+                recalib: recalib_shared,
             };
             if autoscaled {
                 // autoscaled pool: every slot runs on its own thread
@@ -1076,6 +1136,9 @@ impl ModelPool {
             tracer,
             metrics,
             health: ready.health,
+            max_levels: ready.max_levels,
+            cell: ready.cell,
+            recalib: ready.recalib,
             handle: Some(handle),
         })
     }
@@ -1164,12 +1227,70 @@ impl ModelPool {
         self.health.as_ref()
     }
 
+    /// Codebook generation currently being served (1 = the offline
+    /// calibration books; each hot-swap increments).
+    pub fn codebook_generation(&self) -> u64 {
+        self.cell.generation()
+    }
+
+    /// Shadow-recalibration handle (None unless the pool was started
+    /// with `cfg.recalib`).
+    pub fn recalib(&self) -> Option<&Arc<RecalibShared>> {
+        self.recalib.as_ref()
+    }
+
+    /// Atomically publish externally fitted codebooks: stack them for
+    /// the deployed forward, swap the generation cell, and rebaseline
+    /// health telemetry.  Batches already assembled finish under the
+    /// generation they snapshotted; every later batch serves the new
+    /// one — no reply ever mixes generations.  Returns the new
+    /// generation number.
+    pub fn hot_swap(
+        &self,
+        nl_books: &[Codebook],
+        tile_books: &[Codebook],
+        baseline: Option<&[ValueSketch]>,
+    ) -> Result<u64> {
+        let programmed =
+            ProgrammedCodebooks::stack(nl_books, tile_books, self.max_levels)?;
+        let generation = self.cell.swap(programmed);
+        if let Some(h) = &self.health {
+            h.rebaseline(nl_books, baseline);
+        }
+        Ok(generation)
+    }
+
     /// Machine-readable pool stats (the `stats` protocol command).
     pub fn stats_json(&self) -> String {
         let lat = self.stats.percentiles_ms(&[0.5, 0.95, 0.99, 0.999]);
         let qw = self.stats.queue_percentiles_ms(&[0.5, 0.99]);
         let (exec_threads, pool_workers, active_jobs, lease_slots) =
             exec_pool::snapshot();
+        let recalib = match &self.recalib {
+            Some(r) => format!(
+                "{{\"enabled\":true,\"generation\":{},\"swaps\":{},\
+                 \"refits\":{},\"refit_errors\":{},\"last_refit_ns\":{},\
+                 \"refit_ns_total\":{},\"drift\":{:.6},\
+                 \"drift_threshold\":{},\"sampled\":{},\"dropped\":{},\
+                 \"shadow_batches\":{},\"inflight_at_swap\":{}}}",
+                self.cell.generation(),
+                r.stats.swaps.load(Ordering::SeqCst),
+                r.stats.refits.load(Ordering::SeqCst),
+                r.stats.refit_errors.load(Ordering::SeqCst),
+                r.stats.last_refit_ns.load(Ordering::SeqCst),
+                r.stats.refit_ns_total.load(Ordering::SeqCst),
+                r.stats.drift(),
+                r.cfg.drift_threshold,
+                r.stats.sampled.load(Ordering::SeqCst),
+                r.stats.dropped.load(Ordering::SeqCst),
+                r.stats.shadow_batches.load(Ordering::SeqCst),
+                r.stats.inflight_at_swap.load(Ordering::SeqCst),
+            ),
+            None => format!(
+                "{{\"enabled\":false,\"generation\":{}}}",
+                self.cell.generation()
+            ),
+        };
         let mut s = format!(
             "{{\"model\":\"{}\",\"engine\":\"{}\",\"replicas\":{},\
              \"replicas_live\":{},\
@@ -1186,6 +1307,7 @@ impl ModelPool {
              \"p999\":{:.3}}},\
              \"queue_wait_ms\":{{\"p50\":{:.3},\"p99\":{:.3}}},\
              \"spans\":{{\"opened\":{},\"closed\":{},\"emitted\":{}}},\
+             \"recalib\":{recalib},\
              \"per_replica_requests\":[",
             escape_json(&self.model),
             escape_json(&self.engine),
@@ -1325,6 +1447,96 @@ impl ModelPool {
             "request spans closed after reply",
         );
         w.raw_sample("bskmq_spans_closed_total", &l, self.tracer.closed() as f64);
+        w.family(
+            "bskmq_codebook_generation",
+            "gauge",
+            "codebook generation currently being served",
+        );
+        w.raw_sample(
+            "bskmq_codebook_generation",
+            &l,
+            self.cell.generation() as f64,
+        );
+        if let Some(r) = &self.recalib {
+            let st = &r.stats;
+            w.family(
+                "bskmq_recalib_swaps_total",
+                "counter",
+                "zero-downtime codebook hot-swaps completed",
+            );
+            w.raw_sample(
+                "bskmq_recalib_swaps_total",
+                &l,
+                st.swaps.load(Ordering::SeqCst) as f64,
+            );
+            w.family(
+                "bskmq_recalib_refits_total",
+                "counter",
+                "shadow refit attempts",
+            );
+            w.raw_sample(
+                "bskmq_recalib_refits_total",
+                &l,
+                st.refits.load(Ordering::SeqCst) as f64,
+            );
+            w.family(
+                "bskmq_recalib_refit_errors_total",
+                "counter",
+                "refits that failed (old generation kept serving)",
+            );
+            w.raw_sample(
+                "bskmq_recalib_refit_errors_total",
+                &l,
+                st.refit_errors.load(Ordering::SeqCst) as f64,
+            );
+            w.family(
+                "bskmq_recalib_drift",
+                "gauge",
+                "max-over-layers live-vs-baseline sketch drift at the \
+                 last supervisor tick",
+            );
+            w.raw_sample("bskmq_recalib_drift", &l, st.drift());
+            w.family(
+                "bskmq_recalib_refit_ns",
+                "gauge",
+                "wall nanos of the last refit + swap",
+            );
+            w.raw_sample(
+                "bskmq_recalib_refit_ns",
+                &l,
+                st.last_refit_ns.load(Ordering::SeqCst) as f64,
+            );
+            w.family(
+                "bskmq_recalib_sampled_total",
+                "counter",
+                "request inputs diverted into the shadow buffer",
+            );
+            w.raw_sample(
+                "bskmq_recalib_sampled_total",
+                &l,
+                st.sampled.load(Ordering::SeqCst) as f64,
+            );
+            w.family(
+                "bskmq_recalib_dropped_total",
+                "counter",
+                "shadow samples dropped at a full buffer",
+            );
+            w.raw_sample(
+                "bskmq_recalib_dropped_total",
+                &l,
+                st.dropped.load(Ordering::SeqCst) as f64,
+            );
+            w.family(
+                "bskmq_recalib_inflight_at_swap",
+                "gauge",
+                "pool queue depth observed at the last swap instant",
+            );
+            w.raw_sample(
+                "bskmq_recalib_inflight_at_swap",
+                &l,
+                st.inflight_at_swap.load(Ordering::SeqCst) as f64,
+            );
+        }
         self.metrics.render(w);
         if let Some(h) = &self.health {
             h.render(w, &self.model);
@@ -1407,10 +1619,67 @@ fn pool_setup(
     Ok((be, calib, health))
 }
 
-/// Immutable state every worker replica shares: the programmed
-/// codebooks plus the pool's observability handles.
+/// Build the shadow-recalibration plumbing for one pool: validate the
+/// config, replicate a shadow backend for collect-mode refit passes, and
+/// spawn the supervisor thread (DESIGN.md §15).  Fails fast — a pool
+/// asked to recalibrate but unable to must not start silently degraded.
+fn recalib_setup(
+    rc: RecalibConfig,
+    be: &dyn Backend,
+    specs: Vec<QuantSpec>,
+    health: &Option<Arc<QuantHealth>>,
+    cell: &Arc<CodebookCell>,
+    queue: &Arc<JobQueue>,
+) -> Result<(Arc<RecalibShared>, RecalibController)> {
+    rc.validate()?;
+    let health = match health {
+        Some(h) => h.clone(),
+        None => bail!(
+            "recalibration needs quant-health telemetry: enable \
+             obs.quant_health and use an engine with activation hooks"
+        ),
+    };
+    let shadow = be.replicate().context(
+        "recalibration needs a replicable backend for its shadow \
+         collect passes",
+    )?;
+    let m = be.manifest();
+    let layer_names: Vec<String> =
+        m.qlayers.iter().map(|q| q.name.clone()).collect();
+    let stats = Arc::new(RecalibStats::default());
+    // tap capacity: a few batches of headroom so sampling survives
+    // bursts without the controller having drained yet
+    let tap = Arc::new(ShadowTap::new(
+        rc.sample_every,
+        (m.batch * 8).max(64),
+        stats.clone(),
+    ));
+    let shared = Arc::new(RecalibShared {
+        cfg: rc,
+        stats,
+        tap,
+        cell: cell.clone(),
+    });
+    let qp = queue.clone();
+    let ctl = RecalibController::spawn(
+        shared.clone(),
+        shadow,
+        specs,
+        layer_names,
+        health,
+        Box::new(move || qp.len() as u64),
+    );
+    Ok((shared, ctl))
+}
+
+/// State every worker replica shares: the codebook swap cell (snapshot
+/// once per batch, so every reply is computed under exactly one
+/// generation) plus the pool's observability handles.
 struct WorkerShared {
-    books: ProgrammedCodebooks,
+    cell: Arc<CodebookCell>,
+    /// shadow-recalibration tap: workers offer each request's input for
+    /// sampling before executing it (None when recalib is off)
+    tap: Option<Arc<ShadowTap>>,
     noise_std: f32,
     window: Duration,
     /// profile every Nth batch through `run_qfwd_profiled` (0 = never)
@@ -1496,6 +1765,14 @@ fn worker_loop(
         if pending.is_empty() {
             continue; // the whole pop was shed
         }
+        // one generation snapshot per batch: a concurrent hot-swap lands
+        // on the NEXT batch, never mid-reply (DESIGN.md §15)
+        let generation = sh.cell.current();
+        if let Some(tap) = &sh.tap {
+            for r in &pending {
+                tap.maybe_sample(&r.x);
+            }
+        }
         let n = pending.len();
         // exact-size execution when the backend can (native: always;
         // xla: full batch or the batch-1 graph); otherwise pad up to the
@@ -1514,8 +1791,12 @@ fn worker_loop(
         let profiled =
             sh.profile_every > 0 && batches_done % sh.profile_every == 0;
         let (result, ops) = if profiled {
-            match backend.run_qfwd_profiled(&x, &sh.books, sh.noise_std, seed)
-            {
+            match backend.run_qfwd_profiled(
+                &x,
+                &generation.books,
+                sh.noise_std,
+                seed,
+            ) {
                 Ok((logits, timings)) => (
                     Ok(logits),
                     timings
@@ -1527,7 +1808,7 @@ fn worker_loop(
             }
         } else {
             (
-                backend.run_qfwd(&x, &sh.books, sh.noise_std, seed),
+                backend.run_qfwd(&x, &generation.books, sh.noise_std, seed),
                 Vec::new(),
             )
         };

@@ -1,0 +1,605 @@
+//! Online shadow recalibration with zero-downtime codebook hot-swap
+//! (DESIGN.md §15; retires ROADMAP item 3).
+//!
+//! The paper's Algorithm 1 is a one-shot offline fit, but its premise —
+//! ReLU/clamping piling activation mass onto boundary values — holds
+//! for *live* traffic too, and live traffic drifts.  This module turns
+//! the offline fit into a production capability, reusing the two halves
+//! built for it: the mergeable streaming [`QuantEstimator`]s (PR 5) and
+//! the per-qlayer [`QuantHealth`] sketch-divergence signal (PR 6).
+//!
+//! Per served pool, three pieces cooperate:
+//!
+//! * a [`ShadowTap`] on the worker batch path clones every
+//!   `sample_every`-th admitted request's input into a bounded buffer —
+//!   a full buffer drops the sample, never slowing a reply;
+//! * a controller thread drains the tap, runs full batches through its
+//!   **own** [`Backend::replicate`] clone in collect mode (so the float
+//!   forward feeding the estimators never touches the serving replicas
+//!   or pollutes live telemetry), and accumulates fresh per-layer
+//!   estimator state plus a [`ValueSketch`] of the window;
+//! * a [`DriftDetector`] watches the max-over-layers
+//!   [`QuantHealth::divergence`] each tick.  Past the threshold for
+//!   `trigger_checks` consecutive ticks it restarts the shadow window
+//!   (the refit must fit *post*-drift traffic, not a straddling
+//!   mixture); once the window passes the min-observations gate it
+//!   refits via [`finish_codebooks`] — the exact spec-driven path the
+//!   deployed books came from — and publishes through
+//!   [`CodebookCell::swap`].  Workers snapshot the cell once per batch,
+//!   so every reply is produced entirely under one codebook generation:
+//!   no drops, no reordering, no mixing.  After a swap the detector
+//!   holds in cooldown until drift falls below the hysteresis low
+//!   watermark, preventing refit storms while the fresh baseline
+//!   settles.
+//!
+//! Physically this models reprogramming the NL-ADC reference ladder at
+//! runtime — reconfigurable reference programming is exactly what the
+//! IMC ADC literature (PIM-QAT, approximate-ADC IMC) says the hardware
+//! supports.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::backend::{Backend, CodebookCell};
+use crate::coordinator::calibrate::finish_codebooks;
+use crate::obs::quant_health::{health_sketch, QuantHealth};
+use crate::quant::estimator::{estimator_for, QuantEstimator};
+use crate::quant::sketch::ValueSketch;
+use crate::quant::QuantSpec;
+
+/// Knobs for one pool's shadow recalibration controller
+/// (`bskmq serve --recalib [--recalib-sample N] [--drift-threshold X]`).
+#[derive(Clone, Debug)]
+pub struct RecalibConfig {
+    /// Shadow-sample every Nth executed request's input (>= 1).
+    pub sample_every: u64,
+    /// Max-over-layers normalized decile drift that arms a refit.
+    pub drift_threshold: f64,
+    /// Low-watermark factor in `(0, 1]`: the detector re-arms (and a
+    /// collecting window is abandoned as a false alarm) only once drift
+    /// falls below `drift_threshold * hysteresis`.
+    pub hysteresis: f64,
+    /// Minimum samples every layer's shadow estimator must hold before
+    /// a refit fires (the min-observations gate).
+    pub min_observations: u64,
+    /// Consecutive over-threshold supervisor ticks required to trigger
+    /// collection (debounces a single noisy divergence read).
+    pub trigger_checks: u32,
+    /// Supervisor tick interval.
+    pub check_interval: Duration,
+}
+
+impl Default for RecalibConfig {
+    fn default() -> RecalibConfig {
+        RecalibConfig {
+            sample_every: 16,
+            drift_threshold: 0.25,
+            hysteresis: 0.5,
+            min_observations: 256,
+            trigger_checks: 2,
+            check_interval: Duration::from_millis(50),
+        }
+    }
+}
+
+impl RecalibConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.sample_every >= 1, "--recalib-sample must be >= 1");
+        ensure!(
+            self.drift_threshold.is_finite() && self.drift_threshold > 0.0,
+            "--drift-threshold must be a positive finite number"
+        );
+        ensure!(
+            self.hysteresis > 0.0 && self.hysteresis <= 1.0,
+            "recalib hysteresis must be in (0, 1]"
+        );
+        ensure!(self.trigger_checks >= 1, "recalib trigger_checks must be >= 1");
+        ensure!(
+            self.check_interval > Duration::ZERO,
+            "recalib check_interval must be positive"
+        );
+        Ok(())
+    }
+}
+
+/// Counters the controller maintains; exposed through `stats` JSON and
+/// the Prometheus page (`bskmq_recalib_*`).
+#[derive(Default)]
+pub struct RecalibStats {
+    /// Completed hot-swaps.
+    pub swaps: AtomicU64,
+    /// Refit attempts (successes + failures).
+    pub refits: AtomicU64,
+    /// Refits that failed (the old generation kept serving).
+    pub refit_errors: AtomicU64,
+    /// Wall nanos of the last successful refit + swap.
+    pub last_refit_ns: AtomicU64,
+    /// Cumulative refit + swap nanos.
+    pub refit_ns_total: AtomicU64,
+    /// Request inputs diverted into the shadow buffer.
+    pub sampled: AtomicU64,
+    /// Sampled inputs dropped because the shadow buffer was full.
+    pub dropped: AtomicU64,
+    /// Full collect batches the shadow replica has run.
+    pub shadow_batches: AtomicU64,
+    /// Queue depth observed at the instant of the last swap.
+    pub inflight_at_swap: AtomicU64,
+    /// Last max-over-layers drift the supervisor read (f64 bits).
+    drift_bits: AtomicU64,
+}
+
+impl RecalibStats {
+    pub fn set_drift(&self, d: f64) {
+        self.drift_bits.store(d.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn drift(&self) -> f64 {
+        f64::from_bits(self.drift_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Worker-side sampling tap: every `sample_every`-th executed request's
+/// input is cloned into a bounded buffer the controller drains.  The
+/// serving path only ever pays a clone + push; when the buffer is full
+/// the sample is dropped and counted, never blocking a reply.
+pub struct ShadowTap {
+    sample_every: u64,
+    counter: AtomicU64,
+    cap: usize,
+    buf: Mutex<VecDeque<Vec<f32>>>,
+    stats: Arc<RecalibStats>,
+}
+
+impl ShadowTap {
+    pub fn new(sample_every: u64, cap: usize, stats: Arc<RecalibStats>) -> ShadowTap {
+        ShadowTap {
+            sample_every: sample_every.max(1),
+            counter: AtomicU64::new(0),
+            cap: cap.max(1),
+            buf: Mutex::new(VecDeque::new()),
+            stats,
+        }
+    }
+
+    /// Called by workers once per executed (non-shed) request.
+    pub fn maybe_sample(&self, x: &[f32]) {
+        let k = self.counter.fetch_add(1, Ordering::Relaxed);
+        if k % self.sample_every != 0 {
+            return;
+        }
+        let mut b = self.buf.lock().unwrap();
+        if b.len() >= self.cap {
+            self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+        } else {
+            b.push_back(x.to_vec());
+            self.stats.sampled.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Take everything buffered (controller side).
+    pub fn drain(&self) -> Vec<Vec<f32>> {
+        self.buf.lock().unwrap().drain(..).collect()
+    }
+}
+
+/// Detector lifecycle (see [`DriftDetector::observe`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftState {
+    /// Watching for sustained over-threshold drift.
+    Armed,
+    /// Drift confirmed; accumulating a post-drift shadow window.
+    Collecting,
+    /// Swap done; waiting for drift to fall below the low watermark.
+    Cooldown,
+}
+
+/// What the controller should do after one supervisor tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftAction {
+    /// Nothing this tick.
+    Hold,
+    /// Threshold crossed for `trigger_checks` consecutive ticks: restart
+    /// the shadow window so the refit sees post-drift traffic only.
+    StartCollecting,
+    /// The window passed the min-observations gate: refit + swap now.
+    Refit,
+    /// Drift subsided before the window filled (false alarm): discard
+    /// the window and re-arm.
+    Abandon,
+}
+
+/// Hysteresis state machine over the drift signal.  Pure and
+/// synchronous — the controller owns one and feeds it a
+/// `(drift, window_met)` pair per tick — so the trigger/cooldown
+/// semantics are unit-testable without a pool.
+pub struct DriftDetector {
+    threshold: f64,
+    low_watermark: f64,
+    trigger_checks: u32,
+    over: u32,
+    state: DriftState,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: &RecalibConfig) -> DriftDetector {
+        DriftDetector {
+            threshold: cfg.drift_threshold,
+            low_watermark: cfg.drift_threshold * cfg.hysteresis,
+            trigger_checks: cfg.trigger_checks.max(1),
+            over: 0,
+            state: DriftState::Armed,
+        }
+    }
+
+    pub fn state(&self) -> DriftState {
+        self.state
+    }
+
+    /// One supervisor tick: `drift` is the current max-over-layers
+    /// divergence, `window_met` whether the shadow window satisfies the
+    /// min-observations gate.
+    pub fn observe(&mut self, drift: f64, window_met: bool) -> DriftAction {
+        match self.state {
+            DriftState::Armed => {
+                if drift >= self.threshold {
+                    self.over += 1;
+                    if self.over >= self.trigger_checks {
+                        self.over = 0;
+                        self.state = DriftState::Collecting;
+                        return DriftAction::StartCollecting;
+                    }
+                } else {
+                    // consecutive means consecutive: any sub-threshold
+                    // tick restarts the debounce count
+                    self.over = 0;
+                }
+                DriftAction::Hold
+            }
+            DriftState::Collecting => {
+                if drift < self.low_watermark {
+                    self.state = DriftState::Armed;
+                    return DriftAction::Abandon;
+                }
+                if window_met {
+                    DriftAction::Refit
+                } else {
+                    DriftAction::Hold
+                }
+            }
+            DriftState::Cooldown => {
+                // re-arm only below the LOW watermark, not the trigger
+                // threshold — drift hovering between the two must not
+                // bounce the detector straight back into a refit
+                if drift < self.low_watermark {
+                    self.state = DriftState::Armed;
+                }
+                DriftAction::Hold
+            }
+        }
+    }
+
+    /// A refit + swap completed: hold in cooldown until the post-swap
+    /// drift (now measured against the fresh baseline) subsides.
+    pub fn swapped(&mut self) {
+        self.state = DriftState::Cooldown;
+        self.over = 0;
+    }
+}
+
+/// The per-pool recalibration handle: configuration plus the pieces the
+/// pool, the workers, and the controller all share.
+pub struct RecalibShared {
+    pub cfg: RecalibConfig,
+    pub stats: Arc<RecalibStats>,
+    pub tap: Arc<ShadowTap>,
+    pub cell: Arc<CodebookCell>,
+}
+
+/// One shadow window: fresh estimator state accumulated since the last
+/// (re)start, plus the sketches the next baseline will diff against.
+struct ShadowWindow {
+    estimators: Vec<Box<dyn QuantEstimator>>,
+    tile_max: Vec<f64>,
+    sketches: Vec<ValueSketch>,
+    batches: u64,
+}
+
+impl ShadowWindow {
+    fn new(specs: &[QuantSpec]) -> ShadowWindow {
+        let nq = specs.len();
+        ShadowWindow {
+            estimators: specs.iter().map(estimator_for).collect(),
+            tile_max: vec![0.0; nq],
+            sketches: (0..nq).map(|_| health_sketch()).collect(),
+            batches: 0,
+        }
+    }
+
+    /// The min-observations gate: the *least*-fed layer's sample count.
+    fn min_observed(&self) -> u64 {
+        self.estimators
+            .iter()
+            .map(|e| e.n_observed() as u64)
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+/// Handle to one pool's controller thread; stops and joins on
+/// [`RecalibController::stop`] or drop (worst-case latency one
+/// `check_interval` tick).
+pub struct RecalibController {
+    handle: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl RecalibController {
+    /// Spawn the controller.  `shadow` is the controller's private
+    /// replica; `depth_probe` reports the pool queue depth (recorded at
+    /// each swap instant for the BENCH swap-under-load point).
+    pub fn spawn(
+        shared: Arc<RecalibShared>,
+        shadow: Box<dyn Backend + Send>,
+        specs: Vec<QuantSpec>,
+        layer_names: Vec<String>,
+        health: Arc<QuantHealth>,
+        depth_probe: Box<dyn Fn() -> u64 + Send>,
+    ) -> RecalibController {
+        let stop = Arc::new(AtomicBool::new(false));
+        let st = stop.clone();
+        let handle = std::thread::spawn(move || {
+            controller_loop(
+                &shared,
+                shadow.as_ref(),
+                &specs,
+                &layer_names,
+                &health,
+                depth_probe.as_ref(),
+                &st,
+            );
+        });
+        RecalibController {
+            handle: Some(handle),
+            stop,
+        }
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RecalibController {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn controller_loop(
+    sh: &RecalibShared,
+    shadow: &dyn Backend,
+    specs: &[QuantSpec],
+    layer_names: &[String],
+    health: &QuantHealth,
+    depth_probe: &dyn Fn() -> u64,
+    stop: &AtomicBool,
+) {
+    let m = shadow.manifest();
+    let batch = m.batch;
+    let in_elems = m.input_elems();
+    let max_levels = m.max_levels;
+    let nq = m.nq();
+    let mut detector = DriftDetector::new(&sh.cfg);
+    let mut window = ShadowWindow::new(specs);
+    let mut pending: VecDeque<Vec<f32>> = VecDeque::new();
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(sh.cfg.check_interval);
+
+        // ingest sampled inputs and run every full batch through the
+        // shadow replica's float collect forward
+        pending.extend(sh.tap.drain());
+        while pending.len() >= batch {
+            let mut x = Vec::with_capacity(batch * in_elems);
+            for _ in 0..batch {
+                x.extend_from_slice(&pending.pop_front().unwrap());
+            }
+            match shadow.run_collect(&x) {
+                Ok(out) => {
+                    for i in 0..nq {
+                        window.estimators[i].observe(&out.samples[i]);
+                        window.tile_max[i] =
+                            window.tile_max[i].max(out.tile_max[i]);
+                        for &v in &out.samples[i] {
+                            window.sketches[i].insert(v);
+                        }
+                    }
+                    window.batches += 1;
+                    sh.stats.shadow_batches.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    eprintln!("recalib: shadow collect failed: {e:#}");
+                }
+            }
+        }
+
+        // drift signal: the worst layer's live-vs-baseline divergence
+        let drift = (0..health.num_layers())
+            .filter_map(|q| health.divergence(q))
+            .fold(0.0f64, f64::max);
+        sh.stats.set_drift(drift);
+        let window_met = window.batches >= 1
+            && window.min_observed() >= sh.cfg.min_observations;
+
+        match detector.observe(drift, window_met) {
+            DriftAction::Hold => {}
+            DriftAction::StartCollecting | DriftAction::Abandon => {
+                // either way the accumulated window is unusable: it
+                // straddles the shift (or described a false alarm)
+                window = ShadowWindow::new(specs);
+            }
+            DriftAction::Refit => {
+                sh.stats.refits.fetch_add(1, Ordering::Relaxed);
+                let t0 = Instant::now();
+                match finish_codebooks(
+                    specs,
+                    &window.estimators,
+                    &window.tile_max,
+                    layer_names,
+                    max_levels,
+                ) {
+                    Ok((nl, _tile, programmed)) => {
+                        sh.stats
+                            .inflight_at_swap
+                            .store(depth_probe(), Ordering::Relaxed);
+                        let generation = sh.cell.swap(programmed);
+                        // the new baseline is the sketch the new books
+                        // were fitted on; live sketches restart so
+                        // post-swap drift reflects fresh traffic only
+                        health.rebaseline(&nl, Some(&window.sketches));
+                        let ns = t0.elapsed().as_nanos() as u64;
+                        sh.stats.last_refit_ns.store(ns, Ordering::Relaxed);
+                        sh.stats
+                            .refit_ns_total
+                            .fetch_add(ns, Ordering::Relaxed);
+                        sh.stats.swaps.fetch_add(1, Ordering::SeqCst);
+                        detector.swapped();
+                        window = ShadowWindow::new(specs);
+                        eprintln!(
+                            "recalib: hot-swapped codebook generation \
+                             {generation} ({ns} ns refit+swap)"
+                        );
+                    }
+                    Err(e) => {
+                        // the old generation keeps serving; a fresh
+                        // window retries once it refills
+                        sh.stats.refit_errors.fetch_add(1, Ordering::Relaxed);
+                        window = ShadowWindow::new(specs);
+                        eprintln!(
+                            "recalib: refit failed (old codebooks stay \
+                             live): {e:#}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(threshold: f64, hysteresis: f64, checks: u32) -> RecalibConfig {
+        RecalibConfig {
+            drift_threshold: threshold,
+            hysteresis,
+            trigger_checks: checks,
+            ..RecalibConfig::default()
+        }
+    }
+
+    #[test]
+    fn config_validation_bounds() {
+        assert!(RecalibConfig::default().validate().is_ok());
+        assert!(cfg(0.0, 0.5, 2).validate().is_err());
+        assert!(cfg(f64::NAN, 0.5, 2).validate().is_err());
+        assert!(cfg(0.3, 0.0, 2).validate().is_err());
+        assert!(cfg(0.3, 1.5, 2).validate().is_err());
+        assert!(cfg(0.3, 0.5, 0).validate().is_err());
+        let c = RecalibConfig {
+            sample_every: 0,
+            ..RecalibConfig::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn detector_holds_below_threshold() {
+        let mut d = DriftDetector::new(&cfg(0.3, 0.5, 2));
+        for _ in 0..100 {
+            assert_eq!(d.observe(0.29, true), DriftAction::Hold);
+        }
+        assert_eq!(d.state(), DriftState::Armed);
+    }
+
+    #[test]
+    fn detector_debounces_consecutive_checks() {
+        let mut d = DriftDetector::new(&cfg(0.3, 0.5, 3));
+        // two over-threshold ticks, then a dip: the count restarts
+        assert_eq!(d.observe(0.5, false), DriftAction::Hold);
+        assert_eq!(d.observe(0.5, false), DriftAction::Hold);
+        assert_eq!(d.observe(0.1, false), DriftAction::Hold);
+        assert_eq!(d.observe(0.5, false), DriftAction::Hold);
+        assert_eq!(d.observe(0.5, false), DriftAction::Hold);
+        assert_eq!(d.observe(0.5, false), DriftAction::StartCollecting);
+        assert_eq!(d.state(), DriftState::Collecting);
+    }
+
+    #[test]
+    fn detector_gates_refit_on_window_and_abandons_false_alarms() {
+        let mut d = DriftDetector::new(&cfg(0.3, 0.5, 1));
+        assert_eq!(d.observe(0.4, false), DriftAction::StartCollecting);
+        // window not yet filled: hold, even though drift persists
+        assert_eq!(d.observe(0.4, false), DriftAction::Hold);
+        // drift still above the LOW watermark (0.15): keep collecting
+        assert_eq!(d.observe(0.2, false), DriftAction::Hold);
+        assert_eq!(d.state(), DriftState::Collecting);
+        // window met while drift persists: refit fires (and keeps
+        // firing until the controller acts — observe is pure)
+        assert_eq!(d.observe(0.4, true), DriftAction::Refit);
+        // drift collapses below the low watermark before a swap: the
+        // window described a transient, abandon it
+        assert_eq!(d.observe(0.1, true), DriftAction::Abandon);
+        assert_eq!(d.state(), DriftState::Armed);
+    }
+
+    #[test]
+    fn detector_hysteresis_blocks_retrigger_until_low_watermark() {
+        let mut d = DriftDetector::new(&cfg(0.3, 0.5, 1));
+        assert_eq!(d.observe(0.9, false), DriftAction::StartCollecting);
+        assert_eq!(d.observe(0.9, true), DriftAction::Refit);
+        d.swapped();
+        assert_eq!(d.state(), DriftState::Cooldown);
+        // post-swap drift hovering between the low watermark (0.15) and
+        // the threshold — and even above the threshold — must NOT
+        // restart collection while cooling down
+        for drift in [0.2, 0.29, 0.4, 0.2] {
+            assert_eq!(d.observe(drift, true), DriftAction::Hold);
+            assert_eq!(d.state(), DriftState::Cooldown);
+        }
+        // below the low watermark: re-armed, and a fresh excursion
+        // triggers again
+        assert_eq!(d.observe(0.1, true), DriftAction::Hold);
+        assert_eq!(d.state(), DriftState::Armed);
+        assert_eq!(d.observe(0.5, false), DriftAction::StartCollecting);
+    }
+
+    #[test]
+    fn shadow_tap_samples_strided_and_bounds_buffer() {
+        let stats = Arc::new(RecalibStats::default());
+        let tap = ShadowTap::new(4, 2, stats.clone());
+        for i in 0..16 {
+            tap.maybe_sample(&[i as f32]);
+        }
+        // requests 0,4,8,12 selected; capacity 2 holds the first two,
+        // the rest are counted as dropped
+        assert_eq!(stats.sampled.load(Ordering::SeqCst), 2);
+        assert_eq!(stats.dropped.load(Ordering::SeqCst), 2);
+        let drained = tap.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0], vec![0.0]);
+        assert_eq!(drained[1], vec![4.0]);
+        // draining frees capacity
+        tap.maybe_sample(&[16.0]);
+        assert_eq!(stats.sampled.load(Ordering::SeqCst), 3);
+        assert_eq!(tap.drain().len(), 1);
+    }
+}

@@ -16,7 +16,8 @@
 //!               [--request-deadline-ms N] [--front event|threaded]
 //!               [--calib-batches N] [--trace FILE] [--trace-sample N]
 //!               [--profile-every N] [--no-quant-health]
-//!               [--exec-threads N]
+//!               [--exec-threads N] [--recalib] [--recalib-sample N]
+//!               [--drift-threshold X]
 //!   bskmq bench [--quick] [--models M1,M2] [--out DIR]
 //!               [--allow-placeholder]
 //!       # run the standard perf workload per model and write
@@ -38,7 +39,13 @@
 //! explicit overload reply instead of service.  `--front` picks the TCP
 //! front (epoll event loop by default on linux, thread-per-connection
 //! otherwise).  `--shards` streams calibration batches over that many
-//! threads (codebooks stay bit-identical to serial).
+//! threads (codebooks stay bit-identical to serial).  `--recalib` turns
+//! on online shadow recalibration (DESIGN.md §15): every
+//! `--recalib-sample`th request's input feeds a shadow calibration
+//! window, and once live sketch drift exceeds `--drift-threshold` the
+//! controller refits the codebooks and hot-swaps them with zero
+//! downtime (each reply is served entirely under one codebook
+//! generation).
 
 use std::net::TcpListener;
 use std::sync::atomic::Ordering;
@@ -49,9 +56,12 @@ use anyhow::{ensure, Context, Result};
 use bskmq::backend::{Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::coordinator::front::{FrontKind, ServeFront};
-use bskmq::coordinator::loadgen::closed_loop;
+use bskmq::coordinator::loadgen::{
+    closed_loop, closed_loop_phased, scaled_inputs, TrafficPhase,
+};
 use bskmq::coordinator::ptq::PtqEvaluator;
-use bskmq::coordinator::server::{ModelPool, ModelRegistry, PoolConfig};
+use bskmq::coordinator::pool::{ModelPool, ModelRegistry, PoolConfig};
+use bskmq::coordinator::recalib::RecalibConfig;
 use bskmq::data::dataset::ModelData;
 use bskmq::obs::bench_report::{
     short_rev, BenchReport, ExecBench, ModelBench, ServingPoint,
@@ -97,7 +107,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20       [--front event|threaded] [--calib-batches N]\n\
                  \x20       [--trace FILE] [--trace-sample N]\n\
                  \x20       [--profile-every N] [--no-quant-health]\n\
-                 \x20       [--exec-threads N]\n\
+                 \x20       [--exec-threads N] [--recalib]\n\
+                 \x20       [--recalib-sample N] [--drift-threshold X]\n\
                  \x20 bench [--quick] [--models M1,M2] [--out DIR]\n\
                  \x20       [--allow-placeholder]\n\
                  \x20 synth <dir> [--seed N]\n\
@@ -438,6 +449,29 @@ fn serve(args: &[String]) -> Result<()> {
                 cfg.obs.quant_health = false;
                 i += 1;
             }
+            // online shadow recalibration (DESIGN.md §15)
+            "--recalib" => {
+                cfg.recalib.get_or_insert_with(RecalibConfig::default);
+                i += 1;
+            }
+            "--recalib-sample" => {
+                let rc =
+                    cfg.recalib.get_or_insert_with(RecalibConfig::default);
+                rc.sample_every = args
+                    .get(i + 1)
+                    .context("--recalib-sample value")?
+                    .parse()?;
+                i += 2;
+            }
+            "--drift-threshold" => {
+                let rc =
+                    cfg.recalib.get_or_insert_with(RecalibConfig::default);
+                rc.drift_threshold = args
+                    .get(i + 1)
+                    .context("--drift-threshold value")?
+                    .parse()?;
+                i += 2;
+            }
             // global executor thread budget shared by ALL replicas of
             // ALL models (DESIGN.md §14) — overrides BSKMQ_THREADS; must
             // land before the first forward instantiates the pool
@@ -476,6 +510,13 @@ fn serve(args: &[String]) -> Result<()> {
         cfg.request_deadline.as_millis(),
         front_kind.name(),
     );
+    if let Some(rc) = &cfg.recalib {
+        println!(
+            "recalibration: shadow-sampling every {} request(s), drift \
+             threshold {}, min window {} samples",
+            rc.sample_every, rc.drift_threshold, rc.min_observations,
+        );
+    }
     println!(
         "protocol: one line `[model:]f1,f2,...` -> one line of logits; \
          `stats` -> pool stats as JSON (`stats --text` for the human \
@@ -676,6 +717,59 @@ fn bench_serving(
         &client, &inputs, model, "overload", 64, per_point, deadline,
     ));
     pool.shutdown();
+
+    // swap-under-load: the shadow recalibration controller live, driven
+    // by a nonstationary program (matched traffic, then the same inputs
+    // scaled 4x so every activation decile moves past the drift
+    // threshold mid-run).  The point records the hot-swaps that landed,
+    // the last refit+swap wall time, and the queue depth at the swap
+    // instant.  Measurement-only: a very short run may end before the
+    // controller fires, recording zero swaps rather than failing.
+    let deadline = Duration::from_millis(250);
+    let cfg = PoolConfig {
+        backend: BackendKind::Native,
+        calib_batches,
+        replicas: 2,
+        queue_depth: 4096,
+        request_deadline: deadline,
+        recalib: Some(RecalibConfig {
+            sample_every: 1,
+            drift_threshold: 0.2,
+            min_observations: 64,
+            check_interval: Duration::from_millis(10),
+            ..RecalibConfig::default()
+        }),
+        ..PoolConfig::default()
+    };
+    let mut pool =
+        ModelPool::start(artifacts.to_path_buf(), model.to_string(), &cfg)?;
+    let client = pool.client();
+    let half = (per_point / 2).max(1);
+    let mut point = closed_loop_phased(
+        &client,
+        &[
+            TrafficPhase {
+                inputs: inputs.clone(),
+                requests: half,
+            },
+            TrafficPhase {
+                inputs: scaled_inputs(&inputs, 4.0),
+                requests: half,
+            },
+        ],
+        model,
+        "recalib",
+        32,
+        deadline,
+    );
+    if let Some(r) = pool.recalib() {
+        point.swaps = r.stats.swaps.load(Ordering::SeqCst);
+        point.swap_ns = r.stats.last_refit_ns.load(Ordering::SeqCst);
+        point.inflight_at_swap =
+            r.stats.inflight_at_swap.load(Ordering::SeqCst);
+    }
+    pool.shutdown();
+    points.push(point);
     Ok(points)
 }
 

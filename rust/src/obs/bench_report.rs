@@ -21,7 +21,10 @@ use crate::util::json::Json;
 /// timings, per-op ns, thread-budget config) and records
 /// `replicas`/`exec_threads` on every serving point so load numbers are
 /// comparable across machines.
-pub const BENCH_SCHEMA_VERSION: u64 = 3;
+/// v4: records hot-swap telemetry on every serving point
+/// (`swaps`/`swap_ns`/`inflight_at_swap`) so the recalibration
+/// swap-under-load phase is tracked in the trajectory.
+pub const BENCH_SCHEMA_VERSION: u64 = 4;
 
 /// Per-topology measurements.
 #[derive(Clone, Debug, Default)]
@@ -76,6 +79,13 @@ pub struct ServingPoint {
     pub replicas: usize,
     /// global executor thread budget (`BSKMQ_THREADS`) the point ran with
     pub exec_threads: usize,
+    /// codebook hot-swaps completed while the point ran (schema v4)
+    pub swaps: u64,
+    /// wall nanos of the last refit + swap during the point (0 = none)
+    pub swap_ns: u64,
+    /// pool queue depth at the last swap instant (requests in flight
+    /// while the generation changed under them)
+    pub inflight_at_swap: u64,
 }
 
 impl ServingPoint {
@@ -263,8 +273,14 @@ impl BenchReport {
             ));
             s.push_str(&format!("      \"replicas\": {},\n", p.replicas));
             s.push_str(&format!(
-                "      \"exec_threads\": {}\n",
+                "      \"exec_threads\": {},\n",
                 p.exec_threads
+            ));
+            s.push_str(&format!("      \"swaps\": {},\n", p.swaps));
+            s.push_str(&format!("      \"swap_ns\": {},\n", p.swap_ns));
+            s.push_str(&format!(
+                "      \"inflight_at_swap\": {}\n",
+                p.inflight_at_swap
             ));
             s.push_str("    }");
             s.push_str(if i + 1 < self.serving.len() {
@@ -438,6 +454,9 @@ pub fn validate(j: &Json) -> Result<()> {
             "deadline_ms",
             "replicas",
             "exec_threads",
+            "swaps",
+            "swap_ns",
+            "inflight_at_swap",
         ] {
             let v = p.get(key)?.as_f64()?;
             ensure!(
@@ -554,6 +573,9 @@ mod tests {
             deadline_ms: 250.0,
             replicas: 2,
             exec_threads: 8,
+            swaps: 1,
+            swap_ns: 2_000_000,
+            inflight_at_swap: 12,
         });
         r.exec.push(ExecBench {
             model: "resnet".into(),
@@ -589,7 +611,7 @@ mod tests {
     fn validate_rejects_corruption() {
         let r = sample_report();
         let good = r.to_json();
-        let bad = good.replace("\"schema\": 3", "\"schema\": 99");
+        let bad = good.replace("\"schema\": 4", "\"schema\": 99");
         assert!(validate(&Json::parse(&bad).unwrap()).is_err());
         let bad = good.replace("\"serve_p50_ms\": 1.2", "\"serve_p50_ms\": -1");
         assert!(validate(&Json::parse(&bad).unwrap()).is_err());

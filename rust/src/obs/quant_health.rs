@@ -23,7 +23,7 @@
 //! observed slice — cheap enough to leave on in serving.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 
 use crate::obs::prometheus::{escape_label, PromWriter};
 use crate::quant::codebook::Codebook;
@@ -35,6 +35,13 @@ use crate::util::stats::quantile_sorted;
 pub const CALIB_SKETCH_CAP: usize = 2048;
 /// Shared salt so live and calibration sketches hash identically.
 pub const CALIB_SKETCH_SALT: u64 = 0x51ac_ba5e;
+/// Default live-sketch window: once a layer's live sketch has absorbed
+/// this many sampled values it restarts empty, so the drift signal
+/// tracks *recent* traffic instead of the whole process lifetime (a
+/// lifetime sketch would dilute a late shift — and never decay after a
+/// codebook hot-swap).  Large enough that decile estimates are stable
+/// long before a restart.
+pub const DEFAULT_LIVE_WINDOW: u64 = 1 << 20;
 
 /// Fresh sketch with the health-telemetry parameters (used by the
 /// calibrator so its sketches stay merge-compatible with live ones).
@@ -42,20 +49,28 @@ pub fn health_sketch() -> ValueSketch {
     ValueSketch::new(CALIB_SKETCH_CAP, CALIB_SKETCH_SALT)
 }
 
-struct LayerHealth {
-    name: String,
+/// The swappable part of a layer's telemetry: everything derived from
+/// the codebook generation currently being served.  Replaced wholesale
+/// by [`QuantHealth::rebaseline`] on a codebook hot-swap.
+struct LayerBaseline {
     levels: usize,
     /// Unpadded NL reference ladder in f32 — the same precision the
     /// executor compares against, so the noiseless level mapping here
     /// agrees bit-for-bit with a zero-noise forward.
     refs: Vec<f32>,
     occupancy: Vec<AtomicU64>,
+    calib: Option<ValueSketch>,
+}
+
+struct LayerHealth {
+    name: String,
+    base: RwLock<LayerBaseline>,
+    /// Cumulative across rebaselines (total telemetry coverage).
     observed: AtomicU64,
     live: Mutex<ValueSketch>,
     /// Position of the next value in this layer's activation stream
     /// (drives strided sketch sampling).
     cursor: AtomicU64,
-    calib: Option<ValueSketch>,
 }
 
 /// Pool-wide telemetry over every quantized layer.  Shared via `Arc`
@@ -64,6 +79,12 @@ struct LayerHealth {
 pub struct QuantHealth {
     layers: Vec<LayerHealth>,
     sample_every: u64,
+    /// Live-sketch restart threshold (sampled values per layer); 0
+    /// disables windowing (lifetime sketch, the pre-§15 behavior).
+    live_window: AtomicU64,
+    /// Times [`QuantHealth::rebaseline`] ran (0 = still on the
+    /// calibration-time baseline).
+    rebaselines: AtomicU64,
 }
 
 impl QuantHealth {
@@ -87,16 +108,25 @@ impl QuantHealth {
             .enumerate()
             .map(|(i, (name, cb))| LayerHealth {
                 name: name.clone(),
-                levels: cb.levels(),
-                refs: cb.refs.iter().map(|&r| r as f32).collect(),
-                occupancy: (0..cb.levels()).map(|_| AtomicU64::new(0)).collect(),
+                base: RwLock::new(LayerBaseline {
+                    levels: cb.levels(),
+                    refs: cb.refs.iter().map(|&r| r as f32).collect(),
+                    occupancy: (0..cb.levels())
+                        .map(|_| AtomicU64::new(0))
+                        .collect(),
+                    calib: calib_sketches.map(|cs| cs[i].clone()),
+                }),
                 observed: AtomicU64::new(0),
                 live: Mutex::new(health_sketch()),
                 cursor: AtomicU64::new(0),
-                calib: calib_sketches.map(|cs| cs[i].clone()),
             })
             .collect();
-        QuantHealth { layers, sample_every }
+        QuantHealth {
+            layers,
+            sample_every,
+            live_window: AtomicU64::new(DEFAULT_LIVE_WINDOW),
+            rebaselines: AtomicU64::new(0),
+        }
     }
 
     pub fn num_layers(&self) -> usize {
@@ -107,25 +137,72 @@ impl QuantHealth {
         &self.layers[q].name
     }
 
+    /// Override the live-sketch window ([`DEFAULT_LIVE_WINDOW`] at
+    /// construction; 0 restores the lifetime-sketch behavior).
+    pub fn set_live_window(&self, window: u64) {
+        self.live_window.store(window, Ordering::Relaxed);
+    }
+
+    /// Times the baseline was replaced by a codebook hot-swap.
+    pub fn rebaselines(&self) -> u64 {
+        self.rebaselines.load(Ordering::SeqCst)
+    }
+
+    /// Replace every layer's baseline with freshly fitted codebooks (and
+    /// optionally the sketches they were fitted on), restarting the live
+    /// sketches and occupancy counters — called on a codebook hot-swap
+    /// so post-swap drift is measured against the *new* books on *new*
+    /// traffic, never against retired state.  `observed` totals stay
+    /// cumulative.
+    pub fn rebaseline(
+        &self,
+        nl_books: &[Codebook],
+        calib_sketches: Option<&[ValueSketch]>,
+    ) {
+        assert_eq!(nl_books.len(), self.layers.len());
+        if let Some(cs) = calib_sketches {
+            assert_eq!(cs.len(), self.layers.len());
+        }
+        for (i, layer) in self.layers.iter().enumerate() {
+            let cb = &nl_books[i];
+            {
+                let mut base = layer.base.write().unwrap();
+                *base = LayerBaseline {
+                    levels: cb.levels(),
+                    refs: cb.refs.iter().map(|&r| r as f32).collect(),
+                    occupancy: (0..cb.levels())
+                        .map(|_| AtomicU64::new(0))
+                        .collect(),
+                    calib: calib_sketches.map(|cs| cs[i].clone()),
+                };
+            }
+            *layer.live.lock().unwrap() = health_sketch();
+            layer.cursor.store(0, Ordering::Relaxed);
+        }
+        self.rebaselines.fetch_add(1, Ordering::SeqCst);
+    }
+
     /// Record one slice of pre-conversion activations for layer `q`.
     pub fn observe(&self, q: usize, pre: &[f32]) {
         let layer = &self.layers[q];
         if pre.is_empty() {
             return;
         }
+        let base = layer.base.read().unwrap();
         // noiseless floor-ADC level per value, bucketed locally so the
         // shared counters see one add per level, not one per element
-        let mut local = vec![0u64; layer.levels];
+        let mut local = vec![0u64; base.levels];
         for &v in pre {
-            let cnt = layer.refs.partition_point(|&r| r <= v);
-            let idx = cnt.saturating_sub(1).min(layer.levels - 1);
+            let cnt = base.refs.partition_point(|&r| r <= v);
+            let idx = cnt.saturating_sub(1).min(base.levels - 1);
             local[idx] += 1;
         }
-        for (slot, &c) in layer.occupancy.iter().zip(&local) {
+        for (slot, &c) in base.occupancy.iter().zip(&local) {
             if c > 0 {
                 slot.fetch_add(c, Ordering::Relaxed);
             }
         }
+        drop(base);
         layer.observed.fetch_add(pre.len() as u64, Ordering::Relaxed);
 
         if self.sample_every > 0 {
@@ -134,7 +211,13 @@ impl QuantHealth {
             let k = self.sample_every;
             let mut idx = (k - start % k) % k;
             if idx < pre.len() as u64 {
+                let window = self.live_window.load(Ordering::Relaxed);
                 let mut sk = layer.live.lock().unwrap();
+                // windowed restart: a full sketch begins a fresh one, so
+                // deciles always describe the most recent window
+                if window > 0 && sk.n_seen() >= window {
+                    *sk = health_sketch();
+                }
                 while (idx as usize) < pre.len() {
                     sk.insert(pre[idx as usize] as f64);
                     idx += k;
@@ -143,9 +226,12 @@ impl QuantHealth {
         }
     }
 
-    /// Per-level hit counts for layer `q`.
+    /// Per-level hit counts for layer `q` (since the last rebaseline).
     pub fn occupancy(&self, q: usize) -> Vec<u64> {
         self.layers[q]
+            .base
+            .read()
+            .unwrap()
             .occupancy
             .iter()
             .map(|c| c.load(Ordering::SeqCst))
@@ -181,7 +267,8 @@ impl QuantHealth {
     /// no calibration sketch was attached).
     pub fn divergence(&self, q: usize) -> Option<f64> {
         let layer = &self.layers[q];
-        let calib = layer.calib.as_ref()?;
+        let base = layer.base.read().unwrap();
+        let calib = base.calib.as_ref()?;
         if calib.n_seen() == 0 {
             return None;
         }
@@ -192,6 +279,7 @@ impl QuantHealth {
         let a = calib.expand();
         let b = live.expand();
         drop(live);
+        drop(base);
         if a.is_empty() || b.is_empty() {
             return None;
         }
@@ -331,5 +419,73 @@ mod tests {
             shifted > base + 0.5,
             "shifted traffic must move divergence: {base} -> {shifted}"
         );
+    }
+
+    /// After a rebaseline the drift signal restarts: new refs drive
+    /// occupancy, the live sketch is empty, and divergence is measured
+    /// against the new calibration sketch only.
+    #[test]
+    fn rebaseline_restarts_drift_against_new_books() {
+        let books = vec![Codebook::from_centers(&[0.0, 1.0])];
+        let mut calib = health_sketch();
+        for i in 0..100 {
+            calib.insert(i as f64 / 100.0);
+        }
+        let h = QuantHealth::new(
+            &["a".to_string()],
+            &books,
+            Some(std::slice::from_ref(&calib)),
+            1,
+        );
+        // drive far-off traffic: lifetime drift goes large
+        let far: Vec<f32> = (0..400).map(|i| 5.0 + i as f32 / 100.0).collect();
+        h.observe(0, &far);
+        assert!(h.divergence(0).unwrap() > 1.0);
+        assert!(h.occupancy(0).iter().sum::<u64>() > 0);
+        let seen_before = h.observed(0);
+
+        // hot-swap: new books fitted on the shifted traffic, baseline =
+        // a sketch of that traffic
+        let new_books = vec![Codebook::from_centers(&[5.0, 9.0])];
+        let mut new_calib = health_sketch();
+        for &v in &far {
+            new_calib.insert(v as f64);
+        }
+        h.rebaseline(&new_books, Some(std::slice::from_ref(&new_calib)));
+        assert_eq!(h.rebaselines(), 1);
+        // live sketch restarted: no divergence until fresh traffic
+        assert_eq!(h.divergence(0), None);
+        assert_eq!(h.occupancy(0), vec![0, 0], "occupancy restarts");
+        assert_eq!(h.observed(0), seen_before, "observed stays cumulative");
+
+        // post-swap traffic matching the new baseline: drift stays low
+        // (without the rebaseline the lifetime sketch would keep the old
+        // mass and the signal would never decay)
+        h.observe(0, &far);
+        let post = h.divergence(0).unwrap();
+        assert!(post < 0.1, "post-swap matched traffic drifted: {post}");
+        let (low, _) = h.saturation(0);
+        assert!(low > 0.0, "new refs classify the shifted values");
+    }
+
+    /// The live sketch is a moving window: once `live_window` sampled
+    /// values accumulate it restarts, so an early distribution no longer
+    /// pins the deciles late in the process lifetime.
+    #[test]
+    fn live_sketch_windows_instead_of_accumulating_forever() {
+        let h = two_layer_health(1);
+        h.set_live_window(8);
+        let xs: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        h.observe(0, &xs);
+        assert_eq!(h.live_sketch(0).n_seen(), 8);
+        // the window is full: the next observe restarts the sketch
+        h.observe(0, &xs[..3]);
+        assert_eq!(h.live_sketch(0).n_seen(), 3);
+        // window 0 = lifetime accumulation (pre-§15 behavior)
+        h.set_live_window(0);
+        for _ in 0..10 {
+            h.observe(0, &xs);
+        }
+        assert_eq!(h.live_sketch(0).n_seen(), 83);
     }
 }

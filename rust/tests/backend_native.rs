@@ -9,7 +9,7 @@
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::coordinator::ptq::{argmax, PtqEvaluator};
-use bskmq::coordinator::server::InferenceServer;
+use bskmq::coordinator::pool::InferenceServer;
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
 use bskmq::quant::{Method, QuantSpec};

@@ -10,7 +10,7 @@ use bskmq::backend::native::NativeBackend;
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::coordinator::ptq::PtqEvaluator;
-use bskmq::coordinator::server::InferenceServer;
+use bskmq::coordinator::pool::InferenceServer;
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
 use bskmq::io::manifest::Manifest;

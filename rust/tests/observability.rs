@@ -19,7 +19,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use bskmq::backend::BackendKind;
-use bskmq::coordinator::server::{
+use bskmq::coordinator::pool::{
     ModelPool, ObsConfig, PoolConfig, ServerStats,
 };
 use bskmq::data::dataset::ModelData;

@@ -10,7 +10,7 @@
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::coordinator::ptq::PtqEvaluator;
-use bskmq::coordinator::server::InferenceServer;
+use bskmq::coordinator::pool::InferenceServer;
 use bskmq::data::dataset::ModelData;
 use bskmq::quant::{Method, QuantSpec};
 

@@ -19,7 +19,7 @@ use bskmq::backend::native::graph::GraphProgram;
 use bskmq::backend::{load, Backend, BackendKind};
 use bskmq::coordinator::calibrate::Calibrator;
 use bskmq::coordinator::ptq::PtqEvaluator;
-use bskmq::coordinator::server::{ModelPool, PoolConfig};
+use bskmq::coordinator::pool::{ModelPool, PoolConfig};
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth::{self, mixture_samples};
 use bskmq::io::manifest::Manifest;

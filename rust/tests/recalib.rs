@@ -1,0 +1,344 @@
+//! Online shadow recalibration: hot-swap atomicity and the end-to-end
+//! drift -> refit -> swap loop (DESIGN.md §15), on synthetic artifacts.
+//!
+//! Pins the recalibration contract:
+//!
+//! * a codebook hot-swap under concurrent clients is atomic — every
+//!   reply is bit-identical to ONE of the two generations, never a mix,
+//!   and nothing is dropped, shed, or errored because of the swap;
+//! * with the controller live, a sustained distribution shift drives
+//!   sketch drift past the threshold, a shadow-window refit fires, the
+//!   new generation is published with zero client-visible disruption,
+//!   and post-swap drift (measured against the refit baseline) settles
+//!   back below the threshold;
+//! * the swap counters agree across the `stats` JSON and the
+//!   Prometheus page;
+//! * a pool asked to recalibrate without quant-health telemetry fails
+//!   fast at startup instead of serving silently degraded.
+//!
+//! CI runs this suite with `BSKMQ_THREADS` at 1 and 8 (the `recalib`
+//! job) to catch thread-count-dependent behavior.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use bskmq::backend::{Backend, BackendKind, ProgrammedCodebooks};
+use bskmq::coordinator::calibrate::Calibrator;
+use bskmq::coordinator::loadgen::{closed_loop, scaled_inputs};
+use bskmq::coordinator::pool::{ModelPool, ObsConfig, PoolConfig};
+use bskmq::coordinator::recalib::RecalibConfig;
+use bskmq::data::dataset::ModelData;
+use bskmq::data::synth;
+use bskmq::obs::prometheus::PromWriter;
+use bskmq::quant::codebook::Codebook;
+use bskmq::util::json::Json;
+
+const UNIQUE_INPUTS: usize = 6;
+const CLIENT_THREADS: usize = 8;
+const REQS_PER_THREAD: usize = 32;
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bskmq_recalib_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_model(&dir, "resnet", 42).unwrap();
+    dir
+}
+
+fn base_cfg(replicas: usize) -> PoolConfig {
+    PoolConfig {
+        backend: BackendKind::Native,
+        noise_std: 0.0,
+        calib_batches: 2,
+        replicas,
+        queue_depth: 4096,
+        batch_window: Duration::from_millis(1),
+        ..PoolConfig::default()
+    }
+}
+
+fn unique_inputs(dir: &std::path::Path) -> Vec<Vec<f32>> {
+    let data = ModelData::load(dir, "resnet").unwrap();
+    let elems: usize = data.x_test.shape[1..].iter().product();
+    (0..UNIQUE_INPUTS)
+        .map(|i| data.x_test.data[i * elems..(i + 1) * elems].to_vec())
+        .collect()
+}
+
+/// Expected logits for one input under one programmed generation: with
+/// zero conversion noise the quantized forward is deterministic per
+/// sample, so a direct backend run reproduces the pool bit-for-bit.
+fn expected_logits(
+    be: &dyn Backend,
+    books: &ProgrammedCodebooks,
+    input: &[f32],
+) -> Vec<f32> {
+    let m = be.manifest();
+    let mut x = Vec::with_capacity(m.batch * input.len());
+    for _ in 0..m.batch {
+        x.extend_from_slice(input);
+    }
+    let logits = be.run_qfwd(&x, books, 0.0, 7).unwrap();
+    logits[..m.num_classes].to_vec()
+}
+
+/// Swap atomicity under concurrent clients (the soak half of satellite
+/// 3).  Reference logits for generation A (the pool's own calibration,
+/// reproduced bit-identically offline) and generation B (NL centers
+/// scaled 5%) are computed up front; a [`ModelPool::hot_swap`] lands
+/// mid-soak, and every concurrent reply must be bitwise equal to
+/// exactly one of the two — no drops, no errors, no mixed-generation
+/// replies.
+#[test]
+fn hot_swap_is_atomic_under_concurrent_clients() {
+    let dir = fresh_dir("atomic");
+    let inputs = unique_inputs(&dir);
+
+    // reproduce the pool's generation-A books offline: same specs, same
+    // batch count, serial shards (base_cfg) -> bit-identical codebooks
+    let be = bskmq::backend::load(BackendKind::Native, &dir, "resnet").unwrap();
+    let data = ModelData::load(&dir, "resnet").unwrap();
+    let calib =
+        Calibrator::with_specs(be.as_ref(), be.manifest().layer_specs())
+            .calibrate_sharded(&data, 2, 1)
+            .unwrap();
+    let max_levels = be.manifest().max_levels;
+
+    // generation B: every NL center scaled 5% — a valid ladder that
+    // provably changes the computation
+    let nl_b: Vec<Codebook> = calib
+        .nl_books
+        .iter()
+        .map(|cb| {
+            let centers: Vec<f64> =
+                cb.centers.iter().map(|c| c * 1.05).collect();
+            Codebook::from_centers(&centers)
+        })
+        .collect();
+    let books_b =
+        ProgrammedCodebooks::stack(&nl_b, &calib.tile_books, max_levels)
+            .unwrap();
+
+    let expect_a: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| expected_logits(be.as_ref(), &calib.programmed, x))
+        .collect();
+    let expect_b: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| expected_logits(be.as_ref(), &books_b, x))
+        .collect();
+    assert!(
+        expect_a.iter().zip(&expect_b).any(|(a, b)| a != b),
+        "scaled codebooks must change at least one input's logits"
+    );
+    drop(be);
+
+    let pool =
+        ModelPool::start(dir.clone(), "resnet".into(), &base_cfg(2)).unwrap();
+    assert_eq!(pool.codebook_generation(), 1);
+    // without recalib configured the stats block still reports the
+    // generation and an explicit enabled=false
+    let j = Json::parse(&pool.stats_json()).unwrap();
+    let rj = j.get("recalib").unwrap();
+    assert!(!rj.get("enabled").unwrap().as_bool().unwrap());
+    assert_eq!(rj.get("generation").unwrap().as_usize().unwrap(), 1);
+
+    // pre-swap: the pool serves generation A bit-for-bit
+    for (i, x) in inputs.iter().enumerate() {
+        assert_eq!(
+            pool.infer(x.clone()).unwrap(),
+            expect_a[i],
+            "input {i} diverged from the offline generation-A forward"
+        );
+    }
+
+    // soak with the hot-swap landing mid-flight
+    let answered = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for t in 0..CLIENT_THREADS {
+            let client = pool.client();
+            let (inputs, expect_a, expect_b) = (&inputs, &expect_a, &expect_b);
+            let answered = &answered;
+            s.spawn(move || {
+                for r in 0..REQS_PER_THREAD {
+                    let idx = (t * 7 + r * 3) % UNIQUE_INPUTS;
+                    let rx = client
+                        .submit(inputs[idx].clone())
+                        .expect("queue sized for the whole soak");
+                    let logits = rx
+                        .recv_timeout(Duration::from_secs(120))
+                        .expect("accepted request must be answered")
+                        .expect("request failed during the swap soak");
+                    assert!(
+                        logits == expect_a[idx] || logits == expect_b[idx],
+                        "input {idx}: reply matches neither generation \
+                         (a mixed-codebook batch?)"
+                    );
+                    answered.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        // swap while the soak is in flight; in-flight batches finish
+        // under the generation they snapshotted
+        std::thread::sleep(Duration::from_millis(10));
+        let generation = pool
+            .hot_swap(&nl_b, &calib.tile_books, None)
+            .expect("hot swap failed");
+        assert_eq!(generation, 2);
+    });
+    let total = (CLIENT_THREADS * REQS_PER_THREAD) as u64;
+    assert_eq!(answered.load(Ordering::SeqCst), total, "replies went missing");
+    assert_eq!(pool.shed(), 0, "the swap shed requests");
+    assert_eq!(pool.rejected(), 0, "the swap rejected requests");
+    assert_eq!(pool.codebook_generation(), 2);
+
+    // post-swap: everything serves generation B bit-for-bit
+    for (i, x) in inputs.iter().enumerate() {
+        assert_eq!(
+            pool.infer(x.clone()).unwrap(),
+            expect_b[i],
+            "input {i}: post-swap reply is not the generation-B forward"
+        );
+    }
+    let j = Json::parse(&pool.stats_json()).unwrap();
+    assert_eq!(
+        j.get("recalib")
+            .unwrap()
+            .get("generation")
+            .unwrap()
+            .as_usize()
+            .unwrap(),
+        2
+    );
+}
+
+/// A pool asked to recalibrate without quant-health telemetry must fail
+/// at startup — the drift signal is the controller's trigger, so
+/// starting without it would serve silently degraded.
+#[test]
+fn recalib_without_quant_health_fails_fast() {
+    let dir = fresh_dir("nohealth");
+    let mut cfg = base_cfg(1);
+    cfg.obs.quant_health = false;
+    cfg.recalib = Some(RecalibConfig::default());
+    let err = ModelPool::start(dir, "resnet".into(), &cfg).unwrap_err();
+    assert!(err.to_string().contains("quant-health"), "{err:#}");
+}
+
+/// Acceptance: drift detected -> shadow refit -> zero-downtime hot-swap
+/// -> post-swap drift back below threshold, with the swap counters
+/// agreeing between the `stats` JSON and the Prometheus page.
+#[test]
+fn drift_triggers_refit_and_zero_downtime_swap() {
+    let dir = fresh_dir("e2e");
+    let inputs = unique_inputs(&dir);
+    let threshold = 0.3;
+    let mut cfg = base_cfg(2);
+    cfg.obs = ObsConfig {
+        sketch_sample_every: 1,
+        ..ObsConfig::default()
+    };
+    cfg.recalib = Some(RecalibConfig {
+        sample_every: 1,
+        drift_threshold: threshold,
+        hysteresis: 0.5,
+        min_observations: 32,
+        trigger_checks: 2,
+        check_interval: Duration::from_millis(5),
+    });
+    let pool = ModelPool::start(dir.clone(), "resnet".into(), &cfg).unwrap();
+    let client = pool.client();
+    let stats = pool.recalib().expect("recalib was configured").stats.clone();
+    let deadline = Duration::from_secs(10);
+
+    // matched traffic: live deciles agree with the calibration sketch,
+    // so the detector must hold
+    let p = closed_loop(&client, &inputs, "resnet", "base", 4, 256, deadline);
+    assert_eq!(p.completed, 256, "{p:?}");
+    assert_eq!(p.shed + p.rejected + p.errors, 0, "{p:?}");
+    std::thread::sleep(Duration::from_millis(40)); // several supervisor ticks
+    assert_eq!(
+        stats.swaps.load(Ordering::SeqCst),
+        0,
+        "matched traffic must not trigger a refit (drift {})",
+        stats.drift()
+    );
+
+    // sustained 4x-scaled traffic: every activation decile moves, drift
+    // crosses the threshold, and the controller refits + swaps — with
+    // zero dropped/shed/errored replies attributable to the swap
+    let hot = scaled_inputs(&inputs, 4.0);
+    let t0 = Instant::now();
+    while stats.swaps.load(Ordering::SeqCst) == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "no hot-swap after 60s of shifted traffic (drift {}, {} shadow \
+             batches, {} sampled)",
+            stats.drift(),
+            stats.shadow_batches.load(Ordering::SeqCst),
+            stats.sampled.load(Ordering::SeqCst),
+        );
+        let p = closed_loop(&client, &hot, "resnet", "shift", 4, 64, deadline);
+        assert_eq!(
+            p.shed + p.rejected + p.errors,
+            0,
+            "the swap disrupted serving: {p:?}"
+        );
+    }
+    assert!(pool.codebook_generation() >= 2, "swap without a generation bump");
+    assert!(pool.quant_health().unwrap().rebaselines() >= 1);
+    assert!(stats.refits.load(Ordering::SeqCst) >= 1);
+    assert_eq!(stats.refit_errors.load(Ordering::SeqCst), 0);
+    assert!(stats.last_refit_ns.load(Ordering::SeqCst) > 0);
+
+    // post-swap: the SAME shifted traffic, now measured against the
+    // refit baseline, must settle below the threshold (every layer's
+    // live sketch repopulated, max divergence under the trigger)
+    let t0 = Instant::now();
+    loop {
+        let p = closed_loop(&client, &hot, "resnet", "post", 4, 64, deadline);
+        assert_eq!(p.shed + p.rejected + p.errors, 0, "{p:?}");
+        let h = pool.quant_health().unwrap();
+        let ds: Vec<Option<f64>> =
+            (0..h.num_layers()).map(|q| h.divergence(q)).collect();
+        if ds.iter().all(|d| d.is_some()) {
+            let max = ds.iter().map(|d| d.unwrap()).fold(0.0, f64::max);
+            if max < threshold {
+                break;
+            }
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "post-swap drift never settled below the threshold: {ds:?}"
+        );
+    }
+
+    // the swap counters agree across stats JSON and the Prometheus page
+    let swaps = stats.swaps.load(Ordering::SeqCst);
+    let generation = pool.codebook_generation();
+    let j = Json::parse(&pool.stats_json()).unwrap();
+    let rj = j.get("recalib").unwrap();
+    assert!(rj.get("enabled").unwrap().as_bool().unwrap());
+    assert_eq!(rj.get("swaps").unwrap().as_usize().unwrap() as u64, swaps);
+    assert_eq!(
+        rj.get("generation").unwrap().as_usize().unwrap() as u64,
+        generation
+    );
+    assert!(rj.get("refits").unwrap().as_usize().unwrap() >= 1);
+    let prom = {
+        let mut w = PromWriter::new();
+        pool.render_prometheus(&mut w);
+        w.finish()
+    };
+    assert!(
+        prom.contains(&format!(
+            "bskmq_recalib_swaps_total{{model=\"resnet\"}} {swaps}"
+        )),
+        "{prom}"
+    );
+    assert!(
+        prom.contains(&format!(
+            "bskmq_codebook_generation{{model=\"resnet\"}} {generation}"
+        )),
+        "{prom}"
+    );
+}

@@ -28,7 +28,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use bskmq::backend::BackendKind;
-use bskmq::coordinator::server::{
+use bskmq::coordinator::pool::{
     AdmissionError, InferenceServer, ModelPool, ModelRegistry, PoolConfig,
 };
 use bskmq::data::dataset::ModelData;

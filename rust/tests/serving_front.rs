@@ -15,7 +15,7 @@ use std::time::Duration;
 
 use bskmq::backend::BackendKind;
 use bskmq::coordinator::front::{FrontKind, ServeFront};
-use bskmq::coordinator::server::{ModelRegistry, PoolConfig};
+use bskmq::coordinator::pool::{ModelRegistry, PoolConfig};
 use bskmq::data::dataset::ModelData;
 use bskmq::data::synth;
 use bskmq::quant::{Method, QuantSpec};
